@@ -1,0 +1,81 @@
+//! Block fine-tuning from scratch — a compact version of the paper's
+//! §2.4 recipe and the driver behind Figure 4.
+//!
+//! Trains the tiny model with dual-mode (full + block) batches for a few
+//! hundred steps, printing the loss curve and, at each checkpoint, the
+//! RAG accuracy in *both* attention modes. Early in training the block
+//! mode lags badly (the paper's w/o-ft observation); by the end the two
+//! curves meet.
+//!
+//! ```sh
+//! cargo run --release --example block_finetune -- --steps 200 --eval-every 40
+//! ```
+
+use block_attn::config::{default_artifacts_dir, Manifest};
+use block_attn::coordinator::{AttentionMode, Coordinator};
+use block_attn::train::eval::{accuracy, EvalOpts};
+use block_attn::train::presets::{rag_eval_samples, rag_mix, TRAIN_WORLD_SEED};
+use block_attn::train::{train, TrainConfig, TrainMode};
+use block_attn::util::cli::Args;
+use block_attn::ModelEngine;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let steps = args.usize_or("steps", 200);
+    let eval_every = args.usize_or("eval-every", 40);
+    let eval_n = args.usize_or("eval-samples", 24);
+
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    let engine = ModelEngine::new(&manifest, "tiny")?;
+    if let Some(ck) = args.get("checkpoint") {
+        engine.load_params_file(std::path::Path::new(ck))?;
+        println!("warm-starting from {ck}");
+    }
+    let mut coord = Coordinator::new(engine, 128 << 20);
+
+    let eval_samples = rag_eval_samples(eval_n);
+    println!("step   loss    block-acc  full-acc");
+    let cfg = TrainConfig {
+        steps,
+        lr: args.f64_or("lr", 1e-3),
+        mode: TrainMode::Dual,
+        eval_every,
+        seed: args.u64_or("seed", 3),
+        ..Default::default()
+    };
+    let mut losses_at: Vec<f32> = Vec::new();
+    let losses = train(&mut coord, &cfg, &rag_mix(TRAIN_WORLD_SEED), |c, step| {
+        let block = accuracy(
+            c,
+            &eval_samples,
+            &EvalOpts { mode: AttentionMode::Block, ..Default::default() },
+        )
+        .unwrap_or(f64::NAN);
+        let full = accuracy(
+            c,
+            &eval_samples,
+            &EvalOpts { mode: AttentionMode::Full, ..Default::default() },
+        )
+        .unwrap_or(f64::NAN);
+        println!(
+            "{step:>5}  {:.3}   {block:8.3}   {full:8.3}",
+            losses_at.last().copied().unwrap_or(f32::NAN)
+        );
+        let _ = c;
+    })?;
+    losses_at.extend(&losses);
+
+    // Loss-curve summary (the e2e training deliverable: a few hundred
+    // steps with a monotone-ish trend).
+    let k = losses.len() / 5;
+    println!("\nloss curve (mean per fifth of training):");
+    for (i, chunk) in losses.chunks(k.max(1)).enumerate() {
+        let m: f32 = chunk.iter().sum::<f32>() / chunk.len() as f32;
+        println!("  {:>3}%: {m:.4}", i * 20);
+    }
+    if let Some(out) = args.get("save") {
+        coord.engine().save_params_file(std::path::Path::new(out))?;
+        println!("saved checkpoint to {out}");
+    }
+    Ok(())
+}

@@ -1,0 +1,194 @@
+"""AOT pipeline: lower every (config, entry-point, bucket) to HLO text.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+results through ``artifacts/manifest.json`` and python is never touched
+again. HLO *text* (not a serialized ``HloModuleProto``) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that the runtime's xla_extension 0.5.1 rejects, while the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS
+from .kernels import rope as rope_kernel
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(fn, args):
+    # keep_unused: the Rust runtime always feeds the full parameter list,
+    # so arguments must not be pruned (e.g. prefill_block never touches
+    # final_norm but still receives it).
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def param_spec_list(cfg):
+    return [spec(shape) for _, shape in model.param_specs(cfg)]
+
+
+def entries_for(cfg):
+    """Yield (name, kind, sizes, fn, arg_specs) for every artifact of a
+    config."""
+    N, K, hd = cfg.layers, cfg.kv_heads, cfg.head_dim
+    ps = param_spec_list(cfg)
+
+    for L in cfg.full_lengths:
+        yield (
+            f"{cfg.name}_prefill_full_L{L}",
+            "prefill_full",
+            {"L": L},
+            model.bind(cfg, "prefill_full"),
+            [spec((L,), I32), spec((), I32), *ps],
+        )
+    for Lb in cfg.block_lengths:
+        yield (
+            f"{cfg.name}_prefill_block_L{Lb}",
+            "prefill_block",
+            {"L": Lb},
+            model.bind(cfg, "prefill_block"),
+            [spec((Lb,), I32), spec((), I32), *ps],
+        )
+    for C in cfg.final_ctx:
+        Lq = cfg.final_q
+        yield (
+            f"{cfg.name}_prefill_final_C{C}_Q{Lq}",
+            "prefill_final",
+            {"C": C, "Lq": Lq},
+            model.bind(cfg, "prefill_final"),
+            [
+                spec((Lq,), I32),
+                spec((), I32),
+                spec((N, C, K, hd)),
+                spec((N, C, K, hd)),
+                spec((), I32),
+                spec((), I32),
+                *ps,
+            ],
+        )
+    for C in cfg.decode_ctx:
+        yield (
+            f"{cfg.name}_decode_C{C}",
+            "decode_step",
+            {"C": C},
+            model.bind(cfg, "decode_step"),
+            [
+                spec((), I32),
+                spec((), I32),
+                spec((N, C, K, hd)),
+                spec((N, C, K, hd)),
+                *ps,
+            ],
+        )
+    # RoPE re-encode artifact: parity check target for the native Rust
+    # implementation (one bucket suffices).
+    if cfg.block_lengths:
+        Lb = cfg.block_lengths[0]
+        yield (
+            f"{cfg.name}_reencode_L{Lb}",
+            "reencode_k",
+            {"L": Lb},
+            lambda k, delta, _cfg=cfg: (
+                rope_kernel.reencode_k(k, delta, theta=_cfg.rope_theta),
+            ),
+            [spec((N, Lb, K, hd)), spec((1,), I32)],
+        )
+    if cfg.train_batch:
+        B, L = cfg.train_batch, cfg.train_len
+        yield (
+            f"{cfg.name}_train_B{B}_L{L}",
+            "train_step",
+            {"B": B, "L": L},
+            model.bind(cfg, "train_step"),
+            [
+                spec((), I32),
+                spec((), F32),
+                spec((B, L), I32),
+                spec((B, L), I32),
+                spec((B, L), F32),
+                *ps,
+                *ps,
+                *ps,
+            ],
+        )
+
+
+def write_init(cfg, out_dir, seed=1234):
+    """Write deterministic initial parameters as flat little-endian f32."""
+    import numpy as np
+
+    arrays = model.init_params(cfg, seed)
+    path = os.path.join(out_dir, f"{cfg.name}_init.bin")
+    flat = np.concatenate([a.ravel() for a in arrays]).astype("<f4")
+    flat.tofile(path)
+    return f"{cfg.name}_init.bin"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small,bench")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "configs": {}}
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name]
+        entry_list = []
+        for ename, kind, sizes, fn, arg_specs in entries_for(cfg):
+            fname = f"{ename}.hlo.txt"
+            fpath = os.path.join(out_dir, fname)
+            if args.force or not os.path.exists(fpath):
+                print(f"[aot] lowering {ename} ...", flush=True)
+                text = to_hlo_text(fn, arg_specs)
+                with open(fpath, "w") as f:
+                    f.write(text)
+                print(f"[aot]   wrote {fname} ({len(text)/1e3:.0f} kB)", flush=True)
+            entry_list.append({"name": ename, "kind": kind, "file": fname, "sizes": sizes})
+        init_file = write_init(cfg, out_dir)
+        manifest["configs"][name] = {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "kv_heads": cfg.kv_heads,
+            "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff,
+            "rope_theta": cfg.rope_theta,
+            "norm_eps": cfg.norm_eps,
+            "max_len": cfg.max_len,
+            "attn_impl": cfg.attn_impl,
+            "init_file": init_file,
+            "params": [
+                {"name": n, "shape": list(s)} for n, s in model.param_specs(cfg)
+            ],
+            "entries": entry_list,
+        }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest written with {sum(len(c['entries']) for c in manifest['configs'].values())} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Model configurations and AOT bucket tables.
+
+Single source of truth for the shapes the AOT pipeline emits; the Rust
+side reads everything back from ``artifacts/manifest.json`` and never
+hardcodes a dimension.
+
+Configs:
+  tiny  -- the trainable model for the accuracy experiments (Tables 1-2,
+           Figure 4). Byte-level vocab, ~1M params, trains in minutes on
+           the 1-core CI box.
+  small -- a larger untrained config exercising GQA and longer contexts in
+           the serving examples and integration tests.
+  bench -- the Table-3 efficiency config: realistic vocab, 32K context.
+           Never trained; used only for TTFT / FLOPs measurements.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    layers: int
+    heads: int
+    kv_heads: int
+    d_ff: int
+    max_len: int
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # "pallas" routes prefill attention through the L1 kernels;
+    # "jnp" uses the chunked flash-style jnp path (CPU-fast, used for the
+    # very long bench-config sequences — see DESIGN.md §Hardware-Adaptation).
+    attn_impl: str = "pallas"
+    # AOT buckets ----------------------------------------------------------
+    full_lengths: tuple = ()          # prefill_full L buckets
+    block_lengths: tuple = ()         # prefill_block Lb buckets
+    final_ctx: tuple = ()             # prefill_final C buckets
+    final_q: int = 64                 # prefill_final Lq capacity
+    decode_ctx: tuple = ()            # decode_step cache capacity buckets
+    train_batch: int = 0              # 0 = no train_step artifact
+    train_len: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.heads == 0
+        return self.d_model // self.heads
+
+
+# Byte-level tokenizer: 256 byte values + specials (must match
+# rust/src/tokenizer). PAD=256, BOS=257, EOS=258, SEP=259, QRY=260.
+BYTE_VOCAB = 261
+PAD, BOS, EOS, SEP, QRY = 256, 257, 258, 259, 260
+
+TINY = ModelConfig(
+    name="tiny",
+    vocab=BYTE_VOCAB,
+    d_model=128,
+    layers=4,
+    heads=4,
+    kv_heads=2,
+    d_ff=344,
+    max_len=704,
+    attn_impl="pallas",
+    full_lengths=(128, 320, 640),
+    block_lengths=(64, 128),
+    final_ctx=(320, 640),
+    final_q=64,
+    decode_ctx=(704,),
+    # B=8 x L=256: RAG samples are authored to fit 256 tokens, so each
+    # step sees 8 full samples — sample-efficiency matters far more than
+    # sequence length for the retrieval-copy circuit to form.
+    train_batch=8,
+    train_len=256,
+)
+
+SMALL = ModelConfig(
+    name="small",
+    vocab=BYTE_VOCAB,
+    d_model=256,
+    layers=6,
+    heads=8,
+    kv_heads=4,
+    d_ff=688,
+    max_len=2176,
+    attn_impl="pallas",
+    full_lengths=(512, 1024, 2048),
+    block_lengths=(128, 256),
+    final_ctx=(1024, 2048),
+    final_q=128,
+    decode_ctx=(2176,),
+)
+
+BENCH = ModelConfig(
+    name="bench",
+    vocab=32000,
+    d_model=256,
+    layers=4,
+    heads=8,
+    kv_heads=4,
+    d_ff=688,
+    max_len=32768,
+    rope_theta=500000.0,
+    attn_impl="jnp",
+    full_lengths=(64, 512, 1024, 2048, 4096, 8192, 16384, 32768),
+    block_lengths=(512,),
+    final_ctx=(512, 1024, 2048, 4096, 8192, 16384, 32768),
+    final_q=64,
+    decode_ctx=(1024,),
+)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL, BENCH)}

@@ -1,0 +1,182 @@
+"""L1 Pallas kernels: the attention hot paths of Block-Attention.
+
+Two kernels implement the paper's two prefill shapes:
+
+* :func:`flash_block_attention` — independent (block-diagonal) prefill of
+  one block: causal attention restricted to the block itself. In the
+  serving stack each retrieved passage runs through this kernel once and
+  its KV states are cached (paper §2.1).
+* :func:`flash_context_attention` — the final block's attention: queries
+  attend to the full (re-encoded) cached context plus causally to the
+  block itself (paper §2.5, Figure 2).
+
+Hardware adaptation (GPU paper → TPU kernel, DESIGN.md §Hardware-
+Adaptation): instead of FlashAttention's warp-level tiling into SRAM, the
+grid is (q-head, q-tile); Q/K/V tiles are staged into VMEM by `BlockSpec`
+index maps, the online-softmax state lives in the `fori_loop` carry, and
+the inner contraction is an MXU-shaped `(TILE_Q × d) @ (d × TILE_K)`
+matmul. GQA is expressed in the K/V index maps (`h // kv_repeat`) so
+grouped heads share the same VMEM tile instead of materializing repeats.
+The block-diagonal mask of Figure 1 costs zero FLOPs: independence is in
+the *grid*, not in a mask tensor.
+
+Kernels are lowered with ``interpret=True`` — mandatory for the CPU PJRT
+runtime (real-TPU lowering emits Mosaic custom-calls the CPU plugin
+cannot execute). Correctness is pinned against ``ref.py`` by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_Q = 64
+DEFAULT_TILE_K = 64
+NEG_INF = -1e30
+
+
+def _flash_body(q, k_ref, v_ref, row0, n_kv_tiles, tile_k, mask_fn):
+    """Shared online-softmax loop over KV tiles.
+
+    q: (TQ, d) f32 tile already loaded.
+    mask_fn(rows, cols) -> bool (TQ, TK) given absolute row/col indices.
+    Returns the attention output tile (TQ, d) f32.
+    """
+    tq, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    def body(i, carry):
+        acc, m, l = carry
+        k = k_ref[pl.dslice(i * tile_k, tile_k), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(i * tile_k, tile_k), :].astype(jnp.float32)
+        s = (q @ k.T) * scale  # (TQ, TK) — MXU-shaped contraction
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (tq, tile_k), 0)
+        cols = i * tile_k + jax.lax.broadcasted_iota(jnp.int32, (tq, tile_k), 1)
+        s = jnp.where(mask_fn(rows, cols), s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return acc_new, m_new, l_new
+
+    acc = jnp.zeros((tq, d), jnp.float32)
+    m0 = jnp.full((tq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((tq,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_kv_tiles, body, (acc, m0, l0))
+    return acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+def _block_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, tile_k):
+    q = q_ref[...].astype(jnp.float32)  # (TQ, d)
+    tq = q.shape[0]
+    L = k_ref.shape[0]
+    qi = pl.program_id(1)
+    n = len_ref[0]
+    row0 = qi * tq
+
+    def mask(rows, cols):
+        return (cols <= rows) & (cols < n)
+
+    o_ref[...] = _flash_body(q, k_ref, v_ref, row0, L // tile_k, tile_k, mask).astype(
+        o_ref.dtype
+    )
+
+
+def flash_block_attention(
+    q, k, v, length, *, tile_q=DEFAULT_TILE_Q, tile_k=DEFAULT_TILE_K, interpret=True
+):
+    """Causal attention within one block (+ valid-length mask).
+
+    q: (Hq, L, d); k, v: (Hkv, L, d) with Hq % Hkv == 0 (GQA);
+    length: (1,) i32 — number of valid tokens (the tail is padding).
+    Returns (Hq, L, d), same dtype as q.
+    """
+    Hq, L, d = q.shape
+    Hkv = k.shape[0]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    assert L % tile_q == 0 and L % tile_k == 0, (L, tile_q, tile_k)
+    kv_repeat = Hq // Hkv
+    kern = functools.partial(_block_kernel, tile_k=tile_k)
+    return pl.pallas_call(
+        kern,
+        grid=(Hq, L // tile_q),
+        in_specs=[
+            pl.BlockSpec((None, tile_q, d), lambda h, i: (h, i, 0)),
+            # GQA: grouped q heads share the K/V tile via the index map.
+            pl.BlockSpec((None, L, d), lambda h, i, r=kv_repeat: (h // r, 0, 0)),
+            pl.BlockSpec((None, L, d), lambda h, i, r=kv_repeat: (h // r, 0, 0)),
+            pl.BlockSpec((1,), lambda h, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, tile_q, d), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Hq, L, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v, length)
+
+
+def _context_kernel(q_ref, k_ref, v_ref, ctxlen_ref, o_ref, *, ctx_capacity, tile_k):
+    q = q_ref[...].astype(jnp.float32)  # (Lq, d) — final block is one tile
+    Lq = q.shape[0]
+    Lk = k_ref.shape[0]
+    ctx_len = ctxlen_ref[0]
+
+    def mask(rows, cols):
+        in_ctx = cols < ctx_len
+        in_self = (cols >= ctx_capacity) & (cols - ctx_capacity <= rows)
+        return in_ctx | in_self
+
+    o_ref[...] = _flash_body(q, k_ref, v_ref, 0, Lk // tile_k, tile_k, mask).astype(
+        o_ref.dtype
+    )
+
+
+def flash_context_attention(
+    q, kv_k, kv_v, ctx_len, *, ctx_capacity, tile_k=DEFAULT_TILE_K, interpret=True
+):
+    """Final-block attention over cached context + causal self.
+
+    q: (Hq, Lq, d) — the user-query block.
+    kv_k, kv_v: (Hkv, ctx_capacity + Lq, d) — re-encoded cached context
+        (padded to the static ``ctx_capacity``) concatenated with the
+        final block's own K/V.
+    ctx_len: (1,) i32 — valid prefix of the context region.
+    """
+    Hq, Lq, d = q.shape
+    Hkv = kv_k.shape[0]
+    Lk = kv_k.shape[1]
+    assert Lk == ctx_capacity + Lq, (Lk, ctx_capacity, Lq)
+    assert Lk % tile_k == 0, (Lk, tile_k)
+    kv_repeat = Hq // Hkv
+    kern = functools.partial(_context_kernel, ctx_capacity=ctx_capacity, tile_k=tile_k)
+    return pl.pallas_call(
+        kern,
+        grid=(Hq,),
+        in_specs=[
+            pl.BlockSpec((None, Lq, d), lambda h: (h, 0, 0)),
+            pl.BlockSpec((None, Lk, d), lambda h, r=kv_repeat: (h // r, 0, 0)),
+            pl.BlockSpec((None, Lk, d), lambda h, r=kv_repeat: (h // r, 0, 0)),
+            pl.BlockSpec((1,), lambda h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, Lq, d), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Hq, Lq, d), q.dtype),
+        interpret=interpret,
+    )(q, kv_k, kv_v, ctx_len)
+
+
+def vmem_bytes(tile_q, tile_k, d, L):
+    """Static VMEM footprint estimate per program instance (f32).
+
+    Used by the perf pass to pick tile shapes for the (hypothetical) real
+    TPU lowering: q tile + whole-block K/V + accumulator + score tile.
+    """
+    return 4 * (tile_q * d + 2 * L * d + tile_q * d + tile_q * tile_k + 2 * tile_q)
+
+
+def mxu_utilization(tile_q, tile_k, d, mxu=128):
+    """Fraction of MXU lanes occupied by the inner matmul shapes."""
+    occ = lambda n: min(n, mxu) / mxu
+    # (TQ × d) @ (d × TK) and (TQ × TK) @ (TK × d)
+    qk = occ(tile_q) * occ(d) * occ(tile_k)
+    av = occ(tile_q) * occ(tile_k) * occ(d)
+    return 0.5 * (qk + av)

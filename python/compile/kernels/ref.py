@@ -1,0 +1,107 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Everything here is written as plainly as possible (materialized score
+matrices, explicit masks) so it can serve as the ground truth the kernels
+are validated against in ``python/tests``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_cos_sin(positions, head_dim, theta):
+    """cos/sin tables for RoPE at the given integer positions.
+
+    Llama-style half-split pairing: pair ``j`` couples dims ``(j, j+d/2)``
+    with angle ``pos * theta ** (-2j/d)``. Must match
+    ``rust/src/rope/mod.rs``.
+
+    Returns (cos, sin), each ``(len(positions), head_dim // 2)`` f32.
+    """
+    half = head_dim // 2
+    j = jnp.arange(half, dtype=jnp.float32)
+    inv_freq = theta ** (-2.0 * j / head_dim)
+    ang = positions.astype(jnp.float32)[:, None] * inv_freq[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """Rotate ``x`` of shape (L, H, head_dim) by per-position angles.
+
+    cos/sin are (L, head_dim//2).
+    """
+    half = x.shape[-1] // 2
+    a, b = x[..., :half], x[..., half:]
+    c = cos[:, None, :]
+    s = sin[:, None, :]
+    return jnp.concatenate([a * c - b * s, a * s + b * c], axis=-1)
+
+
+def reencode_k(k, delta, theta):
+    """Reference position re-encoding (paper Eq. 3).
+
+    Rotates cached keys ``k`` of shape (layers, L, kv_heads, head_dim) by
+    ``delta`` positions: keys encoded at local positions ``0..L`` become
+    keys at absolute positions ``delta..delta+L``.
+    """
+    layers, L, H, d = k.shape
+    pos = jnp.full((1,), delta, dtype=jnp.int32)
+    cos, sin = rope_cos_sin(pos, d, theta)  # (1, d/2)
+    half = d // 2
+    a, b = k[..., :half], k[..., half:]
+    c = cos[0][None, None, None, :]
+    s = sin[0][None, None, None, :]
+    return jnp.concatenate([a * c - b * s, a * s + b * c], axis=-1)
+
+
+def attention(q, k, v, mask):
+    """Masked multi-head attention with materialized scores.
+
+    q: (H, Lq, d); k, v: (H, Lk, d); mask: (Lq, Lk) bool (True = attend).
+    Returns (H, Lq, d) f32.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    s = jnp.einsum("hid,hjd->hij", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = jnp.where(mask[None, :, :], s * scale, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hij,hjd->hid", p, v.astype(jnp.float32))
+
+
+def causal_mask(L, length):
+    """(L, L) causal mask further restricted to the first ``length`` keys."""
+    rows = jnp.arange(L)[:, None]
+    cols = jnp.arange(L)[None, :]
+    return (cols <= rows) & (cols < length)
+
+
+def block_attention(q, k, v, length, kv_repeat=1):
+    """Reference for the per-block prefill kernel: causal + length mask.
+
+    q: (Hq, L, d); k, v: (Hkv, L, d) with Hq = Hkv * kv_repeat (GQA).
+    """
+    if kv_repeat > 1:
+        k = jnp.repeat(k, kv_repeat, axis=0)
+        v = jnp.repeat(v, kv_repeat, axis=0)
+    return attention(q, k, v, causal_mask(q.shape[1], length))
+
+
+def context_attention(q, kv_k, kv_v, ctx_capacity, ctx_len, kv_repeat=1):
+    """Reference for the final-block kernel.
+
+    The key/value sequence is the concatenation of a padded context region
+    of static capacity ``ctx_capacity`` (valid prefix ``ctx_len``) and the
+    final block itself. Query ``i`` attends to context keys ``< ctx_len``
+    and causally to final-block keys ``<= i``.
+
+    q: (Hq, Lq, d); kv_k/kv_v: (Hkv, ctx_capacity + Lq, d).
+    """
+    if kv_repeat > 1:
+        kv_k = jnp.repeat(kv_k, kv_repeat, axis=0)
+        kv_v = jnp.repeat(kv_v, kv_repeat, axis=0)
+    Lq = q.shape[1]
+    Lk = kv_k.shape[1]
+    rows = jnp.arange(Lq)[:, None]
+    cols = jnp.arange(Lk)[None, :]
+    in_ctx = (cols < ctx_len)
+    in_self = (cols >= ctx_capacity) & (cols - ctx_capacity <= rows)
+    return attention(q, kv_k, kv_v, in_ctx | in_self)

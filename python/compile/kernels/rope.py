@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: RoPE position re-encoding (paper §2.3, Eq. 3).
+
+Rotates every cached key of a block by ``delta`` positions so that keys
+encoded at local positions ``0..L`` become keys at absolute positions
+``delta..delta+L``. Because RoPE rotations compose additively this is
+exactly equivalent to recomputing the keys at the shifted positions —
+the invariant pinned by ``python/tests/test_rope.py`` and mirrored by the
+native Rust implementation in ``rust/src/rope/``.
+
+TPU shape: one grid step per layer; the (L, kv_heads, d) key block of
+that layer is staged into VMEM, rotated with a single broadcasted
+cos/sin pair (the angle depends only on ``delta``, not on the token), and
+written back. The rotation is element-wise → VPU work, no MXU needed.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _reencode_kernel(k_ref, delta_ref, o_ref, *, theta):
+    k = k_ref[...].astype(jnp.float32)  # (L, H, d)
+    d = k.shape[-1]
+    half = d // 2
+    j = jax.lax.iota(jnp.float32, half)
+    inv_freq = jnp.exp(j * (-2.0 / d) * jnp.log(jnp.float32(theta)))
+    ang = delta_ref[0].astype(jnp.float32) * inv_freq  # (d/2,)
+    cos = jnp.cos(ang)[None, None, :]
+    sin = jnp.sin(ang)[None, None, :]
+    a, b = k[..., :half], k[..., half:]
+    o_ref[...] = jnp.concatenate(
+        [a * cos - b * sin, a * sin + b * cos], axis=-1
+    ).astype(o_ref.dtype)
+
+
+def reencode_k(k, delta, *, theta, interpret=True):
+    """Rotate cached keys by ``delta`` positions.
+
+    k: (layers, L, kv_heads, head_dim); delta: (1,) i32.
+    Returns the re-encoded keys, same shape/dtype.
+    """
+    N, L, H, d = k.shape
+    import functools
+
+    kern = functools.partial(_reencode_kernel, theta=theta)
+    return pl.pallas_call(
+        kern,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((None, L, H, d), lambda n: (n, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda n: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, L, H, d), lambda n: (n, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, L, H, d), k.dtype),
+        interpret=interpret,
+    )(k, delta)

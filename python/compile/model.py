@@ -1,0 +1,391 @@
+"""L2: the Llama-style transformer and its five AOT entry points.
+
+Architecture: token embedding (tied LM head), N pre-norm blocks
+(RMSNorm → GQA attention with RoPE → RMSNorm → SwiGLU MLP), final
+RMSNorm. Per-layer parameters are *stacked* on a leading layer axis and
+the forward pass is a ``lax.scan`` over layers, which keeps the lowered
+HLO compact and the Rust-side parameter interface small (11 tensors).
+
+Entry points (signatures mirrored in ``artifacts/manifest.json``; the
+Rust runtime binds them by name):
+
+* ``prefill_full(tokens, length, *params)`` → ``(last_logits, k, v)`` —
+  vanilla causal prefill (the paper's full-attention baseline).
+* ``prefill_block(tokens, length, *params)`` → ``(k, v)`` — independent
+  prefill of one block at **local** positions ``0..L`` (paper §2.1); the
+  returned keys are cached and later re-encoded (§2.3).
+* ``prefill_final(tokens, q_len, past_k, past_v, past_len, *params)`` →
+  ``(last_logits, k, v)`` — the final block attends to the re-encoded
+  cached context (§2.5); queries sit at absolute positions
+  ``past_len..past_len+q_len``.
+* ``decode_step(token, cache_len, k_cache, v_cache, *params)`` →
+  ``(logits, k_cache, v_cache)`` — one autoregressive step over a dense
+  cache.
+* ``train_step(step, lr, tokens, seg, loss_mask, *params, *m, *v)`` →
+  ``(loss, *params, *m, *v)`` — one block-fine-tune step (§2.4): the
+  attention mask is derived from per-token segment ids (Figure 1 right);
+  a row whose segment ids are all equal trains in full-attention mode,
+  so one artifact serves both halves of the paper's dual-mode training.
+
+Positions are always *global*: block fine-tuning uses the block-diagonal
+mask with sequential positions, matching inference where cached
+local-position keys are rotated to their global offsets (the two are
+equivalent because RoPE attention depends only on relative positions
+within each attended span — pinned by ``tests/test_model.py``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .configs import ModelConfig
+from .kernels import block_attention as ba
+from .kernels.ref import apply_rope, rope_cos_sin
+
+# Parameter layout (order matters — it is the checkpoint/train interface).
+def param_specs(cfg: ModelConfig):
+    N, Dm, H, K, F, V = (
+        cfg.layers,
+        cfg.d_model,
+        cfg.heads,
+        cfg.kv_heads,
+        cfg.d_ff,
+        cfg.vocab,
+    )
+    hd = cfg.head_dim
+    return [
+        ("embed", (V, Dm)),
+        ("ln1", (N, Dm)),
+        ("wq", (N, Dm, H * hd)),
+        ("wk", (N, Dm, K * hd)),
+        ("wv", (N, Dm, K * hd)),
+        ("wo", (N, H * hd, Dm)),
+        ("ln2", (N, Dm)),
+        ("wg", (N, Dm, F)),
+        ("wu", (N, Dm, F)),
+        ("wd", (N, F, Dm)),
+        ("final_norm", (Dm,)),
+    ]
+
+
+def init_params(cfg: ModelConfig, seed: int):
+    """Deterministic initial parameters (numpy, written to the manifest's
+    ``init_file`` so Rust-driven training starts from the same weights)."""
+    import numpy as np
+
+    rs = np.random.RandomState(seed)
+    out = []
+    resid_scale = 1.0 / np.sqrt(2.0 * cfg.layers)
+    for name, shape in param_specs(cfg):
+        if name in ("ln1", "ln2", "final_norm"):
+            a = np.ones(shape, np.float32)
+        elif name == "embed":
+            a = rs.normal(0.0, 0.02, shape).astype(np.float32)
+        elif name in ("wo", "wd"):
+            a = rs.normal(0.0, 0.02 * resid_scale, shape).astype(np.float32)
+        else:
+            a = rs.normal(0.0, 0.02, shape).astype(np.float32)
+        out.append(a)
+    return out
+
+
+def rms_norm(x, w, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _attn_prefill(cfg, q, k, v, length):
+    """Per-block causal attention dispatch. q: (L,H,hd), k/v: (L,K,hd)."""
+    L = q.shape[0]
+    qT = q.transpose(1, 0, 2)
+    kT = k.transpose(1, 0, 2)
+    vT = v.transpose(1, 0, 2)
+    if cfg.attn_impl == "pallas":
+        o = ba.flash_block_attention(qT, kT, vT, jnp.reshape(length, (1,)))
+    else:
+        o = _jnp_chunked_causal(qT, kT, vT, length, cfg)
+    return o.transpose(1, 0, 2)
+
+
+def _jnp_chunked_causal(q, k, v, length, cfg, chunk=256):
+    """Flash-style chunked causal attention in plain jnp (CPU-fast path
+    for the very long bench-config sequences — O(L·chunk) memory)."""
+    Hq, L, d = q.shape
+    Hkv = k.shape[0]
+    if Hq != Hkv:
+        k = jnp.repeat(k, Hq // Hkv, axis=0)
+        v = jnp.repeat(v, Hq // Hkv, axis=0)
+    chunk = min(chunk, L)
+    assert L % chunk == 0
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qs = q.reshape(Hq, L // chunk, chunk, d).transpose(1, 0, 2, 3)
+
+    def per_chunk(args):
+        ci, qc = args
+        s = jnp.einsum("hid,hjd->hij", qc, k) * scale
+        rows = ci * chunk + jnp.arange(chunk)[:, None]
+        cols = jnp.arange(L)[None, :]
+        m = (cols <= rows) & (cols < length)
+        s = jnp.where(m[None], s, ba.NEG_INF)
+        return jnp.einsum("hij,hjd->hid", jax.nn.softmax(s, axis=-1), v)
+
+    out = lax.map(per_chunk, (jnp.arange(L // chunk), qs))
+    return out.transpose(1, 0, 2, 3).reshape(Hq, L, d)
+
+
+def _split_layer_params(params):
+    (embed, ln1, wq, wk, wv, wo, ln2, wg, wu, wd, final_norm) = params
+    return embed, (ln1, wq, wk, wv, wo, ln2, wg, wu, wd), final_norm
+
+
+def _layer_step(cfg, x, lp, cos, sin, attn_fn):
+    """One transformer block. Returns (x', (k, v)) with k/v post-RoPE
+    (keys) ready for caching."""
+    L = x.shape[0]
+    hd = cfg.head_dim
+    l1, wq, wk, wv, wo, l2, wg, wu, wd = lp
+    h = rms_norm(x, l1, cfg.norm_eps)
+    q = (h @ wq).reshape(L, cfg.heads, hd)
+    k = (h @ wk).reshape(L, cfg.kv_heads, hd)
+    v = (h @ wv).reshape(L, cfg.kv_heads, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    o = attn_fn(q, k, v)
+    x = x + o.reshape(L, cfg.heads * hd) @ wo
+    h2 = rms_norm(x, l2, cfg.norm_eps)
+    x = x + (jax.nn.silu(h2 @ wg) * (h2 @ wu)) @ wd
+    return x, (k, v)
+
+
+def _prefill(cfg, params, tokens, length, positions):
+    """Shared prefill body: scan over layers, collect per-layer KV."""
+    embed, layer_params, final_norm = _split_layer_params(params)
+    x = embed[tokens]
+    cos, sin = rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+
+    def layer(x, lp):
+        return _layer_step(
+            cfg, x, lp, cos, sin, lambda q, k, v: _attn_prefill(cfg, q, k, v, length)
+        )
+
+    x, (ks, vs) = lax.scan(layer, x, layer_params)
+    return x, final_norm, embed, ks, vs
+
+
+def _last_logits(cfg, x, final_norm, embed, idx):
+    h = rms_norm(x, final_norm, cfg.norm_eps)
+    last = lax.dynamic_slice_in_dim(h, idx, 1, axis=0)[0]
+    return last @ embed.T
+
+
+def prefill_full(cfg: ModelConfig, tokens, length, *params):
+    """Vanilla full-attention prefill (baseline). Positions 0..L."""
+    L = tokens.shape[0]
+    x, final_norm, embed, ks, vs = _prefill(
+        cfg, params, tokens, length, jnp.arange(L, dtype=jnp.int32)
+    )
+    logits = _last_logits(cfg, x, final_norm, embed, length - 1)
+    return logits, ks, vs
+
+
+def prefill_block(cfg: ModelConfig, tokens, length, *params):
+    """Independent prefill of one block at local positions (paper §2.1)."""
+    L = tokens.shape[0]
+    _, _, _, ks, vs = _prefill(
+        cfg, params, tokens, length, jnp.arange(L, dtype=jnp.int32)
+    )
+    return ks, vs
+
+
+def prefill_final(
+    cfg: ModelConfig, tokens, q_len, past_k, past_v, past_len, q_pos0, *params
+):
+    """Final-block prefill attending to the re-encoded cached context.
+
+    past_k/past_v: (layers, C, kv_heads, hd), valid prefix ``past_len``,
+    already rotated to absolute positions by the L3 cache manager.
+    ``q_pos0`` is the RoPE position of the first query token — normally
+    ``past_len``, but superposition-style baselines place the query right
+    after the longest parallel document path instead.
+    """
+    Lq = tokens.shape[0]
+    C = past_k.shape[1]
+    embed, layer_params, final_norm = _split_layer_params(params)
+    x = embed[tokens]
+    positions = q_pos0 + jnp.arange(Lq, dtype=jnp.int32)
+    cos, sin = rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+
+    def attn(q, k, v, pk, pv):
+        kv_k = jnp.concatenate([pk, k], axis=0)  # (C+Lq, K, hd)
+        kv_v = jnp.concatenate([pv, v], axis=0)
+        qT = q.transpose(1, 0, 2)
+        kT = kv_k.transpose(1, 0, 2)
+        vT = kv_v.transpose(1, 0, 2)
+        if cfg.attn_impl == "pallas":
+            o = ba.flash_context_attention(
+                qT, kT, vT, jnp.reshape(past_len, (1,)), ctx_capacity=C
+            )
+        else:
+            from .kernels.ref import context_attention
+
+            o = context_attention(
+                qT, kT, vT, C, past_len, kv_repeat=cfg.heads // cfg.kv_heads
+            ).astype(qT.dtype)
+        return o.transpose(1, 0, 2)
+
+    def layer(x, lp_and_past):
+        lp, pk, pv = lp_and_past[:-2], lp_and_past[-2], lp_and_past[-1]
+        return _layer_step(
+            cfg, x, lp, cos, sin, lambda q, k, v: attn(q, k, v, pk, pv)
+        )
+
+    x, (ks, vs) = lax.scan(layer, x, layer_params + (past_k, past_v))
+    logits = _last_logits(cfg, x, final_norm, embed, q_len - 1)
+    return logits, ks, vs
+
+
+def decode_step(cfg: ModelConfig, token, cache_len, k_cache, v_cache, *params):
+    """One decode step over a dense cache (new token at ``cache_len``)."""
+    embed, layer_params, final_norm = _split_layer_params(params)
+    hd = cfg.head_dim
+    x = embed[token]  # (Dm,)
+    pos = jnp.reshape(cache_len, (1,))
+    cos, sin = rope_cos_sin(pos, hd, cfg.rope_theta)  # (1, hd/2)
+    rep = cfg.heads // cfg.kv_heads
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    def layer(x, lp_and_cache):
+        lp, kc, vc = lp_and_cache[:-2], lp_and_cache[-2], lp_and_cache[-1]
+        l1, wq, wk, wv, wo, l2, wg, wu, wd = lp
+        h = rms_norm(x, l1, cfg.norm_eps)
+        q = (h @ wq).reshape(1, cfg.heads, hd)
+        k = (h @ wk).reshape(1, cfg.kv_heads, hd)
+        v = (h @ wv).reshape(1, cfg.kv_heads, hd)
+        q = apply_rope(q, cos, sin)[0]  # (H, hd)
+        k = apply_rope(k, cos, sin)
+        kc = lax.dynamic_update_slice(kc, k, (cache_len, 0, 0))
+        vc = lax.dynamic_update_slice(vc, v, (cache_len, 0, 0))
+        kr = jnp.repeat(kc, rep, axis=1)  # (C, H, hd)
+        vr = jnp.repeat(vc, rep, axis=1)
+        s = jnp.einsum("hd,chd->hc", q.astype(jnp.float32), kr.astype(jnp.float32))
+        mask = jnp.arange(kc.shape[0]) <= cache_len
+        s = jnp.where(mask[None, :], s * scale, ba.NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("hc,chd->hd", p, vr.astype(jnp.float32)).astype(x.dtype)
+        x = x + o.reshape(cfg.heads * hd) @ wo
+        h2 = rms_norm(x, l2, cfg.norm_eps)
+        x = x + (jax.nn.silu(h2 @ wg) * (h2 @ wu)) @ wd
+        return x, (kc, vc)
+
+    x, (kcs, vcs) = lax.scan(layer, x, layer_params + (k_cache, v_cache))
+    logits = rms_norm(x, final_norm, cfg.norm_eps) @ embed.T
+    return logits, kcs, vcs
+
+
+# ---------------------------------------------------------------------------
+# Training (paper §2.4: block fine-tune)
+# ---------------------------------------------------------------------------
+
+def segment_attention_mask(seg):
+    """Figure-1 mask from per-token segment ids, batched.
+
+    seg: (B, L) i32; padding rows use a dedicated trailing segment id.
+    mask[b,i,j] = causal AND (same segment OR query in final segment).
+    The final segment is the row-wise max id — the "last block attends
+    everything" rule of Block-attention. A row whose ids are all equal
+    degenerates to plain causal (full-attention training mode).
+    """
+    L = seg.shape[1]
+    rows = jnp.arange(L)[:, None]
+    cols = jnp.arange(L)[None, :]
+    causal = cols <= rows
+    same = seg[:, :, None] == seg[:, None, :]
+    final = seg[:, :, None] == jnp.max(seg, axis=1)[:, None, None]
+    return causal[None] & (same | final)
+
+
+def _train_forward(cfg, params, tokens, seg):
+    embed, layer_params, final_norm = _split_layer_params(params)
+    B, L = tokens.shape
+    hd = cfg.head_dim
+    x = embed[tokens]  # (B, L, Dm)
+    cos, sin = rope_cos_sin(jnp.arange(L, dtype=jnp.int32), hd, cfg.rope_theta)
+    mask = segment_attention_mask(seg)  # (B, L, L)
+    rep = cfg.heads // cfg.kv_heads
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    def layer(x, lp):
+        l1, wq, wk, wv, wo, l2, wg, wu, wd = lp
+        h = rms_norm(x, l1, cfg.norm_eps)
+        q = (h @ wq).reshape(B, L, cfg.heads, hd)
+        k = (h @ wk).reshape(B, L, cfg.kv_heads, hd)
+        v = (h @ wv).reshape(B, L, cfg.kv_heads, hd)
+        q = jax.vmap(apply_rope, in_axes=(0, None, None))(q, cos, sin)
+        k = jax.vmap(apply_rope, in_axes=(0, None, None))(k, cos, sin)
+        if rep > 1:
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+        s = jnp.einsum("bihd,bjhd->bhij", q, k) * scale
+        s = jnp.where(mask[:, None, :, :], s, ba.NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhij,bjhd->bihd", p, v).reshape(B, L, cfg.heads * hd)
+        x = x + o @ wo
+        h2 = rms_norm(x, l2, cfg.norm_eps)
+        x = x + (jax.nn.silu(h2 @ wg) * (h2 @ wu)) @ wd
+        return x, None
+
+    x, _ = lax.scan(layer, x, layer_params)
+    return rms_norm(x, final_norm, cfg.norm_eps) @ embed.T  # (B, L, V)
+
+
+def train_loss(cfg, params, tokens, seg, loss_mask):
+    """Next-token CE where ``loss_mask[b, t] = 1`` marks token t as a
+    prediction target (predicted from position t-1)."""
+    logits = _train_forward(cfg, params, tokens, seg)
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    w = loss_mask[:, 1:]
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+ADAM_B1, ADAM_B2, ADAM_EPS, CLIP_NORM = 0.9, 0.999, 1e-8, 1.0
+
+
+def train_step(cfg: ModelConfig, step, lr, tokens, seg, loss_mask, *state):
+    """One Adam step with global-norm clipping. ``state`` is
+    ``params + m + v`` (3 × 11 tensors); returns ``(loss,) + new_state``."""
+    n = len(param_specs(cfg))
+    params, m, v = state[:n], state[n : 2 * n], state[2 * n :]
+    loss, grads = jax.value_and_grad(
+        lambda p: train_loss(cfg, p, tokens, seg, loss_mask)
+    )(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads))
+    clip = jnp.minimum(1.0, CLIP_NORM / jnp.maximum(gnorm, 1e-12))
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - ADAM_B1**t
+    bc2 = 1.0 - ADAM_B2**t
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        g = g * clip
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * jnp.square(g)
+        upd = (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        new_p.append(p - lr * upd)
+        new_m.append(mi)
+        new_v.append(vi)
+    return (loss, *new_p, *new_m, *new_v)
+
+
+def bind(cfg: ModelConfig, name: str):
+    """Entry point by name with the config closed over (for aot/tests)."""
+    fns = {
+        "prefill_full": prefill_full,
+        "prefill_block": prefill_block,
+        "prefill_final": prefill_final,
+        "decode_step": decode_step,
+        "train_step": train_step,
+    }
+    return functools.partial(fns[name], cfg)

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Make the `compile` package importable regardless of pytest rootdir.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,80 @@
+"""AOT pipeline sanity: entry enumeration, HLO text lowering, init
+params, and manifest consistency with the model's parameter layout."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.configs import CONFIGS, TINY
+
+
+def test_entries_cover_all_kinds():
+    kinds = {kind for _, kind, _, _, _ in aot.entries_for(TINY)}
+    assert kinds == {
+        "prefill_full",
+        "prefill_block",
+        "prefill_final",
+        "decode_step",
+        "reencode_k",
+        "train_step",
+    }
+
+
+def test_entry_names_are_unique():
+    for cfg in CONFIGS.values():
+        names = [name for name, *_ in aot.entries_for(cfg)]
+        assert len(names) == len(set(names)), cfg.name
+
+
+def test_lower_one_entry_to_hlo_text():
+    # The smallest tiny entry: reencode (no params).
+    entries = {name: (fn, specs) for name, _, _, fn, specs in aot.entries_for(TINY)}
+    fn, specs = entries["tiny_reencode_L64"]
+    text = aot.to_hlo_text(fn, specs)
+    assert "HloModule" in text
+    assert len(text) > 1000
+
+
+def test_init_params_deterministic_and_correct_layout():
+    a = model.init_params(TINY, seed=5)
+    b = model.init_params(TINY, seed=5)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    specs = model.param_specs(TINY)
+    assert len(a) == len(specs)
+    for arr, (name, shape) in zip(a, specs):
+        assert arr.shape == tuple(shape), name
+        assert arr.dtype == np.float32
+    # Norm weights start at one, matrices near zero-mean.
+    names = [n for n, _ in specs]
+    assert np.all(a[names.index("final_norm")] == 1.0)
+    assert abs(float(a[0].mean())) < 1e-2
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_matches_model_layout():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    with open(path) as f:
+        man = json.load(f)
+    for name, cfg in CONFIGS.items():
+        mc = man["configs"][name]
+        assert mc["d_model"] == cfg.d_model
+        assert mc["head_dim"] == cfg.head_dim
+        specs = model.param_specs(cfg)
+        assert [p["name"] for p in mc["params"]] == [n for n, _ in specs]
+        assert [tuple(p["shape"]) for p in mc["params"]] == [tuple(s) for _, s in specs]
+        # Every listed artifact file exists.
+        adir = os.path.dirname(path)
+        for e in mc["entries"]:
+            assert os.path.exists(os.path.join(adir, e["file"])), e["file"]
+        # Init file length matches the layout.
+        n_params = sum(int(np.prod(s)) for _, s in specs)
+        init = os.path.join(adir, mc["init_file"])
+        assert os.path.getsize(init) == 4 * n_params

@@ -1,0 +1,205 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracles,
+hypothesis-swept over shapes, lengths, GQA ratios and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import block_attention as ba
+from compile.kernels import ref
+from compile.kernels import rope as rope_kernel
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+def tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-4
+
+
+# --------------------------------------------------------------------------
+# flash_block_attention
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    hq=st.sampled_from([1, 2, 4]),
+    ratio=st.sampled_from([1, 2]),
+    n_tiles=st.integers(1, 4),
+    tile=st.sampled_from([8, 16]),
+    d=st.sampled_from([8, 32]),
+    frac=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_block_attention_matches_ref(hq, ratio, n_tiles, tile, d, frac, seed):
+    if hq % ratio:
+        ratio = 1
+    hkv = hq // ratio
+    L = n_tiles * tile
+    length = max(1, int(frac * L))
+    q = rand(seed, (hq, L, d), jnp.float32)
+    k = rand(seed + 1, (hkv, L, d), jnp.float32)
+    v = rand(seed + 2, (hkv, L, d), jnp.float32)
+    n = jnp.array([length], jnp.int32)
+    out = ba.flash_block_attention(q, k, v, n, tile_q=tile, tile_k=tile)
+    expect = ref.block_attention(q, k, v, length, kv_repeat=ratio)
+    np.testing.assert_allclose(
+        np.asarray(out)[:, :length], np.asarray(expect)[:, :length], atol=2e-4
+    )
+
+
+def test_block_attention_is_causal():
+    # Changing a future token must not change earlier outputs.
+    q = rand(0, (2, 64, 16), jnp.float32)
+    k = rand(1, (2, 64, 16), jnp.float32)
+    v = rand(2, (2, 64, 16), jnp.float32)
+    n = jnp.array([64], jnp.int32)
+    out1 = ba.flash_block_attention(q, k, v, n)
+    k2 = k.at[:, 50:].set(99.0)
+    v2 = v.at[:, 50:].set(-99.0)
+    out2 = ba.flash_block_attention(q, k2, v2, n)
+    np.testing.assert_allclose(np.asarray(out1[:, :50]), np.asarray(out2[:, :50]), atol=1e-6)
+    assert not np.allclose(np.asarray(out1[:, 51:]), np.asarray(out2[:, 51:]))
+
+
+def test_block_attention_length_mask():
+    # Tokens past `length` must not influence valid positions.
+    q = rand(3, (1, 32, 8), jnp.float32)
+    k = rand(4, (1, 32, 8), jnp.float32)
+    v = rand(5, (1, 32, 8), jnp.float32)
+    out1 = ba.flash_block_attention(q, k, v, jnp.array([20], jnp.int32), tile_q=8, tile_k=8)
+    k2 = k.at[:, 20:].set(7.0)
+    out2 = ba.flash_block_attention(q, k2, v, jnp.array([20], jnp.int32), tile_q=8, tile_k=8)
+    np.testing.assert_allclose(np.asarray(out1[:, :20]), np.asarray(out2[:, :20]), atol=1e-6)
+
+
+def test_block_attention_bf16():
+    q = rand(6, (2, 64, 32), jnp.bfloat16)
+    k = rand(7, (1, 64, 32), jnp.bfloat16)
+    v = rand(8, (1, 64, 32), jnp.bfloat16)
+    n = jnp.array([64], jnp.int32)
+    out = ba.flash_block_attention(q, k, v, n)
+    expect = ref.block_attention(q, k, v, 64, kv_repeat=2)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=3e-2
+    )
+
+
+# --------------------------------------------------------------------------
+# flash_context_attention
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    hq=st.sampled_from([1, 2, 4]),
+    ratio=st.sampled_from([1, 2]),
+    ctx_tiles=st.integers(1, 4),
+    lq=st.sampled_from([8, 16]),
+    d=st.sampled_from([8, 16]),
+    frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_context_attention_matches_ref(hq, ratio, ctx_tiles, lq, d, frac, seed):
+    if hq % ratio:
+        ratio = 1
+    hkv = hq // ratio
+    tile = lq  # keep C+Lq divisible by tile
+    C = ctx_tiles * tile
+    ctx_len = int(frac * C)
+    q = rand(seed, (hq, lq, d), jnp.float32)
+    kv_k = rand(seed + 1, (hkv, C + lq, d), jnp.float32)
+    kv_v = rand(seed + 2, (hkv, C + lq, d), jnp.float32)
+    n = jnp.array([ctx_len], jnp.int32)
+    out = ba.flash_context_attention(q, kv_k, kv_v, n, ctx_capacity=C, tile_k=tile)
+    expect = ref.context_attention(q, kv_k, kv_v, C, ctx_len, kv_repeat=ratio)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-4)
+
+
+def test_context_attention_ignores_ctx_padding():
+    # Garbage in the padded context region (>= ctx_len) must not matter.
+    q = rand(9, (2, 16, 8), jnp.float32)
+    kv_k = rand(10, (2, 48, 8), jnp.float32)
+    kv_v = rand(11, (2, 48, 8), jnp.float32)
+    n = jnp.array([12], jnp.int32)
+    out1 = ba.flash_context_attention(q, kv_k, kv_v, n, ctx_capacity=32, tile_k=16)
+    kv_k2 = kv_k.at[:, 12:32].set(55.0)
+    kv_v2 = kv_v.at[:, 12:32].set(-55.0)
+    out2 = ba.flash_context_attention(q, kv_k2, kv_v2, n, ctx_capacity=32, tile_k=16)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+def test_context_attention_zero_ctx_equals_causal():
+    # With ctx_len = 0 the kernel degenerates to causal self-attention.
+    q = rand(12, (2, 16, 8), jnp.float32)
+    self_k = rand(13, (2, 16, 8), jnp.float32)
+    self_v = rand(14, (2, 16, 8), jnp.float32)
+    pad = jnp.zeros((2, 16, 8), jnp.float32)
+    kv_k = jnp.concatenate([pad, self_k], axis=1)
+    kv_v = jnp.concatenate([pad, self_v], axis=1)
+    out = ba.flash_context_attention(
+        q, kv_k, kv_v, jnp.array([0], jnp.int32), ctx_capacity=16, tile_k=16
+    )
+    expect = ref.block_attention(q, self_k, self_v, 16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# RoPE re-encode kernel
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    layers=st.integers(1, 3),
+    L=st.sampled_from([4, 16]),
+    heads=st.integers(1, 3),
+    d=st.sampled_from([8, 32]),
+    delta=st.integers(0, 5000),
+    seed=st.integers(0, 2**16),
+)
+def test_reencode_matches_ref(layers, L, heads, d, delta, seed):
+    k = rand(seed, (layers, L, heads, d), jnp.float32)
+    out = rope_kernel.reencode_k(k, jnp.array([delta], jnp.int32), theta=10000.0)
+    expect = ref.reencode_k(k, delta, 10000.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4)
+
+
+def test_reencode_equals_recompute():
+    """Paper Eq. 3: encode at local positions then rotate by delta ==
+    encode at absolute positions delta.. directly."""
+    d, L, H = 16, 8, 2
+    raw = rand(20, (1, L, H, d), jnp.float32)
+    delta = 37
+    pos_local = jnp.arange(L, dtype=jnp.int32)
+    cos_l, sin_l = ref.rope_cos_sin(pos_local, d, 10000.0)
+    local = ref.apply_rope(raw[0], cos_l, sin_l)[None]
+    re = rope_kernel.reencode_k(local, jnp.array([delta], jnp.int32), theta=10000.0)
+    cos_a, sin_a = ref.rope_cos_sin(pos_local + delta, d, 10000.0)
+    absolute = ref.apply_rope(raw[0], cos_a, sin_a)[None]
+    np.testing.assert_allclose(np.asarray(re), np.asarray(absolute), atol=1e-4)
+
+
+def test_reencode_zero_delta_identity():
+    k = rand(21, (2, 4, 2, 8), jnp.float32)
+    out = rope_kernel.reencode_k(k, jnp.array([0], jnp.int32), theta=10000.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(k), atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# VMEM / MXU estimators (perf-pass bookkeeping)
+# --------------------------------------------------------------------------
+
+def test_vmem_estimate_monotone():
+    a = ba.vmem_bytes(64, 64, 32, 512)
+    b = ba.vmem_bytes(128, 64, 32, 512)
+    c = ba.vmem_bytes(64, 64, 32, 2048)
+    assert b > a and c > a
+
+
+def test_mxu_utilization_bounds():
+    u = ba.mxu_utilization(128, 128, 128)
+    assert abs(u - 1.0) < 1e-9
+    assert 0 < ba.mxu_utilization(64, 64, 32) < 1.0

@@ -1,0 +1,223 @@
+"""L2 model invariants — the correctness core of Block-Attention:
+
+1. Block prefill at local positions + RoPE re-encode reproduces exactly
+   the KV a block-masked *global* forward would produce (the paper's
+   §2.3 equivalence — makes cross-prompt cache reuse lossless).
+2. Single-block degenerate case: block path == full-attention path.
+3. Decode after prefill == prefill of the extended sequence.
+4. train_step reduces loss and keeps both attention modes trainable.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import ModelConfig
+from compile.kernels import ref
+from compile.kernels import rope as rope_kernel
+
+MICRO = ModelConfig(
+    name="micro",
+    vocab=61,
+    d_model=32,
+    layers=2,
+    heads=2,
+    kv_heads=1,
+    d_ff=48,
+    max_len=256,
+    attn_impl="pallas",
+    full_lengths=(128,),
+    block_lengths=(64,),
+    final_ctx=(128,),
+    final_q=64,
+    decode_ctx=(192,),
+    train_batch=2,
+    train_len=64,
+)
+
+MICRO_JNP = dataclasses.replace(MICRO, name="micro_jnp", attn_impl="jnp")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return [jnp.asarray(a) for a in model.init_params(MICRO, seed=7)]
+
+
+def tokens_of(rng, n):
+    return jnp.asarray(rng.integers(0, MICRO.vocab, n), jnp.int32)
+
+
+def test_param_specs_cover_init(params):
+    specs = model.param_specs(MICRO)
+    assert len(specs) == len(params) == 11
+    for (name, shape), p in zip(specs, params):
+        assert tuple(shape) == p.shape, name
+
+
+def test_prefill_full_shapes(params):
+    rng = np.random.default_rng(0)
+    toks = tokens_of(rng, 128)
+    logits, ks, vs = model.prefill_full(MICRO, toks, jnp.int32(100), *params)
+    assert logits.shape == (MICRO.vocab,)
+    assert ks.shape == (2, 128, 1, 16)
+    assert vs.shape == (2, 128, 1, 16)
+
+
+def test_pallas_and_jnp_impls_agree(params):
+    rng = np.random.default_rng(1)
+    toks = tokens_of(rng, 128)
+    la, ka, va = model.prefill_full(MICRO, toks, jnp.int32(128), *params)
+    lb, kb, vb = model.prefill_full(MICRO_JNP, toks, jnp.int32(128), *params)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(ka), np.asarray(kb), atol=2e-4)
+
+
+def test_prefill_full_length_mask(params):
+    # Padding beyond `length` must not change the answer.
+    rng = np.random.default_rng(2)
+    toks = tokens_of(rng, 128)
+    l1, _, _ = model.prefill_full(MICRO, toks, jnp.int32(80), *params)
+    toks2 = toks.at[80:].set(3)
+    l2, _, _ = model.prefill_full(MICRO, toks2, jnp.int32(80), *params)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+
+
+def _block_path_logits(cfg, params, blocks, query, C):
+    """Run the full Block-attention inference pipeline in python:
+    per-block prefill at local positions → re-encode to global offsets →
+    final-block prefill. Returns (last_logits, ctx_len)."""
+    N, K, hd = cfg.layers, cfg.kv_heads, cfg.head_dim
+    past_k = jnp.zeros((N, C, K, hd), jnp.float32)
+    past_v = jnp.zeros((N, C, K, hd), jnp.float32)
+    off = 0
+    for b in blocks:
+        Lb = b.shape[0]
+        ks, vs = model.prefill_block(cfg, b, jnp.int32(Lb), *params)
+        ks = rope_kernel.reencode_k(
+            ks, jnp.array([off], jnp.int32), theta=cfg.rope_theta
+        )
+        past_k = past_k.at[:, off : off + Lb].set(ks)
+        past_v = past_v.at[:, off : off + Lb].set(vs)
+        off += Lb
+    logits, _, _ = model.prefill_final(
+        cfg,
+        query,
+        jnp.int32(query.shape[0]),
+        past_k,
+        past_v,
+        jnp.int32(off),
+        jnp.int32(off),
+        *params,
+    )
+    return logits, off
+
+
+def test_single_block_path_equals_full(params):
+    """One context block + query via the block path == vanilla prefill.
+
+    With a single block there is no cross-block independence, so the two
+    attention modes define the identical function (no fine-tuning needed)
+    — this pins the plumbing: local-position prefill, re-encode at
+    delta=0..L, context assembly and final-block positions."""
+    rng = np.random.default_rng(3)
+    block = tokens_of(rng, 64)
+    query = tokens_of(rng, 64)
+    logits_block, off = _block_path_logits(MICRO, params, [block], query, C=128)
+    full = jnp.concatenate([block, query])
+    logits_full, _, _ = model.prefill_full(MICRO, full, jnp.int32(128), *params)
+    np.testing.assert_allclose(
+        np.asarray(logits_block), np.asarray(logits_full), atol=3e-3
+    )
+
+
+def test_multi_block_path_equals_segment_masked_forward(params):
+    """Two blocks + query via the serving pipeline == the *training-time*
+    segment-masked forward (Figure 1 right). This is the train/infer
+    consistency the paper's block fine-tune relies on."""
+    rng = np.random.default_rng(4)
+    b1 = tokens_of(rng, 64)
+    b2 = tokens_of(rng, 64)
+    q = tokens_of(rng, 64)
+    logits_block, _ = _block_path_logits(MICRO, params, [b1, b2], q, C=128)
+
+    toks = jnp.concatenate([b1, b2, q])[None]  # (1, 192)
+    seg = jnp.concatenate(
+        [jnp.zeros(64, jnp.int32), jnp.ones(64, jnp.int32), jnp.full(64, 2, jnp.int32)]
+    )[None]
+    logits_all = model._train_forward(MICRO, tuple(params), toks, seg)
+    np.testing.assert_allclose(
+        np.asarray(logits_block), np.asarray(logits_all[0, -1]), atol=3e-3
+    )
+
+
+def test_decode_consistency_with_prefill(params):
+    """Greedy decode step after a full prefill must equal prefilling the
+    extended sequence."""
+    rng = np.random.default_rng(5)
+    toks = tokens_of(rng, 128)
+    L = 100
+    logits, ks, vs = model.prefill_full(MICRO, toks, jnp.int32(L), *params)
+    nxt = jnp.argmax(logits).astype(jnp.int32)
+
+    C = 192
+    kc = jnp.zeros((2, C, 1, 16), jnp.float32).at[:, :128].set(ks)
+    vc = jnp.zeros((2, C, 1, 16), jnp.float32).at[:, :128].set(vs)
+    # Note the cache holds only the first L valid tokens.
+    kc = kc.at[:, L:].set(0.0)
+    vc = vc.at[:, L:].set(0.0)
+    dl, _, _ = model.decode_step(MICRO, nxt, jnp.int32(L), kc, vc, *params)
+
+    ext = toks.at[L].set(nxt)
+    el, _, _ = model.prefill_full(MICRO, ext, jnp.int32(L + 1), *params)
+    np.testing.assert_allclose(np.asarray(dl), np.asarray(el), atol=3e-3)
+
+
+def test_segment_mask_rules():
+    seg = jnp.asarray([[0, 0, 1, 1, 2, 2]], jnp.int32)
+    m = np.asarray(model.segment_attention_mask(seg))[0]
+    # Causal.
+    assert not m[0, 1]
+    # Within-block attends.
+    assert m[1, 0] and m[3, 2]
+    # Cross-block (non-final) blocked.
+    assert not m[2, 0] and not m[3, 1]
+    # Final segment attends everything before it.
+    assert m[4, 0] and m[4, 2] and m[5, 1] and m[5, 4]
+    # Uniform ids degenerate to plain causal.
+    m2 = np.asarray(model.segment_attention_mask(jnp.zeros((1, 4), jnp.int32)))[0]
+    assert m2[3, 0] and m2[2, 1] and not m2[0, 3]
+
+
+def test_train_step_reduces_loss(params):
+    rng = np.random.default_rng(6)
+    B, L = 2, 64
+    toks = jnp.asarray(rng.integers(0, 8, (B, L)), jnp.int32)  # low-entropy data
+    seg = jnp.concatenate(
+        [jnp.zeros((B, L // 2), jnp.int32), jnp.ones((B, L // 2), jnp.int32)], axis=1
+    )
+    mask = jnp.ones((B, L), jnp.float32)
+    n = len(params)
+    state = tuple(params) + tuple(jnp.zeros_like(p) for p in params) * 2
+    step_fn = jax.jit(lambda s, st: model.train_step(MICRO_JNP, s, jnp.float32(3e-3), toks, seg, mask, *st))
+    losses = []
+    for i in range(8):
+        out = step_fn(jnp.int32(i), state)
+        losses.append(float(out[0]))
+        state = out[1:]
+    assert losses[-1] < losses[0] - 0.2, losses
+
+
+def test_train_loss_respects_mask(params):
+    rng = np.random.default_rng(7)
+    toks = jnp.asarray(rng.integers(0, MICRO.vocab, (1, 64)), jnp.int32)
+    seg = jnp.zeros((1, 64), jnp.int32)
+    full = jnp.ones((1, 64), jnp.float32)
+    half = full.at[:, :32].set(0.0)
+    l_full = model.train_loss(MICRO_JNP, tuple(params), toks, seg, full)
+    l_half = model.train_loss(MICRO_JNP, tuple(params), toks, seg, half)
+    assert not np.isnan(float(l_full)) and not np.isnan(float(l_half))
+    assert abs(float(l_full) - float(l_half)) > 1e-6

@@ -1,0 +1,92 @@
+//! Figure 4 reproduction: RAG accuracy of the two attention modes as a
+//! function of block-fine-tune steps. The series is recorded during
+//! `make checkpoints` (the dual-mode run evaluates both modes every N
+//! steps into `checkpoints/fig4.json`); this bench renders it and checks
+//! the paper's shape: a large early gap that closes with training.
+//!
+//! ```sh
+//! cargo bench --bench fig4_steps
+//! ```
+
+use block_attn::util::cli::Args;
+use block_attn::util::json::Json;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let path = PathBuf::from(args.str_or("checkpoints", "checkpoints")).join("fig4.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        eprintln!("missing {path:?} — run `make checkpoints` first");
+        std::process::exit(0);
+    };
+    let series = Json::parse(&text)?;
+    let points = series.as_arr().unwrap_or(&[]);
+    if points.is_empty() {
+        eprintln!("empty fig4 series");
+        std::process::exit(0);
+    }
+
+    println!("# Figure 4 — both attention modes vs block fine-tune step (dual-mode training)");
+    println!("# acc = exact-match; nll = teacher-forced answer NLL (the resolvable signal");
+    println!("# at tiny-model scale — see EXPERIMENTS.md §Figure 4).");
+    println!(
+        "{:>6} {:>10} {:>10} {:>10} {:>10} {:>9}",
+        "step", "block-acc", "full-acc", "block-nll", "full-nll", "nll-gap"
+    );
+    let mut rows = Vec::new();
+    for p in points {
+        let step = p.get("step").as_f64().unwrap_or(0.0);
+        let b = p.get("block_acc").as_f64().unwrap_or(f64::NAN);
+        let f = p.get("full_acc").as_f64().unwrap_or(f64::NAN);
+        let bn = p.get("block_nll").as_f64().unwrap_or(f64::NAN);
+        let fnl = p.get("full_nll").as_f64().unwrap_or(f64::NAN);
+        println!(
+            "{:>6} {:>9.1}% {:>9.1}% {:>10.3} {:>10.3} {:>9.3}",
+            step,
+            b * 100.0,
+            f * 100.0,
+            bn,
+            fnl,
+            bn - fnl,
+        );
+        rows.push((step, b, f));
+    }
+
+    // ASCII plot.
+    println!("\n  accuracy  (B = block mode, F = full mode)");
+    for level in (0..=10).rev() {
+        let y = level as f64 / 10.0;
+        let mut line = format!("{:>4.0}% |", y * 100.0);
+        for (_, b, f) in &rows {
+            let cb = (b * 10.0).round() as i64 == level;
+            let cf = (f * 10.0).round() as i64 == level;
+            line.push(match (cb, cf) {
+                (true, true) => '*',
+                (true, false) => 'B',
+                (false, true) => 'F',
+                _ => ' ',
+            });
+            line.push(' ');
+        }
+        println!("{line}");
+    }
+    println!("      +{}", "--".repeat(rows.len()));
+    let steps: Vec<String> = rows.iter().map(|(s, _, _)| format!("{s:.0}")).collect();
+    println!("       {}", steps.join(" "));
+
+    // Paper-shape checks (§3.5 conclusion 4 / Figure 4).
+    let (first, last) = (rows.first().unwrap(), rows.last().unwrap());
+    let early_gap = first.2 - first.1;
+    let late_gap = (last.2 - last.1).abs();
+    println!(
+        "\n# early gap {:.1} pts → final gap {:.1} pts (paper: gap vanishes by ~800 steps)",
+        early_gap * 100.0,
+        late_gap * 100.0
+    );
+    println!(
+        "# block-mode accuracy {:.1}% → {:.1}% over training",
+        first.1 * 100.0,
+        last.1 * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,127 @@
+//! Micro-benchmarks of the L3 hot paths (criterion-style, in-tree
+//! harness): RoPE re-encoding, cache operations, hashing, planning,
+//! segmentation, JSON. These are the knobs the §Perf pass turns.
+//!
+//! ```sh
+//! cargo bench --bench micro
+//! ```
+
+use block_attn::coordinator::scheduler::Scheduler;
+use block_attn::coordinator::segmenter::{segment_gamecore, segment_text};
+use block_attn::kvcache::{block_key, BlockKvCache};
+use block_attn::rope::RopeTable;
+use block_attn::tensor::Tensor;
+use block_attn::tokenizer::ByteTokenizer;
+use block_attn::util::json::Json;
+use block_attn::util::rng::Rng;
+use block_attn::util::timer::{bench, BenchOpts};
+use block_attn::workload::gamecore::GamecoreSim;
+
+fn main() {
+    let opts = BenchOpts { warmup_iters: 3, iters: 30, max_seconds: 10.0 };
+    let mut rng = Rng::new(1);
+
+    // RoPE re-encode of one cached block (the per-hit cost of reuse):
+    // bench-config block: 4 layers x 512 tokens x 4 kv heads x 32 dim.
+    let rope = RopeTable::new(32, 500000.0);
+    let dims = [4usize, 512, 4, 32];
+    let n: usize = dims.iter().product();
+    let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let mut k = Tensor::from_vec(&dims, data);
+    let r = bench("rope_reencode_block(4x512x4x32)", &opts, || {
+        rope.reencode_block(k.data_mut(), 4, 512, 4, 1234);
+    });
+    let mb = (n * 4) as f64 / 1e6;
+    println!("{}  ({:.0} MB/s)", r.report_line(), mb / (r.summary.mean()));
+
+    // Content hashing of a 512-token block.
+    let toks: Vec<i32> = (0..512).map(|_| rng.below(32000) as i32).collect();
+    let r = bench("block_key(512 tokens)", &opts, || {
+        std::hint::black_box(block_key(&toks));
+    });
+    println!("{}", r.report_line());
+
+    // Cache insert + lookup + evict churn.
+    let mut cache = BlockKvCache::new(RopeTable::new(32, 10000.0), 8 << 20);
+    let mut i = 0u64;
+    let r = bench("cache_insert_lookup_evict", &opts, || {
+        for _ in 0..100 {
+            i += 1;
+            let key = block_key(&[i as i32]);
+            if !cache.lookup_pin(key) {
+                let k = Tensor::zeros(&[4, 64, 4, 32]);
+                cache.insert_pinned(key, k.clone(), k);
+            }
+            cache.unpin(key);
+        }
+    });
+    println!("{}  (100 ops/iter)", r.report_line());
+
+    // Prefill planning over 32 blocks.
+    let blocks: Vec<Vec<i32>> = (0..32)
+        .map(|b| (0..64).map(|t| (b * 64 + t) as i32).collect())
+        .collect();
+    let sched = Scheduler::new();
+    let mut cache2 = BlockKvCache::new(RopeTable::new(32, 10000.0), 0);
+    let r = bench("scheduler_plan(32 blocks)", &opts, || {
+        let plan = sched.plan(&blocks, &mut cache2);
+        for it in &plan.items {
+            if it.cached {
+                cache2.unpin(it.key);
+            }
+        }
+        std::hint::black_box(plan.total_tokens);
+    });
+    println!("{}", r.report_line());
+
+    // Context assembly memcpy: write 32 x 64-token blocks into a 2048 ctx.
+    let block_kv = Tensor::zeros(&[4usize, 64, 4, 32]);
+    let mut ctx = Tensor::zeros(&[4usize, 2048, 4, 32]);
+    let r = bench("assemble_ctx(32x64 into 2048)", &opts, || {
+        for b in 0..32 {
+            write_ctx(&mut ctx, &block_kv, b * 64);
+        }
+    });
+    println!("{}", r.report_line());
+
+    // Segmentation of gamecore JSON and labeled text.
+    let tok = ByteTokenizer::new();
+    let sim = GamecoreSim::new(8, 3);
+    let frame = sim.frame();
+    let r = bench("segment_gamecore(8 players)", &opts, || {
+        std::hint::black_box(segment_gamecore(&tok, &frame, "act").blocks.len());
+    });
+    println!("{}", r.report_line());
+
+    let text = "para one\n\npara two---para three===tail ".repeat(50);
+    let r = bench("segment_text(~2kB)", &opts, || {
+        std::hint::black_box(segment_text(&tok, &text).blocks.len());
+    });
+    println!("{}", r.report_line());
+
+    // JSON parse of a gamecore frame.
+    let frame_str = frame.to_string();
+    let r = bench("json_parse(gamecore frame)", &opts, || {
+        std::hint::black_box(Json::parse(&frame_str).unwrap());
+    });
+    println!(
+        "{}  ({:.1} MB/s)",
+        r.report_line(),
+        frame_str.len() as f64 / 1e6 / r.summary.mean()
+    );
+}
+
+fn write_ctx(
+    ctx: &mut block_attn::tensor::TensorF,
+    block: &block_attn::tensor::TensorF,
+    at: usize,
+) {
+    let layers = ctx.dims()[0];
+    let row: usize = ctx.dims()[2] * ctx.dims()[3];
+    let blen = block.dims()[1];
+    for l in 0..layers {
+        let dst = ctx.axis0_mut(l);
+        let src = block.axis0(l);
+        dst[at * row..(at + blen) * row].copy_from_slice(&src[..blen * row]);
+    }
+}

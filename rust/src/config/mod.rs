@@ -1,0 +1,314 @@
+//! Model / artifact configuration.
+//!
+//! The single source of truth is `artifacts/manifest.json`, written by
+//! `python/compile/aot.py` at build time. It describes every model config
+//! (dimensions, parameter layout, initial-parameter file) and every AOT
+//! entry point (HLO file + static shapes). The Rust side never hardcodes
+//! shapes — everything is read from the manifest.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Transformer dimensions for one named config (e.g. `tiny`).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+    pub max_len: usize,
+}
+
+impl ModelConfig {
+    /// Total parameter count (tied embedding).
+    pub fn param_count(&self, layout: &[ParamSpec]) -> usize {
+        layout.iter().map(|p| p.len()).sum()
+    }
+
+    /// KV bytes for one token (all layers, f32 K+V).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.layers * self.kv_heads * self.head_dim * 4
+    }
+}
+
+/// One tensor in the flattened parameter layout (order matters: it is the
+/// argument order of `train_step` and the layout of checkpoint files).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The kind of AOT entry point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EntryKind {
+    /// Vanilla full-attention prefill of the whole prompt (baseline).
+    PrefillFull,
+    /// Independent prefill of one block at local positions (no cross-block
+    /// attention) returning its KV states.
+    PrefillBlock,
+    /// Prefill of the final block attending to the (re-encoded) cached
+    /// context KV.
+    PrefillFinal,
+    /// Single-token decode step over a dense KV cache.
+    DecodeStep,
+    /// RoPE re-encode of a cached K block (parity checking vs native rust).
+    ReencodeK,
+    /// One fine-tuning step (fwd + bwd + AdamW).
+    TrainStep,
+}
+
+impl EntryKind {
+    pub fn parse(s: &str) -> Result<EntryKind> {
+        Ok(match s {
+            "prefill_full" => EntryKind::PrefillFull,
+            "prefill_block" => EntryKind::PrefillBlock,
+            "prefill_final" => EntryKind::PrefillFinal,
+            "decode_step" => EntryKind::DecodeStep,
+            "reencode_k" => EntryKind::ReencodeK,
+            "train_step" => EntryKind::TrainStep,
+            other => bail!("unknown entry kind '{other}'"),
+        })
+    }
+}
+
+/// One AOT-compiled entry point (an HLO text file with static shapes).
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: EntryKind,
+    pub file: PathBuf,
+    /// Static size parameters, e.g. `L` (sequence bucket), `C` (context
+    /// capacity), `Lq` (final-block capacity), `B` (train batch).
+    pub sizes: BTreeMap<String, usize>,
+}
+
+impl ArtifactEntry {
+    pub fn size(&self, key: &str) -> Result<usize> {
+        self.sizes
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow!("entry '{}' missing size '{key}'", self.name))
+    }
+}
+
+/// Everything the runtime knows about one model config.
+#[derive(Debug, Clone)]
+pub struct ModelArtifacts {
+    pub config: ModelConfig,
+    pub params: Vec<ParamSpec>,
+    /// Initial parameters file (flat f32 in `params` order), if present.
+    pub init_file: Option<PathBuf>,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl ModelArtifacts {
+    /// All entries of a kind, sorted by their primary bucket size.
+    pub fn entries_of(&self, kind: EntryKind, bucket_key: &str) -> Vec<&ArtifactEntry> {
+        let mut v: Vec<&ArtifactEntry> =
+            self.entries.iter().filter(|e| e.kind == kind).collect();
+        v.sort_by_key(|e| e.sizes.get(bucket_key).copied().unwrap_or(usize::MAX));
+        v
+    }
+
+    /// Smallest entry of `kind` whose `bucket_key` size is >= `need`.
+    pub fn pick_bucket(
+        &self,
+        kind: EntryKind,
+        bucket_key: &str,
+        need: usize,
+    ) -> Result<&ArtifactEntry> {
+        self.entries_of(kind, bucket_key)
+            .into_iter()
+            .find(|e| e.sizes.get(bucket_key).copied().unwrap_or(0) >= need)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no {kind:?} artifact with {bucket_key} >= {need} for config '{}'",
+                    self.config.name
+                )
+            })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.config.param_count(&self.params)
+    }
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelArtifacts>,
+}
+
+impl Manifest {
+    /// Load a manifest from `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        Self::from_json(dir, &root)
+    }
+
+    pub fn from_json(dir: PathBuf, root: &Json) -> Result<Manifest> {
+        let mut models = BTreeMap::new();
+        let configs = root
+            .get("configs")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing 'configs'"))?;
+        for (name, c) in configs {
+            let config = ModelConfig {
+                name: name.clone(),
+                vocab: c.req_usize("vocab")?,
+                d_model: c.req_usize("d_model")?,
+                layers: c.req_usize("layers")?,
+                heads: c.req_usize("heads")?,
+                kv_heads: c.req_usize("kv_heads")?,
+                head_dim: c.req_usize("head_dim")?,
+                d_ff: c.req_usize("d_ff")?,
+                rope_theta: c.req_f64("rope_theta")?,
+                norm_eps: c.req_f64("norm_eps")?,
+                max_len: c.req_usize("max_len")?,
+            };
+            let params = c
+                .req_arr("params")?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.req_str("name")?.to_string(),
+                        shape: p
+                            .req_arr("shape")?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape")))
+                            .collect::<Result<_>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let init_file = c
+                .get("init_file")
+                .as_str()
+                .map(|f| dir.join(f));
+            let mut entries = Vec::new();
+            for e in c.req_arr("entries")? {
+                let mut sizes = BTreeMap::new();
+                if let Some(obj) = e.get("sizes").as_obj() {
+                    for (k, v) in obj {
+                        sizes.insert(
+                            k.clone(),
+                            v.as_usize().ok_or_else(|| anyhow!("bad size {k}"))?,
+                        );
+                    }
+                }
+                entries.push(ArtifactEntry {
+                    name: e.req_str("name")?.to_string(),
+                    kind: EntryKind::parse(e.req_str("kind")?)?,
+                    file: dir.join(e.req_str("file")?),
+                    sizes,
+                });
+            }
+            models.insert(
+                name.clone(),
+                ModelArtifacts { config, params, init_file, entries },
+            );
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no config '{name}'"))
+    }
+}
+
+/// Default artifacts directory: `$BLOCK_ATTN_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("BLOCK_ATTN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> Json {
+        Json::parse(
+            r#"{
+          "version": 1,
+          "configs": {
+            "tiny": {
+              "vocab": 261, "d_model": 128, "layers": 4, "heads": 4,
+              "kv_heads": 2, "head_dim": 32, "d_ff": 344,
+              "rope_theta": 10000.0, "norm_eps": 1e-5, "max_len": 1024,
+              "init_file": "tiny_init.bin",
+              "params": [
+                {"name": "embed", "shape": [261, 128]},
+                {"name": "final_norm", "shape": [128]}
+              ],
+              "entries": [
+                {"name": "a", "kind": "prefill_full", "file": "a.hlo.txt",
+                 "sizes": {"L": 256}},
+                {"name": "b", "kind": "prefill_full", "file": "b.hlo.txt",
+                 "sizes": {"L": 1024}},
+                {"name": "c", "kind": "decode_step", "file": "c.hlo.txt",
+                 "sizes": {"C": 1088}}
+              ]
+            }
+          }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_json(PathBuf::from("/x"), &sample_manifest()).unwrap();
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.config.d_model, 128);
+        assert_eq!(tiny.config.kv_heads, 2);
+        assert_eq!(tiny.params.len(), 2);
+        assert_eq!(tiny.params[0].len(), 261 * 128);
+        assert_eq!(tiny.entries.len(), 3);
+        assert_eq!(tiny.init_file.as_deref(), Some(Path::new("/x/tiny_init.bin")));
+    }
+
+    #[test]
+    fn bucket_picking() {
+        let m = Manifest::from_json(PathBuf::from("/x"), &sample_manifest()).unwrap();
+        let tiny = m.model("tiny").unwrap();
+        let e = tiny.pick_bucket(EntryKind::PrefillFull, "L", 200).unwrap();
+        assert_eq!(e.sizes["L"], 256);
+        let e = tiny.pick_bucket(EntryKind::PrefillFull, "L", 257).unwrap();
+        assert_eq!(e.sizes["L"], 1024);
+        assert!(tiny.pick_bucket(EntryKind::PrefillFull, "L", 5000).is_err());
+        assert!(tiny.pick_bucket(EntryKind::TrainStep, "B", 1).is_err());
+    }
+
+    #[test]
+    fn kv_bytes() {
+        let m = Manifest::from_json(PathBuf::from("/x"), &sample_manifest()).unwrap();
+        let cfg = &m.model("tiny").unwrap().config;
+        assert_eq!(cfg.kv_bytes_per_token(), 2 * 4 * 2 * 32 * 4);
+    }
+}

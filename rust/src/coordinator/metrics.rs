@@ -1,0 +1,101 @@
+//! Serving metrics: TTFT, FLOPs-to-first-token, cache efficiency,
+//! throughput. These are the quantities of the paper's Table 3 and §3.6.
+
+use crate::util::stats::Summary;
+
+/// Aggregated serving metrics.
+pub struct Metrics {
+    pub ttft: Summary,
+    pub flops_tft: Summary,
+    pub decode_lens: Summary,
+    pub requests: u64,
+    pub blocks_seen: u64,
+    pub blocks_cached: u64,
+    started: std::time::Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            ttft: Summary::new(),
+            flops_tft: Summary::new(),
+            decode_lens: Summary::new(),
+            requests: 0,
+            blocks_seen: 0,
+            blocks_cached: 0,
+            started: std::time::Instant::now(),
+        }
+    }
+
+    pub fn record_ttft(&mut self, seconds: f64, flops: f64) {
+        self.ttft.add(seconds);
+        self.flops_tft.add(flops);
+        self.requests += 1;
+    }
+
+    pub fn record_cache(&mut self, cached: usize, total: usize) {
+        self.blocks_cached += cached as u64;
+        self.blocks_seen += total as u64;
+    }
+
+    pub fn record_completion(&mut self, generated: usize) {
+        self.decode_lens.add(generated as f64);
+    }
+
+    pub fn block_hit_rate(&self) -> f64 {
+        if self.blocks_seen == 0 {
+            0.0
+        } else {
+            self.blocks_cached as f64 / self.blocks_seen as f64
+        }
+    }
+
+    /// Requests per wall-clock second since creation.
+    pub fn throughput_rps(&self) -> f64 {
+        let dt = self.started.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / dt
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} ttft_p50={:.1}ms ttft_p95={:.1}ms flops_tft_mean={:.3e} \
+             block_hit_rate={:.1}% throughput={:.2} req/s",
+            self.requests,
+            self.ttft.p50() * 1e3,
+            self.ttft.p95() * 1e3,
+            self.flops_tft.mean(),
+            self.block_hit_rate() * 100.0,
+            self.throughput_rps(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting() {
+        let mut m = Metrics::new();
+        m.record_ttft(0.010, 1e9);
+        m.record_ttft(0.020, 2e9);
+        m.record_cache(3, 4);
+        m.record_cache(1, 4);
+        m.record_completion(7);
+        assert_eq!(m.requests, 2);
+        assert!((m.block_hit_rate() - 0.5).abs() < 1e-12);
+        assert!((m.flops_tft.mean() - 1.5e9).abs() < 1.0);
+        assert!(m.ttft.p50() >= 0.010);
+        assert!(m.report().contains("requests=2"));
+    }
+}

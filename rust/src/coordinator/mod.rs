@@ -1,0 +1,425 @@
+//! L3 coordinator — the serving-side system contribution of the paper.
+//!
+//! Pipeline per request (paper Figure 2):
+//!
+//! ```text
+//! raw prompt ──segmenter──► blocks ──scheduler──► plan
+//!     plan: per block, cache hit (reuse KV) or miss (prefill_block)
+//!   misses ──engine.prefill_block──► KV ──► cache (content-addressed)
+//!   all blocks ──RoPE re-encode to prompt offsets──► context tensor
+//!   final block ──engine.prefill_final──► first token  ← TTFT stops here
+//!   decode loop (continuous batching across active requests)
+//! ```
+//!
+//! Modes ([`AttentionMode`]) cover the paper's serving variants: `Full`
+//! (vanilla baseline), `Block` (the contribution), `BlockNoReencode`
+//! (PromptCache-like / the w/o-pos ablation) and `BlockParallel`
+//! (Superposition-like position assignment).
+
+pub mod batcher;
+pub mod metrics;
+pub mod scheduler;
+pub mod segmenter;
+pub mod session;
+
+use crate::kvcache::{block_key, BlockKvCache};
+use crate::rope::RopeTable;
+use crate::runtime::ModelEngine;
+use crate::tensor::{argmax, TensorF};
+use crate::tokenizer::EOS;
+use anyhow::{bail, Result};
+use metrics::Metrics;
+use scheduler::{PrefillPlan, Scheduler};
+use std::time::Instant;
+
+/// How the prompt context is attended to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttentionMode {
+    /// Vanilla full-attention prefill of the entire prompt (baseline).
+    Full,
+    /// Block-attention with position re-encoding (the paper).
+    Block,
+    /// Block-attention **without** re-encoding: every cached block keeps
+    /// its local `0..L` positions (PromptCache-like; the paper's
+    /// `w/o-pos` ablation).
+    BlockNoReencode,
+    /// Superposition-like: all blocks re-encoded to the *same* offset 0
+    /// ("parallel paths"); the query follows the longest path.
+    BlockParallel,
+}
+
+impl AttentionMode {
+    pub fn parse(s: &str) -> Result<AttentionMode> {
+        Ok(match s {
+            "full" => AttentionMode::Full,
+            "block" => AttentionMode::Block,
+            "no-reencode" | "promptcache" => AttentionMode::BlockNoReencode,
+            "parallel" | "superposition" => AttentionMode::BlockParallel,
+            other => bail!("unknown attention mode '{other}'"),
+        })
+    }
+}
+
+/// A generation request: pre-segmented context blocks plus the final
+/// (query) block.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub blocks: Vec<Vec<i32>>,
+    pub query: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub mode: AttentionMode,
+}
+
+impl Request {
+    pub fn prompt_tokens(&self) -> usize {
+        self.blocks.iter().map(|b| b.len()).sum::<usize>() + self.query.len()
+    }
+}
+
+/// Completed generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Seconds from admission to the first generated token.
+    pub ttft: f64,
+    /// Analytic FLOPs spent producing the first token (paper's
+    /// FLOPs-TFT metric), including any block prefills that missed cache.
+    pub flops_tft: f64,
+    pub cached_blocks: usize,
+    pub total_blocks: usize,
+    pub prompt_tokens: usize,
+}
+
+/// The serving coordinator: engine + cache + scheduler + metrics.
+pub struct Coordinator {
+    engine: ModelEngine,
+    cache: BlockKvCache,
+    scheduler: Scheduler,
+    pub metrics: Metrics,
+    flops: crate::flops::FlopsModel,
+    /// Raw logits of the most recent prefill (teacher-forced scoring).
+    last_prefill_logits: Option<Vec<f32>>,
+}
+
+impl Coordinator {
+    pub fn new(engine: ModelEngine, cache_budget_bytes: usize) -> Coordinator {
+        let cfg = engine.config().clone();
+        let rope = RopeTable::new(cfg.head_dim, cfg.rope_theta);
+        let flops = crate::flops::FlopsModel::from_config(&cfg);
+        Coordinator {
+            engine,
+            cache: BlockKvCache::new(rope, cache_budget_bytes),
+            scheduler: Scheduler::new(),
+            metrics: Metrics::new(),
+            flops,
+            last_prefill_logits: None,
+        }
+    }
+
+    pub fn engine(&self) -> &ModelEngine {
+        &self.engine
+    }
+
+    pub fn cache_stats(&self) -> crate::kvcache::CacheStats {
+        self.cache.stats()
+    }
+
+    /// Invalidate all cached block KV (mandatory after parameter
+    /// updates — cached states are functions of the weights).
+    pub fn clear_cache(&mut self) {
+        self.cache.clear();
+    }
+
+    /// Serve one request to completion (prefill + full decode loop).
+    /// Continuous batching across requests lives in [`batcher`].
+    pub fn process(&mut self, req: &Request) -> Result<Response> {
+        let t0 = Instant::now();
+        let (state, resp_proto) = self.prefill(req, t0)?;
+        self.decode_to_completion(req, state, resp_proto)
+    }
+
+    /// Run the prefill phase: returns the in-flight decode state and the
+    /// response skeleton (TTFT/FLOPs already final — TTFT is defined by
+    /// the first token, which prefill produces).
+    pub(crate) fn prefill(
+        &mut self,
+        req: &Request,
+        t0: Instant,
+    ) -> Result<(DecodeState, Response)> {
+        let out = match req.mode {
+            AttentionMode::Full => self.prefill_vanilla(req)?,
+            _ => self.prefill_block_mode(req)?,
+        };
+        let ttft = t0.elapsed().as_secs_f64();
+        self.metrics.record_ttft(ttft, out.flops_tft);
+        self.metrics
+            .record_cache(out.cached_blocks, out.total_blocks);
+        let first = argmax(&out.last_logits) as i32;
+        self.last_prefill_logits = Some(out.last_logits);
+        let resp = Response {
+            id: req.id,
+            tokens: vec![first],
+            ttft,
+            flops_tft: out.flops_tft,
+            cached_blocks: out.cached_blocks,
+            total_blocks: out.total_blocks,
+            prompt_tokens: req.prompt_tokens(),
+        };
+        Ok((out.state, resp))
+    }
+
+    pub(crate) fn decode_to_completion(
+        &mut self,
+        req: &Request,
+        mut state: DecodeState,
+        mut resp: Response,
+    ) -> Result<Response> {
+        while resp.tokens.len() < req.max_new_tokens {
+            let last = *resp.tokens.last().unwrap();
+            if last == EOS {
+                break;
+            }
+            let next = self.decode_one(&mut state, last)?;
+            resp.tokens.push(next);
+        }
+        self.metrics.record_completion(resp.tokens.len());
+        Ok(resp)
+    }
+
+    /// One decode step for an in-flight request (used by the batcher for
+    /// round-robin continuous batching).
+    pub(crate) fn decode_one(&mut self, state: &mut DecodeState, last: i32) -> Result<i32> {
+        let out = self
+            .engine
+            .decode(last, &state.k_cache, &state.v_cache, state.len)?;
+        state.k_cache = out.k_cache;
+        state.v_cache = out.v_cache;
+        state.len += 1;
+        Ok(argmax(&out.logits) as i32)
+    }
+
+    // -- prefill paths -----------------------------------------------------
+
+    fn prefill_vanilla(&mut self, req: &Request) -> Result<PrefillOutcome> {
+        let mut all: Vec<i32> = Vec::with_capacity(req.prompt_tokens());
+        for b in &req.blocks {
+            all.extend_from_slice(b);
+        }
+        all.extend_from_slice(&req.query);
+        let n = all.len();
+        let out = self.engine.prefill_full(&all)?;
+        // Dense decode cache.
+        let cap = self.engine.decode_ctx_capacity()?;
+        if n >= cap {
+            bail!("prompt of {n} tokens exceeds decode capacity {cap}");
+        }
+        let mut kc = self.engine.kv_zeros(cap);
+        let mut vc = self.engine.kv_zeros(cap);
+        write_ctx(&mut kc, &out.k, 0);
+        write_ctx(&mut vc, &out.v, 0);
+        Ok(PrefillOutcome {
+            last_logits: out.last_logits,
+            state: DecodeState { k_cache: kc, v_cache: vc, len: n },
+            flops_tft: self.flops.prefill_full(n),
+            cached_blocks: 0,
+            total_blocks: req.blocks.len(),
+        })
+    }
+
+    fn prefill_block_mode(&mut self, req: &Request) -> Result<PrefillOutcome> {
+        let plan = self.scheduler.plan(&req.blocks, &mut self.cache);
+        let mut flops = 0.0;
+
+        // 1. Compute KV for missing blocks (cache misses).
+        for (i, item) in plan.items.iter().enumerate() {
+            if !item.cached {
+                let toks = &req.blocks[i];
+                let (k, v) = self.engine.prefill_block(toks)?;
+                self.cache.insert_pinned(item.key, k, v);
+                flops += self.flops.prefill_full(toks.len());
+            }
+        }
+
+        // 2. Assemble the re-encoded context at the final bucket capacity.
+        let ctx_len = plan.total_tokens;
+        let cap = self.engine.final_ctx_capacity(ctx_len)?;
+        let mut past_k = self.engine.kv_zeros(cap);
+        let mut past_v = self.engine.kv_zeros(cap);
+        let mut max_block = 0usize;
+        for item in &plan.items {
+            let delta = match req.mode {
+                AttentionMode::Block => item.offset,
+                AttentionMode::BlockNoReencode => 0,
+                AttentionMode::BlockParallel => 0,
+                AttentionMode::Full => unreachable!(),
+            };
+            let blk = self
+                .cache
+                .get_reencoded(item.key, delta)
+                .expect("planned block vanished (pinned)");
+            write_ctx(&mut past_k, &blk.k, item.offset);
+            write_ctx(&mut past_v, &blk.v, item.offset);
+            max_block = max_block.max(blk.len);
+            flops += self.flops.reencode(blk.len);
+        }
+
+        // 3. Final-block prefill: the query attends to everything. In
+        // superposition mode the query sits right after the longest
+        // parallel document path; otherwise after the whole context.
+        let q_pos0 = match req.mode {
+            AttentionMode::BlockParallel => max_block,
+            _ => ctx_len,
+        };
+        let out = self
+            .engine
+            .prefill_final_at(&req.query, &past_k, &past_v, ctx_len, q_pos0)?;
+        flops += self.flops.prefill_final(req.query.len(), ctx_len);
+
+        // Release pins now that the context tensor owns the data.
+        for item in &plan.items {
+            self.cache.unpin(item.key);
+        }
+
+        // 4. Dense decode cache = context + final block.
+        let cap_d = self.engine.decode_ctx_capacity()?;
+        let total = ctx_len + req.query.len();
+        if total >= cap_d {
+            bail!("prompt of {total} tokens exceeds decode capacity {cap_d}");
+        }
+        let mut kc = self.engine.kv_zeros(cap_d);
+        let mut vc = self.engine.kv_zeros(cap_d);
+        copy_ctx_prefix(&mut kc, &past_k, ctx_len);
+        copy_ctx_prefix(&mut vc, &past_v, ctx_len);
+        write_ctx(&mut kc, &out.k, ctx_len);
+        write_ctx(&mut vc, &out.v, ctx_len);
+
+        Ok(PrefillOutcome {
+            last_logits: out.last_logits,
+            state: DecodeState { k_cache: kc, v_cache: vc, len: total },
+            flops_tft: flops,
+            cached_blocks: plan.cached_count(),
+            total_blocks: plan.items.len(),
+        })
+    }
+
+    /// Teacher-forced scoring: per-token NLL (nats) of `target` following
+    /// `blocks + query` under the given attention mode. Runs the real
+    /// serving path (prefill + decode), feeding gold tokens.
+    pub fn score_continuation(
+        &mut self,
+        blocks: &[Vec<i32>],
+        query: &[i32],
+        target: &[i32],
+        mode: AttentionMode,
+    ) -> Result<Vec<f64>> {
+        let req = Request {
+            id: u64::MAX,
+            blocks: blocks.to_vec(),
+            query: query.to_vec(),
+            max_new_tokens: 1,
+            mode,
+        };
+        let t0 = Instant::now();
+        let (mut state, _) = self.prefill(&req, t0)?;
+        // Re-run the last prefill logits through log-softmax via a fresh
+        // prefill call result: prefill() discarded them into the first
+        // sampled token, so recompute from the decode path instead by
+        // scoring sequentially: logits_i predict target_i.
+        let mut out = Vec::with_capacity(target.len());
+        let mut logits = self.last_prefill_logits.take().ok_or_else(|| {
+            anyhow::anyhow!("prefill did not record logits")
+        })?;
+        for (i, &t) in target.iter().enumerate() {
+            out.push(nll_of(&logits, t));
+            if i + 1 == target.len() {
+                break;
+            }
+            let dec = self
+                .engine
+                .decode(t, &state.k_cache, &state.v_cache, state.len)?;
+            state.k_cache = dec.k_cache;
+            state.v_cache = dec.v_cache;
+            state.len += 1;
+            logits = dec.logits;
+        }
+        Ok(out)
+    }
+
+    /// Precompute + cache the KV of a block (offline warm-up of the
+    /// passage store, cf. paper §1: "passages might have been computed").
+    pub fn precompute_block(&mut self, tokens: &[i32]) -> Result<()> {
+        let key = block_key(tokens);
+        if self.cache.contains(key) {
+            return Ok(());
+        }
+        let (k, v) = self.engine.prefill_block(tokens)?;
+        self.cache.insert_pinned(key, k, v);
+        self.cache.unpin(key);
+        Ok(())
+    }
+
+    /// Plan without executing (for tests / introspection).
+    pub fn dry_plan(&mut self, blocks: &[Vec<i32>]) -> PrefillPlan {
+        let plan = self.scheduler.plan(blocks, &mut self.cache);
+        for item in &plan.items {
+            if item.cached {
+                self.cache.unpin(item.key);
+            }
+        }
+        plan
+    }
+}
+
+/// In-flight decode state of one request.
+pub struct DecodeState {
+    pub k_cache: TensorF,
+    pub v_cache: TensorF,
+    pub len: usize,
+}
+
+struct PrefillOutcome {
+    last_logits: Vec<f32>,
+    state: DecodeState,
+    flops_tft: f64,
+    cached_blocks: usize,
+    total_blocks: usize,
+}
+
+/// Write a `(layers, len, kv, hd)` block into a context tensor at `at`.
+pub(crate) fn write_ctx(ctx: &mut TensorF, block: &TensorF, at: usize) {
+    let layers = ctx.dims()[0];
+    let row: usize = ctx.dims()[2] * ctx.dims()[3];
+    let blen = block.dims()[1];
+    debug_assert_eq!(ctx.dims()[2..], block.dims()[2..]);
+    for n in 0..layers {
+        let dst = ctx.axis0_mut(n);
+        let src = block.axis0(n);
+        dst[at * row..(at + blen) * row].copy_from_slice(&src[..blen * row]);
+    }
+}
+
+/// Negative log-likelihood (nats) of token `t` under raw `logits`.
+fn nll_of(logits: &[f32], t: i32) -> f64 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f64 = logits
+        .iter()
+        .map(|&x| ((x - max) as f64).exp())
+        .sum::<f64>()
+        .ln()
+        + max as f64;
+    lse - logits[t as usize] as f64
+}
+
+/// Copy the first `len` token rows of each layer between context tensors
+/// of (possibly) different capacities.
+pub(crate) fn copy_ctx_prefix(dst: &mut TensorF, src: &TensorF, len: usize) {
+    let layers = dst.dims()[0];
+    let row: usize = dst.dims()[2] * dst.dims()[3];
+    for n in 0..layers {
+        let d = dst.axis0_mut(n);
+        let s = src.axis0(n);
+        d[..len * row].copy_from_slice(&s[..len * row]);
+    }
+}

@@ -1,0 +1,174 @@
+//! Cache-aware prefill planning.
+//!
+//! Given a request's context blocks, the scheduler decides which blocks
+//! must be computed (cache misses), assigns every block its offset in
+//! the assembled prompt, and pins cache entries so eviction cannot race
+//! an admitted request. The plan is the unit the batcher schedules.
+
+use crate::kvcache::{block_key, BlockKvCache};
+
+/// One block in a prefill plan.
+#[derive(Debug, Clone)]
+pub struct PlanItem {
+    /// Content hash of the block tokens.
+    pub key: u128,
+    /// Token offset of this block in the assembled prompt.
+    pub offset: usize,
+    pub len: usize,
+    /// True if the KV states were already cached (pinned by planning).
+    pub cached: bool,
+}
+
+/// A full prefill plan for one request's context.
+#[derive(Debug, Clone)]
+pub struct PrefillPlan {
+    pub items: Vec<PlanItem>,
+    /// Total context tokens (== offset + len of the last block).
+    pub total_tokens: usize,
+}
+
+impl PrefillPlan {
+    pub fn cached_count(&self) -> usize {
+        self.items.iter().filter(|i| i.cached).count()
+    }
+
+    /// Tokens whose KV must actually be computed (the paper's saved
+    /// computation is `total_tokens - miss_tokens`).
+    pub fn miss_tokens(&self) -> usize {
+        self.items
+            .iter()
+            .filter(|i| !i.cached)
+            .map(|i| i.len)
+            .sum()
+    }
+
+    /// Invariant: blocks tile the context exactly once, in order.
+    pub fn covers_exactly(&self) -> bool {
+        let mut at = 0;
+        for it in &self.items {
+            if it.offset != at {
+                return false;
+            }
+            at += it.len;
+        }
+        at == self.total_tokens
+    }
+}
+
+/// The planner. (Stateless today; owns admission policy knobs as the
+/// system grows — kept as a struct so the batcher can carry it.)
+#[derive(Debug, Default)]
+pub struct Scheduler {}
+
+impl Scheduler {
+    pub fn new() -> Scheduler {
+        Scheduler {}
+    }
+
+    /// Build a plan for `blocks`, pinning every cached block. Duplicate
+    /// blocks within one request reuse the same cache entry but still
+    /// occupy distinct offsets.
+    pub fn plan(&self, blocks: &[Vec<i32>], cache: &mut BlockKvCache) -> PrefillPlan {
+        let mut items = Vec::with_capacity(blocks.len());
+        let mut offset = 0;
+        for b in blocks {
+            let key = block_key(b);
+            let cached = cache.lookup_pin(key);
+            items.push(PlanItem { key, offset, len: b.len(), cached });
+            offset += b.len();
+        }
+        PrefillPlan { items, total_tokens: offset }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rope::RopeTable;
+    use crate::tensor::Tensor;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+    use crate::prop_assert;
+
+    fn cache() -> BlockKvCache {
+        BlockKvCache::new(RopeTable::new(8, 10000.0), 0)
+    }
+
+    fn fake_kv(len: usize) -> (crate::tensor::TensorF, crate::tensor::TensorF) {
+        (Tensor::zeros(&[1, len, 1, 8]), Tensor::zeros(&[1, len, 1, 8]))
+    }
+
+    #[test]
+    fn plan_offsets_are_cumulative() {
+        let mut c = cache();
+        let blocks = vec![vec![1, 2, 3], vec![4, 5], vec![6]];
+        let plan = Scheduler::new().plan(&blocks, &mut c);
+        assert_eq!(plan.total_tokens, 6);
+        assert_eq!(plan.items[0].offset, 0);
+        assert_eq!(plan.items[1].offset, 3);
+        assert_eq!(plan.items[2].offset, 5);
+        assert!(plan.covers_exactly());
+        assert_eq!(plan.cached_count(), 0);
+        assert_eq!(plan.miss_tokens(), 6);
+    }
+
+    #[test]
+    fn plan_sees_cache_hits() {
+        let mut c = cache();
+        let b1 = vec![1, 2, 3];
+        let (k, v) = fake_kv(3);
+        c.insert_pinned(block_key(&b1), k, v);
+        c.unpin(block_key(&b1));
+        let blocks = vec![b1.clone(), vec![9, 9]];
+        let plan = Scheduler::new().plan(&blocks, &mut c);
+        assert!(plan.items[0].cached);
+        assert!(!plan.items[1].cached);
+        assert_eq!(plan.miss_tokens(), 2);
+        // Planning pinned the hit.
+        c.unpin(block_key(&b1));
+    }
+
+    #[test]
+    fn same_content_same_key_different_offsets() {
+        let mut c = cache();
+        let b = vec![7, 8];
+        let blocks = vec![b.clone(), b.clone()];
+        let plan = Scheduler::new().plan(&blocks, &mut c);
+        assert_eq!(plan.items[0].key, plan.items[1].key);
+        assert_ne!(plan.items[0].offset, plan.items[1].offset);
+    }
+
+    #[test]
+    fn prop_plan_always_tiles_context() {
+        prop::check("plan-tiles", 0xBEEF, 300, |rng: &mut Rng| {
+            let mut c = cache();
+            let nblocks = rng.range(1, 12);
+            let blocks: Vec<Vec<i32>> = (0..nblocks)
+                .map(|_| {
+                    let len = rng.range(1, 20);
+                    (0..len).map(|_| rng.below(50) as i32).collect()
+                })
+                .collect();
+            // Pre-cache a random subset.
+            for b in &blocks {
+                if rng.chance(0.5) {
+                    let (k, v) = fake_kv(b.len());
+                    let key = block_key(b);
+                    if !c.contains(key) {
+                        c.insert_pinned(key, k, v);
+                        c.unpin(key);
+                    }
+                }
+            }
+            let plan = Scheduler::new().plan(&blocks, &mut c);
+            prop_assert!(plan.covers_exactly(), "plan does not tile");
+            let total: usize = blocks.iter().map(|b| b.len()).sum();
+            prop_assert!(plan.total_tokens == total, "token total mismatch");
+            prop_assert!(
+                plan.miss_tokens() <= total,
+                "miss tokens exceed total"
+            );
+            Ok(())
+        });
+    }
+}

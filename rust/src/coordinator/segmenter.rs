@@ -1,0 +1,247 @@
+//! Block segmentation (paper §2.2 and §3.1).
+//!
+//! "Segment semantically independent parts of the prompt into separate
+//! blocks": retrieved passages in RAG, demonstrations in ICL, turns in
+//! dialogue, fields in gamecore JSON, and the paper's newline heuristics
+//! (`\n\n`, `---`, `===`, `\n\t\t`) for free-form text. The final block —
+//! the user query — is the only one allowed to attend across blocks.
+
+use crate::tokenizer::ByteTokenizer;
+use crate::util::json::Json;
+
+/// A segmented prompt: context blocks + the final (query) block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegmentedPrompt {
+    pub blocks: Vec<Vec<i32>>,
+    pub query: Vec<i32>,
+}
+
+impl SegmentedPrompt {
+    pub fn context_tokens(&self) -> usize {
+        self.blocks.iter().map(|b| b.len()).sum()
+    }
+}
+
+/// The paper's newline block-division labels (§3.1, rule 3).
+pub const DIVISION_LABELS: [&str; 4] = ["\n\n", "---", "===", "\n\t\t"];
+
+/// Segment a RAG prompt: one block per retrieved passage (plus an
+/// optional leading system block); the query is the final block.
+pub fn segment_rag(
+    tok: &ByteTokenizer,
+    system: Option<&str>,
+    passages: &[String],
+    query: &str,
+) -> SegmentedPrompt {
+    let mut blocks = Vec::new();
+    if let Some(s) = system {
+        blocks.push(tok.encode(s));
+    }
+    for p in passages {
+        blocks.push(tok.encode(p));
+    }
+    SegmentedPrompt { blocks, query: tok.encode(query) }
+}
+
+/// Segment an ICL prompt: one block per demonstration; the test input is
+/// the final block (a k-shot sample becomes k+1 blocks, paper Table 2).
+pub fn segment_icl(tok: &ByteTokenizer, demos: &[String], test_input: &str) -> SegmentedPrompt {
+    SegmentedPrompt {
+        blocks: demos.iter().map(|d| tok.encode(d)).collect(),
+        query: tok.encode(test_input),
+    }
+}
+
+/// Segment free-form text on the paper's division labels. The text after
+/// the last division becomes the query block.
+pub fn segment_text(tok: &ByteTokenizer, text: &str) -> SegmentedPrompt {
+    let mut parts: Vec<String> = vec![String::new()];
+    let bytes = text.as_bytes();
+    let mut i = 0;
+    'outer: while i < bytes.len() {
+        for label in DIVISION_LABELS {
+            let lb = label.as_bytes();
+            if bytes[i..].starts_with(lb) {
+                // The label terminates the current part (and is kept with
+                // it so decode round-trips).
+                parts.last_mut().unwrap().push_str(label);
+                parts.push(String::new());
+                i += lb.len();
+                continue 'outer;
+            }
+        }
+        // Advance one UTF-8 character.
+        let ch_len = utf8_len(bytes[i]);
+        parts
+            .last_mut()
+            .unwrap()
+            .push_str(std::str::from_utf8(&bytes[i..i + ch_len]).unwrap_or("?"));
+        i += ch_len;
+    }
+    parts.retain(|p| !p.is_empty());
+    let query = parts.pop().unwrap_or_default();
+    SegmentedPrompt {
+        blocks: parts.iter().map(|p| tok.encode(p)).collect(),
+        query: tok.encode(&query),
+    }
+}
+
+fn utf8_len(b: u8) -> usize {
+    match b {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+/// Segment a gamecore JSON state (paper Appendix A): each top-level (or
+/// second-level, for objects) field becomes one block, serialized
+/// deterministically so identical sub-states hash to identical blocks
+/// across frames. `task` is the instruction/query block.
+pub fn segment_gamecore(tok: &ByteTokenizer, state: &Json, task: &str) -> SegmentedPrompt {
+    let mut blocks = Vec::new();
+    if let Some(obj) = state.as_obj() {
+        for (key, val) in obj {
+            match val {
+                Json::Obj(inner) if !inner.is_empty() => {
+                    for (k2, v2) in inner {
+                        blocks.push(tok.encode(&format!("{key}.{k2}={v2}")));
+                    }
+                }
+                other => blocks.push(tok.encode(&format!("{key}={other}"))),
+            }
+        }
+    } else {
+        blocks.push(tok.encode(&state.to_string()));
+    }
+    SegmentedPrompt { blocks, query: tok.encode(task) }
+}
+
+/// Merge blocks shorter than `min_len` into their predecessor — tiny
+/// blocks waste cache entries and bucket padding.
+pub fn coalesce_small_blocks(mut sp: SegmentedPrompt, min_len: usize) -> SegmentedPrompt {
+    let mut out: Vec<Vec<i32>> = Vec::with_capacity(sp.blocks.len());
+    for b in sp.blocks.drain(..) {
+        match out.last_mut() {
+            Some(prev) if b.len() < min_len || prev.len() < min_len => {
+                prev.extend_from_slice(&b)
+            }
+            _ => out.push(b),
+        }
+    }
+    sp.blocks = out;
+    sp
+}
+
+/// Split blocks longer than `max_len` into `max_len`-sized chunks so
+/// every block fits the prefill_block bucket capacity.
+pub fn split_oversized_blocks(mut sp: SegmentedPrompt, max_len: usize) -> SegmentedPrompt {
+    let mut out = Vec::with_capacity(sp.blocks.len());
+    for b in sp.blocks.drain(..) {
+        if b.len() <= max_len {
+            out.push(b);
+        } else {
+            for chunk in b.chunks(max_len) {
+                out.push(chunk.to_vec());
+            }
+        }
+    }
+    sp.blocks = out;
+    sp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> ByteTokenizer {
+        ByteTokenizer::new()
+    }
+
+    #[test]
+    fn rag_blocks_one_per_passage() {
+        let t = tok();
+        let sp = segment_rag(
+            &t,
+            Some("You are helpful."),
+            &["Doc one.".into(), "Doc two.".into()],
+            "Which doc?",
+        );
+        assert_eq!(sp.blocks.len(), 3);
+        assert_eq!(t.decode(&sp.query), "Which doc?");
+        assert_eq!(t.decode(&sp.blocks[1]), "Doc one.");
+    }
+
+    #[test]
+    fn icl_k_shot_is_k_plus_one_blocks() {
+        let t = tok();
+        let sp = segment_icl(&t, &["in: a out: b".into(), "in: c out: d".into()], "in: e out:");
+        assert_eq!(sp.blocks.len(), 2);
+        assert!(!sp.query.is_empty());
+    }
+
+    #[test]
+    fn text_splits_on_division_labels() {
+        let t = tok();
+        let sp = segment_text(&t, "part one\n\npart two---part three===tail");
+        assert_eq!(sp.blocks.len(), 3);
+        assert_eq!(t.decode(&sp.query), "tail");
+        // Round-trip: blocks + query reassemble the original text.
+        let mut s = String::new();
+        for b in &sp.blocks {
+            s.push_str(&t.decode(b));
+        }
+        s.push_str(&t.decode(&sp.query));
+        assert_eq!(s, "part one\n\npart two---part three===tail");
+    }
+
+    #[test]
+    fn text_without_labels_is_single_query() {
+        let t = tok();
+        let sp = segment_text(&t, "just a sentence");
+        assert!(sp.blocks.is_empty());
+        assert_eq!(t.decode(&sp.query), "just a sentence");
+    }
+
+    #[test]
+    fn gamecore_fields_become_blocks() {
+        let t = tok();
+        let state = Json::parse(
+            r#"{"chips":{"p1":{"bet":10},"p2":{"bet":50}},"round":3}"#,
+        )
+        .unwrap();
+        let sp = segment_gamecore(&t, &state, "act");
+        // chips.p1, chips.p2, round
+        assert_eq!(sp.blocks.len(), 3);
+        // Deterministic serialization → frame-to-frame block identity.
+        let sp2 = segment_gamecore(&t, &Json::parse(
+            r#"{"round":3,"chips":{"p2":{"bet":50},"p1":{"bet":10}}}"#,
+        ).unwrap(), "act");
+        assert_eq!(sp.blocks, sp2.blocks);
+    }
+
+    #[test]
+    fn coalesce_merges_small() {
+        let sp = SegmentedPrompt {
+            blocks: vec![vec![1; 2], vec![2; 50], vec![3; 2], vec![4; 50]],
+            query: vec![9],
+        };
+        let out = coalesce_small_blocks(sp, 8);
+        // [2] merges into [50] (prev too small), trailing [2] merges
+        // backward, final [50] stands alone: [54, 50].
+        assert_eq!(out.blocks.len(), 2);
+        assert_eq!(out.blocks[0].len(), 54);
+        assert_eq!(out.blocks[1].len(), 50);
+        assert_eq!(out.blocks.iter().map(|b| b.len()).sum::<usize>(), 104);
+    }
+
+    #[test]
+    fn split_caps_block_len() {
+        let sp = SegmentedPrompt { blocks: vec![vec![1; 300]], query: vec![] };
+        let out = split_oversized_blocks(sp, 128);
+        assert_eq!(out.blocks.len(), 3);
+        assert!(out.blocks.iter().all(|b| b.len() <= 128));
+        assert_eq!(out.blocks.iter().map(|b| b.len()).sum::<usize>(), 300);
+    }
+}

@@ -1,0 +1,107 @@
+//! Multi-turn dialogue sessions over Block-attention.
+//!
+//! Paper §2.2: "in multi-turn dialogues, each turn could be segmented
+//! into an individual block". A [`Session`] accumulates turns; every
+//! *completed* turn (user message + assistant reply) becomes an
+//! immutable context block whose KV states are cached once and reused —
+//! with RoPE re-encoding — on every subsequent turn of this session
+//! *and any other session that shares a prefix block* (system prompts,
+//! few-shot preambles), so the per-turn prefill cost stays constant
+//! instead of growing with history length.
+
+use super::{AttentionMode, Coordinator, Request, Response};
+use crate::tokenizer::{ByteTokenizer, EOS, SEP};
+use anyhow::Result;
+
+/// One in-progress conversation.
+pub struct Session {
+    id: u64,
+    /// Completed history, one token block per turn (SEP-terminated).
+    history: Vec<Vec<i32>>,
+    tok: ByteTokenizer,
+    pub max_new_tokens: usize,
+    pub mode: AttentionMode,
+}
+
+impl Session {
+    pub fn new(id: u64) -> Session {
+        Session {
+            id,
+            history: Vec::new(),
+            tok: ByteTokenizer::new(),
+            max_new_tokens: 32,
+            mode: AttentionMode::Block,
+        }
+    }
+
+    /// Seed the session with a system/preamble block (shareable across
+    /// sessions through the content-addressed cache).
+    pub fn with_system(mut self, system: &str) -> Session {
+        let mut ids = self.tok.encode(system);
+        ids.push(SEP);
+        self.history.push(ids);
+        self
+    }
+
+    pub fn turns(&self) -> usize {
+        self.history.len()
+    }
+
+    /// Tokens of prior context (what block caching saves per turn).
+    pub fn history_tokens(&self) -> usize {
+        self.history.iter().map(|b| b.len()).sum()
+    }
+
+    /// Run one turn: the user message is the final (query) block over
+    /// the cached history; the exchange is then sealed into a new
+    /// history block. Returns (reply text, serving response).
+    pub fn turn(&mut self, coord: &mut Coordinator, user: &str) -> Result<(String, Response)> {
+        let mut query = vec![crate::tokenizer::QRY];
+        query.extend(self.tok.encode(user));
+        let req = Request {
+            id: self.id,
+            blocks: self.history.clone(),
+            query: query.clone(),
+            max_new_tokens: self.max_new_tokens,
+            mode: self.mode,
+        };
+        let resp = coord.process(&req)?;
+        let reply = self.tok.decode_until_eos(&resp.tokens);
+
+        // Seal the exchange as an immutable history block: query + reply
+        // + SEP, and precompute its independent-block KV *off the
+        // critical path* (the reply has already been returned) so the
+        // next turn is fully cache-hot.
+        let mut block = query;
+        block.extend(resp.tokens.iter().take_while(|&&t| t != EOS));
+        block.push(SEP);
+        coord.precompute_block(&block)?;
+        self.history.push(block);
+        Ok((reply, resp))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_grows_one_block_per_turn() {
+        let s = Session::new(1).with_system("be brief");
+        assert_eq!(s.turns(), 1);
+        assert!(s.history_tokens() > 0);
+    }
+
+    #[test]
+    fn system_blocks_are_shareable() {
+        let a = Session::new(1).with_system("same system prompt");
+        let b = Session::new(2).with_system("same system prompt");
+        // Identical token content → identical cache key → cross-session
+        // KV reuse.
+        assert_eq!(a.history[0], b.history[0]);
+        assert_eq!(
+            crate::kvcache::block_key(&a.history[0]),
+            crate::kvcache::block_key(&b.history[0])
+        );
+    }
+}

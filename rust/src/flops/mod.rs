@@ -1,0 +1,185 @@
+//! Analytic FLOPs model of the transformer — produces the FLOPs-TFT rows
+//! of the paper's Table 3.
+//!
+//! Counting convention (matches the standard 2·MAC accounting the paper
+//! uses): a matmul of (m×k)·(k×n) costs 2mkn FLOPs. Attention costs the
+//! QK^T and PV contractions against the number of *attended* keys, which
+//! is where Block-attention wins: a cached block costs zero prefill
+//! FLOPs and only the final block pays attention over the context.
+
+use crate::config::ModelConfig;
+
+/// Per-component FLOPs for one model config.
+#[derive(Debug, Clone)]
+pub struct FlopsModel {
+    d_model: usize,
+    layers: usize,
+    heads: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    d_ff: usize,
+    vocab: usize,
+}
+
+impl FlopsModel {
+    pub fn from_config(cfg: &ModelConfig) -> FlopsModel {
+        FlopsModel {
+            d_model: cfg.d_model,
+            layers: cfg.layers,
+            heads: cfg.heads,
+            kv_heads: cfg.kv_heads,
+            head_dim: cfg.head_dim,
+            d_ff: cfg.d_ff,
+            vocab: cfg.vocab,
+        }
+    }
+
+    /// Linear-projection FLOPs for `n` tokens in one layer
+    /// (QKV + output + SwiGLU MLP).
+    fn layer_linear(&self, n: f64) -> f64 {
+        let d = self.d_model as f64;
+        let hq = (self.heads * self.head_dim) as f64;
+        let hkv = (self.kv_heads * self.head_dim) as f64;
+        let f = self.d_ff as f64;
+        // wq, wk, wv, wo
+        let attn_proj = 2.0 * n * d * hq + 2.0 * 2.0 * n * d * hkv + 2.0 * n * hq * d;
+        // gate, up, down
+        let mlp = 3.0 * 2.0 * n * d * f;
+        attn_proj + mlp
+    }
+
+    /// Attention-contraction FLOPs for `nq` queries each attending `nk`
+    /// keys in one layer (QK^T + PV over all q heads).
+    fn layer_attention(&self, nq: f64, nk: f64) -> f64 {
+        let hd = self.head_dim as f64;
+        let h = self.heads as f64;
+        2.0 * 2.0 * h * nq * nk * hd
+    }
+
+    /// LM-head projection for the single next-token logit row.
+    fn lm_head(&self) -> f64 {
+        2.0 * (self.d_model * self.vocab) as f64
+    }
+
+    /// FLOPs to first token of a vanilla full prefill of `n` tokens.
+    /// Causal attention: token i attends i+1 keys → ~n²/2 pairs.
+    pub fn prefill_full(&self, n: usize) -> f64 {
+        let nf = n as f64;
+        let per_layer = self.layer_linear(nf) + self.layer_attention(nf, (nf + 1.0) / 2.0);
+        self.layers as f64 * per_layer + self.lm_head()
+    }
+
+    /// FLOPs of the final-block prefill: `q` query tokens attending the
+    /// full `ctx + q` context (context keys + causal self).
+    pub fn prefill_final(&self, q: usize, ctx: usize) -> f64 {
+        let qf = q as f64;
+        let per_layer = self.layer_linear(qf)
+            + self.layer_attention(qf, ctx as f64 + (qf + 1.0) / 2.0);
+        self.layers as f64 * per_layer + self.lm_head()
+    }
+
+    /// FLOPs of re-encoding a cached block of `n` tokens (paper Eq. 3):
+    /// 6 FLOPs per (layer, token, kv-head, pair) — negligible by design,
+    /// but counted for honesty.
+    pub fn reencode(&self, n: usize) -> f64 {
+        (self.layers * n * self.kv_heads * self.head_dim * 3) as f64
+    }
+
+    /// FLOPs of one decode step at context length `ctx`.
+    pub fn decode_step(&self, ctx: usize) -> f64 {
+        let per_layer = self.layer_linear(1.0) + self.layer_attention(1.0, ctx as f64 + 1.0);
+        self.layers as f64 * per_layer + self.lm_head()
+    }
+
+    /// Block-mode FLOPs-TFT with everything cached except the final
+    /// block: re-encode + final prefill (the paper's Table-3 block row).
+    pub fn block_mode_tft(&self, q: usize, ctx: usize) -> f64 {
+        self.reencode(ctx) + self.prefill_final(q, ctx)
+    }
+
+    // -- paper-convention accounting ----------------------------------------
+    //
+    // Table 3 of the paper counts *weight* FLOPs only (2·params·tokens):
+    // its vanilla row scales exactly linearly in total length and its
+    // block row is flat at the user-input cost, and the reported
+    // reductions match `1 - q/n` (90.1% at 512, 99.8% at 32K). We
+    // reproduce that convention here and additionally report the exact
+    // count (attention contractions included) from the methods above.
+
+    /// Weight-only FLOPs for prefilling `n` tokens (paper convention).
+    pub fn weights_prefill(&self, n: usize) -> f64 {
+        self.layers as f64 * self.layer_linear(n as f64) + self.lm_head()
+    }
+
+    /// Weight-only block-mode FLOPs-TFT: only the final `q` tokens are
+    /// computed, regardless of context length (paper convention).
+    pub fn weights_block_tft(&self, q: usize) -> f64 {
+        self.layers as f64 * self.layer_linear(q as f64) + self.lm_head()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 32000,
+            d_model: 256,
+            layers: 4,
+            heads: 8,
+            kv_heads: 4,
+            head_dim: 32,
+            d_ff: 688,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+            max_len: 32768,
+        }
+    }
+
+    #[test]
+    fn full_prefill_superlinear_block_flat() {
+        let f = FlopsModel::from_config(&cfg());
+        let full_1k = f.prefill_full(1024);
+        let full_8k = f.prefill_full(8192);
+        // Superlinear growth (linear terms + quadratic attention).
+        assert!(full_8k > 8.0 * full_1k);
+
+        // Exact block-mode FLOPs still grow (the final block's attention
+        // over the context is linear in ctx) but remain a tiny fraction
+        // of vanilla: >95% reduction at 8K even with exact accounting.
+        let blk_8k = f.block_mode_tft(50, 8192);
+        let red = 1.0 - blk_8k / full_8k;
+        assert!(red > 0.95, "reduction {red}");
+    }
+
+    #[test]
+    fn paper_convention_reductions_match_table3() {
+        // Paper Table 3 (weight-FLOPs convention): 90.1% reduction at
+        // total length 512, 99.8% at 32K, block row flat.
+        let f = FlopsModel::from_config(&cfg());
+        let q = 50;
+        let red512 = 1.0 - f.weights_block_tft(q) / f.weights_prefill(512);
+        let red32k = 1.0 - f.weights_block_tft(q) / f.weights_prefill(32768);
+        assert!((red512 - 0.901).abs() < 0.02, "512: {red512}");
+        assert!((red32k - 0.998).abs() < 0.005, "32K: {red32k}");
+        assert_eq!(f.weights_block_tft(q), f.weights_block_tft(q));
+    }
+
+    #[test]
+    fn hand_check_linear_terms() {
+        let f = FlopsModel::from_config(&cfg());
+        // One token, one layer linear: wq 2*d*hq + wk/wv 2*2*d*hkv + wo
+        // 2*hq*d + mlp 6*d*f.
+        let d = 256.0;
+        let expect = 2.0 * d * 256.0 + 4.0 * d * 128.0 + 2.0 * 256.0 * d + 6.0 * d * 688.0;
+        assert!((f.layer_linear(1.0) - expect).abs() < 1.0);
+    }
+
+    #[test]
+    fn decode_flops_grow_with_context() {
+        let f = FlopsModel::from_config(&cfg());
+        assert!(f.decode_step(8192) > f.decode_step(512));
+    }
+}

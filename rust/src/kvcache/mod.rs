@@ -1,0 +1,375 @@
+//! Content-addressed block KV cache — the paper's enabling data
+//! structure (§2.1, §2.5).
+//!
+//! Each retrieved passage / prompt block is keyed by the **hash of its
+//! token ids** (content addressing: the same passage retrieved for a
+//! different query hits the cache regardless of its position in the new
+//! prompt). The cached value is the block's KV states computed by
+//! `prefill_block` at *local* positions `0..L`; on reuse at offset `Δ`
+//! the keys are RoPE-rotated by `Δ` (paper Eq. 3) via
+//! [`crate::rope::RopeTable::reencode_block`].
+//!
+//! Eviction: LRU over unpinned entries with a byte budget. Entries are
+//! pinned (ref-counted) while a scheduler plan holds them so an admitted
+//! request can never lose its blocks mid-flight.
+
+use crate::rope::RopeTable;
+use crate::tensor::TensorF;
+use std::collections::HashMap;
+
+/// 128-bit FNV-1a over token ids — content key of a block.
+pub fn block_key(tokens: &[i32]) -> u128 {
+    const OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+    const PRIME: u128 = 0x0000000001000000000000000000013b;
+    let mut h = OFFSET;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u128;
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+/// One cached block: KV states at local positions.
+struct Entry {
+    /// `(layers, len, kv_heads, head_dim)` keys at positions `0..len`.
+    k_local: TensorF,
+    v: TensorF,
+    len: usize,
+    bytes: usize,
+    pins: usize,
+    last_used: u64,
+    hits: u64,
+}
+
+/// Cache statistics (exported via coordinator metrics).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub bytes: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A block fetched from the cache, with keys re-encoded to an offset.
+pub struct ReencodedBlock {
+    pub k: TensorF,
+    pub v: TensorF,
+    pub len: usize,
+}
+
+/// Content-addressed block KV cache with LRU eviction and pinning.
+pub struct BlockKvCache {
+    map: HashMap<u128, Entry>,
+    rope: RopeTable,
+    byte_budget: usize,
+    clock: u64,
+    stats: CacheStats,
+}
+
+impl BlockKvCache {
+    /// `byte_budget` bounds the summed KV bytes (0 = unbounded).
+    pub fn new(rope: RopeTable, byte_budget: usize) -> Self {
+        BlockKvCache {
+            map: HashMap::new(),
+            rope,
+            byte_budget,
+            clock: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut s = self.stats.clone();
+        s.entries = self.map.len();
+        s.bytes = self.map.values().map(|e| e.bytes).sum();
+        s
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Does the cache hold this block? (Does not count as a hit/miss.)
+    pub fn contains(&self, key: u128) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    /// Record a lookup; pins the entry if present (must be released with
+    /// [`Self::unpin`]).
+    pub fn lookup_pin(&mut self, key: u128) -> bool {
+        let t = self.tick();
+        match self.map.get_mut(&key) {
+            Some(e) => {
+                e.pins += 1;
+                e.last_used = t;
+                e.hits += 1;
+                self.stats.hits += 1;
+                true
+            }
+            None => {
+                self.stats.misses += 1;
+                false
+            }
+        }
+    }
+
+    /// Insert a block computed by `prefill_block` (keys at local
+    /// positions). The entry starts pinned (the inserting request is
+    /// about to use it). Evicts LRU unpinned entries to honor the budget.
+    pub fn insert_pinned(&mut self, key: u128, k_local: TensorF, v: TensorF) {
+        let len = k_local.dims()[1];
+        let bytes = k_local.size_bytes() + v.size_bytes();
+        let t = self.tick();
+        self.map.insert(
+            key,
+            Entry { k_local, v, len, bytes, pins: 1, last_used: t, hits: 0 },
+        );
+        self.stats.insertions += 1;
+        self.enforce_budget();
+    }
+
+    /// Release one pin.
+    pub fn unpin(&mut self, key: u128) {
+        if let Some(e) = self.map.get_mut(&key) {
+            debug_assert!(e.pins > 0, "unbalanced unpin");
+            e.pins = e.pins.saturating_sub(1);
+        }
+        self.enforce_budget();
+    }
+
+    /// Fetch a pinned block with its keys re-encoded to absolute offset
+    /// `delta` (paper Eq. 3). `delta = 0` returns the cached keys as-is.
+    pub fn get_reencoded(&self, key: u128, delta: usize) -> Option<ReencodedBlock> {
+        let e = self.map.get(&key)?;
+        let mut k = e.k_local.clone();
+        let dims = k.dims().to_vec();
+        self.rope.reencode_block(
+            k.data_mut(),
+            dims[0],
+            dims[1],
+            dims[2],
+            delta as i64,
+        );
+        Some(ReencodedBlock { k, v: e.v.clone(), len: e.len })
+    }
+
+    /// Length (tokens) of a cached block.
+    pub fn block_len(&self, key: u128) -> Option<usize> {
+        self.map.get(&key).map(|e| e.len)
+    }
+
+    /// Drop every entry (required whenever model parameters change —
+    /// cached KV states are functions of the weights). Panics if any
+    /// entry is still pinned: clearing mid-request is a logic error.
+    pub fn clear(&mut self) {
+        assert!(
+            self.map.values().all(|e| e.pins == 0),
+            "clear() with pinned entries"
+        );
+        self.map.clear();
+    }
+
+    fn enforce_budget(&mut self) {
+        if self.byte_budget == 0 {
+            return;
+        }
+        let mut total: usize = self.map.values().map(|e| e.bytes).sum();
+        while total > self.byte_budget {
+            // Evict the least-recently-used unpinned entry.
+            let victim = self
+                .map
+                .iter()
+                .filter(|(_, e)| e.pins == 0)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    let e = self.map.remove(&k).unwrap();
+                    total -= e.bytes;
+                    self.stats.evictions += 1;
+                }
+                None => break, // everything pinned; over-budget transiently
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+    use crate::{prop_assert, prop_assert_eq};
+
+    fn rope() -> RopeTable {
+        RopeTable::new(8, 10000.0)
+    }
+
+    fn kv(len: usize, fill: f32) -> (TensorF, TensorF) {
+        let mut k = Tensor::zeros(&[2, len, 1, 8]);
+        k.data_mut().iter_mut().for_each(|x| *x = fill);
+        (k.clone(), k)
+    }
+
+    #[test]
+    fn key_is_content_addressed() {
+        assert_eq!(block_key(&[1, 2, 3]), block_key(&[1, 2, 3]));
+        assert_ne!(block_key(&[1, 2, 3]), block_key(&[1, 2, 4]));
+        assert_ne!(block_key(&[1, 2]), block_key(&[1, 2, 0]));
+        assert_ne!(block_key(&[]), block_key(&[0]));
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut c = BlockKvCache::new(rope(), 0);
+        let key = block_key(&[5, 6]);
+        assert!(!c.lookup_pin(key));
+        let (k, v) = kv(2, 1.0);
+        c.insert_pinned(key, k, v);
+        assert!(c.lookup_pin(key));
+        let s = c.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.insertions, 1);
+        assert_eq!(s.entries, 1);
+    }
+
+    #[test]
+    fn reencode_delta_zero_returns_cached() {
+        let mut c = BlockKvCache::new(rope(), 0);
+        let key = block_key(&[1]);
+        let (k, v) = kv(3, 2.5);
+        c.insert_pinned(key, k.clone(), v);
+        let b = c.get_reencoded(key, 0).unwrap();
+        assert_eq!(b.k, k);
+        assert_eq!(b.len, 3);
+    }
+
+    #[test]
+    fn reencode_rotates_keys() {
+        let mut c = BlockKvCache::new(rope(), 0);
+        let key = block_key(&[1]);
+        let (k, v) = kv(3, 1.0);
+        c.insert_pinned(key, k.clone(), v);
+        let b = c.get_reencoded(key, 10).unwrap();
+        assert!(b.k.max_abs_diff(&k) > 1e-3);
+        // Norm preserved per head row.
+        let n1: f32 = k.data().iter().map(|x| x * x).sum();
+        let n2: f32 = b.k.data().iter().map(|x| x * x).sum();
+        assert!((n1 - n2).abs() / n1 < 1e-4);
+    }
+
+    #[test]
+    fn lru_eviction_respects_pins_and_budget() {
+        // Each block: 2 layers * 4 tokens * 1 head * 8 dim * 4B * 2 (K+V)
+        // = 512 bytes. Budget of 1024 holds two blocks.
+        let mut c = BlockKvCache::new(rope(), 1024);
+        let k1 = block_key(&[1]);
+        let k2 = block_key(&[2]);
+        let k3 = block_key(&[3]);
+        let (k, v) = kv(4, 1.0);
+        c.insert_pinned(k1, k.clone(), v.clone());
+        c.insert_pinned(k2, k.clone(), v.clone());
+        // Everything pinned: inserting a third exceeds the budget but
+        // nothing can be evicted.
+        c.insert_pinned(k3, k.clone(), v.clone());
+        assert_eq!(c.stats().entries, 3);
+        assert_eq!(c.stats().evictions, 0);
+        // Unpin k1 (oldest) → it becomes the victim.
+        c.unpin(k1);
+        assert_eq!(c.stats().entries, 2);
+        assert!(!c.contains(k1));
+        assert!(c.contains(k2) && c.contains(k3));
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn lru_order_follows_use() {
+        let mut c = BlockKvCache::new(rope(), 1024);
+        let k1 = block_key(&[1]);
+        let k2 = block_key(&[2]);
+        let (k, v) = kv(4, 1.0);
+        c.insert_pinned(k1, k.clone(), v.clone());
+        c.insert_pinned(k2, k.clone(), v.clone());
+        c.unpin(k1);
+        c.unpin(k2);
+        // Touch k1 so k2 becomes LRU.
+        assert!(c.lookup_pin(k1));
+        c.unpin(k1);
+        let k3 = block_key(&[3]);
+        c.insert_pinned(k3, k.clone(), v.clone());
+        c.unpin(k3);
+        assert!(c.contains(k1), "recently used survives");
+        assert!(!c.contains(k2), "LRU evicted");
+    }
+
+    #[test]
+    fn prop_pins_balance_and_budget_holds() {
+        prop::check("kvcache-invariants", 0xCAFE, 200, |rng: &mut Rng| {
+            let budget = 512 * (1 + rng.below(4));
+            let mut c = BlockKvCache::new(rope(), budget);
+            let mut pins: std::collections::HashMap<u128, usize> = Default::default();
+            for _ in 0..rng.range(5, 60) {
+                let id = rng.below(8) as i32;
+                let key = block_key(&[id]);
+                match rng.below(3) {
+                    0 => {
+                        if c.lookup_pin(key) {
+                            *pins.entry(key).or_default() += 1;
+                        } else {
+                            let (k, v) = kv(4, id as f32);
+                            c.insert_pinned(key, k, v);
+                            *pins.entry(key).or_default() += 1;
+                        }
+                    }
+                    1 => {
+                        if pins.get(&key).copied().unwrap_or(0) > 0 {
+                            c.unpin(key);
+                            *pins.get_mut(&key).unwrap() -= 1;
+                        }
+                    }
+                    _ => {
+                        let _ = c.get_reencoded(key, rng.below(100));
+                    }
+                }
+                // Pinned entries must always be present.
+                for (k, &p) in &pins {
+                    if p > 0 {
+                        prop_assert!(c.contains(*k), "pinned block evicted");
+                    }
+                }
+            }
+            // Release all pins: budget must then hold.
+            for (k, p) in pins {
+                for _ in 0..p {
+                    c.unpin(k);
+                }
+            }
+            let s = c.stats();
+            prop_assert!(
+                s.bytes <= budget,
+                "bytes {} exceed budget {budget} with no pins",
+                s.bytes
+            );
+            prop_assert_eq!(s.hits + s.misses >= 1, true);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,166 @@
+//! # block-attn — Block-Attention for Efficient Prefilling (ICLR 2025)
+//!
+//! A three-layer Rust + JAX + Pallas serving stack reproducing
+//! *Block-Attention for Efficient Prefilling* (Ma, Wang & Lan, ICLR 2025).
+//!
+//! The paper's idea: in RAG serving, split the prompt into semantically
+//! independent blocks (one per retrieved passage), let every block compute
+//! its KV states *independently* (block-diagonal attention), cache those KV
+//! states keyed by block content, and at request time only compute the
+//! final (query) block — which attends to all cached blocks after their
+//! RoPE positions are *re-encoded* to the block's position in this prompt.
+//! TTFT and prefill FLOPs become (nearly) independent of context length.
+//!
+//! Layering (python never on the request path):
+//! - **L1** `python/compile/kernels/` — Pallas attention + RoPE kernels.
+//! - **L2** `python/compile/model.py` — Llama-style model, AOT-lowered to
+//!   HLO text artifacts (`make artifacts`).
+//! - **L3** this crate — PJRT runtime, block-KV cache with position
+//!   re-encoding, segmentation, scheduling/batching, serving, training
+//!   driver, benchmarks.
+//!
+//! Entry points:
+//! - [`runtime::ModelEngine`] — load + execute the AOT artifacts.
+//! - [`kvcache::BlockKvCache`] — content-addressed block KV store.
+//! - [`coordinator::Coordinator`] — the serving stack (segment → plan →
+//!   prefill → decode) with metrics.
+//! - [`train::train`] — block fine-tuning driver over the AOT
+//!   `train_step` (presets in [`train::presets`]).
+
+pub mod config;
+pub mod coordinator;
+pub mod flops;
+pub mod kvcache;
+pub mod rope;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod tokenizer;
+pub mod train;
+pub mod util;
+pub mod workload;
+
+pub use config::ModelConfig;
+pub use coordinator::Coordinator;
+pub use runtime::ModelEngine;
+
+/// CLI dispatcher used by the `block-attn` binary.
+pub fn run_cli(args: &util::cli::Args) -> anyhow::Result<()> {
+    match args.subcommand() {
+        Some("info") => cli_info(args),
+        Some("train") => cli_train(args),
+        Some("serve") => cli_serve(args),
+        Some("eval") => cli_eval(args),
+        Some(other) => anyhow::bail!("unknown subcommand '{other}'"),
+        None => {
+            eprintln!("usage: block-attn <info|train|serve> [--options]");
+            eprintln!("  info   --artifacts DIR");
+            eprintln!("  train  --preset table1 --out DIR [--scale 1.0] [--model tiny]");
+            eprintln!("  serve  --addr 127.0.0.1:7841 --model tiny [--checkpoint FILE]");
+            Ok(())
+        }
+    }
+}
+
+/// Evaluate a checkpoint on the synthetic RAG benchmarks, optionally
+/// dumping generations (debugging aid for the accuracy experiments).
+fn cli_eval(args: &util::cli::Args) -> anyhow::Result<()> {
+    use coordinator::{AttentionMode, Request};
+    use tokenizer::ByteTokenizer;
+
+    let dir = args.str_or("artifacts", "artifacts");
+    let model = args.str_or("model", "tiny");
+    let n = args.usize_or("samples", 10);
+    let mode = AttentionMode::parse(&args.str_or("mode", "full"))?;
+    let manifest = config::Manifest::load(&dir)?;
+    let engine = ModelEngine::new(&manifest, &model)?;
+    if let Some(ck) = args.get("checkpoint") {
+        engine.load_params_file(std::path::Path::new(ck))?;
+    }
+    let mut coord = Coordinator::new(engine, 128 << 20);
+    let tok = ByteTokenizer::new();
+    for (bench_name, samples) in train::presets::rag_eval_by_variant(n) {
+        let mut correct = 0;
+        for (i, s) in samples.iter().enumerate() {
+            let sp = s.segment(&tok);
+            let req = Request {
+                id: i as u64,
+                blocks: sp.blocks,
+                query: sp.query,
+                max_new_tokens: 48,
+                mode,
+            };
+            let resp = coord.process(&req)?;
+            let text = tok.decode_until_eos(&resp.tokens);
+            let ok = text.contains(&s.answer);
+            correct += ok as usize;
+            if args.flag("show") && i < 5 {
+                println!("  [{}] q={:?} gold={:?} got={:?}", ok as u8, s.query, s.answer, text);
+            }
+        }
+        println!("{bench_name}: {}/{}", correct, samples.len());
+        if args.flag("show") {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn cli_serve(args: &util::cli::Args) -> anyhow::Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let model = args.str_or("model", "tiny");
+    let addr = args.str_or("addr", "127.0.0.1:7841");
+    let checkpoint = args.get("checkpoint").map(std::path::PathBuf::from);
+    let workers = args.usize_or("workers", 4);
+    let cache_mb = args.usize_or("cache-mb", 256);
+    let handle = server::EngineHandle::spawn(move || {
+        let manifest = config::Manifest::load(&dir)?;
+        let engine = ModelEngine::new(&manifest, &model)?;
+        if let Some(ck) = checkpoint {
+            engine.load_params_file(&ck)?;
+        }
+        engine.warmup(&[
+            config::EntryKind::PrefillBlock,
+            config::EntryKind::PrefillFinal,
+            config::EntryKind::DecodeStep,
+        ])?;
+        Ok(Coordinator::new(engine, cache_mb << 20))
+    })?;
+    server::serve(&addr, handle, workers)
+}
+
+fn cli_train(args: &util::cli::Args) -> anyhow::Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let model = args.str_or("model", "tiny");
+    let out = std::path::PathBuf::from(args.str_or("out", "checkpoints"));
+    let scale = args.f64_or("scale", 1.0);
+    let manifest = config::Manifest::load(&dir)?;
+    let engine = ModelEngine::new(&manifest, &model)?;
+    let mut coord = Coordinator::new(engine, 256 << 20);
+    let mut opts = train::presets::PresetOpts::scaled(scale);
+    opts.only_block = args.flag("only-block");
+    match args.str_or("preset", "table1").as_str() {
+        "table1" => train::presets::run_table1_training(&mut coord, &out, &opts),
+        other => anyhow::bail!("unknown preset '{other}'"),
+    }
+}
+
+fn cli_info(args: &util::cli::Args) -> anyhow::Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let manifest = config::Manifest::load(&dir)?;
+    for (name, m) in &manifest.models {
+        println!(
+            "{name}: {} layers, d_model {}, {} heads ({} kv), vocab {}, {} entries",
+            m.config.layers,
+            m.config.d_model,
+            m.config.heads,
+            m.config.kv_heads,
+            m.config.vocab,
+            m.entries.len()
+        );
+        for e in &m.entries {
+            println!("  {:<40} {:?} {:?}", e.name, e.kind, e.sizes);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,21 @@
+//! `block-attn` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//! * `serve`   — run the TCP JSON-line serving loop.
+//! * `train`   — block fine-tuning driver (Tables 1-2, Figure 4 models).
+//! * `bench`   — quick TTFT sanity sweep (full benches live in `cargo bench`).
+//! * `info`    — print the artifact manifest summary.
+
+use block_attn::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let code = match block_attn::run_cli(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}

@@ -1,0 +1,204 @@
+//! Rotary position embedding (RoPE) re-encoding — the L3-native hot path.
+//!
+//! Paper §2.3: a cached block's K states were computed at *local*
+//! positions `0..L`. When the block is reused at offset `Δ` inside a new
+//! prompt, its keys must be rotated to absolute positions `Δ..Δ+L`
+//! (Eq. 3). Because 2-D rotations compose additively, rotating every RoPE
+//! pair by `Δ·θ_j` is exactly equivalent to recomputing the keys at the
+//! shifted positions — that is the invariant the tests pin down (and the
+//! python side cross-checks against the Pallas kernel).
+//!
+//! Convention: Llama-style "half-split" pairing. For head dim `d`, the
+//! pair `j` is `(x[j], x[j + d/2])` and `θ_j = base^(-2j/d)`,
+//! `j ∈ [0, d/2)`. This must match `python/compile/kernels/rope.py`.
+
+/// Precomputed per-pair inverse frequencies for one head dim.
+#[derive(Debug, Clone)]
+pub struct RopeTable {
+    head_dim: usize,
+    inv_freq: Vec<f64>, // len = head_dim / 2
+}
+
+impl RopeTable {
+    /// `base` is the RoPE theta (e.g. 10000.0 or 500000.0 for Llama-3).
+    pub fn new(head_dim: usize, base: f64) -> RopeTable {
+        assert!(head_dim % 2 == 0, "head_dim must be even");
+        let half = head_dim / 2;
+        let inv_freq = (0..half)
+            .map(|j| base.powf(-2.0 * j as f64 / head_dim as f64))
+            .collect();
+        RopeTable { head_dim, inv_freq }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    /// cos/sin of `pos·θ_j` for all pairs, f32.
+    pub fn angles(&self, pos: i64) -> (Vec<f32>, Vec<f32>) {
+        let mut cos = Vec::with_capacity(self.inv_freq.len());
+        let mut sin = Vec::with_capacity(self.inv_freq.len());
+        for &f in &self.inv_freq {
+            let a = pos as f64 * f;
+            cos.push(a.cos() as f32);
+            sin.push(a.sin() as f32);
+        }
+        (cos, sin)
+    }
+
+    /// Rotate one head vector in place by angle `pos·θ_j` per pair.
+    ///
+    /// `x` has length `head_dim`; pairs are `(x[j], x[j+d/2])`.
+    pub fn rotate_head(&self, x: &mut [f32], pos: i64) {
+        debug_assert_eq!(x.len(), self.head_dim);
+        let half = self.head_dim / 2;
+        let (cos, sin) = self.angles(pos);
+        for j in 0..half {
+            let a = x[j];
+            let b = x[j + half];
+            x[j] = a * cos[j] - b * sin[j];
+            x[j + half] = a * sin[j] + b * cos[j];
+        }
+    }
+
+    /// Apply RoPE at absolute positions to a `(L, H, head_dim)` tensor
+    /// stored row-major in `x` (used by tests to emulate "compute at
+    /// absolute positions").
+    pub fn encode_at(&self, x: &mut [f32], seq_len: usize, heads: usize, pos0: i64) {
+        let d = self.head_dim;
+        assert_eq!(x.len(), seq_len * heads * d);
+        for t in 0..seq_len {
+            for h in 0..heads {
+                let off = (t * heads + h) * d;
+                self.rotate_head(&mut x[off..off + d], pos0 + t as i64);
+            }
+        }
+    }
+
+    /// **The re-encoding hot path** (paper Eq. 3): rotate every key of a
+    /// cached block by `Δ`, converting keys encoded at local positions
+    /// `0..L` into keys at absolute positions `Δ..Δ+L`.
+    ///
+    /// `k` is `(layers, L, kv_heads, head_dim)` row-major. The same cos/sin
+    /// pair is reused for every (layer, token, head), so the per-element
+    /// cost is 2 mul + 1 add (fma-friendly), and the precomputed table is
+    /// `d/2` wide regardless of block length.
+    pub fn reencode_block(
+        &self,
+        k: &mut [f32],
+        layers: usize,
+        seq_len: usize,
+        kv_heads: usize,
+        delta: i64,
+    ) {
+        let d = self.head_dim;
+        assert_eq!(k.len(), layers * seq_len * kv_heads * d);
+        if delta == 0 {
+            return;
+        }
+        let half = d / 2;
+        let (cos, sin) = self.angles(delta);
+        let heads_total = layers * seq_len * kv_heads;
+        for h in 0..heads_total {
+            let x = &mut k[h * d..(h + 1) * d];
+            for j in 0..half {
+                let a = x[j];
+                let b = x[j + half];
+                x[j] = a * cos[j] - b * sin[j];
+                x[j + half] = a * sin[j] + b * cos[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_keys(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn rotation_composes_additively() {
+        // rotate(rotate(x, a), b) == rotate(x, a+b)
+        let table = RopeTable::new(32, 10000.0);
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let base = random_keys(&mut rng, 32);
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            let mut x1 = base.clone();
+            table.rotate_head(&mut x1, a);
+            table.rotate_head(&mut x1, b);
+            let mut x2 = base.clone();
+            table.rotate_head(&mut x2, a + b);
+            for (p, q) in x1.iter().zip(&x2) {
+                assert!((p - q).abs() < 1e-4, "{p} vs {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn reencode_equals_recompute_at_shifted_positions() {
+        // Paper Eq. 3 invariant: keys encoded at local positions then
+        // re-encoded by delta == keys encoded at absolute positions.
+        let (layers, seq, heads, d) = (2, 5, 3, 16);
+        let table = RopeTable::new(d, 10000.0);
+        let mut rng = Rng::new(2);
+        let raw = random_keys(&mut rng, layers * seq * heads * d);
+        let delta = 37i64;
+
+        // Path A: encode at local pos 0.., then reencode_block by delta.
+        let mut a = raw.clone();
+        for l in 0..layers {
+            let off = l * seq * heads * d;
+            table.encode_at(&mut a[off..off + seq * heads * d], seq, heads, 0);
+        }
+        table.reencode_block(&mut a, layers, seq, heads, delta);
+
+        // Path B: encode directly at absolute positions delta..
+        let mut b = raw.clone();
+        for l in 0..layers {
+            let off = l * seq * heads * d;
+            table.encode_at(&mut b[off..off + seq * heads * d], seq, heads, delta);
+        }
+
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn zero_delta_is_identity() {
+        let table = RopeTable::new(8, 10000.0);
+        let mut rng = Rng::new(3);
+        let orig = random_keys(&mut rng, 2 * 3 * 2 * 8);
+        let mut x = orig.clone();
+        table.reencode_block(&mut x, 2, 3, 2, 0);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let table = RopeTable::new(64, 500000.0);
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let x = random_keys(&mut rng, 64);
+            let mut y = x.clone();
+            table.rotate_head(&mut y, rng.below(100_000) as i64);
+            let n1: f32 = x.iter().map(|v| v * v).sum();
+            let n2: f32 = y.iter().map(|v| v * v).sum();
+            assert!((n1 - n2).abs() / n1.max(1e-6) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn inv_freq_matches_formula() {
+        let t = RopeTable::new(8, 10000.0);
+        assert!((t.inv_freq[0] - 1.0).abs() < 1e-12);
+        assert!((t.inv_freq[1] - 10000f64.powf(-0.25)).abs() < 1e-12);
+        assert!((t.inv_freq[3] - 10000f64.powf(-0.75)).abs() < 1e-12);
+    }
+}

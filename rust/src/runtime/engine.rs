@@ -1,0 +1,591 @@
+//! [`ModelEngine`]: the request-path executor over AOT artifacts.
+//!
+//! One engine owns one model config: its PJRT client, lazily-compiled
+//! executables (one per manifest entry), the current parameters (as
+//! device-ready literals plus cached conversions) and — when training —
+//! the Adam optimizer state.
+//!
+//! The engine is deliberately `!Send`: the `xla` crate wraps raw C
+//! pointers. The coordinator runs it on a dedicated engine thread and
+//! communicates over channels (see `coordinator::router`).
+
+use super::literal::{buf_f, buf_i, buf_scalar_f, buf_scalar_i, literal_to_f32};
+use crate::config::{ArtifactEntry, EntryKind, Manifest, ModelArtifacts};
+use crate::tensor::{Tensor, TensorF, TensorI};
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Output of a vanilla full prefill.
+pub struct PrefillFullOut {
+    /// Logits of the last valid position (vocab,).
+    pub last_logits: Vec<f32>,
+    /// Per-layer keys `(layers, len, kv_heads, head_dim)`, trimmed.
+    pub k: TensorF,
+    pub v: TensorF,
+}
+
+/// Output of a final-block prefill.
+pub struct PrefillFinalOut {
+    pub last_logits: Vec<f32>,
+    /// Final-block KV at absolute positions, trimmed to the query length.
+    pub k: TensorF,
+    pub v: TensorF,
+}
+
+/// Output of a decode step.
+pub struct DecodeOut {
+    pub logits: Vec<f32>,
+    pub k_cache: TensorF,
+    pub v_cache: TensorF,
+}
+
+/// Output of a train step.
+pub struct TrainOut {
+    pub loss: f32,
+}
+
+pub struct ModelEngine {
+    client: xla::PjRtClient,
+    arts: ModelArtifacts,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Current parameters, **device-resident**, in manifest order.
+    /// Uploaded once per `set_params`; every entry-point execution
+    /// borrows them (no per-call conversion or transfer).
+    params: RefCell<Vec<xla::PjRtBuffer>>,
+    /// Adam state (m, v), device-resident — allocated on first train step.
+    opt_state: RefCell<Option<(Vec<xla::PjRtBuffer>, Vec<xla::PjRtBuffer>)>>,
+}
+
+impl ModelEngine {
+    /// Create an engine for `model_name`, loading initial parameters from
+    /// the manifest's `init_file` if present (zeros otherwise).
+    pub fn new(manifest: &Manifest, model_name: &str) -> Result<ModelEngine> {
+        let arts = manifest.model(model_name)?.clone();
+        let client = xla::PjRtClient::cpu()?;
+        let engine = ModelEngine {
+            client,
+            arts,
+            exes: RefCell::new(HashMap::new()),
+            params: RefCell::new(Vec::new()),
+            opt_state: RefCell::new(None),
+        };
+        let init = engine.arts.init_file.clone();
+        match init {
+            Some(path) if path.exists() => engine.load_params_file(&path)?,
+            _ => engine.set_params(
+                engine
+                    .arts
+                    .params
+                    .iter()
+                    .map(|p| Tensor::zeros(&p.shape))
+                    .collect(),
+            )?,
+        }
+        Ok(engine)
+    }
+
+    pub fn artifacts(&self) -> &ModelArtifacts {
+        &self.arts
+    }
+
+    pub fn config(&self) -> &crate::config::ModelConfig {
+        &self.arts.config
+    }
+
+    // -- parameters --------------------------------------------------------
+
+    /// Replace the parameters (checked against the manifest layout).
+    pub fn set_params(&self, tensors: Vec<TensorF>) -> Result<()> {
+        if tensors.len() != self.arts.params.len() {
+            bail!(
+                "expected {} parameter tensors, got {}",
+                self.arts.params.len(),
+                tensors.len()
+            );
+        }
+        let mut bufs = Vec::with_capacity(tensors.len());
+        for (spec, t) in self.arts.params.iter().zip(&tensors) {
+            if spec.shape != t.dims() {
+                bail!("param '{}' shape {:?} != {:?}", spec.name, t.dims(), spec.shape);
+            }
+            bufs.push(buf_f(&self.client, t)?);
+        }
+        *self.params.borrow_mut() = bufs;
+        Ok(())
+    }
+
+    /// Load parameters from a flat little-endian f32 checkpoint file.
+    pub fn load_params_file(&self, path: &std::path::Path) -> Result<()> {
+        let tensors = read_flat_params(path, &self.arts.params)?;
+        self.set_params(tensors)
+    }
+
+    /// Download the current parameters to host tensors (checkpointing).
+    pub fn params_host(&self) -> Result<Vec<TensorF>> {
+        self.params
+            .borrow()
+            .iter()
+            .map(|b| literal_to_f32(&b.to_literal_sync()?))
+            .collect()
+    }
+
+    /// Save the current parameters as a flat f32 checkpoint.
+    pub fn save_params_file(&self, path: &std::path::Path) -> Result<()> {
+        let tensors = self.params_host()?;
+        write_flat_params(path, &tensors)
+    }
+
+    // -- executables ---------------------------------------------------
+
+    fn exe(&self, entry: &ArtifactEntry) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(&entry.name) {
+            return Ok(e.clone());
+        }
+        let path = entry
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("loading HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", entry.name))?,
+        );
+        self.exes
+            .borrow_mut()
+            .insert(entry.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile every artifact a serving process will need (avoids
+    /// first-request latency spikes).
+    pub fn warmup(&self, kinds: &[EntryKind]) -> Result<()> {
+        for e in &self.arts.entries {
+            if kinds.contains(&e.kind) {
+                self.exe(e)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an entry with `extra` data inputs followed by the
+    /// device-resident model parameters, returning the decomposed output
+    /// tuple. Uses `execute_b` (buffer args) — see `literal.rs` for why
+    /// the literal-argument path is off-limits.
+    fn run_with_params(
+        &self,
+        entry: &ArtifactEntry,
+        extra: &[xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.exe(entry)?;
+        let params = self.params.borrow();
+        if params.is_empty() {
+            bail!("engine has no parameters loaded");
+        }
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(extra.len() + params.len());
+        args.extend(extra.iter());
+        args.extend(params.iter());
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    // -- entry points ----------------------------------------------------
+
+    /// Vanilla full-attention prefill (the baseline path). Picks the
+    /// smallest length bucket that fits, pads, and trims the returned KV
+    /// to `tokens.len()`.
+    pub fn prefill_full(&self, tokens: &[i32]) -> Result<PrefillFullOut> {
+        let need = tokens.len();
+        let entry = self.arts.pick_bucket(EntryKind::PrefillFull, "L", need)?.clone();
+        let l = entry.size("L")?;
+        let toks = pad_tokens(tokens, l);
+        let outs = self.run_with_params(
+            &entry,
+            &[
+                buf_i(&self.client, &toks)?,
+                buf_scalar_i(&self.client, need as i32)?,
+            ],
+        )?;
+        let [logits, k, v] = take3(outs)?;
+        Ok(PrefillFullOut {
+            last_logits: logits.to_vec::<f32>()?,
+            k: trim_kv(literal_to_f32(&k)?, need),
+            v: trim_kv(literal_to_f32(&v)?, need),
+        })
+    }
+
+    /// Independent block prefill at local positions (paper §2.1). Returns
+    /// KV trimmed to the block length; keys are at positions `0..len` and
+    /// must be re-encoded before use at a non-zero offset.
+    pub fn prefill_block(&self, tokens: &[i32]) -> Result<(TensorF, TensorF)> {
+        let need = tokens.len();
+        let entry = self.arts.pick_bucket(EntryKind::PrefillBlock, "L", need)?.clone();
+        let l = entry.size("L")?;
+        let toks = pad_tokens(tokens, l);
+        let outs = self.run_with_params(
+            &entry,
+            &[
+                buf_i(&self.client, &toks)?,
+                buf_scalar_i(&self.client, need as i32)?,
+            ],
+        )?;
+        let [k, v] = take2(outs)?;
+        Ok((
+            trim_kv(literal_to_f32(&k)?, need),
+            trim_kv(literal_to_f32(&v)?, need),
+        ))
+    }
+
+    /// Capacity (C) the final-prefill bucket would use for `ctx_len`.
+    pub fn final_ctx_capacity(&self, ctx_len: usize) -> Result<usize> {
+        self.arts
+            .pick_bucket(EntryKind::PrefillFinal, "C", ctx_len)?
+            .size("C")
+    }
+
+    /// Max query-block length supported by the final-prefill artifacts.
+    pub fn final_q_capacity(&self) -> Result<usize> {
+        self.arts
+            .entries_of(EntryKind::PrefillFinal, "C")
+            .first()
+            .ok_or_else(|| anyhow!("no prefill_final artifacts"))?
+            .size("Lq")
+    }
+
+    /// Final-block prefill over an assembled, re-encoded context.
+    ///
+    /// `past_k`/`past_v` must be `(layers, C, kv_heads, head_dim)` where C
+    /// is exactly [`Self::final_ctx_capacity`]`(past_len)`. The query
+    /// sits at RoPE positions `past_len..` (see
+    /// [`Self::prefill_final_at`] for baselines that decouple position
+    /// from context length).
+    pub fn prefill_final(
+        &self,
+        tokens: &[i32],
+        past_k: &TensorF,
+        past_v: &TensorF,
+        past_len: usize,
+    ) -> Result<PrefillFinalOut> {
+        self.prefill_final_at(tokens, past_k, past_v, past_len, past_len)
+    }
+
+    /// [`Self::prefill_final`] with an explicit query position origin
+    /// (`q_pos0`): superposition-style baselines place the query after
+    /// the longest *parallel* document path instead of after the
+    /// concatenated context.
+    pub fn prefill_final_at(
+        &self,
+        tokens: &[i32],
+        past_k: &TensorF,
+        past_v: &TensorF,
+        past_len: usize,
+        q_pos0: usize,
+    ) -> Result<PrefillFinalOut> {
+        let c = past_k.dims()[1];
+        let entry = self.arts.pick_bucket(EntryKind::PrefillFinal, "C", c)?.clone();
+        if entry.size("C")? != c {
+            bail!("context tensor capacity {c} does not match bucket");
+        }
+        let lq = entry.size("Lq")?;
+        let need = tokens.len();
+        if need > lq {
+            bail!("final block of {need} tokens exceeds capacity {lq}");
+        }
+        let toks = pad_tokens(tokens, lq);
+        let outs = self.run_with_params(
+            &entry,
+            &[
+                buf_i(&self.client, &toks)?,
+                buf_scalar_i(&self.client, need as i32)?,
+                buf_f(&self.client, past_k)?,
+                buf_f(&self.client, past_v)?,
+                buf_scalar_i(&self.client, past_len as i32)?,
+                buf_scalar_i(&self.client, q_pos0 as i32)?,
+            ],
+        )?;
+        let [logits, k, v] = take3(outs)?;
+        Ok(PrefillFinalOut {
+            last_logits: logits.to_vec::<f32>()?,
+            k: trim_kv(literal_to_f32(&k)?, need),
+            v: trim_kv(literal_to_f32(&v)?, need),
+        })
+    }
+
+    /// Dense-cache capacity of the decode artifact.
+    pub fn decode_ctx_capacity(&self) -> Result<usize> {
+        self.arts
+            .entries_of(EntryKind::DecodeStep, "C")
+            .first()
+            .ok_or_else(|| anyhow!("no decode artifacts"))?
+            .size("C")
+    }
+
+    /// One decode step: append `token` at `cache_len` and return logits
+    /// plus the updated cache.
+    pub fn decode(
+        &self,
+        token: i32,
+        k_cache: &TensorF,
+        v_cache: &TensorF,
+        cache_len: usize,
+    ) -> Result<DecodeOut> {
+        let c = k_cache.dims()[1];
+        let entry = self.arts.pick_bucket(EntryKind::DecodeStep, "C", c)?.clone();
+        if entry.size("C")? != c {
+            bail!("decode cache capacity {c} does not match bucket");
+        }
+        let outs = self.run_with_params(
+            &entry,
+            &[
+                buf_scalar_i(&self.client, token)?,
+                buf_scalar_i(&self.client, cache_len as i32)?,
+                buf_f(&self.client, k_cache)?,
+                buf_f(&self.client, v_cache)?,
+            ],
+        )?;
+        let [logits, k, v] = take3(outs)?;
+        Ok(DecodeOut {
+            logits: logits.to_vec::<f32>()?,
+            k_cache: literal_to_f32(&k)?,
+            v_cache: literal_to_f32(&v)?,
+        })
+    }
+
+    /// RoPE re-encode via the AOT Pallas kernel (parity target for the
+    /// native implementation in `crate::rope`).
+    pub fn reencode_k_artifact(&self, k: &TensorF, delta: i32) -> Result<TensorF> {
+        let l = k.dims()[1];
+        let entry = self.arts.pick_bucket(EntryKind::ReencodeK, "L", l)?.clone();
+        if entry.size("L")? != l {
+            bail!("reencode artifact bucket mismatch");
+        }
+        let exe = self.exe(&entry)?;
+        let delta_t = Tensor::from_vec(&[1], vec![delta]);
+        let args = [buf_f(&self.client, k)?, buf_i(&self.client, &delta_t)?];
+        let refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+        let out = exe.execute_b::<&xla::PjRtBuffer>(&refs)?[0][0].to_literal_sync()?;
+        let mut parts = out.to_tuple()?;
+        literal_to_f32(&parts.remove(0))
+    }
+
+    // -- training --------------------------------------------------------
+
+    /// One block-fine-tune step (paper §2.4). `seg` carries the Figure-1
+    /// segment ids (uniform ids = full-attention mode), `loss_mask` marks
+    /// target tokens. Updates the engine's parameters in place.
+    pub fn train_step(
+        &self,
+        step: usize,
+        lr: f32,
+        tokens: &TensorI,
+        seg: &TensorI,
+        loss_mask: &TensorF,
+    ) -> Result<TrainOut> {
+        let entry = self
+            .arts
+            .entries
+            .iter()
+            .find(|e| e.kind == EntryKind::TrainStep)
+            .ok_or_else(|| anyhow!("config '{}' has no train artifact", self.arts.config.name))?
+            .clone();
+        let exe = self.exe(&entry)?;
+
+        // Lazily allocate Adam state (device-resident zeros).
+        if self.opt_state.borrow().is_none() {
+            let zeros = || -> Result<Vec<xla::PjRtBuffer>> {
+                self.arts
+                    .params
+                    .iter()
+                    .map(|p| buf_f(&self.client, &Tensor::zeros(&p.shape)))
+                    .collect()
+            };
+            *self.opt_state.borrow_mut() = Some((zeros()?, zeros()?));
+        }
+
+        let extra = [
+            buf_scalar_i(&self.client, step as i32)?,
+            buf_scalar_f(&self.client, lr)?,
+            buf_i(&self.client, tokens)?,
+            buf_i(&self.client, seg)?,
+            buf_f(&self.client, loss_mask)?,
+        ];
+        let params = self.params.borrow();
+        let opt = self.opt_state.borrow();
+        let (m, v) = opt.as_ref().unwrap();
+        let mut args: Vec<&xla::PjRtBuffer> = extra.iter().collect();
+        args.extend(params.iter());
+        args.extend(m.iter());
+        args.extend(v.iter());
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        drop(params);
+        drop(opt);
+
+        // The output is one tuple buffer (return_tuple=True lowering);
+        // split on host and re-upload the new state. ~50 MB of memcpy per
+        // step at tiny scale — negligible next to the step compute.
+        let lit = result[0][0].to_literal_sync()?;
+        let mut outs = lit.to_tuple()?;
+        let n = self.arts.params.len();
+        if outs.len() != 1 + 3 * n {
+            bail!("train_step returned {} outputs, expected {}", outs.len(), 1 + 3 * n);
+        }
+        let loss = outs.remove(0).to_vec::<f32>()?[0];
+        // NOTE: not `buffer_from_host_literal` — its C shim starts an
+        // async transfer without awaiting it, so dropping the literal
+        // races the copy (SIGSEGV). `buf_f` copies synchronously
+        // (kImmutableOnlyDuringCall semantics).
+        let upload = |lits: &[xla::Literal]| -> Result<Vec<xla::PjRtBuffer>> {
+            lits.iter()
+                .map(|l| buf_f(&self.client, &literal_to_f32(l)?))
+                .collect()
+        };
+        let new_v = upload(&outs.split_off(2 * n))?;
+        let new_m = upload(&outs.split_off(n))?;
+        let new_p = upload(&outs)?;
+        *self.params.borrow_mut() = new_p;
+        *self.opt_state.borrow_mut() = Some((new_m, new_v));
+        Ok(TrainOut { loss })
+    }
+
+    /// Reset the Adam state (call when starting a new fine-tune from a
+    /// freshly loaded checkpoint).
+    pub fn reset_opt_state(&self) {
+        *self.opt_state.borrow_mut() = None;
+    }
+
+    /// Zero-filled KV context tensor `(layers, c, kv_heads, head_dim)`.
+    pub fn kv_zeros(&self, c: usize) -> TensorF {
+        let cfg = &self.arts.config;
+        Tensor::zeros(&[cfg.layers, c, cfg.kv_heads, cfg.head_dim])
+    }
+}
+
+// -- helpers ---------------------------------------------------------------
+
+fn pad_tokens(tokens: &[i32], to: usize) -> TensorI {
+    let mut v = tokens.to_vec();
+    v.resize(to, 0);
+    Tensor::from_vec(&[to], v)
+}
+
+/// Trim a `(layers, L, kv_heads, head_dim)` KV tensor to `len` tokens.
+fn trim_kv(kv: TensorF, len: usize) -> TensorF {
+    let dims = kv.dims().to_vec();
+    if dims[1] == len {
+        return kv;
+    }
+    let (layers, l, heads, hd) = (dims[0], dims[1], dims[2], dims[3]);
+    let mut out = Tensor::zeros(&[layers, len, heads, hd]);
+    let row = heads * hd;
+    for n in 0..layers {
+        let src = kv.axis0(n);
+        out.axis0_mut(n).copy_from_slice(&src[..len * row]);
+        let _ = l;
+    }
+    out
+}
+
+fn take2(mut v: Vec<xla::Literal>) -> Result<[xla::Literal; 2]> {
+    if v.len() != 2 {
+        bail!("expected 2 outputs, got {}", v.len());
+    }
+    let b = v.pop().unwrap();
+    let a = v.pop().unwrap();
+    Ok([a, b])
+}
+
+fn take3(mut v: Vec<xla::Literal>) -> Result<[xla::Literal; 3]> {
+    if v.len() != 3 {
+        bail!("expected 3 outputs, got {}", v.len());
+    }
+    let c = v.pop().unwrap();
+    let b = v.pop().unwrap();
+    let a = v.pop().unwrap();
+    Ok([a, b, c])
+}
+
+/// Read a flat little-endian f32 checkpoint into the manifest layout.
+pub fn read_flat_params(
+    path: &std::path::Path,
+    specs: &[crate::config::ParamSpec],
+) -> Result<Vec<TensorF>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    let total: usize = specs.iter().map(|s| s.len()).sum();
+    if bytes.len() != total * 4 {
+        bail!(
+            "checkpoint {path:?} has {} bytes, expected {} ({} f32)",
+            bytes.len(),
+            total * 4,
+            total
+        );
+    }
+    let mut floats = Vec::with_capacity(total);
+    for c in bytes.chunks_exact(4) {
+        floats.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    let mut out = Vec::with_capacity(specs.len());
+    let mut off = 0;
+    for s in specs {
+        let n = s.len();
+        out.push(Tensor::from_vec(&s.shape, floats[off..off + n].to_vec()));
+        off += n;
+    }
+    Ok(out)
+}
+
+/// Write tensors as a flat little-endian f32 checkpoint.
+pub fn write_flat_params(path: &std::path::Path, tensors: &[TensorF]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut bytes = Vec::new();
+    for t in tensors {
+        for x in t.data() {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParamSpec;
+
+    #[test]
+    fn flat_params_roundtrip() {
+        let dir = std::env::temp_dir().join("block_attn_test_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.bin");
+        let t1 = Tensor::from_vec(&[2, 3], vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let t2 = Tensor::from_vec(&[2], vec![-1.0f32, 0.5]);
+        write_flat_params(&path, &[t1.clone(), t2.clone()]).unwrap();
+        let specs = vec![
+            ParamSpec { name: "a".into(), shape: vec![2, 3] },
+            ParamSpec { name: "b".into(), shape: vec![2] },
+        ];
+        let back = read_flat_params(&path, &specs).unwrap();
+        assert_eq!(back[0], t1);
+        assert_eq!(back[1], t2);
+        // Wrong layout must fail loudly.
+        let bad = vec![ParamSpec { name: "a".into(), shape: vec![9] }];
+        assert!(read_flat_params(&path, &bad).is_err());
+    }
+
+    #[test]
+    fn pad_and_trim() {
+        let t = pad_tokens(&[1, 2, 3], 5);
+        assert_eq!(t.data(), &[1, 2, 3, 0, 0]);
+        let kv = Tensor::from_vec(&[1, 3, 1, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let trimmed = trim_kv(kv, 2);
+        assert_eq!(trimmed.dims(), &[1, 2, 1, 2]);
+        assert_eq!(trimmed.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+}

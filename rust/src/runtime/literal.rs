@@ -1,0 +1,74 @@
+//! Host [`Tensor`] ⇄ PJRT conversion.
+//!
+//! Inputs travel host→device via [`xla::PjRtClient::buffer_from_host_buffer`]
+//! (`buf_f`/`buf_i`/scalars) and outputs device→host via
+//! `to_literal_sync` + the literal readers below.
+//!
+//! We deliberately avoid `PjRtLoadedExecutable::execute` (the
+//! literal-argument variant): its C shim releases every
+//! `BufferFromHostLiteral` result without freeing it after the run,
+//! leaking each call's entire input set (~22 MB per train step). The
+//! `execute_b` path with rust-owned input buffers is leak-free — and
+//! lets parameters stay device-resident across calls.
+
+use crate::tensor::{Tensor, TensorF, TensorI};
+use anyhow::{anyhow, Result};
+
+/// Upload an f32 tensor to the device.
+pub fn buf_f(client: &xla::PjRtClient, t: &TensorF) -> Result<xla::PjRtBuffer> {
+    Ok(client.buffer_from_host_buffer::<f32>(t.data(), t.dims(), None)?)
+}
+
+/// Upload an i32 tensor to the device.
+pub fn buf_i(client: &xla::PjRtClient, t: &TensorI) -> Result<xla::PjRtBuffer> {
+    Ok(client.buffer_from_host_buffer::<i32>(t.data(), t.dims(), None)?)
+}
+
+/// Upload a rank-0 i32 scalar.
+pub fn buf_scalar_i(client: &xla::PjRtClient, v: i32) -> Result<xla::PjRtBuffer> {
+    Ok(client.buffer_from_host_buffer::<i32>(&[v], &[], None)?)
+}
+
+/// Upload a rank-0 f32 scalar.
+pub fn buf_scalar_f(client: &xla::PjRtClient, v: f32) -> Result<xla::PjRtBuffer> {
+    Ok(client.buffer_from_host_buffer::<f32>(&[v], &[], None)?)
+}
+
+/// f32 tensor → literal with the tensor's shape.
+pub fn tensor_f(t: &TensorF) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    if t.rank() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// i32 tensor → literal with the tensor's shape.
+pub fn tensor_i(t: &TensorI) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    if t.rank() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Literal → f32 tensor (shape taken from the literal).
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<TensorF> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    if data.len() != dims.iter().product::<usize>() {
+        return Err(anyhow!("literal shape/data mismatch"));
+    }
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// Literal → i32 tensor.
+pub fn literal_to_i32(lit: &xla::Literal) -> Result<TensorI> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<i32>()?;
+    Ok(Tensor::from_vec(&dims, data))
+}

@@ -1,0 +1,14 @@
+//! L3 runtime: load AOT HLO artifacts and execute them on the PJRT CPU
+//! client.
+//!
+//! The [`ModelEngine`] is the only place in the crate that touches the
+//! `xla` FFI; everything above it works with host [`Tensor`]s. Artifacts
+//! are compiled lazily on first use and memoized per entry, so loading a
+//! manifest is cheap and a serving process only pays for the buckets it
+//! actually exercises.
+
+mod engine;
+mod literal;
+
+pub use engine::{DecodeOut, ModelEngine, PrefillFinalOut, PrefillFullOut, TrainOut};
+pub use literal::{literal_to_f32, literal_to_i32, tensor_f, tensor_i};

@@ -1,0 +1,246 @@
+//! TCP JSON-line serving front-end.
+//!
+//! Protocol: one JSON object per line.
+//!
+//! Request:
+//! ```json
+//! {"id": 1, "passages": ["doc a", "doc b"], "query": "what ...?",
+//!  "max_new_tokens": 16, "mode": "block"}
+//! ```
+//! Response:
+//! ```json
+//! {"id": 1, "text": "...", "ttft_ms": 12.3, "flops_tft": 1.2e9,
+//!  "cached_blocks": 2, "total_blocks": 2}
+//! ```
+//!
+//! Architecture: the engine is `!Send`, so a dedicated **engine thread**
+//! owns the [`Coordinator`] and serves jobs from an mpsc channel;
+//! connection handlers (on the [`ThreadPool`]) parse requests, submit
+//! jobs and stream responses back — the vLLM-router shape at miniature
+//! scale. Python is nowhere in this path.
+
+use crate::coordinator::{AttentionMode, Coordinator, Request, Response};
+use crate::tokenizer::ByteTokenizer;
+use crate::util::json::Json;
+use crate::util::pool::ThreadPool;
+use anyhow::{anyhow, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+
+/// A parsed wire request.
+pub fn parse_request(line: &str, tok: &ByteTokenizer) -> Result<Request> {
+    let j = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+    let id = j.get("id").as_usize().unwrap_or(0) as u64;
+    let mode = AttentionMode::parse(j.get("mode").as_str().unwrap_or("block"))?;
+    let passages = j
+        .get("passages")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|p| p.as_str())
+        .map(|p| {
+            let mut ids = tok.encode(p);
+            ids.push(crate::tokenizer::SEP);
+            ids
+        })
+        .collect();
+    let query_text = j.req_str("query")?;
+    let mut query = vec![crate::tokenizer::QRY];
+    query.extend(tok.encode(query_text));
+    Ok(Request {
+        id,
+        blocks: passages,
+        query,
+        max_new_tokens: j.get("max_new_tokens").as_usize().unwrap_or(16),
+        mode,
+    })
+}
+
+/// Serialize a response line.
+pub fn format_response(resp: &Response, tok: &ByteTokenizer) -> String {
+    Json::obj(vec![
+        ("id", Json::num(resp.id as f64)),
+        ("text", Json::str(tok.decode_until_eos(&resp.tokens))),
+        ("ttft_ms", Json::num(resp.ttft * 1e3)),
+        ("flops_tft", Json::num(resp.flops_tft)),
+        ("cached_blocks", Json::num(resp.cached_blocks as f64)),
+        ("total_blocks", Json::num(resp.total_blocks as f64)),
+        ("prompt_tokens", Json::num(resp.prompt_tokens as f64)),
+    ])
+    .to_string()
+}
+
+fn format_error(id: u64, err: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("error", Json::str(err)),
+    ])
+    .to_string()
+}
+
+enum Job {
+    Generate(Request, mpsc::Sender<String>),
+    Stats(mpsc::Sender<String>),
+}
+
+/// Handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Job>,
+}
+
+impl EngineHandle {
+    /// Spawn the engine thread around a coordinator factory (the factory
+    /// runs *on* the engine thread since the engine is `!Send`).
+    pub fn spawn(
+        make: impl FnOnce() -> Result<Coordinator> + Send + 'static,
+    ) -> Result<EngineHandle> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("block-attn-engine".into())
+            .spawn(move || {
+                let tok = ByteTokenizer::new();
+                let mut coord = match make() {
+                    Ok(c) => {
+                        let _ = ready_tx.send(Ok(()));
+                        c
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Generate(req, out) => {
+                            let id = req.id;
+                            let line = match coord.process(&req) {
+                                Ok(resp) => format_response(&resp, &tok),
+                                Err(e) => format_error(id, &format!("{e:#}")),
+                            };
+                            let _ = out.send(line);
+                        }
+                        Job::Stats(out) => {
+                            let s = coord.cache_stats();
+                            let line = Json::obj(vec![
+                                ("metrics", Json::str(coord.metrics.report())),
+                                ("cache_entries", Json::num(s.entries as f64)),
+                                ("cache_bytes", Json::num(s.bytes as f64)),
+                                ("cache_hit_rate", Json::num(s.hit_rate())),
+                            ])
+                            .to_string();
+                            let _ = out.send(line);
+                        }
+                    }
+                }
+            })?;
+        ready_rx.recv().map_err(|_| anyhow!("engine thread died"))??;
+        Ok(EngineHandle { tx })
+    }
+
+    /// Synchronous generate (used by connection handlers and tests).
+    pub fn generate(&self, req: Request) -> Result<String> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Job::Generate(req, tx))
+            .map_err(|_| anyhow!("engine gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine gone"))
+    }
+
+    pub fn stats(&self) -> Result<String> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Job::Stats(tx))
+            .map_err(|_| anyhow!("engine gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine gone"))
+    }
+}
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7841").
+pub fn serve(addr: &str, handle: EngineHandle, workers: usize) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("[server] listening on {addr}");
+    let pool = ThreadPool::new(workers);
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let handle = handle.clone();
+        pool.spawn(move || {
+            if let Err(e) = handle_conn(stream, handle) {
+                eprintln!("[server] connection error: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, handle: EngineHandle) -> Result<()> {
+    let tok = ByteTokenizer::new();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let out = if line.trim() == "stats" {
+            handle.stats()?
+        } else {
+            match parse_request(&line, &tok) {
+                Ok(req) => handle.generate(req)?,
+                Err(e) => format_error(0, &format!("{e:#}")),
+            }
+        };
+        writer.write_all(out.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_roundtrip() {
+        let tok = ByteTokenizer::new();
+        let req = parse_request(
+            r#"{"id": 3, "passages": ["doc a"], "query": "q?", "mode": "full", "max_new_tokens": 5}"#,
+            &tok,
+        )
+        .unwrap();
+        assert_eq!(req.id, 3);
+        assert_eq!(req.blocks.len(), 1);
+        assert_eq!(req.mode, AttentionMode::Full);
+        assert_eq!(req.max_new_tokens, 5);
+        assert_eq!(req.query[0], crate::tokenizer::QRY);
+    }
+
+    #[test]
+    fn parse_rejects_missing_query() {
+        let tok = ByteTokenizer::new();
+        assert!(parse_request(r#"{"id": 1}"#, &tok).is_err());
+        assert!(parse_request("not json", &tok).is_err());
+    }
+
+    #[test]
+    fn response_is_valid_json() {
+        let tok = ByteTokenizer::new();
+        let resp = Response {
+            id: 9,
+            tokens: vec![b'h' as i32, b'i' as i32, crate::tokenizer::EOS],
+            ttft: 0.0123,
+            flops_tft: 1e9,
+            cached_blocks: 2,
+            total_blocks: 3,
+            prompt_tokens: 100,
+        };
+        let line = format_response(&resp, &tok);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("text").as_str(), Some("hi"));
+        assert_eq!(j.get("cached_blocks").as_i64(), Some(2));
+        assert!((j.get("ttft_ms").as_f64().unwrap() - 12.3).abs() < 0.01);
+    }
+}

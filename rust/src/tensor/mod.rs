@@ -1,0 +1,213 @@
+//! Host-side tensors.
+//!
+//! Minimal row-major tensors used on the L3 side: KV blocks in the cache,
+//! model parameters during training, and conversion to/from PJRT literals
+//! (conversion lives in [`crate::runtime`] to keep this module
+//! dependency-free and easy to test).
+
+use std::fmt;
+
+/// Row-major host tensor of `T`.
+#[derive(Clone, PartialEq)]
+pub struct Tensor<T> {
+    dims: Vec<usize>,
+    data: Vec<T>,
+}
+
+pub type TensorF = Tensor<f32>;
+pub type TensorI = Tensor<i32>;
+
+impl<T: Copy + Default> Tensor<T> {
+    /// Zero-filled tensor.
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: vec![T::default(); n] }
+    }
+
+    /// Build from parts; panics if the element count mismatches.
+    pub fn from_vec(dims: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(
+            dims.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            dims,
+            data.len()
+        );
+        Tensor { dims: dims.to_vec(), data }
+    }
+
+    pub fn scalar(v: T) -> Self {
+        Tensor { dims: vec![], data: vec![v] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of the same element count.
+    pub fn reshape(mut self, dims: &[usize]) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), self.data.len());
+        self.dims = dims.to_vec();
+        self
+    }
+
+    /// Linear index of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.dims.len());
+        let mut off = 0;
+        for (i, (&x, &d)) in idx.iter().zip(&self.dims).enumerate() {
+            debug_assert!(x < d, "index {idx:?} out of bounds {:?} at {i}", self.dims);
+            off = off * d + x;
+        }
+        off
+    }
+
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: T) {
+        let off = self.offset(idx);
+        self.data[off] = v;
+    }
+
+    /// Slice of the first axis: `self[i]` as a view (contiguous).
+    pub fn axis0(&self, i: usize) -> &[T] {
+        let stride: usize = self.dims[1..].iter().product();
+        &self.data[i * stride..(i + 1) * stride]
+    }
+
+    pub fn axis0_mut(&mut self, i: usize) -> &mut [T] {
+        let stride: usize = self.dims[1..].iter().product();
+        &mut self.data[i * stride..(i + 1) * stride]
+    }
+
+    /// Copy `src` into the first-axis range `[at, at+src.dims[0])`.
+    /// Remaining dims must match.
+    pub fn write_axis0(&mut self, at: usize, src: &Tensor<T>) {
+        assert_eq!(&self.dims[1..], &src.dims[1..], "trailing dims mismatch");
+        let stride: usize = self.dims[1..].iter().product();
+        let n = src.dims[0];
+        assert!(at + n <= self.dims[0], "write_axis0 out of range");
+        self.data[at * stride..(at + n) * stride].copy_from_slice(&src.data);
+    }
+
+    /// Extract first-axis range `[at, at+n)` as a new tensor.
+    pub fn slice_axis0(&self, at: usize, n: usize) -> Tensor<T> {
+        assert!(at + n <= self.dims[0]);
+        let stride: usize = self.dims[1..].iter().product();
+        let mut dims = self.dims.clone();
+        dims[0] = n;
+        Tensor { dims, data: self.data[at * stride..(at + n) * stride].to_vec() }
+    }
+}
+
+impl Tensor<f32> {
+    /// Max |a-b| between two equal-shaped tensors.
+    pub fn max_abs_diff(&self, other: &Tensor<f32>) -> f32 {
+        assert_eq!(self.dims, other.dims);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Tensor<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}(n={})", self.dims, self.data.len())
+    }
+}
+
+/// Argmax over a slice (greedy decode helper).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major() {
+        let mut t = Tensor::<f32>::zeros(&[2, 3, 4]);
+        t.set(&[1, 2, 3], 7.0);
+        assert_eq!(t.at(&[1, 2, 3]), 7.0);
+        assert_eq!(t.offset(&[1, 2, 3]), 1 * 12 + 2 * 4 + 3);
+        assert_eq!(t.data()[23], 7.0);
+    }
+
+    #[test]
+    fn axis0_views() {
+        let t = Tensor::from_vec(&[2, 3], vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(t.axis0(0), &[1, 2, 3]);
+        assert_eq!(t.axis0(1), &[4, 5, 6]);
+    }
+
+    #[test]
+    fn write_and_slice_axis0() {
+        let mut t = Tensor::<i32>::zeros(&[4, 2]);
+        let src = Tensor::from_vec(&[2, 2], vec![1, 2, 3, 4]);
+        t.write_axis0(1, &src);
+        assert_eq!(t.data(), &[0, 0, 1, 2, 3, 4, 0, 0]);
+        let s = t.slice_axis0(1, 2);
+        assert_eq!(s.data(), &[1, 2, 3, 4]);
+        assert_eq!(s.dims(), &[2, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn from_vec_checks_len() {
+        let _ = Tensor::from_vec(&[2, 2], vec![1]);
+    }
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-5.0, -2.0, -3.0]), 1);
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Tensor::from_vec(&[3], vec![1.0f32, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![1.5f32, 2.0, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

@@ -1,0 +1,143 @@
+//! Byte-pair-encoding tokenizer substrate (trained from a corpus).
+//!
+//! Used by the `bench`-config workload generator so synthetic passages
+//! get realistic token counts for a 32000-entry vocabulary. The
+//! implementation is the classic BPE loop: start from bytes, repeatedly
+//! merge the most frequent adjacent pair, record merge rules; encoding
+//! replays the rules greedily (lowest-rank merge first).
+
+use std::collections::HashMap;
+
+/// A trained BPE tokenizer: 256 byte tokens + one token per merge.
+#[derive(Debug, Clone)]
+pub struct BpeTokenizer {
+    /// merge rules: (left, right) -> merged id, in training order.
+    merges: Vec<(u32, u32)>,
+    ranks: HashMap<(u32, u32), u32>,
+}
+
+impl BpeTokenizer {
+    /// Train merge rules from a corpus until `vocab` tokens exist (or no
+    /// pair repeats). `vocab` must be > 256.
+    pub fn train(corpus: &str, vocab: usize) -> BpeTokenizer {
+        assert!(vocab > 256);
+        let mut words: Vec<Vec<u32>> = corpus
+            .split_whitespace()
+            .map(|w| w.bytes().map(|b| b as u32).collect())
+            .collect();
+        let mut merges = Vec::new();
+        let mut next_id = 256u32;
+        while (next_id as usize) < vocab {
+            // Count adjacent pairs.
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in &words {
+                for pair in w.windows(2) {
+                    *counts.entry((pair[0], pair[1])).or_default() += 1;
+                }
+            }
+            // Deterministic tie-break: highest count, then smallest pair.
+            let best = counts
+                .into_iter()
+                .filter(|&(_, c)| c >= 2)
+                .max_by_key(|&((a, b), c)| (c, std::cmp::Reverse((a, b))));
+            let Some((pair, _)) = best else { break };
+            merges.push(pair);
+            for w in &mut words {
+                merge_in_place(w, pair, next_id);
+            }
+            next_id += 1;
+        }
+        let ranks = merges
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i as u32))
+            .collect();
+        BpeTokenizer { merges, ranks }
+    }
+
+    pub fn vocab(&self) -> usize {
+        256 + self.merges.len()
+    }
+
+    /// Encode one whitespace-split word (no space handling).
+    fn encode_word(&self, word: &str) -> Vec<u32> {
+        let mut toks: Vec<u32> = word.bytes().map(|b| b as u32).collect();
+        loop {
+            // Find the lowest-rank applicable merge.
+            let mut best: Option<(u32, usize)> = None;
+            for (i, pair) in toks.windows(2).enumerate() {
+                if let Some(&r) = self.ranks.get(&(pair[0], pair[1])) {
+                    if best.map(|(br, _)| r < br).unwrap_or(true) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            match best {
+                Some((r, i)) => {
+                    let id = 256 + r;
+                    toks[i] = id;
+                    toks.remove(i + 1);
+                }
+                None => return toks,
+            }
+        }
+    }
+
+    /// Encode text; words are separated implicitly (the id stream does
+    /// not retain whitespace — fine for workload length modelling).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::new();
+        for w in text.split_whitespace() {
+            out.extend(self.encode_word(w));
+        }
+        out
+    }
+}
+
+fn merge_in_place(w: &mut Vec<u32>, pair: (u32, u32), id: u32) {
+    let mut i = 0;
+    while i + 1 < w.len() {
+        if w[i] == pair.0 && w[i + 1] == pair.1 {
+            w[i] = id;
+            w.remove(i + 1);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn learns_frequent_pairs() {
+        let bpe = BpeTokenizer::train("aaab aaab aaab xyz", 300);
+        assert!(bpe.vocab() > 256);
+        // "aaab" should compress well below its byte length.
+        let enc = bpe.encode("aaab");
+        assert!(enc.len() < 4, "{enc:?}");
+    }
+
+    #[test]
+    fn encoding_is_deterministic() {
+        let bpe = BpeTokenizer::train("the quick brown fox the quick fox", 280);
+        assert_eq!(bpe.encode("the quick fox"), bpe.encode("the quick fox"));
+    }
+
+    #[test]
+    fn unseen_bytes_fall_back() {
+        let bpe = BpeTokenizer::train("hello hello", 270);
+        let enc = bpe.encode("Zq");
+        assert_eq!(enc, vec![b'Z' as u32, b'q' as u32]);
+    }
+
+    #[test]
+    fn compression_improves_with_vocab() {
+        let corpus = "block attention makes prefilling efficient ".repeat(20);
+        let small = BpeTokenizer::train(&corpus, 260);
+        let large = BpeTokenizer::train(&corpus, 400);
+        let text = "block attention makes prefilling efficient";
+        assert!(large.encode(text).len() <= small.encode(text).len());
+    }
+}

@@ -1,0 +1,96 @@
+//! Tokenization substrate.
+//!
+//! Two tokenizers:
+//! * [`ByteTokenizer`] — the production path for the trained models:
+//!   raw bytes (ids 0..255) plus special tokens. Deterministic, lossless,
+//!   matches `python/compile/configs.py` (PAD/BOS/EOS/SEP/QRY).
+//! * [`BpeTokenizer`] — a trained byte-pair-encoding substrate used by
+//!   the workload generators to model realistic passage token lengths
+//!   for the `bench` config (vocab 32000). Implemented from scratch
+//!   (merge-rule training + greedy encoding) since no external tokenizer
+//!   crate is available offline.
+
+pub mod bpe;
+
+/// Special token ids shared with the python side.
+pub const PAD: i32 = 256;
+pub const BOS: i32 = 257;
+pub const EOS: i32 = 258;
+/// Block separator (between passages).
+pub const SEP: i32 = 259;
+/// Query marker (starts the final block).
+pub const QRY: i32 = 260;
+
+/// Vocabulary size of the byte-level models.
+pub const BYTE_VOCAB: usize = 261;
+
+/// Byte-level tokenizer with special tokens.
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        ByteTokenizer
+    }
+
+    pub fn vocab(&self) -> usize {
+        BYTE_VOCAB
+    }
+
+    /// Encode raw text (no specials added).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    /// Decode ids; specials are rendered as readable markers, bytes are
+    /// recovered losslessly.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::with_capacity(ids.len());
+        for &id in ids {
+            match id {
+                0..=255 => bytes.push(id as u8),
+                PAD => {}
+                BOS => bytes.extend_from_slice(b"<s>"),
+                EOS => bytes.extend_from_slice(b"</s>"),
+                SEP => bytes.extend_from_slice(b"<sep>"),
+                QRY => bytes.extend_from_slice(b"<qry>"),
+                _ => bytes.extend_from_slice(b"<?>"),
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Decode stopping at the first EOS (generation post-processing).
+    pub fn decode_until_eos(&self, ids: &[i32]) -> String {
+        let end = ids.iter().position(|&t| t == EOS).unwrap_or(ids.len());
+        self.decode(&ids[..end])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_roundtrip() {
+        let t = ByteTokenizer::new();
+        let s = "Hello, Block-Attention! 123";
+        let ids = t.encode(s);
+        assert!(ids.iter().all(|&i| (0..256).contains(&i)));
+        assert_eq!(t.decode(&ids), s);
+    }
+
+    #[test]
+    fn specials_render() {
+        let t = ByteTokenizer::new();
+        let ids = vec![BOS, b'h' as i32, b'i' as i32, EOS];
+        assert_eq!(t.decode(&ids), "<s>hi</s>");
+        assert_eq!(t.decode_until_eos(&[b'o' as i32, b'k' as i32, EOS, b'x' as i32]), "ok");
+    }
+
+    #[test]
+    fn pad_is_silent() {
+        let t = ByteTokenizer::new();
+        assert_eq!(t.decode(&[b'a' as i32, PAD, b'b' as i32]), "ab");
+    }
+}

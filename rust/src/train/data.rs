@@ -1,0 +1,183 @@
+//! Sample → training-batch packing.
+//!
+//! Layout of one row (matches inference exactly):
+//!
+//! ```text
+//! [block0 .. SEP][block1 .. SEP] ... [QRY query][answer EOS][PAD ...]
+//!  seg=0          seg=1               seg=K      seg=K        seg=K
+//!  mask=0         mask=0              mask=0     mask=1       mask=0
+//! ```
+//!
+//! With `block_mask = false` all segment ids collapse to 0 — the same
+//! row trains in full-attention mode (the dual-mode trick needs no
+//! second artifact).
+
+use crate::tensor::{Tensor, TensorF, TensorI};
+use crate::tokenizer::{ByteTokenizer, EOS, PAD};
+use crate::workload::Sample;
+
+/// Encode one sample. Returns (tokens, segment ids, loss mask); rows are
+/// truncated to `max_len` if necessary (the response is kept by trimming
+/// context blocks from the front first).
+///
+/// The loss mask covers **every non-pad token** (full-LM loss): for a
+/// from-scratch model the context/passage tokens carry most of the
+/// learning signal, and the paper's SFT-style answer-only masking
+/// starves a tiny model of it. The response tokens are what evaluation
+/// measures; the context tokens teach the representations.
+pub fn encode_sample(
+    tok: &ByteTokenizer,
+    sample: &Sample,
+    max_len: usize,
+    block_mask: bool,
+) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+    let sp = sample.segment(tok);
+    let answer = tok.encode(&sample.response);
+    let tail_len = sp.query.len() + answer.len() + 1;
+
+    // Drop leading blocks until everything fits.
+    let mut blocks: &[Vec<i32>] = &sp.blocks;
+    let mut ctx_len: usize = blocks.iter().map(|b| b.len()).sum();
+    while ctx_len + tail_len > max_len && !blocks.is_empty() {
+        ctx_len -= blocks[0].len();
+        blocks = &blocks[1..];
+    }
+
+    let mut tokens = Vec::with_capacity(max_len);
+    let mut seg = Vec::with_capacity(max_len);
+    let mut mask = Vec::with_capacity(max_len);
+    for (i, b) in blocks.iter().enumerate() {
+        let id = if block_mask { i as i32 } else { 0 };
+        for &t in b {
+            tokens.push(t);
+            seg.push(id);
+            mask.push(1.0);
+        }
+    }
+    let final_id = if block_mask { blocks.len() as i32 } else { 0 };
+    for &t in &sp.query {
+        tokens.push(t);
+        seg.push(final_id);
+        mask.push(1.0);
+    }
+    for &t in &answer {
+        tokens.push(t);
+        seg.push(final_id);
+        mask.push(1.0);
+    }
+    tokens.push(EOS);
+    seg.push(final_id);
+    mask.push(1.0);
+    // Position 0 is never a prediction target.
+    if let Some(m) = mask.first_mut() {
+        *m = 0.0;
+    }
+
+    tokens.truncate(max_len);
+    seg.truncate(max_len);
+    mask.truncate(max_len);
+    while tokens.len() < max_len {
+        tokens.push(PAD);
+        seg.push(final_id);
+        mask.push(0.0);
+    }
+    (tokens, seg, mask)
+}
+
+/// Pack samples into `(B, L)` batch tensors.
+pub fn pack_batch(
+    tok: &ByteTokenizer,
+    samples: &[Sample],
+    max_len: usize,
+    block_mask: bool,
+) -> (TensorI, TensorI, TensorF) {
+    let b = samples.len();
+    let mut tokens = Vec::with_capacity(b * max_len);
+    let mut seg = Vec::with_capacity(b * max_len);
+    let mut mask = Vec::with_capacity(b * max_len);
+    for s in samples {
+        let (t, g, m) = encode_sample(tok, s, max_len, block_mask);
+        tokens.extend(t);
+        seg.extend(g);
+        mask.extend(m);
+    }
+    (
+        Tensor::from_vec(&[b, max_len], tokens),
+        Tensor::from_vec(&[b, max_len], seg),
+        Tensor::from_vec(&[b, max_len], mask),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::{QRY, SEP};
+
+    fn sample() -> Sample {
+        Sample::bare(vec!["ab".into(), "cd".into()], "q".into(), "xy".into())
+    }
+
+    #[test]
+    fn layout_matches_inference() {
+        let tok = ByteTokenizer::new();
+        let (t, g, m) = encode_sample(&tok, &sample(), 16, true);
+        // ab SEP cd SEP QRY q x y EOS PAD...
+        assert_eq!(t[2], SEP);
+        assert_eq!(t[5], SEP);
+        assert_eq!(t[6], QRY);
+        assert_eq!(t[10], EOS);
+        assert_eq!(t[11], PAD);
+        assert_eq!(&g[..6], &[0, 0, 0, 1, 1, 1]);
+        assert_eq!(&g[6..11], &[2, 2, 2, 2, 2]);
+        // Full-LM loss: every non-pad token except position 0.
+        assert_eq!(m[0], 0.0);
+        assert_eq!(m.iter().filter(|&&x| x > 0.0).count(), 10);
+        assert!(m[11..].iter().all(|&x| x == 0.0), "pad must be unmasked");
+    }
+
+    #[test]
+    fn response_differs_from_answer_when_set() {
+        let tok = ByteTokenizer::new();
+        let s = Sample {
+            blocks: vec![],
+            query: "q".into(),
+            answer: "v".into(),
+            response: "the x is v .".into(),
+        };
+        let (t, _, _) = encode_sample(&tok, &s, 32, false);
+        let text = tok.decode(&t);
+        assert!(text.contains("the x is v ."));
+    }
+
+    #[test]
+    fn full_mode_collapses_segments() {
+        let tok = ByteTokenizer::new();
+        let (_, g, _) = encode_sample(&tok, &sample(), 16, false);
+        assert!(g.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn truncation_keeps_answer() {
+        let tok = ByteTokenizer::new();
+        let long = Sample::bare(
+            vec!["a".repeat(30), "b".repeat(30)],
+            "q".into(),
+            "zz".into(),
+        );
+        let (t, _, _) = encode_sample(&tok, &long, 40, true);
+        assert_eq!(t.len(), 40);
+        // The answer tokens survive (block "a"*30 dropped).
+        let txt = tok.decode(&t);
+        assert!(txt.contains("zz"));
+        assert!(!txt.contains("aaa"));
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let tok = ByteTokenizer::new();
+        let (t, g, m) = pack_batch(&tok, &[sample(), sample(), sample()], 32, true);
+        assert_eq!(t.dims(), &[3, 32]);
+        assert_eq!(g.dims(), &[3, 32]);
+        assert_eq!(m.dims(), &[3, 32]);
+    }
+}

@@ -1,0 +1,184 @@
+//! Block fine-tuning driver (paper §2.4) — Rust drives the AOT
+//! `train_step` artifact; python is only the compiler.
+//!
+//! The paper's recipe: fine-tune with the Figure-1 segment mask so
+//! training matches block-mode inference, and train every sample in
+//! *both* attention modes so the model can switch seamlessly
+//! ([`TrainMode::Dual`] alternates the segment ids batch-by-batch).
+
+pub mod data;
+pub mod eval;
+pub mod presets;
+
+use crate::coordinator::Coordinator;
+use crate::tokenizer::ByteTokenizer;
+use crate::util::rng::Rng;
+use crate::workload::Sample;
+use anyhow::Result;
+use data::pack_batch;
+
+/// Attention-mode schedule during fine-tuning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainMode {
+    /// Plain causal attention only (the full-attention baselines).
+    Full,
+    /// Alternate full-attention and block-attention batches (the paper's
+    /// dual-mode block fine-tune: every sample is seen both ways).
+    Dual,
+}
+
+/// Training hyper-parameters (paper §3.4 scaled to the tiny model).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup: usize,
+    pub seed: u64,
+    pub mode: TrainMode,
+    /// Evaluate every `eval_every` steps (0 = never); the callback gets
+    /// `(coordinator, step)` — used to trace Figure 4.
+    pub eval_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 300,
+            lr: 1e-3,
+            warmup: 20,
+            seed: 0x7A41,
+            mode: TrainMode::Full,
+            eval_every: 0,
+        }
+    }
+}
+
+/// A weighted mixture of sample generators.
+pub struct DataMix {
+    gens: Vec<(Box<dyn Fn(&mut Rng) -> Sample>, f64)>,
+}
+
+impl DataMix {
+    pub fn new() -> DataMix {
+        DataMix { gens: Vec::new() }
+    }
+
+    pub fn add(mut self, weight: f64, g: impl Fn(&mut Rng) -> Sample + 'static) -> Self {
+        self.gens.push((Box::new(g), weight));
+        self
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Sample {
+        let total: f64 = self.gens.iter().map(|(_, w)| w).sum();
+        let mut x = rng.f64() * total;
+        for (g, w) in &self.gens {
+            if x < *w {
+                return g(rng);
+            }
+            x -= w;
+        }
+        (self.gens.last().unwrap().0)(rng)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gens.is_empty()
+    }
+}
+
+impl Default for DataMix {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Linear warmup then constant (the paper uses 20 warmup steps).
+pub fn lr_at(cfg: &TrainConfig, step: usize) -> f32 {
+    if step < cfg.warmup {
+        (cfg.lr * (step + 1) as f64 / cfg.warmup as f64) as f32
+    } else {
+        cfg.lr as f32
+    }
+}
+
+/// Run fine-tuning on the coordinator's engine. Returns per-step losses.
+///
+/// `on_eval` fires every `eval_every` steps *and* after the final step;
+/// the KV cache is cleared first (cached states are stale once the
+/// parameters move).
+pub fn train(
+    coord: &mut Coordinator,
+    cfg: &TrainConfig,
+    mix: &DataMix,
+    mut on_eval: impl FnMut(&mut Coordinator, usize),
+) -> Result<Vec<f32>> {
+    let tok = ByteTokenizer::new();
+    let entry = coord
+        .engine()
+        .artifacts()
+        .entries
+        .iter()
+        .find(|e| e.kind == crate::config::EntryKind::TrainStep)
+        .ok_or_else(|| anyhow::anyhow!("no train artifact for this config"))?
+        .clone();
+    let b = entry.size("B")?;
+    let l = entry.size("L")?;
+    let mut rng = Rng::new(cfg.seed);
+    let mut losses = Vec::with_capacity(cfg.steps);
+
+    for step in 0..cfg.steps {
+        // Dual mode alternates the mask; sample data independently.
+        let block_mask = match cfg.mode {
+            TrainMode::Full => false,
+            TrainMode::Dual => step % 2 == 1,
+        };
+        let samples: Vec<Sample> = (0..b).map(|_| mix.sample(&mut rng)).collect();
+        let (tokens, seg, mask) = pack_batch(&tok, &samples, l, block_mask);
+        let out = coord
+            .engine()
+            .train_step(step, lr_at(cfg, step), &tokens, &seg, &mask)?;
+        losses.push(out.loss);
+        if (step + 1) % 50 == 0 {
+            let recent =
+                &losses[losses.len().saturating_sub(50)..];
+            let mean: f32 = recent.iter().sum::<f32>() / recent.len() as f32;
+            eprintln!("[train] step {}/{}: loss(50-avg) {mean:.3}", step + 1, cfg.steps);
+        }
+        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+            coord.clear_cache();
+            on_eval(coord, step + 1);
+        }
+    }
+    coord.clear_cache();
+    if cfg.eval_every == 0 || cfg.steps % cfg.eval_every != 0 {
+        on_eval(coord, cfg.steps);
+    }
+    Ok(losses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_warms_up() {
+        let cfg = TrainConfig { lr: 1.0, warmup: 10, ..Default::default() };
+        assert!((lr_at(&cfg, 0) - 0.1).abs() < 1e-6);
+        assert!((lr_at(&cfg, 9) - 1.0).abs() < 1e-6);
+        assert!((lr_at(&cfg, 100) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mix_weights_respected() {
+        let mix = DataMix::new()
+            .add(9.0, |_r| Sample::bare(vec![], "a".into(), "".into()))
+            .add(1.0, |_r| Sample::bare(vec![], "b".into(), "".into()));
+        let mut rng = Rng::new(5);
+        let mut a = 0;
+        for _ in 0..1000 {
+            if mix.sample(&mut rng).query == "a" {
+                a += 1;
+            }
+        }
+        assert!((850..=950).contains(&a), "{a}");
+    }
+}

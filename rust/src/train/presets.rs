@@ -1,0 +1,276 @@
+//! Training presets: the three checkpoints behind Tables 1-2 / Figure 4.
+//!
+//! | checkpoint | paper analogue            | data           | mode |
+//! |------------|---------------------------|----------------|------|
+//! | `base`     | Llama-3.1-Tulu-3-8B-SFT   | general tasks  | Full |
+//! | `rag`      | Tulu3-RAG                 | RAG + general  | Full |
+//! | `block`    | Tulu3-block-ft            | RAG + general  | Dual |
+//!
+//! All three start from the same deterministic init; `rag` and `block`
+//! warm-start from `base` (mirroring the paper: both fine-tune the same
+//! SFT model on the same data, differing only in the attention mask).
+
+use super::eval::{accuracy, answer_nll, eval_set, EvalOpts};
+use super::{train, DataMix, TrainConfig, TrainMode};
+use crate::coordinator::{AttentionMode, Coordinator};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::general::{GeneralGen, GeneralTask};
+use crate::workload::rag::{RagGen, RagVariant};
+use anyhow::Result;
+use std::path::Path;
+
+/// Seeds: world construction is shared between train/eval generators of
+/// the same task family; the *sample streams* differ, and eval worlds
+/// use distinct seeds so accuracy measures the mechanism, not
+/// memorization of specific passages.
+pub const TRAIN_WORLD_SEED: u64 = 11;
+pub const EVAL_WORLD_SEED: u64 = 22;
+
+/// The general-task mixture (the Tulu3-SFT stand-in).
+pub fn general_mix(world_seed: u64) -> DataMix {
+    let mut mix = DataMix::new();
+    for (i, (w, task)) in [
+        // Copy/IclMap up-weighted: they drive induction-head formation,
+        // the prerequisite circuit for RAG retrieval.
+        (2.0f64, GeneralTask::Copy),
+        (1.0, GeneralTask::Reverse),
+        (2.0, GeneralTask::IclMap { shots: 4 }),
+        (1.0, GeneralTask::IclArith { shots: 4 }),
+        (1.0, GeneralTask::IclSort { shots: 3 }),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let mut rng = Rng::new(world_seed ^ (i as u64 + 1)); // distinct world per task
+        let g = GeneralGen::new(task, &mut rng, 60);
+        mix = mix.add(w, move |r| g.sample(r));
+    }
+    mix
+}
+
+/// RAG + general mixture (the paper's Tulu3 + TQA/2Wiki training data).
+pub fn rag_mix(world_seed: u64) -> DataMix {
+    let mut mix = general_mix(world_seed);
+    for v in RagVariant::ALL {
+        let mut rng = Rng::new(world_seed.wrapping_add(v as u64 + 100));
+        let g = RagGen::new(v, &mut rng, 60);
+        mix = mix.add(2.5, move |r| g.sample(r));
+    }
+    mix
+}
+
+/// A fixed RAG evaluation set mixing the four variants (for Figure 4).
+pub fn rag_eval_samples(n: usize) -> Vec<crate::workload::Sample> {
+    let mut out = Vec::new();
+    for v in RagVariant::ALL {
+        let mut rng = Rng::new(EVAL_WORLD_SEED.wrapping_add(v as u64 + 100));
+        let g = RagGen::new(v, &mut rng, 60);
+        out.extend(eval_set(move |r| g.sample(r), 777 + v as u64, n / 4));
+    }
+    out
+}
+
+/// Per-variant RAG evaluation sets (the four Table-1 benchmark columns).
+pub fn rag_eval_by_variant(n: usize) -> Vec<(String, Vec<crate::workload::Sample>)> {
+    RagVariant::ALL
+        .iter()
+        .map(|&v| {
+            let mut rng = Rng::new(EVAL_WORLD_SEED.wrapping_add(v as u64 + 100));
+            let g = RagGen::new(v, &mut rng, 60);
+            (
+                v.name().to_string(),
+                eval_set(move |r| g.sample(r), 777 + v as u64, n),
+            )
+        })
+        .collect()
+}
+
+/// Per-task general/ICL evaluation sets (the Table-2 columns).
+pub fn general_eval_by_task(n: usize) -> Vec<(String, bool, Vec<crate::workload::Sample>)> {
+    GeneralTask::table2()
+        .into_iter()
+        .enumerate()
+        .map(|(i, task)| {
+            let mut rng = Rng::new(EVAL_WORLD_SEED ^ (i as u64 + 1));
+            let g = GeneralGen::new(task, &mut rng, 60);
+            (
+                task.name(),
+                task.is_zero_shot(),
+                eval_set(move |r| g.sample(r), 888 + i as u64, n),
+            )
+        })
+        .collect()
+}
+
+/// Step counts (scaled by `scale`, default 1.0).
+#[derive(Debug, Clone)]
+pub struct PresetOpts {
+    pub base_steps: usize,
+    pub rag_steps: usize,
+    pub block_steps: usize,
+    pub fig4_every: usize,
+    pub fig4_samples: usize,
+    pub lr: f64,
+    /// Reuse existing `base`/`rag` checkpoints and run only the block
+    /// fine-tune + Figure-4 trace.
+    pub only_block: bool,
+}
+
+impl Default for PresetOpts {
+    fn default() -> Self {
+        PresetOpts {
+            base_steps: 800,
+            rag_steps: 800,
+            block_steps: 1600,
+            fig4_every: 200,
+            fig4_samples: 40,
+            lr: 1.5e-3,
+            only_block: false,
+        }
+    }
+}
+
+impl PresetOpts {
+    pub fn scaled(scale: f64) -> PresetOpts {
+        let d = PresetOpts::default();
+        let s = |x: usize| ((x as f64 * scale).round() as usize).max(2);
+        PresetOpts {
+            base_steps: s(d.base_steps),
+            rag_steps: s(d.rag_steps),
+            block_steps: s(d.block_steps),
+            ..d
+        }
+    }
+}
+
+/// Train the three Table-1 checkpoints and record the Figure-4 series.
+///
+/// Writes to `out_dir`: `tiny_base.bin`, `tiny_rag.bin`, `tiny_block.bin`,
+/// `fig4.json` (accuracy of both modes vs fine-tune step) and
+/// `losses.json`.
+pub fn run_table1_training(
+    coord: &mut Coordinator,
+    out_dir: &Path,
+    opts: &PresetOpts,
+) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let engine_name = coord.engine().config().name.clone();
+    let path = |tag: &str| out_dir.join(format!("{engine_name}_{tag}.bin"));
+    let mut all_losses: Vec<(String, Vec<f32>)> = Vec::new();
+
+    if opts.only_block {
+        eprintln!("[train] --only-block: reusing existing base/rag checkpoints");
+        anyhow::ensure!(path("base").exists(), "missing base checkpoint");
+        return run_block_phase(coord, out_dir, opts, &mut all_losses);
+    }
+
+    // 1. Base "SFT" model: general tasks, full attention.
+    eprintln!("[train] base: {} steps of general mix (full attention)", opts.base_steps);
+    let cfg = TrainConfig {
+        steps: opts.base_steps,
+        lr: opts.lr,
+        mode: TrainMode::Full,
+        seed: 1,
+        ..Default::default()
+    };
+    let losses = train(coord, &cfg, &general_mix(TRAIN_WORLD_SEED), |_, _| {})?;
+    log_loss("base", &losses);
+    all_losses.push(("base".into(), losses));
+    coord.engine().save_params_file(&path("base"))?;
+
+    // 2. RAG fine-tune (full attention) — the Tulu3-RAG ceiling.
+    eprintln!("[train] rag: {} steps of RAG mix (full attention)", opts.rag_steps);
+    coord.engine().load_params_file(&path("base"))?;
+    coord.engine().reset_opt_state();
+    let cfg = TrainConfig {
+        steps: opts.rag_steps,
+        lr: opts.lr,
+        mode: TrainMode::Full,
+        seed: 2,
+        ..Default::default()
+    };
+    let losses = train(coord, &cfg, &rag_mix(TRAIN_WORLD_SEED), |_, _| {})?;
+    log_loss("rag", &losses);
+    all_losses.push(("rag".into(), losses));
+    coord.engine().save_params_file(&path("rag"))?;
+
+    run_block_phase(coord, out_dir, opts, &mut all_losses)
+}
+
+/// Phase 3: block fine-tune (dual mode) with the Figure-4 trace.
+///
+/// Records accuracy **and** teacher-forced answer NLL for both modes at
+/// each eval point: at tiny-model compute scale the NLL gap closes well
+/// before generation accuracy separates, so it is the Figure-4 signal.
+fn run_block_phase(
+    coord: &mut Coordinator,
+    out_dir: &Path,
+    opts: &PresetOpts,
+    all_losses: &mut Vec<(String, Vec<f32>)>,
+) -> Result<()> {
+    let engine_name = coord.engine().config().name.clone();
+    let path = |tag: &str| out_dir.join(format!("{engine_name}_{tag}.bin"));
+    eprintln!(
+        "[train] block: {} steps of RAG mix (dual mode), eval every {}",
+        opts.block_steps, opts.fig4_every
+    );
+    coord.engine().load_params_file(&path("base"))?;
+    coord.engine().reset_opt_state();
+    let eval_samples = rag_eval_samples(opts.fig4_samples);
+    let mut fig4: Vec<Json> = Vec::new();
+    let cfg = TrainConfig {
+        steps: opts.block_steps,
+        lr: opts.lr,
+        mode: TrainMode::Dual,
+        seed: 3,
+        eval_every: opts.fig4_every,
+        ..Default::default()
+    };
+    let losses = train(coord, &cfg, &rag_mix(TRAIN_WORLD_SEED), |c, step| {
+        let eval = |c: &mut Coordinator, mode| {
+            let o = EvalOpts { mode, max_new_tokens: 48, fresh_cache: true };
+            let acc = accuracy(c, &eval_samples, &o).unwrap_or(f64::NAN);
+            let nll = answer_nll(c, &eval_samples, &o).unwrap_or(f64::NAN);
+            (acc, nll)
+        };
+        let (ba, bn) = eval(c, AttentionMode::Block);
+        let (fa, fn_) = eval(c, AttentionMode::Full);
+        eprintln!(
+            "[fig4] step {step}: block acc={ba:.3} nll={bn:.3} | full acc={fa:.3} nll={fn_:.3}"
+        );
+        fig4.push(Json::obj(vec![
+            ("step", Json::num(step as f64)),
+            ("block_acc", Json::num(ba)),
+            ("full_acc", Json::num(fa)),
+            ("block_nll", Json::num(bn)),
+            ("full_nll", Json::num(fn_)),
+        ]));
+    })?;
+    log_loss("block", &losses);
+    all_losses.push(("block".into(), losses));
+    coord.engine().save_params_file(&path("block"))?;
+
+    std::fs::write(out_dir.join("fig4.json"), Json::Arr(fig4).to_string())?;
+    let losses_json = Json::Obj(
+        all_losses
+            .iter()
+            .map(|(k, v)| {
+                (
+                    k.clone(),
+                    Json::Arr(v.iter().map(|&x| Json::num(x as f64)).collect()),
+                )
+            })
+            .collect(),
+    );
+    std::fs::write(out_dir.join("losses.json"), losses_json.to_string())?;
+    eprintln!("[train] checkpoints written to {out_dir:?}");
+    Ok(())
+}
+
+fn log_loss(tag: &str, losses: &[f32]) {
+    let first = losses.first().copied().unwrap_or(f32::NAN);
+    let last_k = &losses[losses.len().saturating_sub(20)..];
+    let last: f32 = last_k.iter().sum::<f32>() / last_k.len().max(1) as f32;
+    eprintln!("[train] {tag}: loss {first:.3} -> {last:.3} over {} steps", losses.len());
+}

@@ -1,0 +1,132 @@
+//! Tiny CLI argument parser (clap replacement for the offline build).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Every binary/bench in this repo parses with [`Args`].
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments in order (the first one is usually a
+    /// subcommand, e.g. `block-attn serve`).
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable).
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut args = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.options.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.options.get(name).map(|v| v != "false").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list of usizes, e.g. `--lengths 512,1024,2048`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+        }
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("serve --port 8080 --verbose --model=tiny extra");
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.usize_or("port", 0), 8080);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.str_or("x", "d"), "d");
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--lengths 512,1024, 2048");
+        assert_eq!(a.usize_list_or("lengths", &[]), vec![512, 1024]);
+        let b = parse("--lengths=1,2,3");
+        assert_eq!(b.usize_list_or("lengths", &[]), vec![1, 2, 3]);
+        let c = parse("x");
+        assert_eq!(c.usize_list_or("lengths", &[9]), vec![9]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b v");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities built in-tree because the build environment is
+//! offline (only the `xla` crate closure is available): JSON, CLI parsing,
+//! PRNG, statistics, a thread pool, property-test helpers and timing.
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

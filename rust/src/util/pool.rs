@@ -1,0 +1,203 @@
+//! A small fixed-size thread pool with a shared FIFO queue (tokio
+//! replacement for the offline build).
+//!
+//! The coordinator uses it for concurrent block prefills and for serving
+//! connections; on the 1-core CI box it mainly provides *logical*
+//! concurrency, but the code is written for real multi-core parallelism.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    cond: Condvar,
+}
+
+struct QueueState {
+    jobs: std::collections::VecDeque<Job>,
+    shutdown: bool,
+    in_flight: usize,
+}
+
+/// Fixed-size thread pool. Dropping the pool joins all workers after the
+/// queue drains.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState {
+                jobs: Default::default(),
+                shutdown: false,
+                in_flight: 0,
+            }),
+            cond: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                thread::Builder::new()
+                    .name(format!("block-attn-worker-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Submit a job.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.jobs.push_back(Box::new(job));
+        drop(q);
+        self.shared.cond.notify_one();
+    }
+
+    /// Submit a job and get a handle to its result.
+    pub fn submit<T: Send + 'static>(
+        &self,
+        job: impl FnOnce() -> T + Send + 'static,
+    ) -> JobHandle<T> {
+        let (tx, rx) = mpsc::channel();
+        self.spawn(move || {
+            let _ = tx.send(job());
+        });
+        JobHandle { rx }
+    }
+
+    /// Map `f` over `items` on the pool, preserving order.
+    pub fn map<I, T, F>(&self, items: Vec<I>, f: F) -> Vec<T>
+    where
+        I: Send + 'static,
+        T: Send + 'static,
+        F: Fn(I) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let handles: Vec<_> = items
+            .into_iter()
+            .map(|it| {
+                let f = f.clone();
+                self.submit(move || f(it))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join()).collect()
+    }
+
+    /// Block until the queue is empty and no job is running.
+    pub fn wait_idle(&self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while !q.jobs.is_empty() || q.in_flight > 0 {
+            q = self.shared.cond.wait(q).unwrap();
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.cond.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    q.in_flight += 1;
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.cond.wait(q).unwrap();
+            }
+        };
+        job();
+        let mut q = shared.queue.lock().unwrap();
+        q.in_flight -= 1;
+        drop(q);
+        shared.cond.notify_all();
+    }
+}
+
+/// Handle to a submitted job's result.
+pub struct JobHandle<T> {
+    rx: mpsc::Receiver<T>,
+}
+
+impl<T> JobHandle<T> {
+    /// Wait for the job to finish. Panics if the job panicked.
+    pub fn join(self) -> T {
+        self.rx.recv().expect("worker job panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn submit_returns_results() {
+        let pool = ThreadPool::new(2);
+        let h1 = pool.submit(|| 1 + 1);
+        let h2 = pool.submit(|| "x".to_string() + "y");
+        assert_eq!(h1.join(), 2);
+        assert_eq!(h2.join(), "xy");
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<_>>(), |i| i * 2);
+        assert_eq!(out, (0..50).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = counter.clone();
+            pool.spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must drain queue before join
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

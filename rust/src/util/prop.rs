@@ -1,0 +1,99 @@
+//! Property-based testing helpers (proptest replacement).
+//!
+//! A property is a closure over a [`Rng`]; [`check`] runs it for many
+//! random cases and, on failure, reports the failing case seed so the run
+//! can be reproduced with `case(seed)`.
+
+use super::rng::Rng;
+
+/// Outcome of a property check on one case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` for `cases` random cases derived from `seed`.
+///
+/// Panics with the failing case's seed on the first failure.
+pub fn check(name: &str, seed: u64, cases: usize, prop: impl Fn(&mut Rng) -> CaseResult) {
+    let mut meta = Rng::new(seed);
+    for i in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {i} (seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run a property on one specific case seed (for reproducing failures).
+pub fn case(name: &str, case_seed: u64, mut prop: impl FnMut(&mut Rng) -> CaseResult) {
+    let mut rng = Rng::new(case_seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed (seed {case_seed:#x}): {msg}");
+    }
+}
+
+/// Assert helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Assert equality helper for properties.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("add-commutes", 1, 200, |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            prop_assert_eq!(a + b, b + a);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failures() {
+        check("always-fails", 1, 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn case_reproduces() {
+        // The same seed must generate the same values.
+        let mut observed = Vec::new();
+        case("record", 0xABCD, |rng| {
+            observed.push(rng.next_u64());
+            Ok(())
+        });
+        let mut rng = Rng::new(0xABCD);
+        assert_eq!(observed[0], rng.next_u64());
+    }
+}

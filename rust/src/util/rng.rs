@@ -1,0 +1,193 @@
+//! Deterministic pseudo-random number generation (splitmix64 core).
+//!
+//! Replacement for the `rand` crate (unavailable offline). Used by the
+//! workload generators, parameter init cross-checks and property tests.
+//! All experiment code takes explicit seeds so every table/figure in
+//! EXPERIMENTS.md is exactly reproducible.
+
+/// A small, fast, deterministic RNG (splitmix64).
+///
+/// Not cryptographically secure; statistical quality is more than enough
+/// for workload generation and property testing.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a new RNG from a seed. Two RNGs with the same seed yield the
+    /// same sequence forever.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform u32.
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`. `n` must be > 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift; bias is negligible for n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Pick a uniform element of a non-empty slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+
+    /// Fisher-Yates shuffle in place.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from a Zipf(s) distribution over `[0, n)`.
+    ///
+    /// Used to model passage reuse skew in the RAG workload (a few hot
+    /// passages are retrieved for many queries — the regime where block KV
+    /// caching pays off, cf. paper §3.7).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // Inverse-CDF over precomputation-free harmonic approximation:
+        // acceptable for n <= ~1e6 workload sizes; exactness irrelevant.
+        debug_assert!(n > 0);
+        let u = self.f64();
+        // Normalizing constant H(n, s) approximated by integral.
+        let h = |x: f64| -> f64 {
+            if (s - 1.0).abs() < 1e-9 {
+                (1.0 + x).ln()
+            } else {
+                ((1.0 + x).powf(1.0 - s) - 1.0) / (1.0 - s)
+            }
+        };
+        let hn = h(n as f64);
+        let target = u * hn;
+        // Invert.
+        let x = if (s - 1.0).abs() < 1e-9 {
+            target.exp() - 1.0
+        } else {
+            ((target * (1.0 - s) + 1.0).powf(1.0 / (1.0 - s))) - 1.0
+        };
+        (x as usize).min(n - 1)
+    }
+
+    /// Derive a new independent RNG (for parallel streams).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let n = 1 + (r.next_u64() % 100) as usize;
+            assert!(r.below(n) < n);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(3);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let (mut s1, mut s2) = (0.0, 0.0);
+        let n = 20_000;
+        for _ in 0..n {
+            let x = r.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn zipf_skew() {
+        let mut r = Rng::new(5);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..50_000 {
+            counts[r.zipf(100, 1.1)] += 1;
+        }
+        // Head should dominate tail.
+        assert!(counts[0] > counts[50] * 5, "{} vs {}", counts[0], counts[50]);
+        assert!(counts[0] > counts[10]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,220 @@
+//! Streaming statistics: counters, summaries and quantile estimation.
+//!
+//! Backbone of the serving metrics (TTFT percentiles, throughput) and of
+//! the bench harness (criterion replacement).
+
+/// Online mean/min/max/variance plus a bounded reservoir for quantiles.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    /// Reservoir sample for quantiles (exact while n <= cap).
+    sample: Vec<f64>,
+    cap: usize,
+    seen: u64,
+    rng_state: u64,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Self::with_capacity(4096)
+    }
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Summary {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sample: Vec::with_capacity(cap.min(4096)),
+            cap,
+            seen: 0,
+            rng_state: 0x1234_5678_9ABC_DEF0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        // Reservoir sampling (Algorithm R).
+        self.seen += 1;
+        if self.sample.len() < self.cap {
+            self.sample.push(x);
+        } else {
+            self.rng_state = self
+                .rng_state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let j = (self.rng_state >> 16) % self.seen;
+            if (j as usize) < self.cap {
+                self.sample[j as usize] = x;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Quantile in [0,1] from the reservoir (exact when n <= capacity).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.sample.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.sample.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        s[idx]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+/// Fixed-bucket histogram (log2 buckets) for latency distributions.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// bucket i counts values in [2^i, 2^(i+1)) microseconds.
+    buckets: [u64; 48],
+    count: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { buckets: [0; 48], count: 0 }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_micros(&mut self, us: u64) {
+        let b = 64 - us.max(1).leading_zeros() as usize - 1;
+        self.buckets[b.min(47)] += 1;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Approximate quantile (upper bucket bound).
+    pub fn quantile_micros(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (self.count as f64 * q.clamp(0.0, 1.0)).ceil() as u64;
+        let mut acc = 0;
+        for (i, c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        u64::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_quantiles_exact_small_n() {
+        let mut s = Summary::new();
+        for i in 1..=100 {
+            s.add(i as f64);
+        }
+        assert!((50.0..=51.0).contains(&s.p50()), "p50={}", s.p50());
+        assert_eq!(s.quantile(0.0), 1.0);
+        assert_eq!(s.quantile(1.0), 100.0);
+        assert_eq!(s.p99(), 99.0);
+    }
+
+    #[test]
+    fn reservoir_bounded() {
+        let mut s = Summary::with_capacity(128);
+        for i in 0..100_000 {
+            s.add(i as f64);
+        }
+        assert_eq!(s.count(), 100_000);
+        // Median of uniform 0..100000 should be near 50000.
+        let p50 = s.p50();
+        assert!((p50 - 50_000.0).abs() < 15_000.0, "p50={p50}");
+    }
+
+    #[test]
+    fn log_histogram() {
+        let mut h = LogHistogram::new();
+        for _ in 0..90 {
+            h.add_micros(100);
+        }
+        for _ in 0..10 {
+            h.add_micros(10_000);
+        }
+        assert!(h.quantile_micros(0.5) <= 256);
+        assert!(h.quantile_micros(0.99) >= 8_192);
+    }
+}

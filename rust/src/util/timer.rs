@@ -1,0 +1,110 @@
+//! Wall-clock timing helpers and the bench harness (criterion
+//! replacement): warmup + timed iterations + summary statistics.
+
+use super::stats::Summary;
+use std::time::Instant;
+
+/// Measure one closure invocation in seconds.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Bench configuration.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// Stop early once this much wall time (seconds) has been spent in
+    /// timed iterations — keeps very slow cases (32K prefill) bounded.
+    pub max_seconds: f64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup_iters: 1, iters: 10, max_seconds: 60.0 }
+    }
+}
+
+/// Result of a bench run.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean() * 1e3
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.summary.p50() * 1e3
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<40} n={:<3} mean={:>10.3} ms  p50={:>10.3} ms  min={:>10.3} ms  max={:>10.3} ms",
+            self.name,
+            self.summary.count(),
+            self.mean_ms(),
+            self.p50_ms(),
+            self.summary.min() * 1e3,
+            self.summary.max() * 1e3,
+        )
+    }
+}
+
+/// Run a micro/macro benchmark: warmup, then timed iterations with an
+/// early-exit time budget. The closure should perform one full operation.
+pub fn bench(name: &str, opts: &BenchOpts, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let mut summary = Summary::new();
+    let start = Instant::now();
+    for _ in 0..opts.iters {
+        let t0 = Instant::now();
+        f();
+        summary.add(t0.elapsed().as_secs_f64());
+        if start.elapsed().as_secs_f64() > opts.max_seconds {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), summary }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0;
+        let r = bench(
+            "noop",
+            &BenchOpts { warmup_iters: 2, iters: 5, max_seconds: 10.0 },
+            || n += 1,
+        );
+        assert_eq!(n, 7); // 2 warmup + 5 timed
+        assert_eq!(r.summary.count(), 5);
+    }
+
+    #[test]
+    fn bench_respects_time_budget() {
+        let r = bench(
+            "sleepy",
+            &BenchOpts { warmup_iters: 0, iters: 1000, max_seconds: 0.05 },
+            || std::thread::sleep(std::time::Duration::from_millis(10)),
+        );
+        assert!(r.summary.count() < 1000);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, dt) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+}

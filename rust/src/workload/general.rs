@@ -1,0 +1,172 @@
+//! General / ICL benchmarks (the Table-2 substitutes).
+//!
+//! Zero-shot tasks (the Block-attention model falls back to full
+//! attention, paper §3.1) and few-shot ICL tasks where each
+//! demonstration is an independent block (a k-shot sample = k+1 blocks).
+
+use super::words::{rand_word, vocabulary, word};
+use super::Sample;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GeneralTask {
+    /// 0-shot: "copy : w" → w (IFEval-style instruction following).
+    Copy,
+    /// 0-shot: "reverse : abc" → "cba" (string manipulation).
+    Reverse,
+    /// k-shot ICL: mapping retrieval — demos define x→y pairs, the test
+    /// input repeats one x (BBH/DROP-style context dependence).
+    IclMap { shots: usize },
+    /// k-shot ICL: single-digit modular addition "3 + 4 = 7" (GSM8K's
+    /// role: arithmetic with in-context format).
+    IclArith { shots: usize },
+    /// k-shot ICL: sort three letters "bca -> abc" (MATH's role:
+    /// symbolic manipulation with in-context format).
+    IclSort { shots: usize },
+}
+
+impl GeneralTask {
+    pub fn name(&self) -> String {
+        match self {
+            GeneralTask::Copy => "gen-copy(0-shot)".into(),
+            GeneralTask::Reverse => "gen-reverse(0-shot)".into(),
+            GeneralTask::IclMap { shots } => format!("icl-map({shots}-shot)"),
+            GeneralTask::IclArith { shots } => format!("icl-arith({shots}-shot)"),
+            GeneralTask::IclSort { shots } => format!("icl-sort({shots}-shot)"),
+        }
+    }
+
+    pub fn is_zero_shot(&self) -> bool {
+        matches!(self, GeneralTask::Copy | GeneralTask::Reverse)
+    }
+
+    /// The Table-2 task list.
+    pub fn table2() -> Vec<GeneralTask> {
+        vec![
+            GeneralTask::Copy,
+            GeneralTask::Reverse,
+            GeneralTask::IclMap { shots: 4 },
+            GeneralTask::IclArith { shots: 4 },
+            GeneralTask::IclSort { shots: 3 },
+        ]
+    }
+}
+
+pub struct GeneralGen {
+    pub task: GeneralTask,
+    vocab: Vec<String>,
+}
+
+impl GeneralGen {
+    pub fn new(task: GeneralTask, rng: &mut Rng, world: usize) -> GeneralGen {
+        GeneralGen { task, vocab: vocabulary(rng, world, 2) }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Sample {
+        match self.task {
+            GeneralTask::Copy => {
+                let w = rand_word(rng, 6);
+                Sample::bare(vec![], format!("copy : {w}"), w)
+            }
+            GeneralTask::Reverse => {
+                let w = word(rng, 2);
+                let rev: String = w.chars().rev().collect();
+                Sample::bare(vec![], format!("reverse : {w}"), rev)
+            }
+            GeneralTask::IclMap { shots } => {
+                let mut xs = Vec::new();
+                let mut demos = Vec::new();
+                for _ in 0..shots {
+                    let x = rng.pick(&self.vocab).clone();
+                    let y = rand_word(rng, 4); // high-entropy: must be copied
+                    demos.push(format!("{x} -> {y}"));
+                    xs.push((x, y));
+                }
+                let (qx, qy) = xs[rng.below(xs.len())].clone();
+                Sample::bare(demos, format!("{qx} ->"), qy)
+            }
+            GeneralTask::IclArith { shots } => {
+                let mut demos = Vec::new();
+                for _ in 0..shots {
+                    let a = rng.below(10);
+                    let b = rng.below(10);
+                    demos.push(format!("{a} + {b} = {}", (a + b) % 10));
+                }
+                let a = rng.below(10);
+                let b = rng.below(10);
+                Sample::bare(demos, format!("{a} + {b} ="), format!("{}", (a + b) % 10))
+            }
+            GeneralTask::IclSort { shots } => {
+                let mk = |rng: &mut Rng| {
+                    let mut cs: Vec<char> =
+                        (0..3).map(|_| (b'a' + rng.below(8) as u8) as char).collect();
+                    let orig: String = cs.iter().collect();
+                    cs.sort_unstable();
+                    (orig, cs.into_iter().collect::<String>())
+                };
+                let mut demos = Vec::new();
+                for _ in 0..shots {
+                    let (o, s) = mk(rng);
+                    demos.push(format!("{o} => {s}"));
+                }
+                let (o, s) = mk(rng);
+                Sample::bare(demos, format!("{o} =>"), s)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_shot_has_no_blocks() {
+        let mut rng = Rng::new(1);
+        let g = GeneralGen::new(GeneralTask::Copy, &mut rng, 20);
+        let s = g.sample(&mut rng);
+        assert!(s.blocks.is_empty());
+        assert!(s.query.contains(&s.answer));
+    }
+
+    #[test]
+    fn icl_map_answer_is_retrievable() {
+        let mut rng = Rng::new(2);
+        let g = GeneralGen::new(GeneralTask::IclMap { shots: 4 }, &mut rng, 30);
+        for _ in 0..20 {
+            let s = g.sample(&mut rng);
+            assert_eq!(s.blocks.len(), 4);
+            let qx = s.query.trim_end_matches(" ->");
+            assert!(
+                s.blocks.iter().any(|d| d.starts_with(&format!("{qx} ->"))
+                    && d.ends_with(&s.answer)),
+                "query not answerable from demos: {s:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn arith_is_correct() {
+        let mut rng = Rng::new(3);
+        let g = GeneralGen::new(GeneralTask::IclArith { shots: 4 }, &mut rng, 10);
+        let s = g.sample(&mut rng);
+        let parts: Vec<usize> = s
+            .query
+            .trim_end_matches(" =")
+            .split(" + ")
+            .map(|x| x.trim().parse().unwrap())
+            .collect();
+        assert_eq!(s.answer, format!("{}", (parts[0] + parts[1]) % 10));
+    }
+
+    #[test]
+    fn sort_is_sorted() {
+        let mut rng = Rng::new(4);
+        let g = GeneralGen::new(GeneralTask::IclSort { shots: 3 }, &mut rng, 10);
+        let s = g.sample(&mut rng);
+        let mut cs: Vec<char> = s.answer.chars().collect();
+        let orig = cs.clone();
+        cs.sort_unstable();
+        assert_eq!(cs, orig);
+    }
+}

@@ -1,0 +1,240 @@
+//! Synthetic RAG benchmarks (the Table-1 substitutes).
+//!
+//! Every sample is a set of fact passages plus a question whose answer
+//! appears *only* inside one (or two, for 2-hop) of the passages — the
+//! model cannot answer from its weights, exactly the property the
+//! paper's RAG datasets have. Four variants mirror the difficulty axes
+//! of NQ / TQA / HQA / 2Wiki:
+//!
+//! * `OneHopEasy`  — 4 passages, distinct subjects (≈ TQA).
+//! * `OneHopHard`  — 7 passages, distinct subjects (≈ NQ).
+//! * `TwoHop`      — answer requires chaining two passages (≈ HQA/2Wiki).
+//! * `Distract`    — passages share the subject and differ only in the
+//!   relation (reading-comprehension style confusion, ≈ NQ-hard).
+
+use super::words::{rand_word, vocabulary};
+use super::Sample;
+use crate::util::rng::Rng;
+
+/// RAG benchmark variants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RagVariant {
+    OneHopEasy,
+    OneHopHard,
+    TwoHop,
+    Distract,
+}
+
+impl RagVariant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RagVariant::OneHopEasy => "sRAG-1hop-easy",
+            RagVariant::OneHopHard => "sRAG-1hop-hard",
+            RagVariant::TwoHop => "sRAG-2hop",
+            RagVariant::Distract => "sRAG-distract",
+        }
+    }
+
+    pub const ALL: [RagVariant; 4] = [
+        RagVariant::OneHopEasy,
+        RagVariant::OneHopHard,
+        RagVariant::TwoHop,
+        RagVariant::Distract,
+    ];
+}
+
+const RELATIONS: [&str; 6] = ["key", "color", "owner", "origin", "title", "mark"];
+
+/// Generator for one variant. The passage *pool* is shared across
+/// queries (subjects are drawn from a closed world), so a serving run
+/// over many samples naturally re-retrieves passages — the cache-reuse
+/// regime of the paper.
+pub struct RagGen {
+    pub variant: RagVariant,
+    subjects: Vec<String>,
+}
+
+impl RagGen {
+    /// `world` controls how many distinct subjects/values exist (larger
+    /// world = less passage overlap between samples). Words are kept to
+    /// 2 syllables so full samples fit the 256-token training rows.
+    pub fn new(variant: RagVariant, rng: &mut Rng, world: usize) -> RagGen {
+        RagGen { variant, subjects: vocabulary(rng, world, 2) }
+    }
+
+    fn passage(&self, subject: &str, relation: &str, value: &str) -> String {
+        format!("the {relation} of {subject} is {value} .")
+    }
+
+    /// Generate one sample. The answer-bearing passage position is
+    /// uniform (the paper's "lost in the middle" concern).
+    pub fn sample(&self, rng: &mut Rng) -> Sample {
+        match self.variant {
+            RagVariant::OneHopEasy => self.one_hop(rng, 4),
+            RagVariant::OneHopHard => self.one_hop(rng, 6),
+            RagVariant::TwoHop => self.two_hop(rng, 5),
+            RagVariant::Distract => self.distract(rng, 5),
+        }
+    }
+
+    fn one_hop(&self, rng: &mut Rng, n_passages: usize) -> Sample {
+        let gold = rng.below(n_passages);
+        let mut blocks = Vec::with_capacity(n_passages);
+        let mut q_subj = String::new();
+        let mut q_rel = "";
+        let mut answer = String::new();
+        let mut used = std::collections::HashSet::new();
+        for i in 0..n_passages {
+            let mut s;
+            loop {
+                s = rng.pick(&self.subjects).clone();
+                if used.insert(s.clone()) {
+                    break;
+                }
+            }
+            let rel = *rng.pick(&RELATIONS);
+            let val = rand_word(rng, 5);
+            blocks.push(self.passage(&s, rel, &val));
+            if i == gold {
+                q_subj = s;
+                q_rel = rel;
+                answer = val;
+            }
+        }
+        Sample {
+            blocks,
+            query: format!("what is the {q_rel} of {q_subj} ?"),
+            // Restatement response: answering is then a suffix-match copy
+            // of the gold passage — the induction pattern the model must
+            // route *through the retrieved block*.
+            response: format!("the {q_rel} of {q_subj} is {answer} ."),
+            answer,
+        }
+    }
+
+    fn two_hop(&self, rng: &mut Rng, n_passages: usize) -> Sample {
+        // Bridge: subject --link--> mid; mid --rel--> answer.
+        let mut s = self.one_hop(rng, n_passages - 1);
+        let subj = rng.pick(&self.subjects).clone();
+        let mid = rng.pick(&self.subjects).clone();
+        let rel = *rng.pick(&RELATIONS);
+        let val = rand_word(rng, 5);
+        let bridge = format!("the link of {subj} is {mid} .");
+        let tail = self.passage(&mid, rel, &val);
+        // Insert the two gold passages at random positions.
+        let i = rng.below(s.blocks.len() + 1);
+        s.blocks.insert(i, bridge);
+        let j = rng.below(s.blocks.len() + 1);
+        s.blocks.insert(j, tail);
+        s.query = format!("what is the {rel} of the link of {subj} ?");
+        // Chain-of-thought restatement: hop 1 then hop 2.
+        s.response = format!(
+            "the link of {subj} is {mid} . the {rel} of {mid} is {val} ."
+        );
+        s.answer = val;
+        s
+    }
+
+    fn distract(&self, rng: &mut Rng, n_passages: usize) -> Sample {
+        // All passages about the same subject, different relations.
+        let subj = rng.pick(&self.subjects).clone();
+        let mut rels: Vec<&str> = RELATIONS.to_vec();
+        rng.shuffle(&mut rels);
+        let rels = &rels[..n_passages.min(rels.len())];
+        let gold = rng.below(rels.len());
+        let mut blocks = Vec::new();
+        let mut answer = String::new();
+        for (i, rel) in rels.iter().enumerate() {
+            let val = rand_word(rng, 5);
+            blocks.push(self.passage(&subj, rel, &val));
+            if i == gold {
+                answer = val;
+            }
+        }
+        Sample {
+            blocks,
+            query: format!("what is the {} of {subj} ?", rels[gold]),
+            response: format!("the {} of {subj} is {answer} .", rels[gold]),
+            answer,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn answer_is_in_exactly_one_passage_one_hop() {
+        let mut rng = Rng::new(3);
+        let g = RagGen::new(RagVariant::OneHopHard, &mut rng, 50);
+        for _ in 0..50 {
+            let s = g.sample(&mut rng);
+            assert_eq!(s.blocks.len(), 6);
+            let hits = s
+                .blocks
+                .iter()
+                .filter(|b| b.contains(&format!("is {} .", s.answer)))
+                .count();
+            assert!(hits >= 1, "answer not in context: {s:?}");
+        }
+    }
+
+    #[test]
+    fn two_hop_requires_bridge() {
+        let mut rng = Rng::new(4);
+        let g = RagGen::new(RagVariant::TwoHop, &mut rng, 50);
+        let s = g.sample(&mut rng);
+        assert!(s.query.contains("the link of"));
+        assert!(s.blocks.iter().any(|b| b.contains("the link of")));
+    }
+
+    #[test]
+    fn distract_same_subject() {
+        let mut rng = Rng::new(5);
+        let g = RagGen::new(RagVariant::Distract, &mut rng, 50);
+        let s = g.sample(&mut rng);
+        // Every passage mentions the queried subject.
+        let subj = s
+            .query
+            .rsplit(" of ")
+            .next()
+            .unwrap()
+            .trim_end_matches([' ', '?'])
+            .to_string();
+        for b in &s.blocks {
+            assert!(b.contains(&subj), "{b} lacks {subj}");
+        }
+    }
+
+    #[test]
+    fn samples_fit_tiny_buckets_and_train_rows() {
+        // Each passage block must fit the 64-token prefill_block bucket,
+        // the whole prompt the 320 context bucket, and prompt + answer +
+        // EOS the 256-token training row (byte tokenizer: 1 token/byte).
+        let mut rng = Rng::new(6);
+        for v in RagVariant::ALL {
+            let g = RagGen::new(v, &mut rng, 80);
+            for _ in 0..30 {
+                let s = g.sample(&mut rng);
+                for b in &s.blocks {
+                    assert!(b.len() + 1 <= 64, "block too long: {}", b.len());
+                }
+                let total: usize =
+                    s.blocks.iter().map(|b| b.len() + 1).sum::<usize>() + s.query.len() + 1;
+                assert!(total + s.answer.len() + 1 <= 256, "sample too long: {total}");
+                assert!(!s.answer.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let mk = || {
+            let mut rng = Rng::new(7);
+            let g = RagGen::new(RagVariant::OneHopEasy, &mut rng, 30);
+            g.sample(&mut rng).query
+        };
+        assert_eq!(mk(), mk());
+    }
+}

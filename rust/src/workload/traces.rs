@@ -1,0 +1,108 @@
+//! Serving traces: query streams with Zipf-skewed passage reuse.
+//!
+//! The paper's efficiency argument (§3.7) assumes passages recur across
+//! requests ("passages in the external databases might have been
+//! computed"). This module materializes that assumption: a fixed passage
+//! pool, and queries whose retrieved sets are drawn Zipf-skewed from the
+//! pool — hot passages appear in many requests.
+
+use super::rag::{RagGen, RagVariant};
+use super::Sample;
+use crate::util::rng::Rng;
+
+/// A pool of passages + a query stream over them.
+pub struct RagTrace {
+    /// All distinct passages (the "external database").
+    pub pool: Vec<String>,
+    /// Gold (subject-passage index, answer) metadata per pool entry.
+    answers: Vec<(String, String)>, // (query, answer) answered by pool[i]
+}
+
+impl RagTrace {
+    /// Build a pool of `pool_size` fact passages.
+    pub fn build(rng: &mut Rng, pool_size: usize) -> RagTrace {
+        let gen = RagGen::new(RagVariant::OneHopEasy, rng, pool_size * 2);
+        let mut pool = Vec::with_capacity(pool_size);
+        let mut answers = Vec::with_capacity(pool_size);
+        let mut seen = std::collections::HashSet::new();
+        while pool.len() < pool_size {
+            let s = gen.sample(rng);
+            // Take the gold passage of each generated sample.
+            for (b, _) in s.blocks.iter().zip(0..) {
+                if b.contains(&format!("is {} .", s.answer)) && seen.insert(b.clone()) {
+                    pool.push(b.clone());
+                    answers.push((s.query.clone(), s.answer.clone()));
+                    break;
+                }
+            }
+        }
+        RagTrace { pool, answers }
+    }
+
+    /// Draw one request: `k` passages Zipf-sampled from the pool (gold
+    /// passage guaranteed present), query answerable from the gold one.
+    pub fn request(&self, rng: &mut Rng, k: usize, zipf_s: f64) -> Sample {
+        let gold = rng.zipf(self.pool.len(), zipf_s);
+        let mut idxs = vec![gold];
+        while idxs.len() < k.min(self.pool.len()) {
+            let i = rng.zipf(self.pool.len(), zipf_s);
+            if !idxs.contains(&i) {
+                idxs.push(i);
+            }
+        }
+        rng.shuffle(&mut idxs[..]);
+        let (query, answer) = self.answers[gold].clone();
+        Sample {
+            blocks: idxs.iter().map(|&i| self.pool[i].clone()).collect(),
+            query,
+            response: self.pool[gold].clone(),
+            answer,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_is_distinct() {
+        let mut rng = Rng::new(1);
+        let tr = RagTrace::build(&mut rng, 50);
+        let set: std::collections::HashSet<_> = tr.pool.iter().collect();
+        assert_eq!(set.len(), 50);
+    }
+
+    #[test]
+    fn requests_reuse_hot_passages() {
+        let mut rng = Rng::new(2);
+        let tr = RagTrace::build(&mut rng, 100);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..200 {
+            let s = tr.request(&mut rng, 5, 1.1);
+            assert_eq!(s.blocks.len(), 5);
+            for b in &s.blocks {
+                let i = tr.pool.iter().position(|p| p == b).unwrap();
+                counts[i] += 1;
+            }
+        }
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        // Top passage reused far more than the median one.
+        assert!(sorted[0] >= 20, "head too cold: {}", sorted[0]);
+        assert!(sorted[0] > sorted[50] * 3);
+    }
+
+    #[test]
+    fn gold_passage_always_present() {
+        let mut rng = Rng::new(3);
+        let tr = RagTrace::build(&mut rng, 40);
+        for _ in 0..50 {
+            let s = tr.request(&mut rng, 4, 1.2);
+            assert!(
+                s.blocks.iter().any(|b| b.contains(&format!("is {} .", s.answer))),
+                "gold missing"
+            );
+        }
+    }
+}

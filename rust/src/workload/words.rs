@@ -1,0 +1,66 @@
+//! Deterministic pseudo-word generation for the synthetic corpora.
+
+use crate::util::rng::Rng;
+
+const CONSONANTS: &[u8] = b"bcdfgklmnprstvz";
+const VOWELS: &[u8] = b"aeiou";
+
+/// A uniformly random lowercase word of `len` letters.
+///
+/// High-entropy by construction (~4.7 bits/char): used for answer
+/// *values* so that predicting them is impossible without copying from
+/// the context — the loss signal that makes the retrieval circuit form.
+/// (With low-entropy CV words the model can reach near-minimal loss from
+/// marginal statistics alone and retrieval never emerges — measured the
+/// hard way; see DESIGN.md training-recipe notes.)
+pub fn rand_word(rng: &mut Rng, len: usize) -> String {
+    (0..len).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
+}
+
+/// A pronounceable pseudo-word of `syllables` CV pairs ("kato", "meruzi").
+pub fn word(rng: &mut Rng, syllables: usize) -> String {
+    let mut s = String::with_capacity(syllables * 2);
+    for _ in 0..syllables {
+        s.push(*rng.pick(CONSONANTS) as char);
+        s.push(*rng.pick(VOWELS) as char);
+    }
+    s
+}
+
+/// A vocabulary of `n` distinct pseudo-words. Note: at 2 syllables there
+/// are only 75 combinations, so larger vocabularies get numeric suffixes.
+pub fn vocabulary(rng: &mut Rng, n: usize, syllables: usize) -> Vec<String> {
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let mut w = word(rng, syllables);
+        // Disambiguate collisions with a numeric suffix.
+        if seen.contains(&w) {
+            w.push_str(&rng.below(100).to_string());
+        }
+        if seen.insert(w.clone()) {
+            out.push(w);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn words_are_deterministic() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        assert_eq!(word(&mut a, 3), word(&mut b, 3));
+    }
+
+    #[test]
+    fn vocabulary_distinct() {
+        let mut rng = Rng::new(2);
+        let v = vocabulary(&mut rng, 200, 2);
+        let set: std::collections::HashSet<_> = v.iter().collect();
+        assert_eq!(set.len(), 200);
+    }
+}

@@ -1,0 +1,247 @@
+//! Integration tests over the real AOT artifacts (`make artifacts` first).
+//!
+//! The centerpiece is the **losslessness** of the Block-attention serving
+//! path in Rust: per-block prefill at local positions + native RoPE
+//! re-encode + context assembly + final-block prefill must reproduce the
+//! segment-masked forward exactly, and with a single block it must equal
+//! vanilla full-attention prefill bit-for-near-bit.
+
+use block_attn::config::{default_artifacts_dir, Manifest};
+use block_attn::rope::RopeTable;
+use block_attn::runtime::ModelEngine;
+use block_attn::tensor::Tensor;
+use block_attn::util::rng::Rng;
+
+fn engine() -> ModelEngine {
+    let manifest = Manifest::load(default_artifacts_dir()).expect("run `make artifacts`");
+    ModelEngine::new(&manifest, "tiny").expect("engine")
+}
+
+fn rand_tokens(rng: &mut Rng, n: usize, vocab: usize) -> Vec<i32> {
+    (0..n).map(|_| rng.below(vocab - 5) as i32).collect()
+}
+
+fn close(a: &[f32], b: &[f32], atol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        worst = worst.max((x - y).abs());
+    }
+    assert!(worst <= atol, "{what}: max abs diff {worst} > {atol}");
+}
+
+#[test]
+fn prefill_full_runs_and_is_deterministic() {
+    let eng = engine();
+    let mut rng = Rng::new(1);
+    let toks = rand_tokens(&mut rng, 100, eng.config().vocab);
+    let a = eng.prefill_full(&toks).unwrap();
+    let b = eng.prefill_full(&toks).unwrap();
+    assert_eq!(a.last_logits.len(), eng.config().vocab);
+    assert!(a.last_logits.iter().all(|x| x.is_finite()));
+    close(&a.last_logits, &b.last_logits, 0.0, "determinism");
+    assert_eq!(a.k.dims(), &[4, 100, 2, 32]);
+}
+
+#[test]
+fn bucket_padding_is_transparent() {
+    // The same prompt through two different length buckets must agree.
+    let eng = engine();
+    let mut rng = Rng::new(2);
+    let toks = rand_tokens(&mut rng, 120, eng.config().vocab);
+    let a = eng.prefill_full(&toks).unwrap(); // L=128 bucket
+    // Force the larger bucket by padding the call path: prefill of the
+    // same tokens must not depend on the bucket chosen, so compare
+    // against a manual longer prompt truncated by `length`: here we rely
+    // on pick_bucket(120)=128 vs an L=320 run via a longer pad.
+    let mut padded = toks.clone();
+    padded.resize(200, 0); // forces the 320 bucket
+    let b = eng.prefill_full(&padded[..200].to_vec()).unwrap();
+    // Only compare the KV of the first 120 positions: logits differ (the
+    // padded prompt has a different "last" position), but the causal KV
+    // prefix must match across buckets.
+    let ka = a.k.data();
+    let kb = b.k.slice_axis0(0, 4); // same tensor, larger len — compare prefix per layer
+    let row = 2 * 32;
+    for layer in 0..4 {
+        let sa = &ka[layer * 120 * row..(layer * 120 + 120) * row];
+        let sb = &kb.data()[layer * 200 * row..(layer * 200 + 120) * row];
+        close(sa, sb, 1e-4, "kv prefix across buckets");
+    }
+}
+
+#[test]
+fn reencode_native_matches_pallas_artifact() {
+    let eng = engine();
+    let cfg = eng.config().clone();
+    let mut rng = Rng::new(3);
+    let dims = [cfg.layers, 64, cfg.kv_heads, cfg.head_dim];
+    let n: usize = dims.iter().product();
+    let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let k = Tensor::from_vec(&dims, data);
+
+    let via_artifact = eng.reencode_k_artifact(&k, 137).unwrap();
+    let mut via_native = k.clone();
+    let rope = RopeTable::new(cfg.head_dim, cfg.rope_theta);
+    rope.reencode_block(via_native.data_mut(), cfg.layers, 64, cfg.kv_heads, 137);
+    close(
+        via_artifact.data(),
+        via_native.data(),
+        1e-4,
+        "rust rope vs pallas artifact",
+    );
+}
+
+/// The headline invariant: the cached-block serving path reproduces
+/// full-attention exactly in the single-block case (no fine-tune needed:
+/// with one block the two attention patterns coincide).
+#[test]
+fn block_path_equals_full_for_single_block() {
+    let eng = engine();
+    let cfg = eng.config().clone();
+    let mut rng = Rng::new(4);
+    let block = rand_tokens(&mut rng, 64, cfg.vocab);
+    let query = rand_tokens(&mut rng, 48, cfg.vocab);
+
+    // Vanilla: one shot.
+    let mut full = block.clone();
+    full.extend_from_slice(&query);
+    let want = eng.prefill_full(&full).unwrap();
+
+    // Block path: block prefill at local positions → re-encode by 0 (the
+    // block sits at offset 0) → assemble context → final prefill.
+    let (k_local, v) = eng.prefill_block(&block).unwrap();
+    let cap = eng.final_ctx_capacity(block.len()).unwrap();
+    let mut past_k = eng.kv_zeros(cap);
+    let mut past_v = eng.kv_zeros(cap);
+    write_ctx(&mut past_k, &k_local, 0);
+    write_ctx(&mut past_v, &v, 0);
+    let got = eng
+        .prefill_final(&query, &past_k, &past_v, block.len())
+        .unwrap();
+
+    close(&got.last_logits, &want.last_logits, 5e-3, "single-block logits");
+}
+
+/// Two blocks with native re-encoding: must match the same computation
+/// done monolithically with the *segment mask* (cross-checked against
+/// python in tests/test_model.py; here we check the decode continuation
+/// instead, which exercises cache assembly + decode).
+#[test]
+fn block_path_then_decode_is_consistent() {
+    let eng = engine();
+    let cfg = eng.config().clone();
+    let rope = RopeTable::new(cfg.head_dim, cfg.rope_theta);
+    let mut rng = Rng::new(5);
+    let b1 = rand_tokens(&mut rng, 64, cfg.vocab);
+    let b2 = rand_tokens(&mut rng, 64, cfg.vocab);
+    let query = rand_tokens(&mut rng, 40, cfg.vocab);
+
+    // Block path.
+    let (mut k1, v1) = eng.prefill_block(&b1).unwrap();
+    let (mut k2, v2) = eng.prefill_block(&b2).unwrap();
+    rope.reencode_block(k1.data_mut(), cfg.layers, 64, cfg.kv_heads, 0);
+    rope.reencode_block(k2.data_mut(), cfg.layers, 64, cfg.kv_heads, 64);
+    let ctx_len = 128;
+    let cap = eng.final_ctx_capacity(ctx_len).unwrap();
+    let mut past_k = eng.kv_zeros(cap);
+    let mut past_v = eng.kv_zeros(cap);
+    write_ctx(&mut past_k, &k1, 0);
+    write_ctx(&mut past_v, &v1, 0);
+    write_ctx(&mut past_k, &k2, 64);
+    write_ctx(&mut past_v, &v2, 64);
+    let fin = eng.prefill_final(&query, &past_k, &past_v, ctx_len).unwrap();
+    assert!(fin.last_logits.iter().all(|f| f.is_finite()));
+
+    // Assemble a dense decode cache: ctx + final block.
+    let dc = eng.decode_ctx_capacity().unwrap();
+    let mut kc = eng.kv_zeros(dc);
+    let mut vc = eng.kv_zeros(dc);
+    write_ctx(&mut kc, &k1, 0);
+    write_ctx(&mut vc, &v1, 0);
+    write_ctx(&mut kc, &k2, 64);
+    write_ctx(&mut vc, &v2, 64);
+    write_ctx(&mut kc, &fin.k, 128);
+    write_ctx(&mut vc, &fin.v, 128);
+    let total = 128 + query.len();
+
+    // Decode one token; its logits must be finite and the updated cache
+    // must contain the new token's KV at position `total`.
+    let next = block_attn::tensor::argmax(&fin.last_logits) as i32;
+    let out = eng.decode(next, &kc, &vc, total).unwrap();
+    assert!(out.logits.iter().all(|f| f.is_finite()));
+    let row = cfg.kv_heads * cfg.head_dim;
+    let layer0 = out.k_cache.axis0(0);
+    let newk = &layer0[total * row..(total + 1) * row];
+    assert!(newk.iter().any(|&x| x != 0.0), "decode wrote KV at cache_len");
+
+    // And decoding from the same cache twice is deterministic.
+    let out2 = eng.decode(next, &kc, &vc, total).unwrap();
+    close(&out.logits, &out2.logits, 0.0, "decode determinism");
+}
+
+#[test]
+fn decode_matches_prefill_extension() {
+    let eng = engine();
+    let cfg = eng.config().clone();
+    let mut rng = Rng::new(6);
+    let toks = rand_tokens(&mut rng, 90, cfg.vocab);
+    let pre = eng.prefill_full(&toks).unwrap();
+    let next = block_attn::tensor::argmax(&pre.last_logits) as i32;
+
+    // Decode path.
+    let dc = eng.decode_ctx_capacity().unwrap();
+    let mut kc = eng.kv_zeros(dc);
+    let mut vc = eng.kv_zeros(dc);
+    write_ctx(&mut kc, &pre.k, 0);
+    write_ctx(&mut vc, &pre.v, 0);
+    let dec = eng.decode(next, &kc, &vc, 90).unwrap();
+
+    // Prefill-extension path.
+    let mut ext = toks.clone();
+    ext.push(next);
+    let pre2 = eng.prefill_full(&ext).unwrap();
+
+    close(&dec.logits, &pre2.last_logits, 5e-3, "decode vs prefill ext");
+}
+
+#[test]
+fn train_step_reduces_loss_on_tiny_batch() {
+    let eng = engine();
+    let entry = eng
+        .artifacts()
+        .entries
+        .iter()
+        .find(|e| e.kind == block_attn::config::EntryKind::TrainStep)
+        .expect("train artifact");
+    let (b, l) = (entry.sizes["B"], entry.sizes["L"]);
+    let mut rng = Rng::new(7);
+    // Low-entropy repeating data: loss must drop fast.
+    let toks: Vec<i32> = (0..b * l).map(|i| ((i % 7) + 1) as i32).collect();
+    let tokens = Tensor::from_vec(&[b, l], toks);
+    let seg = Tensor::from_vec(&[b, l], vec![0i32; b * l]);
+    let mask = Tensor::from_vec(&[b, l], vec![1.0f32; b * l]);
+    let mut losses = Vec::new();
+    for step in 0..4 {
+        let out = eng.train_step(step, 3e-3, &tokens, &seg, &mask).unwrap();
+        assert!(out.loss.is_finite());
+        losses.push(out.loss);
+    }
+    assert!(
+        losses[3] < losses[0] - 0.3,
+        "loss did not drop: {losses:?}"
+    );
+    let _ = rng.next_u64();
+}
+
+/// Write a `(layers, len, kv, hd)` block into a context tensor at `at`.
+fn write_ctx(ctx: &mut block_attn::tensor::TensorF, block: &block_attn::tensor::TensorF, at: usize) {
+    let layers = ctx.dims()[0];
+    let row: usize = ctx.dims()[2] * ctx.dims()[3];
+    let blen = block.dims()[1];
+    for n in 0..layers {
+        let dst = ctx.axis0_mut(n);
+        let src = block.axis0(n);
+        dst[at * row..(at + blen) * row].copy_from_slice(&src[..blen * row]);
+    }
+}
