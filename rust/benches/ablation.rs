@@ -12,16 +12,16 @@
 //! cargo bench --bench ablation -- --ctx 4096
 //! ```
 
-use block_attn::config::{default_artifacts_dir, EntryKind, Manifest};
-use block_attn::coordinator::{AttentionMode, Coordinator, Request};
+use block_attn::coordinator::{write_ctx, AttentionMode, Coordinator, Request};
 use block_attn::kvcache::{block_key, BlockKvCache};
 use block_attn::rope::RopeTable;
-use block_attn::runtime::ModelEngine;
+use block_attn::runtime::backend_from_args;
 use block_attn::tokenizer::ByteTokenizer;
 use block_attn::util::cli::Args;
 use block_attn::util::rng::Rng;
 use block_attn::util::timer::{bench, BenchOpts};
 use block_attn::workload::traces::RagTrace;
+use block_attn::Backend;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
@@ -35,23 +35,21 @@ fn main() -> anyhow::Result<()> {
 /// prefill). All variants compute the same attention; only the reuse
 /// granularity changes.
 fn block_granularity(args: &Args) -> anyhow::Result<()> {
-    let ctx = args.usize_or("ctx", 2048);
+    // The interpretive native backend defaults to a shorter context;
+    // `--backend xla --ctx 2048` reproduces the paper-scale ablation.
+    let default_ctx =
+        if block_attn::runtime::backend_choice(args) == "native" { 512 } else { 2048 };
+    let ctx = args.usize_or("ctx", default_ctx);
     let q_len = args.usize_or("user-input", 50);
-    let manifest = Manifest::load(default_artifacts_dir())?;
-    let engine = ModelEngine::new(&manifest, "bench")?;
+    let engine = backend_from_args(args, "bench")?;
     let cfg = engine.config().clone();
     let rope = RopeTable::new(cfg.head_dim, cfg.rope_theta);
     let mut rng = Rng::new(11);
     let tokens: Vec<i32> = (0..ctx + q_len).map(|_| rng.below(cfg.vocab) as i32).collect();
     let query = &tokens[ctx..];
-    let max_block = engine
-        .artifacts()
-        .entries_of(EntryKind::PrefillBlock, "L")
-        .last()
-        .map(|e| e.sizes["L"])
-        .unwrap_or(512);
+    let max_block = engine.max_block_tokens()?.min(512);
 
-    println!("# Ablation 1 — block granularity at ctx={ctx} (bench config, all blocks cached)");
+    println!("# Ablation 1 — block granularity at ctx={ctx} (config '{}', all blocks cached)", cfg.name);
     println!("{:>8} {:>12} {:>16} {:>14}", "blocks", "block-toks", "ttft-cached(ms)", "reencode(ms)");
     for n_blocks in [1usize, 2, 4, 8, 16] {
         let bl = ctx / n_blocks;
@@ -106,13 +104,8 @@ fn block_granularity(args: &Args) -> anyhow::Result<()> {
 fn reuse_skew(args: &Args) -> anyhow::Result<()> {
     let n_requests = args.usize_or("requests", 30);
     let k = args.usize_or("passages-per-query", 6);
-    let manifest = Manifest::load(default_artifacts_dir())?;
-    let engine = ModelEngine::new(&manifest, "tiny")?;
-    engine.warmup(&[
-        EntryKind::PrefillBlock,
-        EntryKind::PrefillFinal,
-        EntryKind::DecodeStep,
-    ])?;
+    let engine = backend_from_args(args, "tiny")?;
+    engine.warmup()?;
     let mut coord = Coordinator::new(engine, 256 << 20);
     let tok = ByteTokenizer::new();
 
@@ -154,19 +147,4 @@ fn reuse_skew(args: &Args) -> anyhow::Result<()> {
     }
     println!("# hotter reuse (larger s) → higher hit rate → more prefill eliminated (paper §3.7).");
     Ok(())
-}
-
-fn write_ctx(
-    ctx: &mut block_attn::tensor::TensorF,
-    block: &block_attn::tensor::TensorF,
-    at: usize,
-) {
-    let layers = ctx.dims()[0];
-    let row: usize = ctx.dims()[2] * ctx.dims()[3];
-    let blen = block.dims()[1];
-    for l in 0..layers {
-        let dst = ctx.axis0_mut(l);
-        let src = block.axis0(l);
-        dst[at * row..(at + blen) * row].copy_from_slice(&src[..blen * row]);
-    }
 }

@@ -8,6 +8,7 @@
 
 use block_attn::coordinator::scheduler::Scheduler;
 use block_attn::coordinator::segmenter::{segment_gamecore, segment_text};
+use block_attn::coordinator::write_ctx;
 use block_attn::kvcache::{block_key, BlockKvCache};
 use block_attn::rope::RopeTable;
 use block_attn::tensor::Tensor;
@@ -109,19 +110,4 @@ fn main() {
         r.report_line(),
         frame_str.len() as f64 / 1e6 / r.summary.mean()
     );
-}
-
-fn write_ctx(
-    ctx: &mut block_attn::tensor::TensorF,
-    block: &block_attn::tensor::TensorF,
-    at: usize,
-) {
-    let layers = ctx.dims()[0];
-    let row: usize = ctx.dims()[2] * ctx.dims()[3];
-    let blen = block.dims()[1];
-    for l in 0..layers {
-        let dst = ctx.axis0_mut(l);
-        let src = block.axis0(l);
-        dst[at * row..(at + blen) * row].copy_from_slice(&src[..blen * row]);
-    }
 }

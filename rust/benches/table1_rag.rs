@@ -18,12 +18,12 @@
 //!   Tulu3-block-ft-w/o-pos   = block ckpt, block mode w/o re-encoding
 //!   Tulu3-block-w/o-ft       = rag  ckpt, block mode
 
-use block_attn::config::{default_artifacts_dir, Manifest};
 use block_attn::coordinator::{AttentionMode, Coordinator};
+use block_attn::runtime::backend_from_args;
 use block_attn::train::eval::{accuracy, answer_nll, EvalOpts};
 use block_attn::train::presets::rag_eval_by_variant;
 use block_attn::util::cli::Args;
-use block_attn::ModelEngine;
+use block_attn::Backend;
 use std::path::PathBuf;
 
 fn main() -> anyhow::Result<()> {
@@ -44,8 +44,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    let manifest = Manifest::load(default_artifacts_dir())?;
-    let engine = ModelEngine::new(&manifest, &model)?;
+    let engine = backend_from_args(&args, &model)?;
     let mut coord = Coordinator::new(engine, 256 << 20);
     let benches = rag_eval_by_variant(samples_n);
 

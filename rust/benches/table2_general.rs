@@ -7,12 +7,12 @@
 //! cargo bench --bench table2_general -- --samples 50
 //! ```
 
-use block_attn::config::{default_artifacts_dir, Manifest};
 use block_attn::coordinator::{AttentionMode, Coordinator};
+use block_attn::runtime::backend_from_args;
 use block_attn::train::eval::{accuracy, EvalOpts};
 use block_attn::train::presets::general_eval_by_task;
 use block_attn::util::cli::Args;
-use block_attn::ModelEngine;
+use block_attn::Backend;
 use std::path::PathBuf;
 
 fn main() -> anyhow::Result<()> {
@@ -29,8 +29,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    let manifest = Manifest::load(default_artifacts_dir())?;
-    let engine = ModelEngine::new(&manifest, &model)?;
+    let engine = backend_from_args(&args, &model)?;
     let mut coord = Coordinator::new(engine, 256 << 20);
     let benches = general_eval_by_task(samples_n);
 

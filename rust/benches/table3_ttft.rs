@@ -14,35 +14,38 @@
 //! convention (weight FLOPs, 2·params·tokens — see flops/mod.rs) and
 //! exact (attention contractions included).
 
-use block_attn::config::{default_artifacts_dir, EntryKind, Manifest};
+use block_attn::coordinator::write_ctx;
 use block_attn::flops::FlopsModel;
 use block_attn::kvcache::{block_key, BlockKvCache};
 use block_attn::rope::RopeTable;
-use block_attn::runtime::ModelEngine;
+use block_attn::runtime::backend_from_args;
 use block_attn::util::cli::Args;
 use block_attn::util::rng::Rng;
 use block_attn::util::timer::{bench, BenchOpts};
+use block_attn::Backend;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
-    let model = args.str_or("model", "bench");
     let q_len = args.usize_or("user-input", 50);
-    let mut lengths = args.usize_list_or("lengths", &[50, 512, 1024, 2048, 4096, 8192]);
+    // The native backend is an interpretive CPU loop — default to the
+    // short end of the sweep there; `--backend xla` (or --lengths) runs
+    // the paper's full range.
+    let default_lengths: &[usize] = if block_attn::runtime::backend_choice(&args) == "native" {
+        &[50, 256, 512, 1024]
+    } else {
+        &[50, 512, 1024, 2048, 4096, 8192]
+    };
+    let mut lengths = args.usize_list_or("lengths", default_lengths);
     if args.flag("full") {
         lengths.extend([16384, 32768]);
     }
 
-    let manifest = Manifest::load(default_artifacts_dir())?;
-    let engine = ModelEngine::new(&manifest, &model)?;
+    let engine = backend_from_args(&args, "bench")?;
+    let model = engine.config().name.clone();
     let cfg = engine.config().clone();
     let flops = FlopsModel::from_config(&cfg);
     let rope = RopeTable::new(cfg.head_dim, cfg.rope_theta);
-    let block_bucket = engine
-        .artifacts()
-        .entries_of(EntryKind::PrefillBlock, "L")
-        .last()
-        .map(|e| e.sizes["L"])
-        .unwrap_or(512);
+    let block_bucket = engine.max_block_tokens()?.min(512);
     let mut rng = Rng::new(7);
 
     println!("# Table 3 — TTFT (ms) and FLOPs-TFT, user input {q_len} tokens, config '{model}'");
@@ -115,19 +118,4 @@ fn main() -> anyhow::Result<()> {
         );
     }
     Ok(())
-}
-
-fn write_ctx(
-    ctx: &mut block_attn::tensor::TensorF,
-    block: &block_attn::tensor::TensorF,
-    at: usize,
-) {
-    let layers = ctx.dims()[0];
-    let row: usize = ctx.dims()[2] * ctx.dims()[3];
-    let blen = block.dims()[1];
-    for l in 0..layers {
-        let dst = ctx.axis0_mut(l);
-        let src = block.axis0(l);
-        dst[at * row..(at + blen) * row].copy_from_slice(&src[..blen * row]);
-    }
 }

@@ -11,13 +11,13 @@
 //! cargo run --release --example block_finetune -- --steps 200 --eval-every 40
 //! ```
 
-use block_attn::config::{default_artifacts_dir, Manifest};
 use block_attn::coordinator::{AttentionMode, Coordinator};
+use block_attn::runtime::backend_from_args;
 use block_attn::train::eval::{accuracy, EvalOpts};
 use block_attn::train::presets::{rag_eval_samples, rag_mix, TRAIN_WORLD_SEED};
 use block_attn::train::{train, TrainConfig, TrainMode};
 use block_attn::util::cli::Args;
-use block_attn::ModelEngine;
+use block_attn::Backend;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
@@ -25,8 +25,7 @@ fn main() -> anyhow::Result<()> {
     let eval_every = args.usize_or("eval-every", 40);
     let eval_n = args.usize_or("eval-samples", 24);
 
-    let manifest = Manifest::load(default_artifacts_dir())?;
-    let engine = ModelEngine::new(&manifest, "tiny")?;
+    let engine = backend_from_args(&args, "tiny")?;
     if let Some(ck) = args.get("checkpoint") {
         engine.load_params_file(std::path::Path::new(ck))?;
         println!("warm-starting from {ck}");

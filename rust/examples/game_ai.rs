@@ -7,35 +7,26 @@
 //! cargo run --release --example game_ai -- --frames 12 --players 20
 //! ```
 
-use block_attn::config::{default_artifacts_dir, Manifest};
 use block_attn::coordinator::segmenter::{segment_gamecore, split_oversized_blocks};
 use block_attn::coordinator::{AttentionMode, Coordinator, Request};
+use block_attn::runtime::backend_from_args;
 use block_attn::tokenizer::ByteTokenizer;
 use block_attn::util::cli::Args;
 use block_attn::util::stats::Summary;
 use block_attn::workload::gamecore::{repetition_ratio, GamecoreSim};
-use block_attn::ModelEngine;
+use block_attn::Backend;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
     let frames = args.usize_or("frames", 12);
     let players = args.usize_or("players", 20);
-    let model = args.str_or("model", "small");
 
-    let manifest = Manifest::load(default_artifacts_dir())?;
-    let engine = ModelEngine::new(&manifest, &model)?;
-    engine.warmup(&[
-        block_attn::config::EntryKind::PrefillBlock,
-        block_attn::config::EntryKind::PrefillFinal,
-        block_attn::config::EntryKind::PrefillFull,
-        block_attn::config::EntryKind::DecodeStep,
-    ])?;
-    let max_block = engine
-        .artifacts()
-        .entries_of(block_attn::config::EntryKind::PrefillBlock, "L")
-        .last()
-        .map(|e| e.sizes["L"])
-        .unwrap_or(128);
+    let engine = backend_from_args(&args, "small")?;
+    engine.warmup()?;
+    // Default to the backend's real per-block capacity (clamped to the
+    // small-config artifact bucket so native and xla runs agree),
+    // overridable with --max-block.
+    let max_block = args.usize_or("max-block", engine.max_block_tokens()?.min(256));
     let mut coord = Coordinator::new(engine, 512 << 20);
     let tok = ByteTokenizer::new();
     let mut sim = GamecoreSim::new(players, args.u64_or("seed", 7));

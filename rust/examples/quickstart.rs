@@ -3,34 +3,29 @@
 //! near-free prefills.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart            # hermetic native backend
+//! cargo run --release --example quickstart -- --backend xla   # AOT artifacts
 //! # with a trained checkpoint (make checkpoints):
 //! cargo run --release --example quickstart -- --checkpoint checkpoints/tiny_block.bin
 //! ```
 
-use block_attn::config::{default_artifacts_dir, Manifest};
 use block_attn::coordinator::segmenter::segment_rag;
 use block_attn::coordinator::{AttentionMode, Coordinator, Request};
+use block_attn::runtime::backend_from_args;
 use block_attn::tokenizer::ByteTokenizer;
 use block_attn::util::cli::Args;
-use block_attn::ModelEngine;
+use block_attn::Backend;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
-    let manifest = Manifest::load(default_artifacts_dir())?;
-    let engine = ModelEngine::new(&manifest, &args.str_or("model", "tiny"))?;
+    let engine = backend_from_args(&args, "tiny")?;
     if let Some(ck) = args.get("checkpoint") {
         engine.load_params_file(std::path::Path::new(ck))?;
         println!("loaded checkpoint {ck}");
     }
-    // Pre-compile the serving executables so TTFTs below measure serving,
-    // not first-use XLA compilation.
-    engine.warmup(&[
-        block_attn::config::EntryKind::PrefillBlock,
-        block_attn::config::EntryKind::PrefillFinal,
-        block_attn::config::EntryKind::PrefillFull,
-        block_attn::config::EntryKind::DecodeStep,
-    ])?;
+    // Pre-compile the serving executables (xla backend) so TTFTs below
+    // measure serving, not first-use compilation; no-op on native.
+    engine.warmup()?;
     let mut coord = Coordinator::new(engine, 64 << 20);
     let tok = ByteTokenizer::new();
 

@@ -12,15 +12,15 @@
 //!     --checkpoint checkpoints/tiny_block.bin
 //! ```
 
-use block_attn::config::{default_artifacts_dir, Manifest};
 use block_attn::coordinator::batcher::{run_batch, BatchPolicy};
 use block_attn::coordinator::{AttentionMode, Coordinator, Request};
+use block_attn::runtime::backend_from_args;
 use block_attn::tokenizer::ByteTokenizer;
 use block_attn::util::cli::Args;
 use block_attn::util::rng::Rng;
 use block_attn::util::stats::Summary;
 use block_attn::workload::traces::RagTrace;
-use block_attn::ModelEngine;
+use block_attn::Backend;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
@@ -31,17 +31,11 @@ fn main() -> anyhow::Result<()> {
     let zipf_s = args.f64_or("zipf", 1.1);
     let max_new = args.usize_or("max-new-tokens", 12);
 
-    let manifest = Manifest::load(default_artifacts_dir())?;
-    let engine = ModelEngine::new(&manifest, &args.str_or("model", "tiny"))?;
+    let engine = backend_from_args(&args, "tiny")?;
     if let Some(ck) = args.get("checkpoint") {
         engine.load_params_file(std::path::Path::new(ck))?;
     }
-    engine.warmup(&[
-        block_attn::config::EntryKind::PrefillBlock,
-        block_attn::config::EntryKind::PrefillFinal,
-        block_attn::config::EntryKind::PrefillFull,
-        block_attn::config::EntryKind::DecodeStep,
-    ])?;
+    engine.warmup()?;
     let mut coord = Coordinator::new(engine, 256 << 20);
     let tok = ByteTokenizer::new();
 

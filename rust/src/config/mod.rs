@@ -28,6 +28,33 @@ pub struct ModelConfig {
 }
 
 impl ModelConfig {
+    /// Built-in configs for the artifact-free [`crate::runtime::NativeBackend`].
+    ///
+    /// Dimensions mirror `python/compile/configs.py` exactly (`tiny`,
+    /// `small`, `bench`), so flat-f32 checkpoints are interchangeable
+    /// between the native and AOT backends.
+    pub fn builtin(name: &str) -> Option<ModelConfig> {
+        let c = |vocab, d_model, layers, heads, kv_heads, d_ff, rope_theta, max_len| ModelConfig {
+            name: name.to_string(),
+            vocab,
+            d_model,
+            layers,
+            heads,
+            kv_heads,
+            head_dim: d_model / heads,
+            d_ff,
+            rope_theta,
+            norm_eps: 1e-5,
+            max_len,
+        };
+        match name {
+            "tiny" => Some(c(261, 128, 4, 4, 2, 344, 10000.0, 704)),
+            "small" => Some(c(261, 256, 6, 8, 4, 688, 10000.0, 2176)),
+            "bench" => Some(c(32000, 256, 4, 8, 4, 688, 500000.0, 32768)),
+            _ => None,
+        }
+    }
+
     /// Total parameter count (tied embedding).
     pub fn param_count(&self, layout: &[ParamSpec]) -> usize {
         layout.iter().map(|p| p.len()).sum()
@@ -303,6 +330,24 @@ mod tests {
         assert_eq!(e.sizes["L"], 1024);
         assert!(tiny.pick_bucket(EntryKind::PrefillFull, "L", 5000).is_err());
         assert!(tiny.pick_bucket(EntryKind::TrainStep, "B", 1).is_err());
+    }
+
+    #[test]
+    fn builtin_configs_mirror_python() {
+        let tiny = ModelConfig::builtin("tiny").unwrap();
+        assert_eq!(tiny.d_model, 128);
+        assert_eq!(tiny.layers, 4);
+        assert_eq!(tiny.heads, 4);
+        assert_eq!(tiny.kv_heads, 2);
+        assert_eq!(tiny.head_dim, 32);
+        assert_eq!(tiny.vocab, crate::tokenizer::BYTE_VOCAB);
+        let small = ModelConfig::builtin("small").unwrap();
+        assert_eq!(small.head_dim, 32);
+        assert_eq!(small.max_len, 2176);
+        let bench = ModelConfig::builtin("bench").unwrap();
+        assert_eq!(bench.vocab, 32000);
+        assert!((bench.rope_theta - 500000.0).abs() < 1e-9);
+        assert!(ModelConfig::builtin("giant").is_none());
     }
 
     #[test]

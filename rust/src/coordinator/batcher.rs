@@ -12,6 +12,7 @@
 //! the XLA engine.
 
 use super::{Coordinator, DecodeState, Request, Response};
+use crate::runtime::Backend;
 use crate::tokenizer::EOS;
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -27,7 +28,7 @@ pub trait BatchExec {
     fn do_decode(&mut self, state: &mut Self::State, last: i32) -> Result<i32>;
 }
 
-impl BatchExec for Coordinator {
+impl<B: Backend> BatchExec for Coordinator<B> {
     type State = DecodeState;
 
     fn do_prefill(&mut self, req: &Request, t0: Instant) -> Result<(DecodeState, Response)> {

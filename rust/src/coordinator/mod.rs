@@ -24,7 +24,7 @@ pub mod session;
 
 use crate::kvcache::{block_key, BlockKvCache};
 use crate::rope::RopeTable;
-use crate::runtime::ModelEngine;
+use crate::runtime::Backend;
 use crate::tensor::{argmax, TensorF};
 use crate::tokenizer::EOS;
 use anyhow::{bail, Result};
@@ -93,8 +93,12 @@ pub struct Response {
 }
 
 /// The serving coordinator: engine + cache + scheduler + metrics.
-pub struct Coordinator {
-    engine: ModelEngine,
+///
+/// Generic over the inference [`Backend`]: the same pipeline runs on
+/// the hermetic pure-Rust `NativeBackend` (tests, CI) and on the
+/// artifact-backed PJRT engine (`--features xla`).
+pub struct Coordinator<B: Backend> {
+    engine: B,
     cache: BlockKvCache,
     scheduler: Scheduler,
     pub metrics: Metrics,
@@ -103,8 +107,8 @@ pub struct Coordinator {
     last_prefill_logits: Option<Vec<f32>>,
 }
 
-impl Coordinator {
-    pub fn new(engine: ModelEngine, cache_budget_bytes: usize) -> Coordinator {
+impl<B: Backend> Coordinator<B> {
+    pub fn new(engine: B, cache_budget_bytes: usize) -> Coordinator<B> {
         let cfg = engine.config().clone();
         let rope = RopeTable::new(cfg.head_dim, cfg.rope_theta);
         let flops = crate::flops::FlopsModel::from_config(&cfg);
@@ -118,7 +122,7 @@ impl Coordinator {
         }
     }
 
-    pub fn engine(&self) -> &ModelEngine {
+    pub fn engine(&self) -> &B {
         &self.engine
     }
 
@@ -387,8 +391,11 @@ struct PrefillOutcome {
     total_blocks: usize,
 }
 
-/// Write a `(layers, len, kv, hd)` block into a context tensor at `at`.
-pub(crate) fn write_ctx(ctx: &mut TensorF, block: &TensorF, at: usize) {
+/// Write a `(layers, len, kv_heads, head_dim)` block into a context
+/// tensor at token offset `at` — the context-assembly primitive shared
+/// by the serving path, the benches and the integration tests (one
+/// definition so the KV layout has a single owner).
+pub fn write_ctx(ctx: &mut TensorF, block: &TensorF, at: usize) {
     let layers = ctx.dims()[0];
     let row: usize = ctx.dims()[2] * ctx.dims()[3];
     let blen = block.dims()[1];

@@ -10,6 +10,7 @@
 //! instead of growing with history length.
 
 use super::{AttentionMode, Coordinator, Request, Response};
+use crate::runtime::Backend;
 use crate::tokenizer::{ByteTokenizer, EOS, SEP};
 use anyhow::Result;
 
@@ -55,7 +56,11 @@ impl Session {
     /// Run one turn: the user message is the final (query) block over
     /// the cached history; the exchange is then sealed into a new
     /// history block. Returns (reply text, serving response).
-    pub fn turn(&mut self, coord: &mut Coordinator, user: &str) -> Result<(String, Response)> {
+    pub fn turn<B: Backend>(
+        &mut self,
+        coord: &mut Coordinator<B>,
+        user: &str,
+    ) -> Result<(String, Response)> {
         let mut query = vec![crate::tokenizer::QRY];
         query.extend(self.tok.encode(user));
         let req = Request {

@@ -11,21 +11,49 @@
 //! RoPE positions are *re-encoded* to the block's position in this prompt.
 //! TTFT and prefill FLOPs become (nearly) independent of context length.
 //!
+//! ## Backends
+//!
+//! The serving stack ([`coordinator`], [`server`], [`train`], the benches)
+//! is generic over the [`runtime::Backend`] trait. Two implementations:
+//!
+//! * **native** (default) — [`runtime::NativeBackend`], a pure-Rust
+//!   Llama-style forward pass (embedding, RMSNorm, GQA attention with
+//!   block-diagonal masking, RoPE, SwiGLU) plus a hand-derived backward
+//!   pass for block fine-tuning. Deterministic seeded weights, no
+//!   artifacts, no C dependencies. This is what the hermetic test suite
+//!   runs against: `cargo test -q` exercises coordinator → cache →
+//!   re-encode → decode end to end with nothing installed.
+//! * **xla** (cargo feature `xla`) — [`runtime::ModelEngine`]: loads the
+//!   AOT HLO artifacts produced by `python/compile/aot.py` and executes
+//!   them on the PJRT CPU client. Requires a real `xla` crate (see
+//!   `rust/vendor/xla-stub/README.md`) and `make artifacts`.
+//!
+//! Every binary and bench selects with `--backend native|xla`
+//! (`$BLOCK_ATTN_BACKEND` overrides the default); checkpoints are
+//! interchangeable because both backends share the flat-f32 parameter
+//! layout.
+//!
 //! Layering (python never on the request path):
 //! - **L1** `python/compile/kernels/` — Pallas attention + RoPE kernels.
 //! - **L2** `python/compile/model.py` — Llama-style model, AOT-lowered to
-//!   HLO text artifacts (`make artifacts`).
-//! - **L3** this crate — PJRT runtime, block-KV cache with position
+//!   HLO text artifacts (`make artifacts`); the native backend mirrors it
+//!   operation for operation.
+//! - **L3** this crate — backends, block-KV cache with position
 //!   re-encoding, segmentation, scheduling/batching, serving, training
 //!   driver, benchmarks.
 //!
 //! Entry points:
-//! - [`runtime::ModelEngine`] — load + execute the AOT artifacts.
+//! - [`runtime::Backend`] — the engine contract; [`runtime::backend_from_args`]
+//!   builds one from CLI options.
 //! - [`kvcache::BlockKvCache`] — content-addressed block KV store.
 //! - [`coordinator::Coordinator`] — the serving stack (segment → plan →
 //!   prefill → decode) with metrics.
-//! - [`train::train`] — block fine-tuning driver over the AOT
-//!   `train_step` (presets in [`train::presets`]).
+//! - [`train::train`] — block fine-tuning driver (presets in
+//!   [`train::presets`]).
+
+// Dense numeric kernels index heavily; the idiomatic-iterator forms are
+// measurably harder to keep allocation-free and fused.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod config;
 pub mod coordinator;
@@ -42,6 +70,8 @@ pub mod workload;
 
 pub use config::ModelConfig;
 pub use coordinator::Coordinator;
+pub use runtime::{Backend, NativeBackend};
+#[cfg(feature = "xla")]
 pub use runtime::ModelEngine;
 
 /// CLI dispatcher used by the `block-attn` binary.
@@ -53,10 +83,13 @@ pub fn run_cli(args: &util::cli::Args) -> anyhow::Result<()> {
         Some("eval") => cli_eval(args),
         Some(other) => anyhow::bail!("unknown subcommand '{other}'"),
         None => {
-            eprintln!("usage: block-attn <info|train|serve> [--options]");
-            eprintln!("  info   --artifacts DIR");
-            eprintln!("  train  --preset table1 --out DIR [--scale 1.0] [--model tiny]");
-            eprintln!("  serve  --addr 127.0.0.1:7841 --model tiny [--checkpoint FILE]");
+            eprintln!("usage: block-attn <info|train|serve|eval> [--options]");
+            eprintln!("  common: --backend native|xla   (default native; xla needs --features xla)");
+            eprintln!("          --model tiny|small|bench [--checkpoint FILE]");
+            eprintln!("  info   [--artifacts DIR]");
+            eprintln!("  train  --preset table1 --out DIR [--scale 1.0]");
+            eprintln!("  serve  --addr 127.0.0.1:7841 [--workers 4] [--cache-mb 256]");
+            eprintln!("  eval   [--mode full|block] [--samples 10] [--show]");
             Ok(())
         }
     }
@@ -68,16 +101,13 @@ fn cli_eval(args: &util::cli::Args) -> anyhow::Result<()> {
     use coordinator::{AttentionMode, Request};
     use tokenizer::ByteTokenizer;
 
-    let dir = args.str_or("artifacts", "artifacts");
-    let model = args.str_or("model", "tiny");
     let n = args.usize_or("samples", 10);
     let mode = AttentionMode::parse(&args.str_or("mode", "full"))?;
-    let manifest = config::Manifest::load(&dir)?;
-    let engine = ModelEngine::new(&manifest, &model)?;
+    let backend = runtime::backend_from_args(args, "tiny")?;
     if let Some(ck) = args.get("checkpoint") {
-        engine.load_params_file(std::path::Path::new(ck))?;
+        backend.load_params_file(std::path::Path::new(ck))?;
     }
-    let mut coord = Coordinator::new(engine, 128 << 20);
+    let mut coord = Coordinator::new(backend, 128 << 20);
     let tok = ByteTokenizer::new();
     for (bench_name, samples) in train::presets::rag_eval_by_variant(n) {
         let mut correct = 0;
@@ -107,36 +137,26 @@ fn cli_eval(args: &util::cli::Args) -> anyhow::Result<()> {
 }
 
 fn cli_serve(args: &util::cli::Args) -> anyhow::Result<()> {
-    let dir = args.str_or("artifacts", "artifacts");
-    let model = args.str_or("model", "tiny");
     let addr = args.str_or("addr", "127.0.0.1:7841");
-    let checkpoint = args.get("checkpoint").map(std::path::PathBuf::from);
     let workers = args.usize_or("workers", 4);
     let cache_mb = args.usize_or("cache-mb", 256);
+    let args2 = args.clone();
     let handle = server::EngineHandle::spawn(move || {
-        let manifest = config::Manifest::load(&dir)?;
-        let engine = ModelEngine::new(&manifest, &model)?;
-        if let Some(ck) = checkpoint {
-            engine.load_params_file(&ck)?;
+        let backend = runtime::backend_from_args(&args2, "tiny")?;
+        if let Some(ck) = args2.get("checkpoint") {
+            backend.load_params_file(std::path::Path::new(ck))?;
         }
-        engine.warmup(&[
-            config::EntryKind::PrefillBlock,
-            config::EntryKind::PrefillFinal,
-            config::EntryKind::DecodeStep,
-        ])?;
-        Ok(Coordinator::new(engine, cache_mb << 20))
+        backend.warmup()?;
+        Ok(Coordinator::new(backend, cache_mb << 20))
     })?;
     server::serve(&addr, handle, workers)
 }
 
 fn cli_train(args: &util::cli::Args) -> anyhow::Result<()> {
-    let dir = args.str_or("artifacts", "artifacts");
-    let model = args.str_or("model", "tiny");
     let out = std::path::PathBuf::from(args.str_or("out", "checkpoints"));
     let scale = args.f64_or("scale", 1.0);
-    let manifest = config::Manifest::load(&dir)?;
-    let engine = ModelEngine::new(&manifest, &model)?;
-    let mut coord = Coordinator::new(engine, 256 << 20);
+    let backend = runtime::backend_from_args(args, "tiny")?;
+    let mut coord = Coordinator::new(backend, 256 << 20);
     let mut opts = train::presets::PresetOpts::scaled(scale);
     opts.only_block = args.flag("only-block");
     match args.str_or("preset", "table1").as_str() {
@@ -146,21 +166,46 @@ fn cli_train(args: &util::cli::Args) -> anyhow::Result<()> {
 }
 
 fn cli_info(args: &util::cli::Args) -> anyhow::Result<()> {
-    let dir = args.str_or("artifacts", "artifacts");
-    let manifest = config::Manifest::load(&dir)?;
-    for (name, m) in &manifest.models {
-        println!(
-            "{name}: {} layers, d_model {}, {} heads ({} kv), vocab {}, {} entries",
-            m.config.layers,
-            m.config.d_model,
-            m.config.heads,
-            m.config.kv_heads,
-            m.config.vocab,
-            m.entries.len()
-        );
-        for e in &m.entries {
-            println!("  {:<40} {:?} {:?}", e.name, e.kind, e.sizes);
+    // With the xla backend selected (and compiled in) show the artifact
+    // manifest; the native backend reports its built-in config.
+    #[cfg(feature = "xla")]
+    if runtime::backend_choice(args) == "xla" {
+        let dir = args.str_or("artifacts", "artifacts");
+        let manifest = config::Manifest::load(&dir)?;
+        for (name, m) in &manifest.models {
+            println!(
+                "{name}: {} layers, d_model {}, {} heads ({} kv), vocab {}, {} entries",
+                m.config.layers,
+                m.config.d_model,
+                m.config.heads,
+                m.config.kv_heads,
+                m.config.vocab,
+                m.entries.len()
+            );
+            for e in &m.entries {
+                println!("  {:<40} {:?} {:?}", e.name, e.kind, e.sizes);
+            }
         }
+        return Ok(());
+    }
+    let backend = runtime::backend_from_args(args, "tiny")?;
+    let cfg = backend.config();
+    let n_params = cfg.param_count(backend.param_specs());
+    println!(
+        "{}: {} layers, d_model {}, {} heads ({} kv, head_dim {}), d_ff {}, vocab {}, max_len {}",
+        cfg.name,
+        cfg.layers,
+        cfg.d_model,
+        cfg.heads,
+        cfg.kv_heads,
+        cfg.head_dim,
+        cfg.d_ff,
+        cfg.vocab,
+        cfg.max_len
+    );
+    println!("  {} parameters across {} tensors:", n_params, backend.param_specs().len());
+    for p in backend.param_specs() {
+        println!("    {:<12} {:?}", p.name, p.shape);
     }
     Ok(())
 }

@@ -170,6 +170,59 @@ mod tests {
         }
     }
 
+    /// Eq.-3 invariant swept across head dims and offsets: rotating
+    /// local-position keys by Δ must match directly encoding the same
+    /// raw keys at absolute positions Δ..Δ+L — for every head dim the
+    /// model zoo uses and offsets from 1 to deep-context scale.
+    #[test]
+    fn reencode_matches_absolute_across_dims_and_deltas() {
+        for (dim_i, &d) in [8usize, 32, 64, 128].iter().enumerate() {
+            // Long-context thetas for the bigger dims, Llama-style.
+            let base = if d >= 64 { 500000.0 } else { 10000.0 };
+            let table = RopeTable::new(d, base);
+            let (layers, seq, heads) = (2, 7, 2);
+            let mut rng = Rng::new(0xD1 + dim_i as u64);
+            let raw = random_keys(&mut rng, layers * seq * heads * d);
+            for &delta in &[1i64, 5, 64, 1000, 4096, 30000] {
+                // Path A: encode at local positions, re-encode by delta.
+                let mut a = raw.clone();
+                for l in 0..layers {
+                    let off = l * seq * heads * d;
+                    table.encode_at(&mut a[off..off + seq * heads * d], seq, heads, 0);
+                }
+                table.reencode_block(&mut a, layers, seq, heads, delta);
+                // Path B: encode directly at absolute positions delta..
+                let mut b = raw.clone();
+                for l in 0..layers {
+                    let off = l * seq * heads * d;
+                    table.encode_at(&mut b[off..off + seq * heads * d], seq, heads, delta);
+                }
+                for (x, y) in a.iter().zip(&b) {
+                    assert!(
+                        (x - y).abs() < 2e-3,
+                        "d={d} delta={delta}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Re-encoding composes: Δ₁ then Δ₂ equals Δ₁+Δ₂ in one shot.
+    #[test]
+    fn reencode_composes_additively() {
+        let table = RopeTable::new(16, 10000.0);
+        let mut rng = Rng::new(0xADD);
+        let raw = random_keys(&mut rng, 2 * 4 * 2 * 16);
+        let mut two_hops = raw.clone();
+        table.reencode_block(&mut two_hops, 2, 4, 2, 100);
+        table.reencode_block(&mut two_hops, 2, 4, 2, 23);
+        let mut one_hop = raw.clone();
+        table.reencode_block(&mut one_hop, 2, 4, 2, 123);
+        for (x, y) in two_hops.iter().zip(&one_hop) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
     #[test]
     fn zero_delta_is_identity() {
         let table = RopeTable::new(8, 10000.0);

@@ -10,41 +10,14 @@
 //! communicates over channels (see `coordinator::router`).
 
 use super::literal::{buf_f, buf_i, buf_scalar_f, buf_scalar_i, literal_to_f32};
+use super::params::read_flat_params;
+use super::{Backend, DecodeOut, PrefillFinalOut, PrefillFullOut, TrainOut};
 use crate::config::{ArtifactEntry, EntryKind, Manifest, ModelArtifacts};
 use crate::tensor::{Tensor, TensorF, TensorI};
 use anyhow::{anyhow, bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
-
-/// Output of a vanilla full prefill.
-pub struct PrefillFullOut {
-    /// Logits of the last valid position (vocab,).
-    pub last_logits: Vec<f32>,
-    /// Per-layer keys `(layers, len, kv_heads, head_dim)`, trimmed.
-    pub k: TensorF,
-    pub v: TensorF,
-}
-
-/// Output of a final-block prefill.
-pub struct PrefillFinalOut {
-    pub last_logits: Vec<f32>,
-    /// Final-block KV at absolute positions, trimmed to the query length.
-    pub k: TensorF,
-    pub v: TensorF,
-}
-
-/// Output of a decode step.
-pub struct DecodeOut {
-    pub logits: Vec<f32>,
-    pub k_cache: TensorF,
-    pub v_cache: TensorF,
-}
-
-/// Output of a train step.
-pub struct TrainOut {
-    pub loss: f32,
-}
 
 pub struct ModelEngine {
     client: xla::PjRtClient,
@@ -134,7 +107,7 @@ impl ModelEngine {
     /// Save the current parameters as a flat f32 checkpoint.
     pub fn save_params_file(&self, path: &std::path::Path) -> Result<()> {
         let tensors = self.params_host()?;
-        write_flat_params(path, &tensors)
+        super::params::write_flat_params(path, &tensors)
     }
 
     // -- executables ---------------------------------------------------
@@ -510,74 +483,127 @@ fn take3(mut v: Vec<xla::Literal>) -> Result<[xla::Literal; 3]> {
     Ok([a, b, c])
 }
 
-/// Read a flat little-endian f32 checkpoint into the manifest layout.
-pub fn read_flat_params(
-    path: &std::path::Path,
-    specs: &[crate::config::ParamSpec],
-) -> Result<Vec<TensorF>> {
-    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
-    let total: usize = specs.iter().map(|s| s.len()).sum();
-    if bytes.len() != total * 4 {
-        bail!(
-            "checkpoint {path:?} has {} bytes, expected {} ({} f32)",
-            bytes.len(),
-            total * 4,
-            total
-        );
+/// The [`Backend`] contract, delegating to the inherent artifact-backed
+/// methods. Capacities come from the manifest's bucket tables.
+impl Backend for ModelEngine {
+    fn config(&self) -> &crate::config::ModelConfig {
+        &self.arts.config
     }
-    let mut floats = Vec::with_capacity(total);
-    for c in bytes.chunks_exact(4) {
-        floats.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
-    }
-    let mut out = Vec::with_capacity(specs.len());
-    let mut off = 0;
-    for s in specs {
-        let n = s.len();
-        out.push(Tensor::from_vec(&s.shape, floats[off..off + n].to_vec()));
-        off += n;
-    }
-    Ok(out)
-}
 
-/// Write tensors as a flat little-endian f32 checkpoint.
-pub fn write_flat_params(path: &std::path::Path, tensors: &[TensorF]) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
+    fn param_specs(&self) -> &[crate::config::ParamSpec] {
+        &self.arts.params
     }
-    let mut bytes = Vec::new();
-    for t in tensors {
-        for x in t.data() {
-            bytes.extend_from_slice(&x.to_le_bytes());
-        }
+
+    fn set_params(&self, tensors: Vec<TensorF>) -> Result<()> {
+        ModelEngine::set_params(self, tensors)
     }
-    std::fs::write(path, bytes)?;
-    Ok(())
+
+    fn params_host(&self) -> Result<Vec<TensorF>> {
+        ModelEngine::params_host(self)
+    }
+
+    fn reset_opt_state(&self) {
+        ModelEngine::reset_opt_state(self)
+    }
+
+    fn prefill_full(&self, tokens: &[i32]) -> Result<PrefillFullOut> {
+        ModelEngine::prefill_full(self, tokens)
+    }
+
+    fn prefill_block(&self, tokens: &[i32]) -> Result<(TensorF, TensorF)> {
+        ModelEngine::prefill_block(self, tokens)
+    }
+
+    fn prefill_final_at(
+        &self,
+        tokens: &[i32],
+        past_k: &TensorF,
+        past_v: &TensorF,
+        past_len: usize,
+        q_pos0: usize,
+    ) -> Result<PrefillFinalOut> {
+        ModelEngine::prefill_final_at(self, tokens, past_k, past_v, past_len, q_pos0)
+    }
+
+    fn decode(
+        &self,
+        token: i32,
+        k_cache: &TensorF,
+        v_cache: &TensorF,
+        cache_len: usize,
+    ) -> Result<DecodeOut> {
+        ModelEngine::decode(self, token, k_cache, v_cache, cache_len)
+    }
+
+    fn train_step(
+        &self,
+        step: usize,
+        lr: f32,
+        tokens: &TensorI,
+        seg: &TensorI,
+        loss_mask: &TensorF,
+    ) -> Result<TrainOut> {
+        ModelEngine::train_step(self, step, lr, tokens, seg, loss_mask)
+    }
+
+    fn final_ctx_capacity(&self, ctx_len: usize) -> Result<usize> {
+        ModelEngine::final_ctx_capacity(self, ctx_len)
+    }
+
+    fn final_q_capacity(&self) -> Result<usize> {
+        ModelEngine::final_q_capacity(self)
+    }
+
+    fn decode_ctx_capacity(&self) -> Result<usize> {
+        ModelEngine::decode_ctx_capacity(self)
+    }
+
+    fn max_block_tokens(&self) -> Result<usize> {
+        self.arts
+            .entries_of(EntryKind::PrefillBlock, "L")
+            .last()
+            .ok_or_else(|| anyhow!("no prefill_block artifacts"))?
+            .size("L")
+    }
+
+    fn train_shape(&self) -> Result<(usize, usize)> {
+        let entry = self
+            .arts
+            .entries
+            .iter()
+            .find(|e| e.kind == EntryKind::TrainStep)
+            .ok_or_else(|| anyhow!("config '{}' has no train artifact", self.arts.config.name))?;
+        Ok((entry.size("B")?, entry.size("L")?))
+    }
+
+    fn warmup(&self) -> Result<()> {
+        ModelEngine::warmup(
+            self,
+            &[
+                EntryKind::PrefillFull,
+                EntryKind::PrefillBlock,
+                EntryKind::PrefillFinal,
+                EntryKind::DecodeStep,
+            ],
+        )
+    }
+
+    fn kv_zeros(&self, c: usize) -> TensorF {
+        ModelEngine::kv_zeros(self, c)
+    }
+
+    fn load_params_file(&self, path: &std::path::Path) -> Result<()> {
+        ModelEngine::load_params_file(self, path)
+    }
+
+    fn save_params_file(&self, path: &std::path::Path) -> Result<()> {
+        ModelEngine::save_params_file(self, path)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ParamSpec;
-
-    #[test]
-    fn flat_params_roundtrip() {
-        let dir = std::env::temp_dir().join("block_attn_test_ckpt");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("p.bin");
-        let t1 = Tensor::from_vec(&[2, 3], vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
-        let t2 = Tensor::from_vec(&[2], vec![-1.0f32, 0.5]);
-        write_flat_params(&path, &[t1.clone(), t2.clone()]).unwrap();
-        let specs = vec![
-            ParamSpec { name: "a".into(), shape: vec![2, 3] },
-            ParamSpec { name: "b".into(), shape: vec![2] },
-        ];
-        let back = read_flat_params(&path, &specs).unwrap();
-        assert_eq!(back[0], t1);
-        assert_eq!(back[1], t2);
-        // Wrong layout must fail loudly.
-        let bad = vec![ParamSpec { name: "a".into(), shape: vec![9] }];
-        assert!(read_flat_params(&path, &bad).is_err());
-    }
 
     #[test]
     fn pad_and_trim() {

@@ -1,14 +1,394 @@
-//! L3 runtime: load AOT HLO artifacts and execute them on the PJRT CPU
-//! client.
+//! L3 runtime: pluggable inference/training backends.
 //!
-//! The [`ModelEngine`] is the only place in the crate that touches the
-//! `xla` FFI; everything above it works with host [`Tensor`]s. Artifacts
-//! are compiled lazily on first use and memoized per entry, so loading a
-//! manifest is cheap and a serving process only pays for the buckets it
-//! actually exercises.
+//! The serving stack above this module ([`crate::coordinator`],
+//! [`crate::server`], [`crate::train`], the benches) is generic over the
+//! [`Backend`] trait, which captures the engine contract of the paper's
+//! serving pipeline: full-prompt prefill (baseline), independent
+//! per-block prefill at local positions (§2.1), final-block prefill over
+//! a re-encoded cached context (§2.5), single-token decode, and the
+//! block fine-tune step (§2.4).
+//!
+//! Two implementations:
+//!
+//! * [`NativeBackend`] — a pure-Rust Llama-style forward pass over
+//!   [`crate::tensor::TensorF`] with deterministic seeded weights. No
+//!   artifacts, no C dependencies: the hermetic reference that the test
+//!   suite runs against, and the executable specification the
+//!   accelerated paths are checked against.
+//! * `ModelEngine` (cargo feature `xla`) — loads AOT HLO artifacts
+//!   produced by `python/compile/aot.py` and executes them on the PJRT
+//!   CPU client. Compiled only with `--features xla`.
+//!
+//! Select at runtime with `--backend native|xla` (see
+//! [`backend_from_args`]).
 
+pub mod native;
+mod native_train;
+mod params;
+
+#[cfg(feature = "xla")]
 mod engine;
+#[cfg(feature = "xla")]
 mod literal;
 
-pub use engine::{DecodeOut, ModelEngine, PrefillFinalOut, PrefillFullOut, TrainOut};
+#[cfg(feature = "xla")]
+pub use engine::ModelEngine;
+#[cfg(feature = "xla")]
 pub use literal::{literal_to_f32, literal_to_i32, tensor_f, tensor_i};
+pub use native::NativeBackend;
+pub use params::{read_flat_params, write_flat_params};
+
+use crate::config::{ModelConfig, ParamSpec};
+use crate::tensor::{Tensor, TensorF, TensorI};
+use crate::util::cli::Args;
+use anyhow::{bail, Result};
+
+/// Output of a vanilla full prefill.
+pub struct PrefillFullOut {
+    /// Logits of the last valid position (vocab,).
+    pub last_logits: Vec<f32>,
+    /// Per-layer keys `(layers, len, kv_heads, head_dim)`, trimmed.
+    pub k: TensorF,
+    pub v: TensorF,
+}
+
+/// Output of a final-block prefill.
+pub struct PrefillFinalOut {
+    pub last_logits: Vec<f32>,
+    /// Final-block KV at absolute positions, trimmed to the query length.
+    pub k: TensorF,
+    pub v: TensorF,
+}
+
+/// Output of a decode step.
+pub struct DecodeOut {
+    pub logits: Vec<f32>,
+    pub k_cache: TensorF,
+    pub v_cache: TensorF,
+}
+
+/// Output of a train step.
+pub struct TrainOut {
+    pub loss: f32,
+}
+
+/// The engine contract the serving stack is generic over.
+///
+/// All methods take `&self`: backends use interior mutability for
+/// parameters and optimizer state, mirroring the device-resident state
+/// of the PJRT engine. Implementations need not be `Sync`; the server
+/// owns its backend on a dedicated engine thread.
+pub trait Backend {
+    /// Transformer dimensions of this backend's model.
+    fn config(&self) -> &ModelConfig;
+
+    /// The flattened parameter layout (checkpoint order).
+    fn param_specs(&self) -> &[ParamSpec];
+
+    /// Replace the parameters (checked against [`Self::param_specs`]).
+    fn set_params(&self, tensors: Vec<TensorF>) -> Result<()>;
+
+    /// Download the current parameters to host tensors (checkpointing).
+    fn params_host(&self) -> Result<Vec<TensorF>>;
+
+    /// Reset optimizer state (call when fine-tuning from a freshly
+    /// loaded checkpoint).
+    fn reset_opt_state(&self);
+
+    /// Vanilla full-attention prefill (the baseline path). Returns KV
+    /// trimmed to `tokens.len()`.
+    fn prefill_full(&self, tokens: &[i32]) -> Result<PrefillFullOut>;
+
+    /// Independent block prefill at local positions (paper §2.1).
+    /// Returns KV trimmed to the block length; keys are at positions
+    /// `0..len` and must be re-encoded before use at a non-zero offset.
+    fn prefill_block(&self, tokens: &[i32]) -> Result<(TensorF, TensorF)>;
+
+    /// Final-block prefill with an explicit query position origin
+    /// (`q_pos0`): superposition-style baselines place the query after
+    /// the longest *parallel* document path instead of after the
+    /// concatenated context. `past_k`/`past_v` are
+    /// `(layers, C, kv_heads, head_dim)` with valid prefix `past_len`,
+    /// already rotated to absolute positions.
+    fn prefill_final_at(
+        &self,
+        tokens: &[i32],
+        past_k: &TensorF,
+        past_v: &TensorF,
+        past_len: usize,
+        q_pos0: usize,
+    ) -> Result<PrefillFinalOut>;
+
+    /// Final-block prefill over an assembled, re-encoded context; the
+    /// query sits at RoPE positions `past_len..`.
+    fn prefill_final(
+        &self,
+        tokens: &[i32],
+        past_k: &TensorF,
+        past_v: &TensorF,
+        past_len: usize,
+    ) -> Result<PrefillFinalOut> {
+        self.prefill_final_at(tokens, past_k, past_v, past_len, past_len)
+    }
+
+    /// One decode step: append `token` at `cache_len` and return logits
+    /// plus the updated dense cache.
+    fn decode(
+        &self,
+        token: i32,
+        k_cache: &TensorF,
+        v_cache: &TensorF,
+        cache_len: usize,
+    ) -> Result<DecodeOut>;
+
+    /// One block-fine-tune step (paper §2.4). `seg` carries the
+    /// Figure-1 segment ids (uniform ids = full-attention mode),
+    /// `loss_mask` marks target tokens. Updates the backend's
+    /// parameters in place.
+    fn train_step(
+        &self,
+        step: usize,
+        lr: f32,
+        tokens: &TensorI,
+        seg: &TensorI,
+        loss_mask: &TensorF,
+    ) -> Result<TrainOut>;
+
+    /// Context capacity (C) a final-prefill over `ctx_len` past tokens
+    /// must allocate. Bucketed backends round up; exact backends return
+    /// `ctx_len`.
+    fn final_ctx_capacity(&self, ctx_len: usize) -> Result<usize>;
+
+    /// Max query-block length supported by the final prefill.
+    fn final_q_capacity(&self) -> Result<usize>;
+
+    /// Dense-cache capacity of the decode path.
+    fn decode_ctx_capacity(&self) -> Result<usize>;
+
+    /// Longest single block `prefill_block` accepts.
+    fn max_block_tokens(&self) -> Result<usize>;
+
+    /// `(batch, seq_len)` shape of one training step's packed batch.
+    fn train_shape(&self) -> Result<(usize, usize)>;
+
+    /// Prepare the serving entry points (e.g. pre-compile AOT
+    /// executables). No-op for backends without a compile step.
+    fn warmup(&self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Zero-filled KV context tensor `(layers, c, kv_heads, head_dim)`.
+    fn kv_zeros(&self, c: usize) -> TensorF {
+        let cfg = self.config();
+        Tensor::zeros(&[cfg.layers, c, cfg.kv_heads, cfg.head_dim])
+    }
+
+    /// Load parameters from a flat little-endian f32 checkpoint file.
+    fn load_params_file(&self, path: &std::path::Path) -> Result<()> {
+        let tensors = read_flat_params(path, self.param_specs())?;
+        self.set_params(tensors)
+    }
+
+    /// Save the current parameters as a flat f32 checkpoint.
+    fn save_params_file(&self, path: &std::path::Path) -> Result<()> {
+        let tensors = self.params_host()?;
+        write_flat_params(path, &tensors)
+    }
+}
+
+/// `Box<dyn Backend>` is itself a backend, so runtime-selected backends
+/// (`--backend native|xla`) drive the same generic stack.
+impl Backend for Box<dyn Backend> {
+    fn config(&self) -> &ModelConfig {
+        (**self).config()
+    }
+
+    fn param_specs(&self) -> &[ParamSpec] {
+        (**self).param_specs()
+    }
+
+    fn set_params(&self, tensors: Vec<TensorF>) -> Result<()> {
+        (**self).set_params(tensors)
+    }
+
+    fn params_host(&self) -> Result<Vec<TensorF>> {
+        (**self).params_host()
+    }
+
+    fn reset_opt_state(&self) {
+        (**self).reset_opt_state()
+    }
+
+    fn prefill_full(&self, tokens: &[i32]) -> Result<PrefillFullOut> {
+        (**self).prefill_full(tokens)
+    }
+
+    fn prefill_block(&self, tokens: &[i32]) -> Result<(TensorF, TensorF)> {
+        (**self).prefill_block(tokens)
+    }
+
+    fn prefill_final_at(
+        &self,
+        tokens: &[i32],
+        past_k: &TensorF,
+        past_v: &TensorF,
+        past_len: usize,
+        q_pos0: usize,
+    ) -> Result<PrefillFinalOut> {
+        (**self).prefill_final_at(tokens, past_k, past_v, past_len, q_pos0)
+    }
+
+    fn decode(
+        &self,
+        token: i32,
+        k_cache: &TensorF,
+        v_cache: &TensorF,
+        cache_len: usize,
+    ) -> Result<DecodeOut> {
+        (**self).decode(token, k_cache, v_cache, cache_len)
+    }
+
+    fn train_step(
+        &self,
+        step: usize,
+        lr: f32,
+        tokens: &TensorI,
+        seg: &TensorI,
+        loss_mask: &TensorF,
+    ) -> Result<TrainOut> {
+        (**self).train_step(step, lr, tokens, seg, loss_mask)
+    }
+
+    fn final_ctx_capacity(&self, ctx_len: usize) -> Result<usize> {
+        (**self).final_ctx_capacity(ctx_len)
+    }
+
+    fn final_q_capacity(&self) -> Result<usize> {
+        (**self).final_q_capacity()
+    }
+
+    fn decode_ctx_capacity(&self) -> Result<usize> {
+        (**self).decode_ctx_capacity()
+    }
+
+    fn max_block_tokens(&self) -> Result<usize> {
+        (**self).max_block_tokens()
+    }
+
+    fn train_shape(&self) -> Result<(usize, usize)> {
+        (**self).train_shape()
+    }
+
+    fn warmup(&self) -> Result<()> {
+        (**self).warmup()
+    }
+}
+
+/// Default weight seed for hermetically-initialized native models.
+pub const DEFAULT_WEIGHT_SEED: u64 = 0xB10C;
+
+/// The backend name selected by CLI options: `--backend` wins, then
+/// `$BLOCK_ATTN_BACKEND`, then `"native"`. Every site that branches on
+/// the backend choice (defaults, artifact listings) must use this so
+/// the env override behaves exactly like the flag.
+pub fn backend_choice(args: &Args) -> String {
+    args.str_or(
+        "backend",
+        &std::env::var("BLOCK_ATTN_BACKEND").unwrap_or_else(|_| "native".into()),
+    )
+}
+
+/// Build a backend from CLI-style options:
+///
+/// * `--backend native|xla` (default: `$BLOCK_ATTN_BACKEND` or `native`)
+/// * `--model NAME` (default: `default_model`; for the native backend a
+///   built-in config name, for xla a manifest config name)
+/// * `--seed-weights N` (native: deterministic init seed)
+/// * `--artifacts DIR` (xla: the AOT artifact directory)
+///
+/// Checkpoint loading is left to callers (`--checkpoint` handling
+/// differs per tool); checkpoints are interchangeable between backends
+/// because both use the same flat-f32 parameter layout.
+pub fn backend_from_args(args: &Args, default_model: &str) -> Result<Box<dyn Backend>> {
+    let choice = backend_choice(args);
+    let model = args.str_or("model", default_model);
+    match choice.as_str() {
+        "native" => {
+            let cfg = ModelConfig::builtin(&model)
+                .ok_or_else(|| anyhow::anyhow!("no built-in native config '{model}'"))?;
+            let seed = args.u64_or("seed-weights", DEFAULT_WEIGHT_SEED);
+            Ok(Box::new(NativeBackend::new(cfg, seed)))
+        }
+        "xla" => xla_backend(args, &model),
+        other => bail!("unknown backend '{other}' (expected 'native' or 'xla')"),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn xla_backend(args: &Args, model: &str) -> Result<Box<dyn Backend>> {
+    let dir = args.str_or(
+        "artifacts",
+        crate::config::default_artifacts_dir().to_str().unwrap_or("artifacts"),
+    );
+    let manifest = crate::config::Manifest::load(&dir)?;
+    Ok(Box::new(ModelEngine::new(&manifest, model)?))
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_backend(_args: &Args, _model: &str) -> Result<Box<dyn Backend>> {
+    bail!(
+        "this binary was built without the `xla` feature; rebuild with \
+         `cargo build --features xla` (and a real xla crate, see \
+         rust/vendor/xla-stub/README.md) or use `--backend native`"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Explicit `--backend native` so the test stays hermetic even when
+    /// the ambient environment exports `BLOCK_ATTN_BACKEND`.
+    fn native_args(extra: &[&str]) -> Args {
+        let mut v = vec!["--backend".to_string(), "native".to_string()];
+        v.extend(extra.iter().map(|s| s.to_string()));
+        Args::parse_from(v)
+    }
+
+    #[test]
+    fn backend_from_args_selects_native() {
+        let b = backend_from_args(&native_args(&[]), "tiny").unwrap();
+        assert_eq!(b.config().name, "tiny");
+        assert_eq!(b.param_specs().len(), 11);
+    }
+
+    #[test]
+    fn backend_from_args_rejects_unknown() {
+        let args = Args::parse_from(vec!["--backend".to_string(), "tpu".to_string()]);
+        assert!(backend_from_args(&args, "tiny").is_err());
+        assert!(backend_from_args(&native_args(&["--model", "nope"]), "tiny").is_err());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn xla_backend_requires_feature() {
+        let args = Args::parse_from(vec!["--backend".to_string(), "xla".to_string()]);
+        let err = backend_from_args(&args, "tiny").unwrap_err();
+        assert!(format!("{err}").contains("xla"));
+    }
+
+    #[test]
+    fn boxed_backend_is_a_backend() {
+        fn takes_backend<B: Backend>(b: &B) -> usize {
+            b.config().layers
+        }
+        let b = backend_from_args(&native_args(&[]), "tiny").unwrap();
+        assert_eq!(takes_backend(&b), 4);
+    }
+
+    #[test]
+    fn flag_overrides_env_choice() {
+        // The flag always wins regardless of ambient environment.
+        assert_eq!(backend_choice(&native_args(&[])), "native");
+    }
+}

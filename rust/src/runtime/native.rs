@@ -1,0 +1,831 @@
+//! [`NativeBackend`]: a pure-Rust Llama-style forward pass.
+//!
+//! Architecture (mirrors `python/compile/model.py` exactly): token
+//! embedding (tied LM head), N pre-norm blocks (RMSNorm → GQA attention
+//! with RoPE → RMSNorm → SwiGLU MLP), final RMSNorm. Parameters use the
+//! same 11-tensor flat layout as the AOT manifest, so checkpoints are
+//! interchangeable with the `xla` backend.
+//!
+//! Unlike the bucketed AOT engine, shapes are dynamic: capacities are
+//! exact (`final_ctx_capacity(n) == n`) and no padding/trimming happens.
+//! Weights initialize from a deterministic seeded stream, which makes
+//! the whole serving pipeline — segmentation, content-addressed KV
+//! reuse, Eq.-3 RoPE re-encoding, decode — testable with no artifacts
+//! directory and no C dependencies.
+//!
+//! The forward pass is written row-wise so that the hidden state of a
+//! token depends only on itself and the keys it attends to, in
+//! ascending key order. That makes the block-serving path *bitwise*
+//! faithful to the monolithic computation in the single-segment case —
+//! the invariant `tests/native_backend.rs` pins down.
+
+use super::native_train;
+use super::{Backend, DecodeOut, PrefillFinalOut, PrefillFullOut, TrainOut};
+use crate::config::{ModelConfig, ParamSpec};
+use crate::rope::RopeTable;
+use crate::tensor::{Tensor, TensorF, TensorI};
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Result};
+use std::cell::RefCell;
+
+// Parameter layout indices (checkpoint order; must match
+// `python/compile/model.py::param_specs`).
+pub(crate) const P_EMBED: usize = 0;
+pub(crate) const P_LN1: usize = 1;
+pub(crate) const P_WQ: usize = 2;
+pub(crate) const P_WK: usize = 3;
+pub(crate) const P_WV: usize = 4;
+pub(crate) const P_WO: usize = 5;
+pub(crate) const P_LN2: usize = 6;
+pub(crate) const P_WG: usize = 7;
+pub(crate) const P_WU: usize = 8;
+pub(crate) const P_WD: usize = 9;
+pub(crate) const P_FINAL_NORM: usize = 10;
+pub(crate) const N_PARAMS: usize = 11;
+
+/// The flattened parameter layout for one config (manifest order).
+pub fn native_param_specs(cfg: &ModelConfig) -> Vec<ParamSpec> {
+    let (n, dm, h, kv, f, v, hd) = (
+        cfg.layers,
+        cfg.d_model,
+        cfg.heads,
+        cfg.kv_heads,
+        cfg.d_ff,
+        cfg.vocab,
+        cfg.head_dim,
+    );
+    let spec = |name: &str, shape: &[usize]| ParamSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+    };
+    vec![
+        spec("embed", &[v, dm]),
+        spec("ln1", &[n, dm]),
+        spec("wq", &[n, dm, h * hd]),
+        spec("wk", &[n, dm, kv * hd]),
+        spec("wv", &[n, dm, kv * hd]),
+        spec("wo", &[n, h * hd, dm]),
+        spec("ln2", &[n, dm]),
+        spec("wg", &[n, dm, f]),
+        spec("wu", &[n, dm, f]),
+        spec("wd", &[n, f, dm]),
+        spec("final_norm", &[dm]),
+    ]
+}
+
+/// Deterministic seeded initialization (same recipe as
+/// `model.py::init_params`, on this crate's splitmix stream: norms are
+/// ones, residual-out projections are depth-scaled, everything else is
+/// N(0, 0.02)).
+pub fn init_params(cfg: &ModelConfig, specs: &[ParamSpec], seed: u64) -> Vec<TensorF> {
+    let mut rng = Rng::new(seed);
+    let resid_scale = 1.0 / (2.0 * cfg.layers as f64).sqrt();
+    specs
+        .iter()
+        .map(|s| match s.name.as_str() {
+            "ln1" | "ln2" | "final_norm" => Tensor::from_vec(&s.shape, vec![1.0f32; s.len()]),
+            name => {
+                let std = if name == "wo" || name == "wd" {
+                    0.02 * resid_scale
+                } else {
+                    0.02
+                };
+                let data = (0..s.len()).map(|_| (rng.normal() * std) as f32).collect();
+                Tensor::from_vec(&s.shape, data)
+            }
+        })
+        .collect()
+}
+
+// -- dense math helpers (shared with native_train) -------------------------
+
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+pub(crate) fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `out[m×n] += a[m×k] @ b[k×n]`.
+pub(crate) fn matmul_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            axpy(av, &b[p * n..(p + 1) * n], orow);
+        }
+    }
+}
+
+/// `out[m×n] = a[m×k] @ b[k×n]`.
+pub(crate) fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    matmul_acc(a, b, m, k, n, out);
+}
+
+/// `out[m×p] += a[m×n] @ b[p×n]ᵀ` (row-by-row dot products).
+pub(crate) fn matmul_nt_acc(a: &[f32], b: &[f32], m: usize, n: usize, p: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), p * n);
+    debug_assert_eq!(out.len(), m * p);
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let orow = &mut out[i * p..(i + 1) * p];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o += dot(arow, &b[j * n..(j + 1) * n]);
+        }
+    }
+}
+
+/// `out[k×n] += a[m×k]ᵀ @ b[m×n]`.
+pub(crate) fn matmul_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                axpy(av, brow, &mut out[p * n..(p + 1) * n]);
+            }
+        }
+    }
+}
+
+/// Row-wise RMSNorm: `out[t] = x[t] * rstd[t] * w`; returns the
+/// reciprocal RMS per row (needed by the backward pass).
+pub(crate) fn rms_norm_rows(
+    x: &[f32],
+    w: &[f32],
+    eps: f64,
+    l: usize,
+    d: usize,
+    out: &mut [f32],
+    rstd: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), l * d);
+    debug_assert_eq!(w.len(), d);
+    debug_assert_eq!(out.len(), l * d);
+    debug_assert_eq!(rstd.len(), l);
+    for t in 0..l {
+        let xr = &x[t * d..(t + 1) * d];
+        let mut ms = 0.0f64;
+        for &v in xr {
+            ms += (v as f64) * (v as f64);
+        }
+        let r = (1.0 / (ms / d as f64 + eps).sqrt()) as f32;
+        rstd[t] = r;
+        let orow = &mut out[t * d..(t + 1) * d];
+        for ((o, &xv), &wv) in orow.iter_mut().zip(xr).zip(w) {
+            *o = xv * r * wv;
+        }
+    }
+}
+
+pub(crate) fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+pub(crate) fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// In-place softmax over `s` (max-subtracted, ascending accumulation so
+/// identical inputs give bitwise-identical outputs across call sites).
+pub(crate) fn softmax_inplace(s: &mut [f32]) {
+    let mut mx = f32::NEG_INFINITY;
+    for &v in s.iter() {
+        mx = mx.max(v);
+    }
+    let mut sum = 0.0f32;
+    for v in s.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in s.iter_mut() {
+        *v *= inv;
+    }
+}
+
+// -- parameter views -------------------------------------------------------
+
+/// Borrowed view over the 11-tensor parameter list.
+pub(crate) struct Weights<'a> {
+    pub embed: &'a [f32],
+    pub final_norm: &'a [f32],
+    tensors: &'a [TensorF],
+}
+
+/// Per-layer weight slices.
+pub(crate) struct LayerWeights<'a> {
+    pub ln1: &'a [f32],
+    pub wq: &'a [f32],
+    pub wk: &'a [f32],
+    pub wv: &'a [f32],
+    pub wo: &'a [f32],
+    pub ln2: &'a [f32],
+    pub wg: &'a [f32],
+    pub wu: &'a [f32],
+    pub wd: &'a [f32],
+}
+
+impl<'a> Weights<'a> {
+    pub fn split(params: &'a [TensorF]) -> Weights<'a> {
+        assert_eq!(params.len(), N_PARAMS, "native backend expects 11 parameter tensors");
+        Weights {
+            embed: params[P_EMBED].data(),
+            final_norm: params[P_FINAL_NORM].data(),
+            tensors: params,
+        }
+    }
+
+    pub fn layer(&self, n: usize) -> LayerWeights<'a> {
+        LayerWeights {
+            ln1: self.tensors[P_LN1].axis0(n),
+            wq: self.tensors[P_WQ].axis0(n),
+            wk: self.tensors[P_WK].axis0(n),
+            wv: self.tensors[P_WV].axis0(n),
+            wo: self.tensors[P_WO].axis0(n),
+            ln2: self.tensors[P_LN2].axis0(n),
+            wg: self.tensors[P_WG].axis0(n),
+            wu: self.tensors[P_WU].axis0(n),
+            wd: self.tensors[P_WD].axis0(n),
+        }
+    }
+}
+
+// -- the backend -----------------------------------------------------------
+
+/// Pure-Rust inference + training backend (see module docs).
+pub struct NativeBackend {
+    cfg: ModelConfig,
+    specs: Vec<ParamSpec>,
+    rope: RopeTable,
+    params: RefCell<Vec<TensorF>>,
+    /// Adam state (m, v), allocated on first train step.
+    opt_state: RefCell<Option<(Vec<TensorF>, Vec<TensorF>)>>,
+    train_shape: (usize, usize),
+}
+
+impl NativeBackend {
+    /// Create a backend with deterministic seeded weights.
+    pub fn new(cfg: ModelConfig, weight_seed: u64) -> NativeBackend {
+        let specs = native_param_specs(&cfg);
+        let params = init_params(&cfg, &specs, weight_seed);
+        // `tiny` mirrors the python AOT train bucket (B=8, L=256);
+        // other configs default to a modest packed batch.
+        let train_shape = if cfg.name == "tiny" {
+            (8, 256)
+        } else {
+            (4, cfg.max_len.min(256))
+        };
+        NativeBackend {
+            rope: RopeTable::new(cfg.head_dim, cfg.rope_theta),
+            specs,
+            params: RefCell::new(params),
+            opt_state: RefCell::new(None),
+            train_shape,
+            cfg,
+        }
+    }
+
+    /// Override the `(batch, seq_len)` used by the training driver.
+    pub fn with_train_shape(mut self, batch: usize, seq_len: usize) -> NativeBackend {
+        assert!(batch > 0 && seq_len > 1);
+        self.train_shape = (batch, seq_len);
+        self
+    }
+
+    fn check_tokens(&self, tokens: &[i32]) -> Result<()> {
+        ensure!(!tokens.is_empty(), "empty token sequence");
+        for &t in tokens {
+            ensure!(
+                t >= 0 && (t as usize) < self.cfg.vocab,
+                "token id {t} out of vocab range 0..{}",
+                self.cfg.vocab
+            );
+        }
+        Ok(())
+    }
+
+    /// Shared prefill body. `past = (past_k, past_v, past_len)` adds a
+    /// cached-context prefix every query token attends to; `pos0` is
+    /// the RoPE position of the first token. Returns
+    /// `(last_logits_or_empty, k, v)` with KV shaped
+    /// `(layers, L, kv_heads, head_dim)`.
+    fn forward_prefill(
+        &self,
+        tokens: &[i32],
+        pos0: usize,
+        past: Option<(&TensorF, &TensorF, usize)>,
+        want_logits: bool,
+    ) -> Result<(Vec<f32>, TensorF, TensorF)> {
+        self.check_tokens(tokens)?;
+        let cfg = &self.cfg;
+        let (dm, nh, kvh, hd, ff) = (cfg.d_model, cfg.heads, cfg.kv_heads, cfg.head_dim, cfg.d_ff);
+        let rep = nh / kvh;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let l = tokens.len();
+
+        let past_len = match past {
+            Some((pk, pv, n)) => {
+                let want = [cfg.layers, pk.dims().get(1).copied().unwrap_or(0), kvh, hd];
+                ensure!(
+                    pk.dims() == &want[..] && pv.dims() == &want[..],
+                    "past KV dims {:?}/{:?} do not match (layers={}, C, kv_heads={}, head_dim={})",
+                    pk.dims(),
+                    pv.dims(),
+                    cfg.layers,
+                    kvh
+                );
+                ensure!(
+                    n <= pk.dims()[1],
+                    "past_len {n} exceeds context capacity {}",
+                    pk.dims()[1]
+                );
+                n
+            }
+            None => 0,
+        };
+
+        let params = self.params.borrow();
+        let w = Weights::split(&params);
+
+        // x = embed[tokens]
+        let mut x = vec![0.0f32; l * dm];
+        for (t, &tok) in tokens.iter().enumerate() {
+            let row = &w.embed[tok as usize * dm..(tok as usize + 1) * dm];
+            x[t * dm..(t + 1) * dm].copy_from_slice(row);
+        }
+
+        let mut k_all = Tensor::zeros(&[cfg.layers, l, kvh, hd]);
+        let mut v_all = Tensor::zeros(&[cfg.layers, l, kvh, hd]);
+
+        // Scratch buffers reused across layers.
+        let mut h1 = vec![0.0f32; l * dm];
+        let mut rstd = vec![0.0f32; l];
+        let mut q = vec![0.0f32; l * nh * hd];
+        let mut kb = vec![0.0f32; l * kvh * hd];
+        let mut vb = vec![0.0f32; l * kvh * hd];
+        let mut o = vec![0.0f32; l * nh * hd];
+        let mut mg = vec![0.0f32; l * ff];
+        let mut mu = vec![0.0f32; l * ff];
+        let mut scores = vec![0.0f32; past_len + l];
+
+        for n in 0..cfg.layers {
+            let lw = w.layer(n);
+
+            // Attention sublayer.
+            rms_norm_rows(&x, lw.ln1, cfg.norm_eps, l, dm, &mut h1, &mut rstd);
+            matmul_into(&h1, lw.wq, l, dm, nh * hd, &mut q);
+            matmul_into(&h1, lw.wk, l, dm, kvh * hd, &mut kb);
+            matmul_into(&h1, lw.wv, l, dm, kvh * hd, &mut vb);
+            for t in 0..l {
+                let pos = (pos0 + t) as i64;
+                for h in 0..nh {
+                    self.rope.rotate_head(&mut q[(t * nh + h) * hd..(t * nh + h + 1) * hd], pos);
+                }
+                for h in 0..kvh {
+                    self.rope
+                        .rotate_head(&mut kb[(t * kvh + h) * hd..(t * kvh + h + 1) * hd], pos);
+                }
+            }
+            k_all.axis0_mut(n).copy_from_slice(&kb);
+            v_all.axis0_mut(n).copy_from_slice(&vb);
+
+            let empty: &[f32] = &[];
+            let (pk_l, pv_l) = match past {
+                Some((pk, pv, _)) => (pk.axis0(n), pv.axis0(n)),
+                None => (empty, empty),
+            };
+            o.fill(0.0);
+            for t in 0..l {
+                for h in 0..nh {
+                    let kh = h / rep;
+                    let qv = &q[(t * nh + h) * hd..(t * nh + h + 1) * hd];
+                    let n_keys = past_len + t + 1;
+                    for (j, s) in scores.iter_mut().take(past_len).enumerate() {
+                        *s = dot(qv, &pk_l[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd]) * scale;
+                    }
+                    for j in 0..=t {
+                        scores[past_len + j] =
+                            dot(qv, &kb[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd]) * scale;
+                    }
+                    softmax_inplace(&mut scores[..n_keys]);
+                    let ov = &mut o[(t * nh + h) * hd..(t * nh + h + 1) * hd];
+                    for j in 0..past_len {
+                        axpy(scores[j], &pv_l[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd], ov);
+                    }
+                    for j in 0..=t {
+                        axpy(
+                            scores[past_len + j],
+                            &vb[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd],
+                            ov,
+                        );
+                    }
+                }
+            }
+            matmul_acc(&o, lw.wo, l, nh * hd, dm, &mut x);
+
+            // MLP sublayer.
+            rms_norm_rows(&x, lw.ln2, cfg.norm_eps, l, dm, &mut h1, &mut rstd);
+            matmul_into(&h1, lw.wg, l, dm, ff, &mut mg);
+            matmul_into(&h1, lw.wu, l, dm, ff, &mut mu);
+            for (g, &u) in mg.iter_mut().zip(&mu) {
+                *g = silu(*g) * u;
+            }
+            matmul_acc(&mg, lw.wd, l, ff, dm, &mut x);
+        }
+
+        let logits = if want_logits {
+            let mut hf = vec![0.0f32; dm];
+            let mut r1 = [0.0f32; 1];
+            rms_norm_rows(&x[(l - 1) * dm..], w.final_norm, cfg.norm_eps, 1, dm, &mut hf, &mut r1);
+            let mut out = vec![0.0f32; cfg.vocab];
+            matmul_nt_acc(&hf, w.embed, 1, dm, cfg.vocab, &mut out);
+            out
+        } else {
+            Vec::new()
+        };
+        Ok((logits, k_all, v_all))
+    }
+}
+
+impl Backend for NativeBackend {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn param_specs(&self) -> &[ParamSpec] {
+        &self.specs
+    }
+
+    fn set_params(&self, tensors: Vec<TensorF>) -> Result<()> {
+        if tensors.len() != self.specs.len() {
+            bail!(
+                "expected {} parameter tensors, got {}",
+                self.specs.len(),
+                tensors.len()
+            );
+        }
+        for (spec, t) in self.specs.iter().zip(&tensors) {
+            if spec.shape != t.dims() {
+                bail!("param '{}' shape {:?} != {:?}", spec.name, t.dims(), spec.shape);
+            }
+        }
+        *self.params.borrow_mut() = tensors;
+        Ok(())
+    }
+
+    fn params_host(&self) -> Result<Vec<TensorF>> {
+        Ok(self.params.borrow().clone())
+    }
+
+    fn reset_opt_state(&self) {
+        *self.opt_state.borrow_mut() = None;
+    }
+
+    fn prefill_full(&self, tokens: &[i32]) -> Result<PrefillFullOut> {
+        let (last_logits, k, v) = self.forward_prefill(tokens, 0, None, true)?;
+        Ok(PrefillFullOut { last_logits, k, v })
+    }
+
+    fn prefill_block(&self, tokens: &[i32]) -> Result<(TensorF, TensorF)> {
+        let (_, k, v) = self.forward_prefill(tokens, 0, None, false)?;
+        Ok((k, v))
+    }
+
+    fn prefill_final_at(
+        &self,
+        tokens: &[i32],
+        past_k: &TensorF,
+        past_v: &TensorF,
+        past_len: usize,
+        q_pos0: usize,
+    ) -> Result<PrefillFinalOut> {
+        let (last_logits, k, v) =
+            self.forward_prefill(tokens, q_pos0, Some((past_k, past_v, past_len)), true)?;
+        Ok(PrefillFinalOut { last_logits, k, v })
+    }
+
+    fn decode(
+        &self,
+        token: i32,
+        k_cache: &TensorF,
+        v_cache: &TensorF,
+        cache_len: usize,
+    ) -> Result<DecodeOut> {
+        self.check_tokens(&[token])?;
+        let cfg = &self.cfg;
+        let (dm, nh, kvh, hd, ff) = (cfg.d_model, cfg.heads, cfg.kv_heads, cfg.head_dim, cfg.d_ff);
+        let rep = nh / kvh;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let c = k_cache.dims().get(1).copied().unwrap_or(0);
+        let want = [cfg.layers, c, kvh, hd];
+        ensure!(
+            k_cache.dims() == &want[..] && v_cache.dims() == &want[..],
+            "decode cache dims {:?}/{:?} do not match model",
+            k_cache.dims(),
+            v_cache.dims()
+        );
+        ensure!(cache_len < c, "cache_len {cache_len} >= capacity {c}");
+
+        let params = self.params.borrow();
+        let w = Weights::split(&params);
+        let mut k_out = k_cache.clone();
+        let mut v_out = v_cache.clone();
+
+        let mut x = vec![0.0f32; dm];
+        x.copy_from_slice(&w.embed[token as usize * dm..(token as usize + 1) * dm]);
+
+        let mut h1 = vec![0.0f32; dm];
+        let mut rstd = [0.0f32; 1];
+        let mut q = vec![0.0f32; nh * hd];
+        let mut kb = vec![0.0f32; kvh * hd];
+        let mut vb = vec![0.0f32; kvh * hd];
+        let mut o = vec![0.0f32; nh * hd];
+        let mut mg = vec![0.0f32; ff];
+        let mut mu = vec![0.0f32; ff];
+        let mut scores = vec![0.0f32; cache_len + 1];
+        let pos = cache_len as i64;
+
+        for n in 0..cfg.layers {
+            let lw = w.layer(n);
+            rms_norm_rows(&x, lw.ln1, cfg.norm_eps, 1, dm, &mut h1, &mut rstd);
+            matmul_into(&h1, lw.wq, 1, dm, nh * hd, &mut q);
+            matmul_into(&h1, lw.wk, 1, dm, kvh * hd, &mut kb);
+            matmul_into(&h1, lw.wv, 1, dm, kvh * hd, &mut vb);
+            for h in 0..nh {
+                self.rope.rotate_head(&mut q[h * hd..(h + 1) * hd], pos);
+            }
+            for h in 0..kvh {
+                self.rope.rotate_head(&mut kb[h * hd..(h + 1) * hd], pos);
+            }
+            {
+                let kl = k_out.axis0_mut(n);
+                kl[cache_len * kvh * hd..(cache_len + 1) * kvh * hd].copy_from_slice(&kb);
+                let vl = v_out.axis0_mut(n);
+                vl[cache_len * kvh * hd..(cache_len + 1) * kvh * hd].copy_from_slice(&vb);
+            }
+            let kl = k_out.axis0(n);
+            let vl = v_out.axis0(n);
+            o.fill(0.0);
+            for h in 0..nh {
+                let kh = h / rep;
+                let qv = &q[h * hd..(h + 1) * hd];
+                for (j, s) in scores.iter_mut().enumerate() {
+                    *s = dot(qv, &kl[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd]) * scale;
+                }
+                softmax_inplace(&mut scores);
+                let ov = &mut o[h * hd..(h + 1) * hd];
+                for (j, &p) in scores.iter().enumerate() {
+                    axpy(p, &vl[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd], ov);
+                }
+            }
+            matmul_acc(&o, lw.wo, 1, nh * hd, dm, &mut x);
+
+            rms_norm_rows(&x, lw.ln2, cfg.norm_eps, 1, dm, &mut h1, &mut rstd);
+            matmul_into(&h1, lw.wg, 1, dm, ff, &mut mg);
+            matmul_into(&h1, lw.wu, 1, dm, ff, &mut mu);
+            for (g, &u) in mg.iter_mut().zip(&mu) {
+                *g = silu(*g) * u;
+            }
+            matmul_acc(&mg, lw.wd, 1, ff, dm, &mut x);
+        }
+
+        let mut hf = vec![0.0f32; dm];
+        rms_norm_rows(&x, w.final_norm, cfg.norm_eps, 1, dm, &mut hf, &mut rstd);
+        let mut logits = vec![0.0f32; cfg.vocab];
+        matmul_nt_acc(&hf, w.embed, 1, dm, cfg.vocab, &mut logits);
+        Ok(DecodeOut { logits, k_cache: k_out, v_cache: v_out })
+    }
+
+    fn train_step(
+        &self,
+        step: usize,
+        lr: f32,
+        tokens: &TensorI,
+        seg: &TensorI,
+        loss_mask: &TensorF,
+    ) -> Result<TrainOut> {
+        let (loss, grads) = {
+            let params = self.params.borrow();
+            native_train::loss_and_grads(&self.cfg, &self.rope, &params, tokens, seg, loss_mask)?
+        };
+        let mut params = self.params.borrow_mut();
+        let mut opt = self.opt_state.borrow_mut();
+        if opt.is_none() {
+            let zeros: Vec<TensorF> =
+                self.specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+            *opt = Some((zeros.clone(), zeros));
+        }
+        let (m_state, v_state) = opt.as_mut().unwrap();
+        native_train::adam_update(&mut params, grads, m_state, v_state, step, lr);
+        Ok(TrainOut { loss })
+    }
+
+    fn final_ctx_capacity(&self, ctx_len: usize) -> Result<usize> {
+        Ok(ctx_len)
+    }
+
+    fn final_q_capacity(&self) -> Result<usize> {
+        Ok(self.cfg.max_len)
+    }
+
+    fn decode_ctx_capacity(&self) -> Result<usize> {
+        Ok(self.cfg.max_len)
+    }
+
+    fn max_block_tokens(&self) -> Result<usize> {
+        Ok(self.cfg.max_len)
+    }
+
+    fn train_shape(&self) -> Result<(usize, usize)> {
+        Ok(self.train_shape)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use crate::config::ModelConfig;
+
+    /// A deliberately tiny config for fast unit tests.
+    pub fn micro_config() -> ModelConfig {
+        ModelConfig {
+            name: "micro".into(),
+            vocab: 24,
+            d_model: 16,
+            layers: 2,
+            heads: 2,
+            kv_heads: 1,
+            head_dim: 8,
+            d_ff: 32,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+            max_len: 64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_util::micro_config;
+    use super::*;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new(micro_config(), 7)
+    }
+
+    #[test]
+    fn specs_match_python_layout() {
+        let cfg = ModelConfig::builtin("tiny").unwrap();
+        let specs = native_param_specs(&cfg);
+        assert_eq!(specs.len(), N_PARAMS);
+        assert_eq!(specs[P_EMBED].shape, vec![261, 128]);
+        assert_eq!(specs[P_WQ].shape, vec![4, 128, 128]);
+        assert_eq!(specs[P_WK].shape, vec![4, 128, 64]);
+        assert_eq!(specs[P_WO].shape, vec![4, 128, 128]);
+        assert_eq!(specs[P_WG].shape, vec![4, 128, 344]);
+        assert_eq!(specs[P_WD].shape, vec![4, 344, 128]);
+        assert_eq!(specs[P_FINAL_NORM].shape, vec![128]);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let cfg = micro_config();
+        let specs = native_param_specs(&cfg);
+        let a = init_params(&cfg, &specs, 1);
+        let b = init_params(&cfg, &specs, 1);
+        let c = init_params(&cfg, &specs, 2);
+        assert_eq!(a[P_EMBED], b[P_EMBED]);
+        assert!(a[P_EMBED].max_abs_diff(&c[P_EMBED]) > 1e-4);
+        // Norm weights start at exactly one.
+        assert!(a[P_LN1].data().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn matmul_helpers_agree_with_reference() {
+        // a = [[1,2],[3,4],[5,6]] (3x2), b = [[1,0,2],[0,1,3]] (2x3)
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [1.0f32, 0.0, 2.0, 0.0, 1.0, 3.0];
+        let mut c = vec![0.0f32; 9];
+        matmul_into(&a, &b, 3, 2, 3, &mut c);
+        assert_eq!(c, vec![1.0, 2.0, 8.0, 3.0, 4.0, 18.0, 5.0, 6.0, 28.0]);
+        // aᵀ @ c where c is 3x3: (2x3)
+        let mut tn = vec![0.0f32; 2 * 3];
+        matmul_tn_acc(&a, &c, 3, 2, 3, &mut tn);
+        // ref: a^T = [[1,3,5],[2,4,6]]; a^T@c row0 = 1*c0 + 3*c1 + 5*c2
+        assert_eq!(tn[0], 1.0 * 1.0 + 3.0 * 3.0 + 5.0 * 5.0);
+        // nt: c @ bᵀ? use b (2x3): rows dot rows.
+        let mut nt = vec![0.0f32; 3 * 2];
+        matmul_nt_acc(&c, &b, 3, 3, 2, &mut nt);
+        assert_eq!(nt[0], 1.0 * 1.0 + 2.0 * 0.0 + 8.0 * 2.0);
+        assert_eq!(nt[1], 1.0 * 0.0 + 2.0 * 1.0 + 8.0 * 3.0);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut s = vec![1.0f32, 2.0, 3.0];
+        softmax_inplace(&mut s);
+        let sum: f32 = s.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(s[2] > s[1] && s[1] > s[0]);
+    }
+
+    #[test]
+    fn prefill_full_shapes_and_determinism() {
+        let b = backend();
+        let toks = vec![1, 2, 3, 4, 5, 6, 7];
+        let a = b.prefill_full(&toks).unwrap();
+        let c = b.prefill_full(&toks).unwrap();
+        assert_eq!(a.last_logits.len(), 24);
+        assert!(a.last_logits.iter().all(|x| x.is_finite()));
+        assert_eq!(a.k.dims(), &[2, 7, 1, 8]);
+        assert_eq!(a.v.dims(), &[2, 7, 1, 8]);
+        assert_eq!(a.last_logits, c.last_logits);
+        assert_eq!(a.k, c.k);
+    }
+
+    #[test]
+    fn prefill_rejects_bad_tokens() {
+        let b = backend();
+        assert!(b.prefill_full(&[]).is_err());
+        assert!(b.prefill_full(&[0, 24]).is_err());
+        assert!(b.prefill_full(&[-1]).is_err());
+    }
+
+    #[test]
+    fn decode_appends_kv_at_cache_len() {
+        let b = backend();
+        let pre = b.prefill_full(&[1, 2, 3]).unwrap();
+        let cap = 10;
+        // Assemble the dense cache: copy the 3-token prefix per layer.
+        let mut kc = b.kv_zeros(cap);
+        let mut vc = b.kv_zeros(cap);
+        let row = 8;
+        for n in 0..2 {
+            kc.axis0_mut(n)[..3 * row].copy_from_slice(&pre.k.axis0(n)[..3 * row]);
+            vc.axis0_mut(n)[..3 * row].copy_from_slice(&pre.v.axis0(n)[..3 * row]);
+        }
+        let out = b.decode(4, &kc, &vc, 3).unwrap();
+        assert!(out.logits.iter().all(|x| x.is_finite()));
+        let l0 = out.k_cache.axis0(0);
+        assert!(l0[3 * row..4 * row].iter().any(|&x| x != 0.0));
+        assert!(l0[4 * row..5 * row].iter().all(|&x| x == 0.0));
+        // Deterministic.
+        let out2 = b.decode(4, &kc, &vc, 3).unwrap();
+        assert_eq!(out.logits, out2.logits);
+        // Capacity guard.
+        assert!(b.decode(4, &kc, &vc, 10).is_err());
+    }
+
+    #[test]
+    fn set_params_checks_layout() {
+        let b = backend();
+        let ps = b.params_host().unwrap();
+        assert!(b.set_params(ps.clone()).is_ok());
+        let mut bad = ps;
+        bad.pop();
+        assert!(b.set_params(bad).is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_via_backend() {
+        let b = backend();
+        let dir = std::env::temp_dir().join("block_attn_native_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("micro.bin");
+        b.save_params_file(&path).unwrap();
+        let b2 = NativeBackend::new(micro_config(), 999);
+        let before = b2.prefill_full(&[1, 2, 3]).unwrap().last_logits;
+        b2.load_params_file(&path).unwrap();
+        let after = b2.prefill_full(&[1, 2, 3]).unwrap().last_logits;
+        let want = b.prefill_full(&[1, 2, 3]).unwrap().last_logits;
+        assert_ne!(before, after, "checkpoint load must change the weights");
+        assert_eq!(after, want, "checkpoint must reproduce the source model");
+    }
+
+    #[test]
+    fn capacities_are_exact() {
+        let b = backend();
+        assert_eq!(b.final_ctx_capacity(37).unwrap(), 37);
+        assert_eq!(b.decode_ctx_capacity().unwrap(), 64);
+        assert_eq!(b.max_block_tokens().unwrap(), 64);
+        assert_eq!(b.final_q_capacity().unwrap(), 64);
+        assert_eq!(b.kv_zeros(5).dims(), &[2, 5, 1, 8]);
+    }
+}

@@ -1,0 +1,77 @@
+//! Flat-f32 checkpoint files, shared by every backend.
+//!
+//! A checkpoint is the concatenation of all parameter tensors as
+//! little-endian f32 in [`ParamSpec`] order — the same layout
+//! `python/compile/aot.py` writes for `init_file`, so checkpoints are
+//! interchangeable between the native and artifact backends (both use
+//! the manifest parameter order).
+
+use crate::config::ParamSpec;
+use crate::tensor::{Tensor, TensorF};
+use anyhow::{bail, Context, Result};
+
+/// Read a flat little-endian f32 checkpoint into the given layout.
+pub fn read_flat_params(path: &std::path::Path, specs: &[ParamSpec]) -> Result<Vec<TensorF>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    let total: usize = specs.iter().map(|s| s.len()).sum();
+    if bytes.len() != total * 4 {
+        bail!(
+            "checkpoint {path:?} has {} bytes, expected {} ({} f32)",
+            bytes.len(),
+            total * 4,
+            total
+        );
+    }
+    let mut floats = Vec::with_capacity(total);
+    for c in bytes.chunks_exact(4) {
+        floats.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    let mut out = Vec::with_capacity(specs.len());
+    let mut off = 0;
+    for s in specs {
+        let n = s.len();
+        out.push(Tensor::from_vec(&s.shape, floats[off..off + n].to_vec()));
+        off += n;
+    }
+    Ok(out)
+}
+
+/// Write tensors as a flat little-endian f32 checkpoint.
+pub fn write_flat_params(path: &std::path::Path, tensors: &[TensorF]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut bytes = Vec::with_capacity(tensors.iter().map(|t| t.len() * 4).sum());
+    for t in tensors {
+        for x in t.data() {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_params_roundtrip() {
+        let dir = std::env::temp_dir().join("block_attn_test_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.bin");
+        let t1 = Tensor::from_vec(&[2, 3], vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let t2 = Tensor::from_vec(&[2], vec![-1.0f32, 0.5]);
+        write_flat_params(&path, &[t1.clone(), t2.clone()]).unwrap();
+        let specs = vec![
+            ParamSpec { name: "a".into(), shape: vec![2, 3] },
+            ParamSpec { name: "b".into(), shape: vec![2] },
+        ];
+        let back = read_flat_params(&path, &specs).unwrap();
+        assert_eq!(back[0], t1);
+        assert_eq!(back[1], t2);
+        // Wrong layout must fail loudly.
+        let bad = vec![ParamSpec { name: "a".into(), shape: vec![9] }];
+        assert!(read_flat_params(&path, &bad).is_err());
+    }
+}

@@ -20,6 +20,7 @@
 //! scale. Python is nowhere in this path.
 
 use crate::coordinator::{AttentionMode, Coordinator, Request, Response};
+use crate::runtime::Backend;
 use crate::tokenizer::ByteTokenizer;
 use crate::util::json::Json;
 use crate::util::pool::ThreadPool;
@@ -91,10 +92,12 @@ pub struct EngineHandle {
 }
 
 impl EngineHandle {
-    /// Spawn the engine thread around a coordinator factory (the factory
-    /// runs *on* the engine thread since the engine is `!Send`).
-    pub fn spawn(
-        make: impl FnOnce() -> Result<Coordinator> + Send + 'static,
+    /// Spawn the engine thread around a coordinator factory. The factory
+    /// runs *on* the engine thread: backends need not be `Send` (the
+    /// PJRT engine wraps raw C pointers), so the coordinator is built
+    /// where it lives.
+    pub fn spawn<B: Backend + 'static>(
+        make: impl FnOnce() -> Result<Coordinator<B>> + Send + 'static,
     ) -> Result<EngineHandle> {
         let (tx, rx) = mpsc::channel::<Job>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();

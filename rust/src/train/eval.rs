@@ -3,6 +3,7 @@
 //! appear in the predicted output").
 
 use crate::coordinator::{AttentionMode, Coordinator, Request};
+use crate::runtime::Backend;
 use crate::tokenizer::ByteTokenizer;
 use crate::util::rng::Rng;
 use crate::workload::Sample;
@@ -33,7 +34,11 @@ impl Default for EvalOpts {
 ///
 /// Zero-shot samples (no context blocks) always run in full-attention
 /// mode — the paper's fallback for MMLU/IFEval/HumanEval (§3.1).
-pub fn accuracy(coord: &mut Coordinator, samples: &[Sample], opts: &EvalOpts) -> Result<f64> {
+pub fn accuracy<B: Backend>(
+    coord: &mut Coordinator<B>,
+    samples: &[Sample],
+    opts: &EvalOpts,
+) -> Result<f64> {
     if opts.fresh_cache {
         coord.clear_cache();
     }
@@ -83,7 +88,11 @@ pub fn eval_set(
 /// Scored through the *serving* path (prefill → teacher-forced decode),
 /// so every mode including the position-corrupting baselines is
 /// measurable.
-pub fn answer_nll(coord: &mut Coordinator, samples: &[Sample], opts: &EvalOpts) -> Result<f64> {
+pub fn answer_nll<B: Backend>(
+    coord: &mut Coordinator<B>,
+    samples: &[Sample],
+    opts: &EvalOpts,
+) -> Result<f64> {
     if opts.fresh_cache {
         coord.clear_cache();
     }

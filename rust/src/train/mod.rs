@@ -11,6 +11,7 @@ pub mod eval;
 pub mod presets;
 
 use crate::coordinator::Coordinator;
+use crate::runtime::Backend;
 use crate::tokenizer::ByteTokenizer;
 use crate::util::rng::Rng;
 use crate::workload::Sample;
@@ -105,23 +106,14 @@ pub fn lr_at(cfg: &TrainConfig, step: usize) -> f32 {
 /// `on_eval` fires every `eval_every` steps *and* after the final step;
 /// the KV cache is cleared first (cached states are stale once the
 /// parameters move).
-pub fn train(
-    coord: &mut Coordinator,
+pub fn train<B: Backend>(
+    coord: &mut Coordinator<B>,
     cfg: &TrainConfig,
     mix: &DataMix,
-    mut on_eval: impl FnMut(&mut Coordinator, usize),
+    mut on_eval: impl FnMut(&mut Coordinator<B>, usize),
 ) -> Result<Vec<f32>> {
     let tok = ByteTokenizer::new();
-    let entry = coord
-        .engine()
-        .artifacts()
-        .entries
-        .iter()
-        .find(|e| e.kind == crate::config::EntryKind::TrainStep)
-        .ok_or_else(|| anyhow::anyhow!("no train artifact for this config"))?
-        .clone();
-    let b = entry.size("B")?;
-    let l = entry.size("L")?;
+    let (b, l) = coord.engine().train_shape()?;
     let mut rng = Rng::new(cfg.seed);
     let mut losses = Vec::with_capacity(cfg.steps);
 

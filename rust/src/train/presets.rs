@@ -13,6 +13,7 @@
 use super::eval::{accuracy, answer_nll, eval_set, EvalOpts};
 use super::{train, DataMix, TrainConfig, TrainMode};
 use crate::coordinator::{AttentionMode, Coordinator};
+use crate::runtime::Backend;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workload::general::{GeneralGen, GeneralTask};
@@ -149,8 +150,8 @@ impl PresetOpts {
 /// Writes to `out_dir`: `tiny_base.bin`, `tiny_rag.bin`, `tiny_block.bin`,
 /// `fig4.json` (accuracy of both modes vs fine-tune step) and
 /// `losses.json`.
-pub fn run_table1_training(
-    coord: &mut Coordinator,
+pub fn run_table1_training<B: Backend>(
+    coord: &mut Coordinator<B>,
     out_dir: &Path,
     opts: &PresetOpts,
 ) -> Result<()> {
@@ -203,8 +204,8 @@ pub fn run_table1_training(
 /// Records accuracy **and** teacher-forced answer NLL for both modes at
 /// each eval point: at tiny-model compute scale the NLL gap closes well
 /// before generation accuracy separates, so it is the Figure-4 signal.
-fn run_block_phase(
-    coord: &mut Coordinator,
+fn run_block_phase<B: Backend>(
+    coord: &mut Coordinator<B>,
     out_dir: &Path,
     opts: &PresetOpts,
     all_losses: &mut Vec<(String, Vec<f32>)>,
@@ -228,7 +229,7 @@ fn run_block_phase(
         ..Default::default()
     };
     let losses = train(coord, &cfg, &rag_mix(TRAIN_WORLD_SEED), |c, step| {
-        let eval = |c: &mut Coordinator, mode| {
+        let eval = |c: &mut Coordinator<B>, mode| {
             let o = EvalOpts { mode, max_new_tokens: 48, fresh_cache: true };
             let acc = accuracy(c, &eval_samples, &o).unwrap_or(f64::NAN);
             let nll = answer_nll(c, &eval_samples, &o).unwrap_or(f64::NAN);

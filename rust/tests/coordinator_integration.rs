@@ -1,17 +1,22 @@
-//! Coordinator-level integration tests over real artifacts: the serving
-//! pipeline (segment → plan → prefill → decode) with cache semantics.
+//! Coordinator-level integration tests: the serving pipeline
+//! (segment → plan → prefill → decode) with cache semantics.
+//!
+//! Hermetic: they run on the pure-Rust [`NativeBackend`], so
+//! `cargo test -q` exercises coordinator → cache → RoPE re-encode →
+//! decode end to end with no artifacts directory and no XLA. The same
+//! suite runs against real AOT artifacts via the `xla_artifacts` module
+//! at the bottom (`--features xla` + `make artifacts`).
 
-use block_attn::config::{default_artifacts_dir, Manifest};
+use block_attn::config::ModelConfig;
 use block_attn::coordinator::batcher::{run_batch, BatchPolicy};
 use block_attn::coordinator::{AttentionMode, Coordinator, Request};
+use block_attn::runtime::NativeBackend;
 use block_attn::tokenizer::ByteTokenizer;
-use block_attn::workload::rag::{RagGen, RagVariant};
 use block_attn::util::rng::Rng;
-use block_attn::ModelEngine;
+use block_attn::workload::rag::{RagGen, RagVariant};
 
-fn coordinator() -> Coordinator {
-    let manifest = Manifest::load(default_artifacts_dir()).expect("run `make artifacts`");
-    let engine = ModelEngine::new(&manifest, "tiny").expect("engine");
+fn coordinator() -> Coordinator<NativeBackend> {
+    let engine = NativeBackend::new(ModelConfig::builtin("tiny").unwrap(), 0xB10C);
     Coordinator::new(engine, 64 << 20)
 }
 
@@ -125,8 +130,7 @@ fn continuous_batching_serves_a_closed_set() {
 #[test]
 fn cache_budget_evicts_but_serving_still_correct() {
     // A tiny budget forces eviction churn; outputs must stay correct.
-    let manifest = Manifest::load(default_artifacts_dir()).unwrap();
-    let engine = ModelEngine::new(&manifest, "tiny").unwrap();
+    let engine = NativeBackend::new(ModelConfig::builtin("tiny").unwrap(), 0xB10C);
     let mut coord = Coordinator::new(engine, 300_000); // ~few blocks only
     let req = rag_request(1, 66, AttentionMode::Block);
     let cold = coord.process(&req).unwrap();
@@ -173,4 +177,81 @@ fn dry_plan_leaves_no_pins() {
     assert_eq!(plan.cached_count(), plan.items.len());
     // If pins leaked, clear_cache would panic.
     coord.clear_cache();
+}
+
+/// The native train driver runs end to end through the coordinator: a
+/// few steps on a small shape, loss finite and parameters actually move.
+#[test]
+fn native_train_steps_run_through_coordinator() {
+    use block_attn::train::{train, DataMix, TrainConfig, TrainMode};
+    use block_attn::workload::Sample;
+
+    let engine = NativeBackend::new(ModelConfig::builtin("tiny").unwrap(), 0xB10C)
+        .with_train_shape(2, 64);
+    let before = block_attn::Backend::params_host(&engine).unwrap();
+    let mut coord = Coordinator::new(engine, 16 << 20);
+    let mix = DataMix::new().add(1.0, |r: &mut Rng| {
+        let v = (b'a' + r.below(4) as u8) as char;
+        Sample::bare(
+            vec![format!("the key of door is {v} .")],
+            "what is the key of door ?".into(),
+            v.to_string(),
+        )
+    });
+    let cfg = TrainConfig {
+        steps: 3,
+        lr: 1e-3,
+        warmup: 2,
+        seed: 1,
+        mode: TrainMode::Dual,
+        eval_every: 0,
+    };
+    let losses = train(&mut coord, &cfg, &mix, |_, _| {}).unwrap();
+    assert_eq!(losses.len(), 3);
+    assert!(losses.iter().all(|l| l.is_finite() && *l > 0.0));
+    let after = block_attn::Backend::params_host(coord.engine()).unwrap();
+    let moved = before
+        .iter()
+        .zip(&after)
+        .any(|(a, b)| a.max_abs_diff(b) > 1e-7);
+    assert!(moved, "train_step left the parameters untouched");
+}
+
+/// Artifact-backed smoke of the same pipeline (`--features xla`).
+#[cfg(feature = "xla")]
+mod xla_artifacts {
+    use super::*;
+    use block_attn::config::{default_artifacts_dir, Manifest};
+    use block_attn::ModelEngine;
+
+    fn coordinator() -> Coordinator<ModelEngine> {
+        let manifest = Manifest::load(default_artifacts_dir()).expect("run `make artifacts`");
+        let engine = ModelEngine::new(&manifest, "tiny").expect("engine");
+        Coordinator::new(engine, 64 << 20)
+    }
+
+    #[test]
+    fn cache_hits_do_not_change_output_on_artifacts() {
+        let mut coord = coordinator();
+        let req = rag_request(1, 11, AttentionMode::Block);
+        let cold = coord.process(&req).expect("cold");
+        let warm = coord.process(&req).expect("warm");
+        assert_eq!(cold.tokens, warm.tokens, "cache changed the output");
+        assert_eq!(warm.cached_blocks, warm.total_blocks);
+    }
+
+    #[test]
+    fn batching_serves_on_artifacts() {
+        let mut coord = coordinator();
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| rag_request(i, 100 + i, AttentionMode::Block))
+            .collect();
+        let out = run_batch(
+            &mut coord,
+            reqs,
+            &BatchPolicy { max_active: 2, max_active_tokens: 2048 },
+        )
+        .unwrap();
+        assert_eq!(out.len(), 4);
+    }
 }

@@ -1,20 +1,24 @@
-//! Integration tests over the real AOT artifacts (`make artifacts` first).
+//! Backend-level integration tests.
 //!
-//! The centerpiece is the **losslessness** of the Block-attention serving
-//! path in Rust: per-block prefill at local positions + native RoPE
-//! re-encode + context assembly + final-block prefill must reproduce the
-//! segment-masked forward exactly, and with a single block it must equal
-//! vanilla full-attention prefill bit-for-near-bit.
+//! They run hermetically against [`NativeBackend`] (no artifacts, no
+//! XLA): the centerpiece is the **losslessness** of the Block-attention
+//! serving path — per-block prefill at local positions + RoPE re-encode
+//! + context assembly + final-block prefill must reproduce vanilla
+//! full-attention prefill in the single-block case.
+//!
+//! Artifact-specific cases (bucket padding, Pallas-kernel parity, the
+//! AOT train step) live in the `xla_artifacts` module behind
+//! `--features xla` and additionally need `make artifacts`.
 
-use block_attn::config::{default_artifacts_dir, Manifest};
+use block_attn::config::ModelConfig;
+use block_attn::coordinator::write_ctx;
 use block_attn::rope::RopeTable;
-use block_attn::runtime::ModelEngine;
-use block_attn::tensor::Tensor;
+use block_attn::runtime::NativeBackend;
 use block_attn::util::rng::Rng;
+use block_attn::Backend;
 
-fn engine() -> ModelEngine {
-    let manifest = Manifest::load(default_artifacts_dir()).expect("run `make artifacts`");
-    ModelEngine::new(&manifest, "tiny").expect("engine")
+fn engine() -> NativeBackend {
+    NativeBackend::new(ModelConfig::builtin("tiny").unwrap(), 0xB10C)
 }
 
 fn rand_tokens(rng: &mut Rng, n: usize, vocab: usize) -> Vec<i32> {
@@ -41,55 +45,6 @@ fn prefill_full_runs_and_is_deterministic() {
     assert!(a.last_logits.iter().all(|x| x.is_finite()));
     close(&a.last_logits, &b.last_logits, 0.0, "determinism");
     assert_eq!(a.k.dims(), &[4, 100, 2, 32]);
-}
-
-#[test]
-fn bucket_padding_is_transparent() {
-    // The same prompt through two different length buckets must agree.
-    let eng = engine();
-    let mut rng = Rng::new(2);
-    let toks = rand_tokens(&mut rng, 120, eng.config().vocab);
-    let a = eng.prefill_full(&toks).unwrap(); // L=128 bucket
-    // Force the larger bucket by padding the call path: prefill of the
-    // same tokens must not depend on the bucket chosen, so compare
-    // against a manual longer prompt truncated by `length`: here we rely
-    // on pick_bucket(120)=128 vs an L=320 run via a longer pad.
-    let mut padded = toks.clone();
-    padded.resize(200, 0); // forces the 320 bucket
-    let b = eng.prefill_full(&padded[..200].to_vec()).unwrap();
-    // Only compare the KV of the first 120 positions: logits differ (the
-    // padded prompt has a different "last" position), but the causal KV
-    // prefix must match across buckets.
-    let ka = a.k.data();
-    let kb = b.k.slice_axis0(0, 4); // same tensor, larger len — compare prefix per layer
-    let row = 2 * 32;
-    for layer in 0..4 {
-        let sa = &ka[layer * 120 * row..(layer * 120 + 120) * row];
-        let sb = &kb.data()[layer * 200 * row..(layer * 200 + 120) * row];
-        close(sa, sb, 1e-4, "kv prefix across buckets");
-    }
-}
-
-#[test]
-fn reencode_native_matches_pallas_artifact() {
-    let eng = engine();
-    let cfg = eng.config().clone();
-    let mut rng = Rng::new(3);
-    let dims = [cfg.layers, 64, cfg.kv_heads, cfg.head_dim];
-    let n: usize = dims.iter().product();
-    let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
-    let k = Tensor::from_vec(&dims, data);
-
-    let via_artifact = eng.reencode_k_artifact(&k, 137).unwrap();
-    let mut via_native = k.clone();
-    let rope = RopeTable::new(cfg.head_dim, cfg.rope_theta);
-    rope.reencode_block(via_native.data_mut(), cfg.layers, 64, cfg.kv_heads, 137);
-    close(
-        via_artifact.data(),
-        via_native.data(),
-        1e-4,
-        "rust rope vs pallas artifact",
-    );
 }
 
 /// The headline invariant: the cached-block serving path reproduces
@@ -120,13 +75,20 @@ fn block_path_equals_full_for_single_block() {
         .prefill_final(&query, &past_k, &past_v, block.len())
         .unwrap();
 
-    close(&got.last_logits, &want.last_logits, 5e-3, "single-block logits");
+    close(&got.last_logits, &want.last_logits, 1e-4, "single-block logits");
+    // The final block's own KV must equal the corresponding slice of the
+    // full run (they are the same computation).
+    close(
+        got.k.data(),
+        extract_tail(&want.k, block.len(), query.len()).data(),
+        1e-4,
+        "final-block keys",
+    );
 }
 
-/// Two blocks with native re-encoding: must match the same computation
-/// done monolithically with the *segment mask* (cross-checked against
-/// python in tests/test_model.py; here we check the decode continuation
-/// instead, which exercises cache assembly + decode).
+/// Two blocks with native re-encoding: the assembled context + decode
+/// continuation must be finite, deterministic, and write KV at the
+/// right cache slot.
 #[test]
 fn block_path_then_decode_is_consistent() {
     let eng = engine();
@@ -202,46 +164,154 @@ fn decode_matches_prefill_extension() {
     ext.push(next);
     let pre2 = eng.prefill_full(&ext).unwrap();
 
-    close(&dec.logits, &pre2.last_logits, 5e-3, "decode vs prefill ext");
+    close(&dec.logits, &pre2.last_logits, 1e-4, "decode vs prefill ext");
 }
 
+/// Superposition-style position origin: the query can sit at a position
+/// decoupled from the context length.
 #[test]
-fn train_step_reduces_loss_on_tiny_batch() {
+fn prefill_final_at_respects_q_pos0() {
     let eng = engine();
-    let entry = eng
-        .artifacts()
-        .entries
-        .iter()
-        .find(|e| e.kind == block_attn::config::EntryKind::TrainStep)
-        .expect("train artifact");
-    let (b, l) = (entry.sizes["B"], entry.sizes["L"]);
-    let mut rng = Rng::new(7);
-    // Low-entropy repeating data: loss must drop fast.
-    let toks: Vec<i32> = (0..b * l).map(|i| ((i % 7) + 1) as i32).collect();
-    let tokens = Tensor::from_vec(&[b, l], toks);
-    let seg = Tensor::from_vec(&[b, l], vec![0i32; b * l]);
-    let mask = Tensor::from_vec(&[b, l], vec![1.0f32; b * l]);
-    let mut losses = Vec::new();
-    for step in 0..4 {
-        let out = eng.train_step(step, 3e-3, &tokens, &seg, &mask).unwrap();
-        assert!(out.loss.is_finite());
-        losses.push(out.loss);
+    let cfg = eng.config().clone();
+    let mut rng = Rng::new(8);
+    let block = rand_tokens(&mut rng, 32, cfg.vocab);
+    let query = rand_tokens(&mut rng, 16, cfg.vocab);
+    let (k, v) = eng.prefill_block(&block).unwrap();
+    let mut past_k = eng.kv_zeros(32);
+    let mut past_v = eng.kv_zeros(32);
+    write_ctx(&mut past_k, &k, 0);
+    write_ctx(&mut past_v, &v, 0);
+    let at_ctx = eng
+        .prefill_final_at(&query, &past_k, &past_v, 32, 32)
+        .unwrap();
+    let at_zero = eng
+        .prefill_final_at(&query, &past_k, &past_v, 32, 0)
+        .unwrap();
+    let mut diff = 0.0f32;
+    for (a, b) in at_ctx.last_logits.iter().zip(&at_zero.last_logits) {
+        diff = diff.max((a - b).abs());
     }
-    assert!(
-        losses[3] < losses[0] - 0.3,
-        "loss did not drop: {losses:?}"
-    );
-    let _ = rng.next_u64();
+    assert!(diff > 1e-4, "q_pos0 had no effect on the logits");
 }
 
-/// Write a `(layers, len, kv, hd)` block into a context tensor at `at`.
-fn write_ctx(ctx: &mut block_attn::tensor::TensorF, block: &block_attn::tensor::TensorF, at: usize) {
-    let layers = ctx.dims()[0];
-    let row: usize = ctx.dims()[2] * ctx.dims()[3];
-    let blen = block.dims()[1];
+/// Slice the last `q_len` token rows from a `(layers, len, kv, hd)` KV.
+fn extract_tail(
+    kv: &block_attn::tensor::TensorF,
+    at: usize,
+    q_len: usize,
+) -> block_attn::tensor::TensorF {
+    let dims = kv.dims();
+    let (layers, row) = (dims[0], dims[2] * dims[3]);
+    let mut out = block_attn::tensor::Tensor::zeros(&[layers, q_len, dims[2], dims[3]]);
     for n in 0..layers {
-        let dst = ctx.axis0_mut(n);
-        let src = block.axis0(n);
-        dst[at * row..(at + blen) * row].copy_from_slice(&src[..blen * row]);
+        out.axis0_mut(n)
+            .copy_from_slice(&kv.axis0(n)[at * row..(at + q_len) * row]);
+    }
+    out
+}
+
+/// Artifact-backed cases (require `--features xla`, a real xla crate and
+/// `make artifacts`).
+#[cfg(feature = "xla")]
+mod xla_artifacts {
+    use super::{close, rand_tokens};
+    use block_attn::config::{default_artifacts_dir, Manifest};
+    use block_attn::coordinator::write_ctx;
+    use block_attn::rope::RopeTable;
+    use block_attn::runtime::ModelEngine;
+    use block_attn::tensor::Tensor;
+    use block_attn::util::rng::Rng;
+    use block_attn::Backend;
+
+    fn engine() -> ModelEngine {
+        let manifest = Manifest::load(default_artifacts_dir()).expect("run `make artifacts`");
+        ModelEngine::new(&manifest, "tiny").expect("engine")
+    }
+
+    #[test]
+    fn bucket_padding_is_transparent() {
+        // The same prompt through two different length buckets must agree.
+        let eng = engine();
+        let mut rng = Rng::new(2);
+        let toks = rand_tokens(&mut rng, 120, eng.config().vocab);
+        let a = eng.prefill_full(&toks).unwrap(); // L=128 bucket
+        let mut padded = toks.clone();
+        padded.resize(200, 0); // forces the 320 bucket
+        let b = eng.prefill_full(&padded[..200].to_vec()).unwrap();
+        // Only compare the KV of the first 120 positions: logits differ
+        // (the padded prompt has a different "last" position), but the
+        // causal KV prefix must match across buckets.
+        let ka = a.k.data();
+        let kb = b.k.slice_axis0(0, 4);
+        let row = 2 * 32;
+        for layer in 0..4 {
+            let sa = &ka[layer * 120 * row..(layer * 120 + 120) * row];
+            let sb = &kb.data()[layer * 200 * row..(layer * 200 + 120) * row];
+            close(sa, sb, 1e-4, "kv prefix across buckets");
+        }
+    }
+
+    #[test]
+    fn reencode_native_matches_pallas_artifact() {
+        let eng = engine();
+        let cfg = eng.config().clone();
+        let mut rng = Rng::new(3);
+        let dims = [cfg.layers, 64, cfg.kv_heads, cfg.head_dim];
+        let n: usize = dims.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let k = Tensor::from_vec(&dims, data);
+
+        let via_artifact = eng.reencode_k_artifact(&k, 137).unwrap();
+        let mut via_native = k.clone();
+        let rope = RopeTable::new(cfg.head_dim, cfg.rope_theta);
+        rope.reencode_block(via_native.data_mut(), cfg.layers, 64, cfg.kv_heads, 137);
+        close(
+            via_artifact.data(),
+            via_native.data(),
+            1e-4,
+            "rust rope vs pallas artifact",
+        );
+    }
+
+    #[test]
+    fn block_path_equals_full_for_single_block_on_artifacts() {
+        let eng = engine();
+        let cfg = eng.config().clone();
+        let mut rng = Rng::new(4);
+        let block = rand_tokens(&mut rng, 64, cfg.vocab);
+        let query = rand_tokens(&mut rng, 48, cfg.vocab);
+
+        let mut full = block.clone();
+        full.extend_from_slice(&query);
+        let want = eng.prefill_full(&full).unwrap();
+
+        let (k_local, v) = eng.prefill_block(&block).unwrap();
+        let cap = eng.final_ctx_capacity(block.len()).unwrap();
+        let mut past_k = eng.kv_zeros(cap);
+        let mut past_v = eng.kv_zeros(cap);
+        write_ctx(&mut past_k, &k_local, 0);
+        write_ctx(&mut past_v, &v, 0);
+        let got = eng
+            .prefill_final(&query, &past_k, &past_v, block.len())
+            .unwrap();
+        close(&got.last_logits, &want.last_logits, 5e-3, "single-block logits");
+    }
+
+    #[test]
+    fn train_step_reduces_loss_on_tiny_batch() {
+        let eng = engine();
+        let (b, l) = eng.train_shape().unwrap();
+        // Low-entropy repeating data: loss must drop fast.
+        let toks: Vec<i32> = (0..b * l).map(|i| ((i % 7) + 1) as i32).collect();
+        let tokens = Tensor::from_vec(&[b, l], toks);
+        let seg = Tensor::from_vec(&[b, l], vec![0i32; b * l]);
+        let mask = Tensor::from_vec(&[b, l], vec![1.0f32; b * l]);
+        let mut losses = Vec::new();
+        for step in 0..4 {
+            let out = eng.train_step(step, 3e-3, &tokens, &seg, &mask).unwrap();
+            assert!(out.loss.is_finite());
+            losses.push(out.loss);
+        }
+        assert!(losses[3] < losses[0] - 0.3, "loss did not drop: {losses:?}");
     }
 }

@@ -1,0 +1,217 @@
+//! Property tests for [`BlockKvCache`] (the paper's enabling data
+//! structure) driven by `util::prop` against a shadow model:
+//!
+//! 1. pinned entries are never evicted;
+//! 2. byte accounting equals the sum of live entries' KV bytes;
+//! 3. LRU evicts strictly in `last_used` order among unpinned entries;
+//! 4. `CacheStats` hit/miss/insert/evict counters are consistent with
+//!    the operation stream.
+
+use block_attn::kvcache::{block_key, BlockKvCache};
+use block_attn::rope::RopeTable;
+use block_attn::tensor::{Tensor, TensorF};
+use block_attn::util::prop;
+use block_attn::util::rng::Rng;
+use block_attn::{prop_assert, prop_assert_eq};
+use std::collections::HashMap;
+
+fn rope() -> RopeTable {
+    RopeTable::new(8, 10000.0)
+}
+
+/// KV pair for a block of `len` tokens: 2 layers × len × 1 head × 8 dim.
+fn kv(len: usize, fill: f32) -> (TensorF, TensorF) {
+    let mut k = Tensor::<f32>::zeros(&[2, len, 1, 8]);
+    k.data_mut().iter_mut().for_each(|x| *x = fill);
+    (k.clone(), k)
+}
+
+fn kv_bytes(len: usize) -> usize {
+    2 * (2 * len * 8 * 4) // K and V tensors
+}
+
+/// Shadow model entry.
+struct ModelEntry {
+    bytes: usize,
+    pins: usize,
+    last_used: u64,
+}
+
+/// Replays a random op stream against both the cache and a shadow
+/// model, checking all four invariants after every step.
+#[test]
+fn prop_cache_agrees_with_shadow_model() {
+    prop::check("kvcache-shadow-model", 0x5EED_CAFE, 120, |rng: &mut Rng| {
+        let budget = kv_bytes(4) * rng.range(1, 5); // 1..4 four-token blocks
+        let mut cache = BlockKvCache::new(rope(), budget);
+        let mut model: HashMap<u128, ModelEntry> = HashMap::new();
+        let mut clock = 0u64;
+        let (mut hits, mut misses, mut insertions) = (0u64, 0u64, 0u64);
+
+        for _ in 0..rng.range(10, 80) {
+            let id = rng.below(10) as i32;
+            let key = block_key(&[id]);
+            clock += 1;
+            match rng.below(4) {
+                0 | 1 => {
+                    // lookup_pin; insert on miss (the serving pattern).
+                    if cache.lookup_pin(key) {
+                        hits += 1;
+                        let e = model.get_mut(&key).expect("hit not in model");
+                        e.pins += 1;
+                        e.last_used = clock;
+                    } else {
+                        misses += 1;
+                        prop_assert!(!model.contains_key(&key), "cache missed a live entry");
+                        let len = 4;
+                        let (k, v) = kv(len, id as f32);
+                        cache.insert_pinned(key, k, v);
+                        insertions += 1;
+                        model.insert(
+                            key,
+                            ModelEntry { bytes: kv_bytes(len), pins: 1, last_used: clock },
+                        );
+                        evict_in_model(&mut model, budget);
+                    }
+                }
+                2 => {
+                    // unpin (only when the model says we hold a pin).
+                    if model.get(&key).map(|e| e.pins > 0).unwrap_or(false) {
+                        cache.unpin(key);
+                        model.get_mut(&key).unwrap().pins -= 1;
+                        evict_in_model(&mut model, budget);
+                    }
+                }
+                _ => {
+                    // get_reencoded must not disturb accounting.
+                    let _ = cache.get_reencoded(key, rng.below(50));
+                }
+            }
+
+            // Invariant 1+3: the live set matches the shadow LRU model
+            // exactly (pinned entries present, LRU victims gone).
+            for (k, e) in &model {
+                prop_assert!(
+                    cache.contains(*k),
+                    "model entry missing from cache (pins={})",
+                    e.pins
+                );
+            }
+            let s = cache.stats();
+            prop_assert_eq!(s.entries, model.len());
+            // Invariant 2: byte accounting = sum of live entries.
+            let want_bytes: usize = model.values().map(|e| e.bytes).sum();
+            prop_assert_eq!(s.bytes, want_bytes);
+            // Invariant 4: counter consistency.
+            prop_assert_eq!(s.hits, hits);
+            prop_assert_eq!(s.misses, misses);
+            prop_assert_eq!(s.insertions, insertions);
+            prop_assert_eq!(s.evictions, insertions - model.len() as u64);
+        }
+        Ok(())
+    });
+}
+
+/// Mirror of the cache's eviction rule: drop least-recently-used
+/// unpinned entries until the byte budget holds (or only pins remain).
+fn evict_in_model(model: &mut HashMap<u128, ModelEntry>, budget: usize) {
+    loop {
+        let total: usize = model.values().map(|e| e.bytes).sum();
+        if total <= budget {
+            return;
+        }
+        let victim = model
+            .iter()
+            .filter(|(_, e)| e.pins == 0)
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| *k);
+        match victim {
+            Some(k) => {
+                model.remove(&k);
+            }
+            None => return, // everything pinned; over budget transiently
+        }
+    }
+}
+
+/// Pinned entries survive arbitrarily heavy insert pressure.
+#[test]
+fn prop_pinned_entries_never_evicted() {
+    prop::check("kvcache-pins-survive", 0x9177_BEEF, 60, |rng: &mut Rng| {
+        let budget = kv_bytes(4) * 2; // room for two blocks only
+        let mut cache = BlockKvCache::new(rope(), budget);
+        let pinned_key = block_key(&[1000]);
+        let (k, v) = kv(4, 1.0);
+        cache.insert_pinned(pinned_key, k, v);
+        // Hammer the cache with unpinned inserts way past the budget.
+        for i in 0..rng.range(5, 40) as i32 {
+            let key = block_key(&[i]);
+            if !cache.lookup_pin(key) {
+                let (k, v) = kv(4, i as f32);
+                cache.insert_pinned(key, k, v);
+            }
+            cache.unpin(key);
+            prop_assert!(cache.contains(pinned_key), "pinned entry evicted");
+        }
+        let s = cache.stats();
+        prop_assert!(s.bytes <= budget, "budget violated with one pin held");
+        prop_assert!(s.evictions > 0, "pressure never evicted anything");
+        Ok(())
+    });
+}
+
+/// Unpinned entries leave in exactly `last_used` order.
+#[test]
+fn lru_eviction_follows_last_used_order() {
+    // Budget for 3 blocks; insert 3, touch them in a shuffled order,
+    // then push new blocks one at a time: evictions must follow the
+    // touch order.
+    prop::check("kvcache-lru-order", 0x10BE, 80, |rng: &mut Rng| {
+        let budget = kv_bytes(4) * 3;
+        let mut cache = BlockKvCache::new(rope(), budget);
+        let mut ids: Vec<i32> = (0..3).collect();
+        for &i in &ids {
+            let (k, v) = kv(4, i as f32);
+            cache.insert_pinned(block_key(&[i]), k, v);
+            cache.unpin(block_key(&[i]));
+        }
+        // Touch in random order: that order becomes the eviction order.
+        rng.shuffle(&mut ids);
+        for &i in &ids {
+            prop_assert!(cache.lookup_pin(block_key(&[i])), "warm entry missed");
+            cache.unpin(block_key(&[i]));
+        }
+        for (n, &expect_evicted) in ids.iter().enumerate() {
+            let newcomer = 100 + n as i32;
+            let (k, v) = kv(4, 0.0);
+            cache.insert_pinned(block_key(&[newcomer]), k, v);
+            cache.unpin(block_key(&[newcomer]));
+            prop_assert!(
+                !cache.contains(block_key(&[expect_evicted])),
+                "expected {expect_evicted} to be the LRU victim"
+            );
+            // Later-touched survivors are still present.
+            for &still in &ids[n + 1..] {
+                prop_assert!(cache.contains(block_key(&[still])), "evicted out of order");
+            }
+        }
+        Ok(())
+    });
+}
+
+/// hit_rate is hits / (hits + misses).
+#[test]
+fn hit_rate_matches_counters() {
+    let mut cache = BlockKvCache::new(rope(), 0);
+    assert_eq!(cache.stats().hit_rate(), 0.0);
+    let key = block_key(&[7]);
+    assert!(!cache.lookup_pin(key)); // miss
+    let (k, v) = kv(2, 1.0);
+    cache.insert_pinned(key, k, v);
+    assert!(cache.lookup_pin(key)); // hit
+    assert!(cache.lookup_pin(key)); // hit
+    let s = cache.stats();
+    assert_eq!(s.hits, 2);
+    assert_eq!(s.misses, 1);
+    assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+}

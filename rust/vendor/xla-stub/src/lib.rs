@@ -1,0 +1,128 @@
+//! Compile-time stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! Mirrors the exact API surface `block_attn::runtime::engine` uses so
+//! the `xla` cargo feature type-checks without an XLA installation.
+//! Every operation fails at runtime with a clear message; see
+//! `README.md` for how to substitute a real xla-rs checkout.
+
+use std::fmt;
+
+/// Stub result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Error carrying the stub notice (implements `std::error::Error`, so
+/// `?` converts it into `anyhow::Error` exactly like the real crate's
+/// error type would).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn stub<T>(op: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: '{op}' is unavailable — this binary was built against \
+         rust/vendor/xla-stub; link a real xla-rs checkout to execute AOT \
+         artifacts (see rust/vendor/xla-stub/README.md)"
+    )))
+}
+
+/// Marker for element types transferable to/from device buffers.
+pub trait NativeType: Copy + 'static {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        stub("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub("PjRtBuffer::to_literal_sync")
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        stub("Literal::reshape")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        stub("Literal::to_vec")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        stub("Literal::to_tuple")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        stub("Literal::array_shape")
+    }
+}
+
+pub struct ArrayShape;
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &[]
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stub("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
