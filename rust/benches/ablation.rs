@@ -25,6 +25,7 @@ use block_attn::Backend;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
+    block_attn::kernels::init_threads_from_args(&args);
     block_granularity(&args)?;
     reuse_skew(&args)?;
     Ok(())

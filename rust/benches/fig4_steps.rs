@@ -14,6 +14,7 @@ use std::path::PathBuf;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
+    block_attn::kernels::init_threads_from_args(&args);
     let path = PathBuf::from(args.str_or("checkpoints", "checkpoints")).join("fig4.json");
     let Ok(text) = std::fs::read_to_string(&path) else {
         eprintln!("missing {path:?} — run `make checkpoints` first");

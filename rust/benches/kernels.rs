@@ -1,0 +1,176 @@
+//! Kernel-layer benchmarks: scalar vs tiled vs tiled+parallel GEMM, and
+//! 1-vs-N-thread concurrent block prefill — the two wins this layer
+//! exists for.
+//!
+//! ```sh
+//! cargo bench --bench kernels                      # 256³ GEMM + prefill
+//! cargo bench --bench kernels -- --size 384 --par-threads 8
+//! ```
+//!
+//! The scalar baseline is the saxpy triple loop the kernels replaced.
+//! Every variant is checked bitwise-identical before timing — the
+//! speedup must come for free, not from a different reduction order.
+//!
+//! Results are written machine-readable to `BENCH_kernels.json`
+//! (`--json-out PATH` overrides) so the perf trajectory is tracked
+//! across PRs.
+
+use block_attn::coordinator::{AttentionMode, Coordinator, Request};
+use block_attn::kernels::{gemm_nn_acc, set_threads};
+use block_attn::runtime::backend_from_args;
+use block_attn::util::cli::Args;
+use block_attn::util::json::Json;
+use block_attn::util::rng::Rng;
+use block_attn::util::timer::{bench, BenchOpts};
+use block_attn::Backend;
+
+/// The pre-kernel-layer scalar baseline: row-major saxpy accumulation.
+fn scalar_matmul_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            for (o, &bv) in orow.iter_mut().zip(&b[p * n..(p + 1) * n]) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let machine_threads = block_attn::kernels::init_threads_from_args(&args);
+    // The headline comparison is pinned at 4 threads (the acceptance
+    // configuration); override with --par-threads.
+    let par_threads = args.usize_or("par-threads", 4);
+    let size = args.usize_or("size", 256);
+    let (m, k, n) = (size, size, size);
+    let gflop = (2.0 * (m * k * n) as f64) / 1e9;
+
+    let mut rng = Rng::new(3);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+
+    // Bitwise parity gate before any timing.
+    let mut want = vec![0.0f32; m * n];
+    scalar_matmul_acc(&a, &b, m, k, n, &mut want);
+    for t in [1, par_threads] {
+        set_threads(t);
+        let mut got = vec![0.0f32; m * n];
+        gemm_nn_acc(&a, &b, m, k, n, &mut got);
+        assert_eq!(got, want, "tiled GEMM (threads={t}) differs from scalar");
+    }
+
+    println!("# kernels — GEMM {m}x{k}x{n} ({gflop:.2} GFLOP), machine threads {machine_threads}");
+    let opts = BenchOpts { warmup_iters: 1, iters: 7, max_seconds: 120.0 };
+    let mut out = vec![0.0f32; m * n];
+
+    let r_scalar = bench("gemm_scalar", &opts, || {
+        out.fill(0.0);
+        scalar_matmul_acc(&a, &b, m, k, n, &mut out);
+    });
+    println!("{}  ({:.2} GFLOP/s)", r_scalar.report_line(), gflop / (r_scalar.p50_ms() / 1e3));
+
+    set_threads(1);
+    let r_tiled = bench("gemm_tiled(1 thread)", &opts, || {
+        out.fill(0.0);
+        gemm_nn_acc(&a, &b, m, k, n, &mut out);
+    });
+    println!("{}  ({:.2} GFLOP/s)", r_tiled.report_line(), gflop / (r_tiled.p50_ms() / 1e3));
+
+    set_threads(par_threads);
+    let r_par = bench(&format!("gemm_tiled({par_threads} threads)"), &opts, || {
+        out.fill(0.0);
+        gemm_nn_acc(&a, &b, m, k, n, &mut out);
+    });
+    println!("{}  ({:.2} GFLOP/s)", r_par.report_line(), gflop / (r_par.p50_ms() / 1e3));
+
+    let speed_tiled = r_scalar.p50_ms() / r_tiled.p50_ms();
+    let speed_par = r_scalar.p50_ms() / r_par.p50_ms();
+    println!(
+        "# speedup: tiled {speed_tiled:.2}x, tiled+{par_threads}t {speed_par:.2}x (target ≥ 3x)"
+    );
+
+    // -- concurrent block prefill --------------------------------------
+    // 8 independent 64-token blocks through the real engine, then the
+    // end-to-end coordinator TTFT on a cold cache (miss prefill is the
+    // dominant term). Outputs are identical at every thread count; only
+    // the wall clock moves.
+    let engine = backend_from_args(&args, "tiny")?;
+    let n_blocks = args.usize_or("blocks", 8);
+    let block_len = args.usize_or("block-len", 64);
+    let vocab = engine.config().vocab;
+    let blocks: Vec<Vec<i32>> = (0..n_blocks)
+        .map(|_| (0..block_len).map(|_| rng.below(vocab) as i32).collect())
+        .collect();
+    let refs: Vec<&[i32]> = blocks.iter().map(|b| b.as_slice()).collect();
+    let popts = BenchOpts { warmup_iters: 1, iters: 3, max_seconds: 300.0 };
+
+    set_threads(1);
+    let kv1 = engine.prefill_blocks(&refs)?;
+    let r_p1 = bench("prefill_blocks(1 thread)", &popts, || {
+        engine.prefill_blocks(&refs).expect("prefill_blocks");
+    });
+    println!("{}", r_p1.report_line());
+
+    set_threads(par_threads);
+    let kvn = engine.prefill_blocks(&refs)?;
+    for ((k1, v1), (kn, vn)) in kv1.iter().zip(&kvn) {
+        assert_eq!(k1, kn, "block K differs across thread counts");
+        assert_eq!(v1, vn, "block V differs across thread counts");
+    }
+    let r_pn = bench(&format!("prefill_blocks({par_threads} threads)"), &popts, || {
+        engine.prefill_blocks(&refs).expect("prefill_blocks");
+    });
+    println!("{}", r_pn.report_line());
+    let speed_prefill = r_p1.p50_ms() / r_pn.p50_ms();
+    println!("# prefill speedup: {speed_prefill:.2}x with {par_threads} threads");
+
+    // Cold-cache TTFT through the coordinator (clear_cache each iter so
+    // every block misses and goes through the concurrent path).
+    let query: Vec<i32> = (0..32).map(|_| rng.below(vocab) as i32).collect();
+    let req = Request {
+        id: 1,
+        blocks: blocks.clone(),
+        query,
+        max_new_tokens: 1,
+        mode: AttentionMode::Block,
+    };
+    let mut coord = Coordinator::new(engine, 256 << 20);
+    let mut ttft = [0.0f64; 2];
+    for (slot, t) in [(0usize, 1usize), (1, par_threads)] {
+        set_threads(t);
+        let r = bench(&format!("coordinator_ttft({t} threads)"), &popts, || {
+            coord.clear_cache();
+            coord.process(&req).expect("process");
+        });
+        ttft[slot] = r.p50_ms();
+        println!("{}", r.report_line());
+    }
+    let ttft_speedup = ttft[0] / ttft[1];
+    println!("# TTFT cold-cache: {:.1} ms → {:.1} ms ({ttft_speedup:.2}x)", ttft[0], ttft[1]);
+    set_threads(machine_threads);
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("kernels")),
+        ("gemm_size", Json::num(size as f64)),
+        ("par_threads", Json::num(par_threads as f64)),
+        ("machine_threads", Json::num(machine_threads as f64)),
+        ("gemm_scalar_ms", Json::num(r_scalar.p50_ms())),
+        ("gemm_tiled_ms", Json::num(r_tiled.p50_ms())),
+        ("gemm_parallel_ms", Json::num(r_par.p50_ms())),
+        ("gemm_speedup_tiled", Json::num(speed_tiled)),
+        ("gemm_speedup_parallel", Json::num(speed_par)),
+        ("prefill_blocks", Json::num(n_blocks as f64)),
+        ("prefill_block_len", Json::num(block_len as f64)),
+        ("prefill_1t_ms", Json::num(r_p1.p50_ms())),
+        ("prefill_nt_ms", Json::num(r_pn.p50_ms())),
+        ("prefill_speedup", Json::num(speed_prefill)),
+        ("ttft_1t_ms", Json::num(ttft[0])),
+        ("ttft_nt_ms", Json::num(ttft[1])),
+    ]);
+    let out_path = args.str_or("json-out", "BENCH_kernels.json");
+    std::fs::write(&out_path, format!("{report}\n"))?;
+    eprintln!("# wrote {out_path}");
+    Ok(())
+}

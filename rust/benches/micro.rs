@@ -13,12 +13,15 @@ use block_attn::kvcache::{block_key, BlockKvCache};
 use block_attn::rope::RopeTable;
 use block_attn::tensor::Tensor;
 use block_attn::tokenizer::ByteTokenizer;
+use block_attn::util::cli::Args;
 use block_attn::util::json::Json;
 use block_attn::util::rng::Rng;
 use block_attn::util::timer::{bench, BenchOpts};
 use block_attn::workload::gamecore::GamecoreSim;
 
 fn main() {
+    let args = Args::parse();
+    block_attn::kernels::init_threads_from_args(&args);
     let opts = BenchOpts { warmup_iters: 3, iters: 30, max_seconds: 10.0 };
     let mut rng = Rng::new(1);
 

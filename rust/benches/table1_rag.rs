@@ -28,6 +28,7 @@ use std::path::PathBuf;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
+    block_attn::kernels::init_threads_from_args(&args);
     if args.flag("show-masks") {
         show_masks();
         return Ok(());

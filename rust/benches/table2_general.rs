@@ -17,6 +17,7 @@ use std::path::PathBuf;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
+    block_attn::kernels::init_threads_from_args(&args);
     let samples_n = args.usize_or("samples", 25);
     let ck_dir = PathBuf::from(args.str_or("checkpoints", "checkpoints"));
     let model = args.str_or("model", "tiny");

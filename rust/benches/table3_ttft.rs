@@ -13,6 +13,10 @@
 //! is one full prefill. FLOPs are reported in both the paper's
 //! convention (weight FLOPs, 2·params·tokens — see flops/mod.rs) and
 //! exact (attention contractions included).
+//!
+//! Besides the table, results are written machine-readable to
+//! `BENCH_ttft.json` (`--json-out PATH` overrides) so the perf
+//! trajectory is tracked across PRs.
 
 use block_attn::coordinator::write_ctx;
 use block_attn::flops::FlopsModel;
@@ -20,12 +24,14 @@ use block_attn::kvcache::{block_key, BlockKvCache};
 use block_attn::rope::RopeTable;
 use block_attn::runtime::backend_from_args;
 use block_attn::util::cli::Args;
+use block_attn::util::json::Json;
 use block_attn::util::rng::Rng;
 use block_attn::util::timer::{bench, BenchOpts};
 use block_attn::Backend;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
+    let threads = block_attn::kernels::init_threads_from_args(&args);
     let q_len = args.usize_or("user-input", 50);
     // The native backend is an interpretive CPU loop — default to the
     // short end of the sweep there; `--backend xla` (or --lengths) runs
@@ -63,6 +69,7 @@ fn main() -> anyhow::Result<()> {
         "flops-blk(x)"
     );
 
+    let mut rows: Vec<Json> = Vec::new();
     for &n in &lengths {
         let ctx_len = n.saturating_sub(q_len);
         let tokens: Vec<i32> = (0..n).map(|_| rng.below(cfg.vocab) as i32).collect();
@@ -116,6 +123,28 @@ fn main() -> anyhow::Result<()> {
             "{:>8} {:>14.1} {:>14.1} {:>7.1}% {:>13.2e} {:>13.2e} {:>7.1}% {:>13.2e} {:>13.2e}",
             n, r_van.p50_ms(), ttft_block_ms, red_t, fv_p, fb_p, red_f, fv_x, fb_x
         );
+        rows.push(Json::obj(vec![
+            ("length", Json::num(n as f64)),
+            ("ttft_vanilla_ms", Json::num(r_van.p50_ms())),
+            ("ttft_block_ms", Json::num(ttft_block_ms)),
+            ("ttft_reduction_pct", Json::num(red_t)),
+            ("flops_vanilla_paper", Json::num(fv_p)),
+            ("flops_block_paper", Json::num(fb_p)),
+            ("flops_vanilla_exact", Json::num(fv_x)),
+            ("flops_block_exact", Json::num(fb_x)),
+        ]));
     }
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("table3_ttft")),
+        ("model", Json::str(model)),
+        ("backend", Json::str(block_attn::runtime::backend_choice(&args))),
+        ("threads", Json::num(threads as f64)),
+        ("user_input_tokens", Json::num(q_len as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let out_path = args.str_or("json-out", "BENCH_ttft.json");
+    std::fs::write(&out_path, format!("{report}\n"))?;
+    eprintln!("# wrote {out_path}");
     Ok(())
 }

@@ -21,6 +21,7 @@ use block_attn::Backend;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
+    block_attn::kernels::init_threads_from_args(&args);
     let steps = args.usize_or("steps", 200);
     let eval_every = args.usize_or("eval-every", 40);
     let eval_n = args.usize_or("eval-samples", 24);

@@ -18,6 +18,7 @@ use block_attn::Backend;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
+    block_attn::kernels::init_threads_from_args(&args);
     let frames = args.usize_or("frames", 12);
     let players = args.usize_or("players", 20);
 

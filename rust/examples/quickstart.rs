@@ -18,6 +18,7 @@ use block_attn::Backend;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
+    block_attn::kernels::init_threads_from_args(&args);
     let engine = backend_from_args(&args, "tiny")?;
     if let Some(ck) = args.get("checkpoint") {
         engine.load_params_file(std::path::Path::new(ck))?;

@@ -25,6 +25,7 @@ use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
+    block_attn::kernels::init_threads_from_args(&args);
     let n_requests = args.usize_or("requests", 40);
     let k = args.usize_or("passages-per-query", 6);
     let pool_size = args.usize_or("pool", 64);

@@ -158,6 +158,7 @@ mod tests {
                     id: req.id,
                     tokens: vec![1],
                     ttft: t0.elapsed().as_secs_f64(),
+                    block_prefill_s: 0.0,
                     flops_tft: 0.0,
                     cached_blocks: 0,
                     total_blocks: req.blocks.len(),

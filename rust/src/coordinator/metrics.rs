@@ -6,6 +6,10 @@ use crate::util::stats::Summary;
 /// Aggregated serving metrics.
 pub struct Metrics {
     pub ttft: Summary,
+    /// Wall time of the concurrent cache-miss block prefill, recorded
+    /// only for requests that actually computed misses (the part
+    /// `--threads` parallelizes; all-hit requests don't contribute).
+    pub block_prefill: Summary,
     pub flops_tft: Summary,
     pub decode_lens: Summary,
     pub requests: u64,
@@ -24,6 +28,7 @@ impl Metrics {
     pub fn new() -> Metrics {
         Metrics {
             ttft: Summary::new(),
+            block_prefill: Summary::new(),
             flops_tft: Summary::new(),
             decode_lens: Summary::new(),
             requests: 0,
@@ -37,6 +42,22 @@ impl Metrics {
         self.ttft.add(seconds);
         self.flops_tft.add(flops);
         self.requests += 1;
+    }
+
+    pub fn record_block_prefill(&mut self, seconds: f64) {
+        self.block_prefill.add(seconds);
+    }
+
+    /// Median concurrent-miss-prefill time in ms; 0.0 before the first
+    /// miss-bearing request. Must stay finite — the empty-reservoir
+    /// quantile is NaN, which is not representable in the stats JSON
+    /// this feeds.
+    pub fn block_prefill_p50_ms(&self) -> f64 {
+        if self.block_prefill.count() == 0 {
+            0.0
+        } else {
+            self.block_prefill.p50() * 1e3
+        }
     }
 
     pub fn record_cache(&mut self, cached: usize, total: usize) {
@@ -68,11 +89,12 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} ttft_p50={:.1}ms ttft_p95={:.1}ms flops_tft_mean={:.3e} \
-             block_hit_rate={:.1}% throughput={:.2} req/s",
+            "requests={} ttft_p50={:.1}ms ttft_p95={:.1}ms block_prefill_p50={:.1}ms \
+             flops_tft_mean={:.3e} block_hit_rate={:.1}% throughput={:.2} req/s",
             self.requests,
             self.ttft.p50() * 1e3,
             self.ttft.p95() * 1e3,
+            self.block_prefill_p50_ms(),
             self.flops_tft.mean(),
             self.block_hit_rate() * 100.0,
             self.throughput_rps(),
@@ -87,8 +109,11 @@ mod tests {
     #[test]
     fn accounting() {
         let mut m = Metrics::new();
+        assert_eq!(m.block_prefill_p50_ms(), 0.0, "empty summary must stay finite");
         m.record_ttft(0.010, 1e9);
         m.record_ttft(0.020, 2e9);
+        m.record_block_prefill(0.004);
+        assert!((m.block_prefill_p50_ms() - 4.0).abs() < 1e-9);
         m.record_cache(3, 4);
         m.record_cache(1, 4);
         m.record_completion(7);

@@ -1,0 +1,455 @@
+//! Cache-blocked (tiled) GEMM kernels with deterministic accumulation.
+//!
+//! Three layouts cover every contraction in the native forward and
+//! backward passes:
+//!
+//! * [`gemm_nn_acc`] — `out[m×n] += a[m×k] @ b[k×n]` (projections)
+//! * [`gemm_nt_acc`] — `out[m×p] += a[m×n] @ b[p×n]ᵀ` (logits, dX)
+//! * [`gemm_tn_acc`] — `out[k×n] += a[m×k]ᵀ @ b[m×n]` (dW)
+//!
+//! The tiling is a register-blocked micro-kernel (`MR×NR` accumulator
+//! tile held in locals, loaded from / stored back to `out`) under a
+//! row-parallel outer loop ([`par_rows`]). Two invariants make the
+//! kernels drop-in replacements for the scalar loops they replace:
+//!
+//! 1. **Reduction order.** Every output element accumulates its
+//!    contributions in ascending reduction index into a single f32
+//!    accumulator seeded from `out`. The micro-kernel, the edge
+//!    fallbacks, and the parallel split all preserve that exact
+//!    floating-point sequence, so results are bitwise identical across
+//!    tile boundaries and thread counts.
+//! 2. **Row independence.** An output row is a function of its input
+//!    row only, so computing rows `0..l` of a longer product yields the
+//!    same prefix — the property the block-serving equivalence tests
+//!    rely on.
+//!
+//! No explicit SIMD: the micro-kernels are written so the compiler's
+//! auto-vectorizer sees independent accumulator lanes (the same recipe
+//! as a packed BLAS kernel, minus the packing — operand panels at the
+//! sizes this stack runs fit in L1/L2).
+
+use super::parallel::par_rows;
+
+/// Rows per register tile.
+const MR: usize = 4;
+/// Columns per register tile (two AVX lanes worth of f32).
+const NR: usize = 16;
+
+/// Below this `m·k·n` volume a GEMM is not worth forking threads for.
+const PAR_MIN_VOLUME: usize = 1 << 20;
+
+/// Minimum per-chunk volume when splitting rows across threads.
+const CHUNK_MIN_VOLUME: usize = 1 << 17;
+
+fn min_rows_for(vol_per_row: usize) -> usize {
+    (CHUNK_MIN_VOLUME / vol_per_row.max(1)).max(MR)
+}
+
+// -- nn: out[m×n] += a[m×k] @ b[k×n] ---------------------------------------
+
+/// `out[m×n] += a[m×k] @ b[k×n]`.
+pub fn gemm_nn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m * k * n >= PAR_MIN_VOLUME {
+        par_rows(out, n, min_rows_for(k * n), |r0, chunk| {
+            let rows = chunk.len() / n;
+            nn_serial(&a[r0 * k..(r0 + rows) * k], b, rows, k, n, chunk);
+        });
+    } else {
+        nn_serial(a, b, m, k, n, out);
+    }
+}
+
+/// `out[m×n] = a[m×k] @ b[k×n]`.
+pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    gemm_nn_acc(a, b, m, k, n, out);
+}
+
+fn nn_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    let mut i = 0;
+    while i + MR <= m {
+        let mut j = 0;
+        while j + NR <= n {
+            nn_micro(a, b, i, j, k, n, out);
+            j += NR;
+        }
+        if j < n {
+            for r in 0..MR {
+                let arow = &a[(i + r) * k..(i + r + 1) * k];
+                nn_row_edge(arow, b, k, n, j, &mut out[(i + r) * n..(i + r + 1) * n]);
+            }
+        }
+        i += MR;
+    }
+    for r in i..m {
+        nn_row_edge(&a[r * k..(r + 1) * k], b, k, n, 0, &mut out[r * n..(r + 1) * n]);
+    }
+}
+
+/// One `MR×NR` register tile: load, accumulate over all of `k`
+/// (ascending), store.
+#[inline]
+fn nn_micro(a: &[f32], b: &[f32], i0: usize, j0: usize, k: usize, n: usize, out: &mut [f32]) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (r, row) in acc.iter_mut().enumerate() {
+        let o = (i0 + r) * n + j0;
+        row.copy_from_slice(&out[o..o + NR]);
+    }
+    for p in 0..k {
+        let brow = &b[p * n + j0..p * n + j0 + NR];
+        for (r, row) in acc.iter_mut().enumerate() {
+            let av = a[(i0 + r) * k + p];
+            for (c, &bv) in brow.iter().enumerate() {
+                row[c] += av * bv;
+            }
+        }
+    }
+    for (r, row) in acc.iter().enumerate() {
+        let o = (i0 + r) * n + j0;
+        out[o..o + NR].copy_from_slice(row);
+    }
+}
+
+/// Column tail of one row: same ascending-k in-place accumulation the
+/// scalar saxpy loop performs (bitwise identical to the micro-kernel).
+#[inline]
+fn nn_row_edge(arow: &[f32], b: &[f32], k: usize, n: usize, j0: usize, orow: &mut [f32]) {
+    for (p, &av) in arow.iter().enumerate().take(k) {
+        let brow = &b[p * n + j0..(p + 1) * n];
+        for (o, &bv) in orow[j0..].iter_mut().zip(brow) {
+            *o += av * bv;
+        }
+    }
+}
+
+// -- nt: out[m×p] += a[m×n] @ b[p×n]ᵀ --------------------------------------
+
+/// `out[m×p] += a[m×n] @ b[p×n]ᵀ` (both operands row-major; each output
+/// element is a row-row dot product).
+pub fn gemm_nt_acc(a: &[f32], b: &[f32], m: usize, n: usize, p: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), p * n);
+    debug_assert_eq!(out.len(), m * p);
+    if m * n * p >= PAR_MIN_VOLUME {
+        par_rows(out, p, min_rows_for(n * p), |r0, chunk| {
+            let rows = chunk.len() / p;
+            nt_serial(&a[r0 * n..(r0 + rows) * n], b, rows, n, p, chunk);
+        });
+    } else {
+        nt_serial(a, b, m, n, p, out);
+    }
+}
+
+const NT_PR: usize = 4;
+
+fn nt_serial(a: &[f32], b: &[f32], m: usize, n: usize, p: usize, out: &mut [f32]) {
+    let mut i = 0;
+    while i + MR <= m {
+        let mut j = 0;
+        while j + NT_PR <= p {
+            nt_micro(a, b, i, j, n, p, out);
+            j += NT_PR;
+        }
+        for r in 0..MR {
+            let arow = &a[(i + r) * n..(i + r + 1) * n];
+            nt_row_edge(arow, b, n, j, p, &mut out[(i + r) * p..(i + r + 1) * p]);
+        }
+        i += MR;
+    }
+    for r in i..m {
+        nt_row_edge(&a[r * n..(r + 1) * n], b, n, 0, p, &mut out[r * p..(r + 1) * p]);
+    }
+}
+
+/// `MR×NT_PR` tile of dot products, each with its own ascending-n chain.
+#[inline]
+fn nt_micro(a: &[f32], b: &[f32], i0: usize, j0: usize, n: usize, p: usize, out: &mut [f32]) {
+    let mut acc = [[0.0f32; NT_PR]; MR];
+    for (r, row) in acc.iter_mut().enumerate() {
+        let o = (i0 + r) * p + j0;
+        row.copy_from_slice(&out[o..o + NT_PR]);
+    }
+    for q in 0..n {
+        let mut bq = [0.0f32; NT_PR];
+        for (c, bv) in bq.iter_mut().enumerate() {
+            *bv = b[(j0 + c) * n + q];
+        }
+        for (r, row) in acc.iter_mut().enumerate() {
+            let av = a[(i0 + r) * n + q];
+            for (c, &bv) in bq.iter().enumerate() {
+                row[c] += av * bv;
+            }
+        }
+    }
+    for (r, row) in acc.iter().enumerate() {
+        let o = (i0 + r) * p + j0;
+        out[o..o + NT_PR].copy_from_slice(row);
+    }
+}
+
+#[inline]
+fn nt_row_edge(arow: &[f32], b: &[f32], n: usize, j0: usize, p: usize, orow: &mut [f32]) {
+    for (j, o) in orow.iter_mut().enumerate().take(p).skip(j0) {
+        let brow = &b[j * n..(j + 1) * n];
+        let mut acc = *o;
+        for (&av, &bv) in arow.iter().zip(brow) {
+            acc += av * bv;
+        }
+        *o = acc;
+    }
+}
+
+// -- tn: out[k×n] += a[m×k]ᵀ @ b[m×n] --------------------------------------
+
+/// `out[k×n] += a[m×k]ᵀ @ b[m×n]` (the weight-gradient contraction; the
+/// reduction runs over `m`, ascending).
+pub fn gemm_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    if m * k * n >= PAR_MIN_VOLUME {
+        par_rows(out, n, min_rows_for(m * n), |r0, chunk| {
+            let rows = chunk.len() / n;
+            tn_serial(a, b, m, k, n, r0, rows, chunk);
+        });
+    } else {
+        tn_serial(a, b, m, k, n, 0, k, out);
+    }
+}
+
+/// Serial tn over output rows `[p0, p0+rows)`; `out` holds only those
+/// rows.
+#[allow(clippy::too_many_arguments)]
+fn tn_serial(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    p0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    let mut r = 0;
+    while r + MR <= rows {
+        let mut j = 0;
+        while j + NR <= n {
+            tn_micro(a, b, m, k, n, p0 + r, r, j, out);
+            j += NR;
+        }
+        if j < n {
+            for rr in r..r + MR {
+                tn_row_edge(a, b, m, k, n, p0 + rr, j, &mut out[rr * n..(rr + 1) * n]);
+            }
+        }
+        r += MR;
+    }
+    for rr in r..rows {
+        tn_row_edge(a, b, m, k, n, p0 + rr, 0, &mut out[rr * n..(rr + 1) * n]);
+    }
+}
+
+/// Tile over output rows `p0g..p0g+MR` (global) at local row `rl`,
+/// columns `j0..j0+NR`; reduction over `m` ascending.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn tn_micro(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    p0g: usize,
+    rl: usize,
+    j0: usize,
+    out: &mut [f32],
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (r, row) in acc.iter_mut().enumerate() {
+        let o = (rl + r) * n + j0;
+        row.copy_from_slice(&out[o..o + NR]);
+    }
+    for i in 0..m {
+        let brow = &b[i * n + j0..i * n + j0 + NR];
+        for (r, row) in acc.iter_mut().enumerate() {
+            let av = a[i * k + p0g + r];
+            for (c, &bv) in brow.iter().enumerate() {
+                row[c] += av * bv;
+            }
+        }
+    }
+    for (r, row) in acc.iter().enumerate() {
+        let o = (rl + r) * n + j0;
+        out[o..o + NR].copy_from_slice(row);
+    }
+}
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn tn_row_edge(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    pg: usize,
+    j0: usize,
+    orow: &mut [f32],
+) {
+    for i in 0..m {
+        let av = a[i * k + pg];
+        let brow = &b[i * n + j0..(i + 1) * n];
+        for (o, &bv) in orow[j0..].iter_mut().zip(brow) {
+            *o += av * bv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::set_threads;
+    use crate::util::rng::Rng;
+
+    fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Reference with the kernels' reduction order: per element, seed
+    /// from `out`, accumulate ascending reduction index.
+    fn ref_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = out[i * n + j];
+                for p in 0..k {
+                    acc += a[i * k + p] * b[p * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+    }
+
+    fn ref_nt(a: &[f32], b: &[f32], m: usize, n: usize, p: usize, out: &mut [f32]) {
+        for i in 0..m {
+            for j in 0..p {
+                let mut acc = out[i * p + j];
+                for q in 0..n {
+                    acc += a[i * n + q] * b[j * n + q];
+                }
+                out[i * p + j] = acc;
+            }
+        }
+    }
+
+    fn ref_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        for p in 0..k {
+            for j in 0..n {
+                let mut acc = out[p * n + j];
+                for i in 0..m {
+                    acc += a[i * k + p] * b[i * n + j];
+                }
+                out[p * n + j] = acc;
+            }
+        }
+    }
+
+    /// Odd shapes exercise every tile-edge path.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 5, 7),
+        (4, 16, 16),
+        (5, 17, 19),
+        (17, 33, 9),
+        (33, 8, 65),
+        (64, 64, 64),
+    ];
+
+    #[test]
+    fn nn_matches_reference_bitwise() {
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in SHAPES {
+            let a = randvec(&mut rng, m * k);
+            let b = randvec(&mut rng, k * n);
+            let seed = randvec(&mut rng, m * n);
+            let mut want = seed.clone();
+            ref_nn(&a, &b, m, k, n, &mut want);
+            let mut got = seed.clone();
+            gemm_nn_acc(&a, &b, m, k, n, &mut got);
+            assert_eq!(got, want, "nn mismatch at {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn nt_matches_reference_bitwise() {
+        let mut rng = Rng::new(12);
+        for &(m, n, p) in SHAPES {
+            let a = randvec(&mut rng, m * n);
+            let b = randvec(&mut rng, p * n);
+            let seed = randvec(&mut rng, m * p);
+            let mut want = seed.clone();
+            ref_nt(&a, &b, m, n, p, &mut want);
+            let mut got = seed.clone();
+            gemm_nt_acc(&a, &b, m, n, p, &mut got);
+            assert_eq!(got, want, "nt mismatch at {m}x{n}x{p}");
+        }
+    }
+
+    #[test]
+    fn tn_matches_reference_bitwise() {
+        let mut rng = Rng::new(13);
+        for &(m, k, n) in SHAPES {
+            let a = randvec(&mut rng, m * k);
+            let b = randvec(&mut rng, m * n);
+            let seed = randvec(&mut rng, k * n);
+            let mut want = seed.clone();
+            ref_tn(&a, &b, m, k, n, &mut want);
+            let mut got = seed.clone();
+            gemm_tn_acc(&a, &b, m, k, n, &mut got);
+            assert_eq!(got, want, "tn mismatch at {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn parallel_split_is_bitwise_identical() {
+        let _g = crate::kernels::TEST_THREADS_LOCK.lock().unwrap();
+        let prev = crate::kernels::num_threads();
+        // Big enough to cross PAR_MIN_VOLUME so the row split engages.
+        let (m, k, n) = (128, 96, 128);
+        let mut rng = Rng::new(14);
+        let a = randvec(&mut rng, m * k);
+        let b = randvec(&mut rng, k * n);
+        let mut serial = vec![0.0f32; m * n];
+        set_threads(1);
+        gemm_nn_acc(&a, &b, m, k, n, &mut serial);
+        let mut parallel = vec![0.0f32; m * n];
+        set_threads(8);
+        gemm_nn_acc(&a, &b, m, k, n, &mut parallel);
+        set_threads(1);
+        let mut tn_s = vec![0.0f32; k * n];
+        gemm_tn_acc(&a, &b, m, k, n, &mut tn_s);
+        set_threads(8);
+        let mut tn_p = vec![0.0f32; k * n];
+        gemm_tn_acc(&a, &b, m, k, n, &mut tn_p);
+        assert_eq!(serial, parallel, "nn differs across thread counts");
+        assert_eq!(tn_s, tn_p, "tn differs across thread counts");
+        set_threads(prev);
+    }
+
+    #[test]
+    fn prefix_rows_match_longer_product() {
+        // Row independence: the first rows of a taller GEMM equal the
+        // short GEMM bitwise (the block-serving invariant).
+        let (k, n) = (24, 40);
+        let mut rng = Rng::new(15);
+        let a = randvec(&mut rng, 20 * k);
+        let b = randvec(&mut rng, k * n);
+        let mut tall = vec![0.0f32; 20 * n];
+        gemm_nn_acc(&a, &b, 20, k, n, &mut tall);
+        let mut short = vec![0.0f32; 7 * n];
+        gemm_nn_acc(&a[..7 * k], &b, 7, k, n, &mut short);
+        assert_eq!(&tall[..7 * n], &short[..]);
+    }
+}

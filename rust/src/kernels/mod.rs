@@ -1,0 +1,113 @@
+//! Compute-kernel layer: tiled GEMMs, fused row ops, and the thread
+//! budget that drives every parallel region in the native stack.
+//!
+//! Layering: [`crate::runtime::NativeBackend`] (forward/decode) and the
+//! native train step (backward) express all dense math through this
+//! module; the coordinator's concurrent block prefill reuses the same
+//! fork/join machinery via [`parallel::par_map`]. Nothing above this
+//! layer spawns threads for compute directly.
+//!
+//! ## Threading model
+//!
+//! One process-global thread budget ([`num_threads`]) controls every
+//! kernel:
+//!
+//! * `--threads N` on any bin/bench/example (via
+//!   [`init_threads_from_args`]), else
+//! * `BLOCK_ATTN_THREADS` in the environment, else
+//! * the machine's available parallelism.
+//!
+//! Parallel regions fork scoped threads over contiguous, disjoint
+//! output ranges; nested regions split the budget instead of
+//! oversubscribing (a GEMM inside a 2-block concurrent prefill on 8
+//! threads gets 4), and leaf row-splits run their workers serially.
+//!
+//! ## Determinism guarantee
+//!
+//! Every kernel accumulates each output element in a fixed ascending
+//! reduction order into a single f32 accumulator, and every parallel
+//! split assigns whole output rows to exactly one worker. Results are
+//! therefore **bitwise identical for any thread count** — `--threads 1`
+//! and `--threads 8` serve byte-for-byte the same responses, which CI
+//! pins by running the suite at both settings.
+
+pub mod gemm;
+pub mod parallel;
+pub mod rowops;
+
+pub use gemm::{gemm_nn, gemm_nn_acc, gemm_nt_acc, gemm_tn_acc};
+pub use parallel::{effective_threads, par_map, par_rows};
+pub use rowops::{axpy, dot, rms_norm_rows, sigmoid, silu, softmax_inplace, swiglu_rows};
+
+use crate::util::cli::Args;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// 0 = not yet resolved; resolved lazily on first use.
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// The process-wide kernel thread budget. Resolution order:
+/// [`set_threads`] (or `--threads` via [`init_threads_from_args`]) >
+/// `BLOCK_ATTN_THREADS` > available parallelism.
+pub fn num_threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let n = std::env::var("BLOCK_ATTN_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+    // Benign race: concurrent first callers resolve the same value.
+    THREADS.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Set the thread budget explicitly (clamped to ≥ 1). Results are
+/// identical for every setting; only wall-clock changes.
+pub fn set_threads(n: usize) {
+    THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Apply `--threads N` from parsed CLI options (every bin/bench/example
+/// calls this right after `Args::parse`) and return the effective
+/// budget.
+pub fn init_threads_from_args(args: &Args) -> usize {
+    if let Some(n) = args.threads() {
+        set_threads(n);
+    }
+    num_threads()
+}
+
+/// Unit tests mutate the process-global budget; they serialize on this
+/// lock so the parallel test harness cannot interleave set/assert pairs.
+#[cfg(test)]
+pub(crate) static TEST_THREADS_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_budget_is_positive_and_settable() {
+        let _g = TEST_THREADS_LOCK.lock().unwrap();
+        let prev = num_threads();
+        assert!(prev >= 1);
+        set_threads(3);
+        assert_eq!(num_threads(), 3);
+        set_threads(0); // clamps
+        assert_eq!(num_threads(), 1);
+        set_threads(prev);
+    }
+
+    #[test]
+    fn args_override_applies() {
+        let _g = TEST_THREADS_LOCK.lock().unwrap();
+        let prev = num_threads();
+        let args = Args::parse_from(vec!["--threads".to_string(), "5".to_string()]);
+        assert_eq!(init_threads_from_args(&args), 5);
+        set_threads(prev);
+    }
+}

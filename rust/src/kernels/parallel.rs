@@ -1,0 +1,189 @@
+//! Scoped fork/join parallelism for the compute kernels.
+//!
+//! Everything here partitions work into **contiguous, disjoint output
+//! ranges** and runs each range on its own thread via
+//! [`std::thread::scope`]. Because every output element is produced by
+//! exactly one task, and each task performs the same sequence of
+//! floating-point operations it would under a single thread, results
+//! are **bitwise identical** for any thread count — the determinism
+//! guarantee the coordinator's `--threads 1` vs `--threads 8` parity
+//! tests pin down.
+//!
+//! Nested parallelism is *budgeted*, not forbidden: a worker inherits a
+//! share of the global budget (its parent's budget divided by the
+//! number of sibling workers), so a 2-item [`par_map`] on 8 threads
+//! leaves each item 4 threads for its inner kernels instead of idling
+//! six cores. Leaf row-splits ([`par_rows`]) hand their workers a
+//! budget of 1 — re-splitting a leaf chunk is never useful.
+
+use std::cell::Cell;
+
+thread_local! {
+    /// Thread budget assigned to this worker thread; `None` outside any
+    /// parallel region (= use the global budget).
+    static WORKER_BUDGET: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Run `f` with this thread's budget set to `budget` (≥ 1); nested
+/// parallel regions see that many [`effective_threads`].
+pub(crate) fn with_budget<R>(budget: usize, f: impl FnOnce() -> R) -> R {
+    WORKER_BUDGET.with(|c| {
+        let prev = c.replace(Some(budget.max(1)));
+        let r = f();
+        c.set(prev);
+        r
+    })
+}
+
+/// Run `f` as a leaf worker (no nested parallelism).
+pub(crate) fn enter_worker<R>(f: impl FnOnce() -> R) -> R {
+    with_budget(1, f)
+}
+
+/// The thread budget visible at this call site: the configured width
+/// ([`super::num_threads`]) at top level, or this worker's assigned
+/// share inside a parallel region.
+pub fn effective_threads() -> usize {
+    WORKER_BUDGET.with(|c| c.get()).unwrap_or_else(super::num_threads)
+}
+
+/// Parallel-for over the rows of a flat row-major buffer.
+///
+/// `out` is split into contiguous chunks of whole rows (`row_len`
+/// elements each); `f(row0, chunk)` receives the index of its first row
+/// and a mutable view of its rows. Chunks smaller than `min_rows` are
+/// not worth a thread and are merged; with one chunk (or inside a
+/// worker) `f` runs inline on the caller's thread.
+///
+/// `f` must compute each row independently of which chunk it lands in —
+/// that is what makes the split invisible to the results.
+pub fn par_rows<T: Send>(
+    out: &mut [T],
+    row_len: usize,
+    min_rows: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(row_len > 0, "row_len must be positive");
+    debug_assert_eq!(out.len() % row_len, 0, "buffer is not whole rows");
+    let rows = out.len() / row_len;
+    if rows == 0 {
+        return;
+    }
+    let chunks = effective_threads()
+        .min(rows / min_rows.max(1))
+        .max(1)
+        .min(rows);
+    if chunks <= 1 {
+        f(0, out);
+        return;
+    }
+    let per = rows.div_ceil(chunks);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = out;
+        let mut row0 = 0;
+        while !rest.is_empty() {
+            let take = per.min(rows - row0);
+            let (head, tail) = rest.split_at_mut(take * row_len);
+            rest = tail;
+            let r0 = row0;
+            row0 += take;
+            s.spawn(move || enter_worker(|| f(r0, head)));
+        }
+    });
+}
+
+/// Parallel map over a slice, preserving order. Each worker handles a
+/// contiguous range of items and inherits an even share of the thread
+/// budget for its own nested kernels (8 threads over 2 items → 2
+/// workers × 4 inner threads). With one effective thread (or a single
+/// item) it degenerates to a plain serial map with the full budget
+/// still available to inner parallelism.
+pub fn par_map<I: Sync, T: Send>(items: &[I], f: impl Fn(usize, &I) -> T + Sync) -> Vec<T> {
+    let threads = effective_threads();
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..items.len()).map(|_| None).collect();
+    let workers = threads.min(items.len());
+    let per = items.len().div_ceil(workers);
+    let inner_budget = threads / workers;
+    std::thread::scope(|s| {
+        let f = &f;
+        for (ci, slots) in out.chunks_mut(per).enumerate() {
+            let base = ci * per;
+            s.spawn(move || {
+                with_budget(inner_budget, || {
+                    for (j, slot) in slots.iter_mut().enumerate() {
+                        *slot = Some(f(base + j, &items[base + j]));
+                    }
+                })
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("par_map slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn par_rows_touches_every_row_once() {
+        let rows = 37;
+        let row_len = 5;
+        let mut buf = vec![0u32; rows * row_len];
+        par_rows(&mut buf, row_len, 1, |row0, chunk| {
+            for (i, row) in chunk.chunks_mut(row_len).enumerate() {
+                for v in row.iter_mut() {
+                    *v += (row0 + i) as u32 + 1;
+                }
+            }
+        });
+        for (i, row) in buf.chunks(row_len).enumerate() {
+            assert!(row.iter().all(|&v| v == i as u32 + 1), "row {i} wrong: {row:?}");
+        }
+    }
+
+    #[test]
+    fn par_rows_min_rows_merges_small_work() {
+        // 4 rows with min_rows=4 must run as one inline chunk.
+        let mut buf = vec![0u8; 4 * 3];
+        let calls = AtomicUsize::new(0);
+        par_rows(&mut buf, 3, 4, |_, chunk| {
+            calls.fetch_add(1, Ordering::SeqCst);
+            assert_eq!(chunk.len(), 12);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn nested_budgets_are_scoped() {
+        // Leaf workers see a budget of 1; budgeted workers see their
+        // share; both restore the previous budget on exit.
+        assert!(effective_threads() >= 1);
+        assert_eq!(enter_worker(effective_threads), 1);
+        assert_eq!(with_budget(3, effective_threads), 3);
+        let nested = with_budget(4, || (effective_threads(), enter_worker(effective_threads)));
+        assert_eq!(nested, (4, 1));
+        assert!(effective_threads() >= 1, "budget leaked out of the region");
+    }
+
+    #[test]
+    fn par_map_preserves_order_and_indices() {
+        let items: Vec<usize> = (0..23).collect();
+        let out = par_map(&items, |i, &it| {
+            assert_eq!(i, it);
+            it * 3
+        });
+        assert_eq!(out, (0..23).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        let e: Vec<u8> = vec![];
+        assert!(par_map(&e, |_, &x| x).is_empty());
+        assert_eq!(par_map(&[7u8], |_, &x| x + 1), vec![8]);
+    }
+}

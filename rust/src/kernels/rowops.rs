@@ -1,0 +1,139 @@
+//! Fused row-wise kernels: RMSNorm, softmax, SwiGLU, and the dot/axpy
+//! primitives the attention inner loops are built from.
+//!
+//! All reductions run in a fixed ascending order so that identical
+//! inputs produce bitwise-identical outputs at every call site — the
+//! property the block-serving equivalence and the `--threads N` parity
+//! tests are built on.
+
+/// Ascending-index dot product (single f32 accumulator).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+/// `y += alpha * x`, elementwise.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Row-wise RMSNorm: `out[t] = x[t] * rstd[t] * w`; returns the
+/// reciprocal RMS per row (needed by the backward pass).
+pub fn rms_norm_rows(
+    x: &[f32],
+    w: &[f32],
+    eps: f64,
+    l: usize,
+    d: usize,
+    out: &mut [f32],
+    rstd: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), l * d);
+    debug_assert_eq!(w.len(), d);
+    debug_assert_eq!(out.len(), l * d);
+    debug_assert_eq!(rstd.len(), l);
+    for t in 0..l {
+        let xr = &x[t * d..(t + 1) * d];
+        let mut ms = 0.0f64;
+        for &v in xr {
+            ms += (v as f64) * (v as f64);
+        }
+        let r = (1.0 / (ms / d as f64 + eps).sqrt()) as f32;
+        rstd[t] = r;
+        let orow = &mut out[t * d..(t + 1) * d];
+        for ((o, &xv), &wv) in orow.iter_mut().zip(xr).zip(w) {
+            *o = xv * r * wv;
+        }
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// Fused SwiGLU gate: `g[i] = silu(g[i]) * u[i]` in place.
+pub fn swiglu_rows(g: &mut [f32], u: &[f32]) {
+    debug_assert_eq!(g.len(), u.len());
+    for (gv, &uv) in g.iter_mut().zip(u) {
+        *gv = silu(*gv) * uv;
+    }
+}
+
+/// In-place softmax over `s` (max-subtracted, ascending accumulation so
+/// identical inputs give bitwise-identical outputs across call sites).
+pub fn softmax_inplace(s: &mut [f32]) {
+    let mut mx = f32::NEG_INFINITY;
+    for &v in s.iter() {
+        mx = mx.max(v);
+    }
+    let mut sum = 0.0f32;
+    for v in s.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in s.iter_mut() {
+        *v *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut s = vec![1.0f32, 2.0, 3.0];
+        softmax_inplace(&mut s);
+        let sum: f32 = s.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(s[2] > s[1] && s[1] > s[0]);
+    }
+
+    #[test]
+    fn rms_norm_unit_rows() {
+        // A row of equal values v normalizes to w (eps tiny).
+        let x = vec![3.0f32; 8];
+        let w = vec![0.5f32; 8];
+        let mut out = vec![0.0f32; 8];
+        let mut rstd = vec![0.0f32; 1];
+        rms_norm_rows(&x, &w, 1e-12, 1, 8, &mut out, &mut rstd);
+        for &o in &out {
+            assert!((o - 0.5).abs() < 1e-5, "{o}");
+        }
+    }
+
+    #[test]
+    fn swiglu_matches_elementwise() {
+        let mut g = vec![-1.0f32, 0.0, 2.0];
+        let u = vec![2.0f32, 3.0, 4.0];
+        let want: Vec<f32> = g.iter().zip(&u).map(|(&gv, &uv)| silu(gv) * uv).collect();
+        swiglu_rows(&mut g, &u);
+        assert_eq!(g, want);
+    }
+
+    #[test]
+    fn dot_and_axpy_agree_with_naive() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, -5.0, 6.0];
+        assert_eq!(dot(&a, &b), 1.0 * 4.0 - 2.0 * 5.0 + 3.0 * 6.0);
+        let mut y = [1.0f32, 1.0, 1.0];
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+    }
+}

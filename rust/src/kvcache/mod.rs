@@ -55,8 +55,12 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
+    /// Hits as a fraction of all lookups. A cache that has never been
+    /// looked up reports 0.0 (not NaN): the zero-lookup edge must stay
+    /// finite because the value is serialized straight into the server's
+    /// stats JSON, where NaN is not representable.
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.misses;
+        let total = self.hits.saturating_add(self.misses);
         if total == 0 {
             0.0
         } else {
@@ -108,6 +112,22 @@ impl BlockKvCache {
     /// Does the cache hold this block? (Does not count as a hit/miss.)
     pub fn contains(&self, key: u128) -> bool {
         self.map.contains_key(&key)
+    }
+
+    /// Add a pin to an already-present entry **without** touching the
+    /// hit/miss statistics (used when a request holds several references
+    /// to a block it just computed — that is not a cache hit). Returns
+    /// false if the key is absent.
+    pub fn pin(&mut self, key: u128) -> bool {
+        let t = self.tick();
+        match self.map.get_mut(&key) {
+            Some(e) => {
+                e.pins += 1;
+                e.last_used = t;
+                true
+            }
+            None => false,
+        }
     }
 
     /// Record a lookup; pins the entry if present (must be released with
@@ -237,6 +257,17 @@ mod tests {
     }
 
     #[test]
+    fn hit_rate_is_finite_with_no_lookups() {
+        let c = BlockKvCache::new(rope(), 0);
+        let s = c.stats();
+        assert_eq!(s.hits + s.misses, 0);
+        assert_eq!(s.hit_rate(), 0.0, "0/0 lookups must report 0.0, not NaN");
+        // And saturates rather than overflowing at the extremes.
+        let extreme = CacheStats { hits: u64::MAX, misses: u64::MAX, ..Default::default() };
+        assert!(extreme.hit_rate().is_finite());
+    }
+
+    #[test]
     fn hit_miss_accounting() {
         let mut c = BlockKvCache::new(rope(), 0);
         let key = block_key(&[5, 6]);
@@ -249,6 +280,21 @@ mod tests {
         assert_eq!(s.misses, 1);
         assert_eq!(s.insertions, 1);
         assert_eq!(s.entries, 1);
+    }
+
+    #[test]
+    fn pin_does_not_count_as_lookup() {
+        let mut c = BlockKvCache::new(rope(), 0);
+        let key = block_key(&[1, 2]);
+        assert!(!c.pin(key), "pin of an absent key must fail");
+        let (k, v) = kv(2, 1.0);
+        c.insert_pinned(key, k, v);
+        assert!(c.pin(key));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (0, 0), "pin must not touch stats");
+        // Both pins must be released before the entry can be evicted.
+        c.unpin(key);
+        c.unpin(key);
     }
 
     #[test]

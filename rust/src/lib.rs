@@ -33,16 +33,34 @@
 //! interchangeable because both backends share the flat-f32 parameter
 //! layout.
 //!
+//! ## Kernels & threading
+//!
+//! All native dense math runs on the [`kernels`] layer: cache-blocked
+//! (tiled) GEMMs in the three layouts the forward/backward passes need,
+//! fused row kernels (RMSNorm, softmax, SwiGLU), and a scoped
+//! fork/join parallel-for. One process-global thread budget
+//! (`--threads N` > `$BLOCK_ATTN_THREADS` > available parallelism)
+//! drives attention row/head parallelism, GEMM row splits, and the
+//! coordinator's **concurrent block prefill**: cache-miss blocks are
+//! independent (block-diagonal attention), so
+//! [`runtime::Backend::prefill_blocks`] fans them out one per worker.
+//!
+//! Determinism: every kernel accumulates each output element in a fixed
+//! ascending reduction order and every parallel split is row-disjoint,
+//! so serving output is **bitwise identical at every thread count** —
+//! CI runs the suite at `BLOCK_ATTN_THREADS=1` and `=4` to pin it.
+//!
 //! Layering (python never on the request path):
 //! - **L1** `python/compile/kernels/` — Pallas attention + RoPE kernels.
 //! - **L2** `python/compile/model.py` — Llama-style model, AOT-lowered to
 //!   HLO text artifacts (`make artifacts`); the native backend mirrors it
 //!   operation for operation.
-//! - **L3** this crate — backends, block-KV cache with position
-//!   re-encoding, segmentation, scheduling/batching, serving, training
-//!   driver, benchmarks.
+//! - **L3** this crate — compute kernels, backends, block-KV cache with
+//!   position re-encoding, segmentation, scheduling/batching, serving,
+//!   training driver, benchmarks.
 //!
 //! Entry points:
+//! - [`kernels`] — tiled/parallel compute kernels and the thread budget.
 //! - [`runtime::Backend`] — the engine contract; [`runtime::backend_from_args`]
 //!   builds one from CLI options.
 //! - [`kvcache::BlockKvCache`] — content-addressed block KV store.
@@ -58,6 +76,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod flops;
+pub mod kernels;
 pub mod kvcache;
 pub mod rope;
 pub mod runtime;
@@ -76,6 +95,7 @@ pub use runtime::ModelEngine;
 
 /// CLI dispatcher used by the `block-attn` binary.
 pub fn run_cli(args: &util::cli::Args) -> anyhow::Result<()> {
+    kernels::init_threads_from_args(args);
     match args.subcommand() {
         Some("info") => cli_info(args),
         Some("train") => cli_train(args),
@@ -86,6 +106,7 @@ pub fn run_cli(args: &util::cli::Args) -> anyhow::Result<()> {
             eprintln!("usage: block-attn <info|train|serve|eval> [--options]");
             eprintln!("  common: --backend native|xla   (default native; xla needs --features xla)");
             eprintln!("          --model tiny|small|bench [--checkpoint FILE]");
+            eprintln!("          --threads N            (kernel threads; or $BLOCK_ATTN_THREADS)");
             eprintln!("  info   [--artifacts DIR]");
             eprintln!("  train  --preset table1 --out DIR [--scale 1.0]");
             eprintln!("  serve  --addr 127.0.0.1:7841 [--workers 4] [--cache-mb 256]");

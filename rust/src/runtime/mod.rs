@@ -104,6 +104,16 @@ pub trait Backend {
     /// `0..len` and must be re-encoded before use at a non-zero offset.
     fn prefill_block(&self, tokens: &[i32]) -> Result<(TensorF, TensorF)>;
 
+    /// Prefill several independent blocks, returning KV pairs in input
+    /// order. Blocks never attend to each other (the paper's
+    /// independence property), so backends may compute them
+    /// concurrently — the coordinator routes every batch of cache
+    /// misses through this. The default is the serial loop; results
+    /// must be identical to per-block [`Self::prefill_block`] calls.
+    fn prefill_blocks(&self, blocks: &[&[i32]]) -> Result<Vec<(TensorF, TensorF)>> {
+        blocks.iter().map(|b| self.prefill_block(b)).collect()
+    }
+
     /// Final-block prefill with an explicit query position origin
     /// (`q_pos0`): superposition-style baselines place the query after
     /// the longest *parallel* document path instead of after the
@@ -225,6 +235,10 @@ impl Backend for Box<dyn Backend> {
 
     fn prefill_block(&self, tokens: &[i32]) -> Result<(TensorF, TensorF)> {
         (**self).prefill_block(tokens)
+    }
+
+    fn prefill_blocks(&self, blocks: &[&[i32]]) -> Result<Vec<(TensorF, TensorF)>> {
+        (**self).prefill_blocks(blocks)
     }
 
     fn prefill_final_at(

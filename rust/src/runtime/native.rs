@@ -13,15 +13,28 @@
 //! reuse, Eq.-3 RoPE re-encoding, decode — testable with no artifacts
 //! directory and no C dependencies.
 //!
-//! The forward pass is written row-wise so that the hidden state of a
-//! token depends only on itself and the keys it attends to, in
-//! ascending key order. That makes the block-serving path *bitwise*
-//! faithful to the monolithic computation in the single-segment case —
-//! the invariant `tests/native_backend.rs` pins down.
+//! All dense math flows through [`crate::kernels`]: tiled GEMMs for the
+//! projections, fused row kernels for norm/softmax/SwiGLU, and
+//! row-parallel attention (queries in prefill, heads in decode). The
+//! forward pass is written row-wise so that the hidden state of a token
+//! depends only on itself and the keys it attends to, in ascending key
+//! order; combined with the kernels' fixed reduction order this makes
+//! the block-serving path *bitwise* faithful to the monolithic
+//! computation in the single-segment case — for every `--threads`
+//! setting — the invariant `tests/native_backend.rs` pins down.
+//!
+//! Independent blocks are embarrassingly parallel (the paper's §2.1
+//! independence property), so [`Backend::prefill_blocks`] fans cache-miss
+//! blocks out across the kernel thread budget, one block per worker,
+//! with per-block inner parallelism suppressed.
 
 use super::native_train;
 use super::{Backend, DecodeOut, PrefillFinalOut, PrefillFullOut, TrainOut};
 use crate::config::{ModelConfig, ParamSpec};
+use crate::kernels::{
+    axpy, dot, gemm_nn, gemm_nn_acc, gemm_nt_acc, par_map, par_rows, rms_norm_rows,
+    softmax_inplace, swiglu_rows,
+};
 use crate::rope::RopeTable;
 use crate::tensor::{Tensor, TensorF, TensorI};
 use crate::util::rng::Rng;
@@ -97,130 +110,6 @@ pub fn init_params(cfg: &ModelConfig, specs: &[ParamSpec], seed: u64) -> Vec<Ten
         .collect()
 }
 
-// -- dense math helpers (shared with native_train) -------------------------
-
-pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut s = 0.0f32;
-    for (x, y) in a.iter().zip(b) {
-        s += x * y;
-    }
-    s
-}
-
-pub(crate) fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (xi, yi) in x.iter().zip(y.iter_mut()) {
-        *yi += alpha * xi;
-    }
-}
-
-/// `out[m×n] += a[m×k] @ b[k×n]`.
-pub(crate) fn matmul_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            axpy(av, &b[p * n..(p + 1) * n], orow);
-        }
-    }
-}
-
-/// `out[m×n] = a[m×k] @ b[k×n]`.
-pub(crate) fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    out.fill(0.0);
-    matmul_acc(a, b, m, k, n, out);
-}
-
-/// `out[m×p] += a[m×n] @ b[p×n]ᵀ` (row-by-row dot products).
-pub(crate) fn matmul_nt_acc(a: &[f32], b: &[f32], m: usize, n: usize, p: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * n);
-    debug_assert_eq!(b.len(), p * n);
-    debug_assert_eq!(out.len(), m * p);
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        let orow = &mut out[i * p..(i + 1) * p];
-        for (j, o) in orow.iter_mut().enumerate() {
-            *o += dot(arow, &b[j * n..(j + 1) * n]);
-        }
-    }
-}
-
-/// `out[k×n] += a[m×k]ᵀ @ b[m×n]`.
-pub(crate) fn matmul_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), m * n);
-    debug_assert_eq!(out.len(), k * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            if av != 0.0 {
-                axpy(av, brow, &mut out[p * n..(p + 1) * n]);
-            }
-        }
-    }
-}
-
-/// Row-wise RMSNorm: `out[t] = x[t] * rstd[t] * w`; returns the
-/// reciprocal RMS per row (needed by the backward pass).
-pub(crate) fn rms_norm_rows(
-    x: &[f32],
-    w: &[f32],
-    eps: f64,
-    l: usize,
-    d: usize,
-    out: &mut [f32],
-    rstd: &mut [f32],
-) {
-    debug_assert_eq!(x.len(), l * d);
-    debug_assert_eq!(w.len(), d);
-    debug_assert_eq!(out.len(), l * d);
-    debug_assert_eq!(rstd.len(), l);
-    for t in 0..l {
-        let xr = &x[t * d..(t + 1) * d];
-        let mut ms = 0.0f64;
-        for &v in xr {
-            ms += (v as f64) * (v as f64);
-        }
-        let r = (1.0 / (ms / d as f64 + eps).sqrt()) as f32;
-        rstd[t] = r;
-        let orow = &mut out[t * d..(t + 1) * d];
-        for ((o, &xv), &wv) in orow.iter_mut().zip(xr).zip(w) {
-            *o = xv * r * wv;
-        }
-    }
-}
-
-pub(crate) fn sigmoid(x: f32) -> f32 {
-    1.0 / (1.0 + (-x).exp())
-}
-
-pub(crate) fn silu(x: f32) -> f32 {
-    x * sigmoid(x)
-}
-
-/// In-place softmax over `s` (max-subtracted, ascending accumulation so
-/// identical inputs give bitwise-identical outputs across call sites).
-pub(crate) fn softmax_inplace(s: &mut [f32]) {
-    let mut mx = f32::NEG_INFINITY;
-    for &v in s.iter() {
-        mx = mx.max(v);
-    }
-    let mut sum = 0.0f32;
-    for v in s.iter_mut() {
-        *v = (*v - mx).exp();
-        sum += *v;
-    }
-    let inv = 1.0 / sum;
-    for v in s.iter_mut() {
-        *v *= inv;
-    }
-}
-
 // -- parameter views -------------------------------------------------------
 
 /// Borrowed view over the 11-tensor parameter list.
@@ -268,6 +157,172 @@ impl<'a> Weights<'a> {
     }
 }
 
+fn check_tokens(cfg: &ModelConfig, tokens: &[i32]) -> Result<()> {
+    ensure!(!tokens.is_empty(), "empty token sequence");
+    for &t in tokens {
+        ensure!(
+            t >= 0 && (t as usize) < cfg.vocab,
+            "token id {t} out of vocab range 0..{}",
+            cfg.vocab
+        );
+    }
+    Ok(())
+}
+
+// -- the forward pass ------------------------------------------------------
+
+/// Shared prefill body, free of `&self` so concurrent block prefills can
+/// share one borrowed [`Weights`] view across worker threads.
+///
+/// `past = (past_k, past_v, past_len)` adds a cached-context prefix
+/// every query token attends to; `pos0` is the RoPE position of the
+/// first token. Returns `(last_logits_or_empty, k, v)` with KV shaped
+/// `(layers, L, kv_heads, head_dim)`.
+fn prefill_pass(
+    cfg: &ModelConfig,
+    rope: &RopeTable,
+    w: &Weights<'_>,
+    tokens: &[i32],
+    pos0: usize,
+    past: Option<(&TensorF, &TensorF, usize)>,
+    want_logits: bool,
+) -> Result<(Vec<f32>, TensorF, TensorF)> {
+    check_tokens(cfg, tokens)?;
+    let (dm, nh, kvh, hd, ff) = (cfg.d_model, cfg.heads, cfg.kv_heads, cfg.head_dim, cfg.d_ff);
+    let rep = nh / kvh;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let l = tokens.len();
+
+    let past_len = match past {
+        Some((pk, pv, n)) => {
+            let want = [cfg.layers, pk.dims().get(1).copied().unwrap_or(0), kvh, hd];
+            ensure!(
+                pk.dims() == &want[..] && pv.dims() == &want[..],
+                "past KV dims {:?}/{:?} do not match (layers={}, C, kv_heads={}, head_dim={})",
+                pk.dims(),
+                pv.dims(),
+                cfg.layers,
+                kvh
+            );
+            ensure!(
+                n <= pk.dims()[1],
+                "past_len {n} exceeds context capacity {}",
+                pk.dims()[1]
+            );
+            n
+        }
+        None => 0,
+    };
+
+    // x = embed[tokens]
+    let mut x = vec![0.0f32; l * dm];
+    for (t, &tok) in tokens.iter().enumerate() {
+        let row = &w.embed[tok as usize * dm..(tok as usize + 1) * dm];
+        x[t * dm..(t + 1) * dm].copy_from_slice(row);
+    }
+
+    let mut k_all = Tensor::zeros(&[cfg.layers, l, kvh, hd]);
+    let mut v_all = Tensor::zeros(&[cfg.layers, l, kvh, hd]);
+
+    // Scratch buffers reused across layers.
+    let mut h1 = vec![0.0f32; l * dm];
+    let mut rstd = vec![0.0f32; l];
+    let mut q = vec![0.0f32; l * nh * hd];
+    let mut kb = vec![0.0f32; l * kvh * hd];
+    let mut vb = vec![0.0f32; l * kvh * hd];
+    let mut o = vec![0.0f32; l * nh * hd];
+    let mut mg = vec![0.0f32; l * ff];
+    let mut mu = vec![0.0f32; l * ff];
+
+    // Average attention work per query row; chunks smaller than ~32K
+    // mul-adds are not worth a thread.
+    let attn_row_cost = nh * hd * (past_len + l / 2 + 1) * 2;
+    let attn_min_rows = ((1 << 15) / attn_row_cost.max(1)).max(1);
+
+    for n in 0..cfg.layers {
+        let lw = w.layer(n);
+
+        // Attention sublayer.
+        rms_norm_rows(&x, lw.ln1, cfg.norm_eps, l, dm, &mut h1, &mut rstd);
+        gemm_nn(&h1, lw.wq, l, dm, nh * hd, &mut q);
+        gemm_nn(&h1, lw.wk, l, dm, kvh * hd, &mut kb);
+        gemm_nn(&h1, lw.wv, l, dm, kvh * hd, &mut vb);
+        for t in 0..l {
+            let pos = (pos0 + t) as i64;
+            for h in 0..nh {
+                rope.rotate_head(&mut q[(t * nh + h) * hd..(t * nh + h + 1) * hd], pos);
+            }
+            for h in 0..kvh {
+                rope.rotate_head(&mut kb[(t * kvh + h) * hd..(t * kvh + h + 1) * hd], pos);
+            }
+        }
+        k_all.axis0_mut(n).copy_from_slice(&kb);
+        v_all.axis0_mut(n).copy_from_slice(&vb);
+
+        let empty: &[f32] = &[];
+        let (pk_l, pv_l) = match past {
+            Some((pk, pv, _)) => (pk.axis0(n), pv.axis0(n)),
+            None => (empty, empty),
+        };
+        // GQA attention, parallel over query rows: row `t` of `o` is a
+        // function of query `t` and keys `0..=t` only, so the split is
+        // invisible to the results (and to the block-serving prefix
+        // invariant).
+        let (q_r, kb_r, vb_r) = (&q, &kb, &vb);
+        par_rows(&mut o, nh * hd, attn_min_rows, |t0, chunk| {
+            let mut scores = vec![0.0f32; past_len + l];
+            for (ti, orow) in chunk.chunks_mut(nh * hd).enumerate() {
+                let t = t0 + ti;
+                orow.fill(0.0);
+                for h in 0..nh {
+                    let kh = h / rep;
+                    let qv = &q_r[(t * nh + h) * hd..(t * nh + h + 1) * hd];
+                    let n_keys = past_len + t + 1;
+                    for (j, s) in scores.iter_mut().take(past_len).enumerate() {
+                        *s = dot(qv, &pk_l[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd]) * scale;
+                    }
+                    for j in 0..=t {
+                        scores[past_len + j] =
+                            dot(qv, &kb_r[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd]) * scale;
+                    }
+                    softmax_inplace(&mut scores[..n_keys]);
+                    let ov = &mut orow[h * hd..(h + 1) * hd];
+                    for j in 0..past_len {
+                        axpy(scores[j], &pv_l[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd], ov);
+                    }
+                    for j in 0..=t {
+                        axpy(
+                            scores[past_len + j],
+                            &vb_r[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd],
+                            ov,
+                        );
+                    }
+                }
+            }
+        });
+        gemm_nn_acc(&o, lw.wo, l, nh * hd, dm, &mut x);
+
+        // MLP sublayer.
+        rms_norm_rows(&x, lw.ln2, cfg.norm_eps, l, dm, &mut h1, &mut rstd);
+        gemm_nn(&h1, lw.wg, l, dm, ff, &mut mg);
+        gemm_nn(&h1, lw.wu, l, dm, ff, &mut mu);
+        swiglu_rows(&mut mg, &mu);
+        gemm_nn_acc(&mg, lw.wd, l, ff, dm, &mut x);
+    }
+
+    let logits = if want_logits {
+        let mut hf = vec![0.0f32; dm];
+        let mut r1 = [0.0f32; 1];
+        rms_norm_rows(&x[(l - 1) * dm..], w.final_norm, cfg.norm_eps, 1, dm, &mut hf, &mut r1);
+        let mut out = vec![0.0f32; cfg.vocab];
+        gemm_nt_acc(&hf, w.embed, 1, dm, cfg.vocab, &mut out);
+        out
+    } else {
+        Vec::new()
+    };
+    Ok((logits, k_all, v_all))
+}
+
 // -- the backend -----------------------------------------------------------
 
 /// Pure-Rust inference + training backend (see module docs).
@@ -310,23 +365,6 @@ impl NativeBackend {
         self
     }
 
-    fn check_tokens(&self, tokens: &[i32]) -> Result<()> {
-        ensure!(!tokens.is_empty(), "empty token sequence");
-        for &t in tokens {
-            ensure!(
-                t >= 0 && (t as usize) < self.cfg.vocab,
-                "token id {t} out of vocab range 0..{}",
-                self.cfg.vocab
-            );
-        }
-        Ok(())
-    }
-
-    /// Shared prefill body. `past = (past_k, past_v, past_len)` adds a
-    /// cached-context prefix every query token attends to; `pos0` is
-    /// the RoPE position of the first token. Returns
-    /// `(last_logits_or_empty, k, v)` with KV shaped
-    /// `(layers, L, kv_heads, head_dim)`.
     fn forward_prefill(
         &self,
         tokens: &[i32],
@@ -334,134 +372,9 @@ impl NativeBackend {
         past: Option<(&TensorF, &TensorF, usize)>,
         want_logits: bool,
     ) -> Result<(Vec<f32>, TensorF, TensorF)> {
-        self.check_tokens(tokens)?;
-        let cfg = &self.cfg;
-        let (dm, nh, kvh, hd, ff) = (cfg.d_model, cfg.heads, cfg.kv_heads, cfg.head_dim, cfg.d_ff);
-        let rep = nh / kvh;
-        let scale = 1.0 / (hd as f32).sqrt();
-        let l = tokens.len();
-
-        let past_len = match past {
-            Some((pk, pv, n)) => {
-                let want = [cfg.layers, pk.dims().get(1).copied().unwrap_or(0), kvh, hd];
-                ensure!(
-                    pk.dims() == &want[..] && pv.dims() == &want[..],
-                    "past KV dims {:?}/{:?} do not match (layers={}, C, kv_heads={}, head_dim={})",
-                    pk.dims(),
-                    pv.dims(),
-                    cfg.layers,
-                    kvh
-                );
-                ensure!(
-                    n <= pk.dims()[1],
-                    "past_len {n} exceeds context capacity {}",
-                    pk.dims()[1]
-                );
-                n
-            }
-            None => 0,
-        };
-
         let params = self.params.borrow();
         let w = Weights::split(&params);
-
-        // x = embed[tokens]
-        let mut x = vec![0.0f32; l * dm];
-        for (t, &tok) in tokens.iter().enumerate() {
-            let row = &w.embed[tok as usize * dm..(tok as usize + 1) * dm];
-            x[t * dm..(t + 1) * dm].copy_from_slice(row);
-        }
-
-        let mut k_all = Tensor::zeros(&[cfg.layers, l, kvh, hd]);
-        let mut v_all = Tensor::zeros(&[cfg.layers, l, kvh, hd]);
-
-        // Scratch buffers reused across layers.
-        let mut h1 = vec![0.0f32; l * dm];
-        let mut rstd = vec![0.0f32; l];
-        let mut q = vec![0.0f32; l * nh * hd];
-        let mut kb = vec![0.0f32; l * kvh * hd];
-        let mut vb = vec![0.0f32; l * kvh * hd];
-        let mut o = vec![0.0f32; l * nh * hd];
-        let mut mg = vec![0.0f32; l * ff];
-        let mut mu = vec![0.0f32; l * ff];
-        let mut scores = vec![0.0f32; past_len + l];
-
-        for n in 0..cfg.layers {
-            let lw = w.layer(n);
-
-            // Attention sublayer.
-            rms_norm_rows(&x, lw.ln1, cfg.norm_eps, l, dm, &mut h1, &mut rstd);
-            matmul_into(&h1, lw.wq, l, dm, nh * hd, &mut q);
-            matmul_into(&h1, lw.wk, l, dm, kvh * hd, &mut kb);
-            matmul_into(&h1, lw.wv, l, dm, kvh * hd, &mut vb);
-            for t in 0..l {
-                let pos = (pos0 + t) as i64;
-                for h in 0..nh {
-                    self.rope.rotate_head(&mut q[(t * nh + h) * hd..(t * nh + h + 1) * hd], pos);
-                }
-                for h in 0..kvh {
-                    self.rope
-                        .rotate_head(&mut kb[(t * kvh + h) * hd..(t * kvh + h + 1) * hd], pos);
-                }
-            }
-            k_all.axis0_mut(n).copy_from_slice(&kb);
-            v_all.axis0_mut(n).copy_from_slice(&vb);
-
-            let empty: &[f32] = &[];
-            let (pk_l, pv_l) = match past {
-                Some((pk, pv, _)) => (pk.axis0(n), pv.axis0(n)),
-                None => (empty, empty),
-            };
-            o.fill(0.0);
-            for t in 0..l {
-                for h in 0..nh {
-                    let kh = h / rep;
-                    let qv = &q[(t * nh + h) * hd..(t * nh + h + 1) * hd];
-                    let n_keys = past_len + t + 1;
-                    for (j, s) in scores.iter_mut().take(past_len).enumerate() {
-                        *s = dot(qv, &pk_l[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd]) * scale;
-                    }
-                    for j in 0..=t {
-                        scores[past_len + j] =
-                            dot(qv, &kb[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd]) * scale;
-                    }
-                    softmax_inplace(&mut scores[..n_keys]);
-                    let ov = &mut o[(t * nh + h) * hd..(t * nh + h + 1) * hd];
-                    for j in 0..past_len {
-                        axpy(scores[j], &pv_l[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd], ov);
-                    }
-                    for j in 0..=t {
-                        axpy(
-                            scores[past_len + j],
-                            &vb[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd],
-                            ov,
-                        );
-                    }
-                }
-            }
-            matmul_acc(&o, lw.wo, l, nh * hd, dm, &mut x);
-
-            // MLP sublayer.
-            rms_norm_rows(&x, lw.ln2, cfg.norm_eps, l, dm, &mut h1, &mut rstd);
-            matmul_into(&h1, lw.wg, l, dm, ff, &mut mg);
-            matmul_into(&h1, lw.wu, l, dm, ff, &mut mu);
-            for (g, &u) in mg.iter_mut().zip(&mu) {
-                *g = silu(*g) * u;
-            }
-            matmul_acc(&mg, lw.wd, l, ff, dm, &mut x);
-        }
-
-        let logits = if want_logits {
-            let mut hf = vec![0.0f32; dm];
-            let mut r1 = [0.0f32; 1];
-            rms_norm_rows(&x[(l - 1) * dm..], w.final_norm, cfg.norm_eps, 1, dm, &mut hf, &mut r1);
-            let mut out = vec![0.0f32; cfg.vocab];
-            matmul_nt_acc(&hf, w.embed, 1, dm, cfg.vocab, &mut out);
-            out
-        } else {
-            Vec::new()
-        };
-        Ok((logits, k_all, v_all))
+        prefill_pass(&self.cfg, &self.rope, &w, tokens, pos0, past, want_logits)
     }
 }
 
@@ -509,6 +422,26 @@ impl Backend for NativeBackend {
         Ok((k, v))
     }
 
+    /// Concurrent block prefill: blocks are independent by construction
+    /// (block-diagonal attention, local positions), so each one runs on
+    /// its own worker; with fewer blocks than threads each worker keeps
+    /// an even share of the budget for its inner kernels. Results come
+    /// back in input order and are bitwise identical to the serial path.
+    fn prefill_blocks(&self, blocks: &[&[i32]]) -> Result<Vec<(TensorF, TensorF)>> {
+        // Validate up front so errors surface deterministically.
+        for b in blocks {
+            check_tokens(&self.cfg, b)?;
+        }
+        let params = self.params.borrow();
+        let w = Weights::split(&params);
+        let (cfg, rope) = (&self.cfg, &self.rope);
+        par_map(blocks, |_, toks| {
+            prefill_pass(cfg, rope, &w, toks, 0, None, false).map(|(_, k, v)| (k, v))
+        })
+        .into_iter()
+        .collect()
+    }
+
     fn prefill_final_at(
         &self,
         tokens: &[i32],
@@ -529,7 +462,7 @@ impl Backend for NativeBackend {
         v_cache: &TensorF,
         cache_len: usize,
     ) -> Result<DecodeOut> {
-        self.check_tokens(&[token])?;
+        check_tokens(&self.cfg, &[token])?;
         let cfg = &self.cfg;
         let (dm, nh, kvh, hd, ff) = (cfg.d_model, cfg.heads, cfg.kv_heads, cfg.head_dim, cfg.d_ff);
         let rep = nh / kvh;
@@ -560,15 +493,20 @@ impl Backend for NativeBackend {
         let mut o = vec![0.0f32; nh * hd];
         let mut mg = vec![0.0f32; ff];
         let mut mu = vec![0.0f32; ff];
-        let mut scores = vec![0.0f32; cache_len + 1];
         let pos = cache_len as i64;
+
+        // Per-head attention work. Decode pays a scope spawn per layer
+        // per *token*, so the per-chunk floor sits at thread-spawn
+        // scale (~10⁵ mul-adds): only long-context decodes fork.
+        let head_cost = (cache_len + 1) * hd * 2;
+        let head_min_rows = ((1 << 17) / head_cost.max(1)).max(1);
 
         for n in 0..cfg.layers {
             let lw = w.layer(n);
             rms_norm_rows(&x, lw.ln1, cfg.norm_eps, 1, dm, &mut h1, &mut rstd);
-            matmul_into(&h1, lw.wq, 1, dm, nh * hd, &mut q);
-            matmul_into(&h1, lw.wk, 1, dm, kvh * hd, &mut kb);
-            matmul_into(&h1, lw.wv, 1, dm, kvh * hd, &mut vb);
+            gemm_nn(&h1, lw.wq, 1, dm, nh * hd, &mut q);
+            gemm_nn(&h1, lw.wk, 1, dm, kvh * hd, &mut kb);
+            gemm_nn(&h1, lw.wv, 1, dm, kvh * hd, &mut vb);
             for h in 0..nh {
                 self.rope.rotate_head(&mut q[h * hd..(h + 1) * hd], pos);
             }
@@ -583,34 +521,38 @@ impl Backend for NativeBackend {
             }
             let kl = k_out.axis0(n);
             let vl = v_out.axis0(n);
-            o.fill(0.0);
-            for h in 0..nh {
-                let kh = h / rep;
-                let qv = &q[h * hd..(h + 1) * hd];
-                for (j, s) in scores.iter_mut().enumerate() {
-                    *s = dot(qv, &kl[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd]) * scale;
+            // Decode attention, parallel over heads (head rows of `o`
+            // are contiguous and independent).
+            let q_r = &q;
+            par_rows(&mut o, hd, head_min_rows, |h0, chunk| {
+                let mut scores = vec![0.0f32; cache_len + 1];
+                for (hi, ov) in chunk.chunks_mut(hd).enumerate() {
+                    let h = h0 + hi;
+                    let kh = h / rep;
+                    let qv = &q_r[h * hd..(h + 1) * hd];
+                    for (j, s) in scores.iter_mut().enumerate() {
+                        *s = dot(qv, &kl[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd]) * scale;
+                    }
+                    softmax_inplace(&mut scores);
+                    ov.fill(0.0);
+                    for (j, &p) in scores.iter().enumerate() {
+                        axpy(p, &vl[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd], ov);
+                    }
                 }
-                softmax_inplace(&mut scores);
-                let ov = &mut o[h * hd..(h + 1) * hd];
-                for (j, &p) in scores.iter().enumerate() {
-                    axpy(p, &vl[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd], ov);
-                }
-            }
-            matmul_acc(&o, lw.wo, 1, nh * hd, dm, &mut x);
+            });
+            gemm_nn_acc(&o, lw.wo, 1, nh * hd, dm, &mut x);
 
             rms_norm_rows(&x, lw.ln2, cfg.norm_eps, 1, dm, &mut h1, &mut rstd);
-            matmul_into(&h1, lw.wg, 1, dm, ff, &mut mg);
-            matmul_into(&h1, lw.wu, 1, dm, ff, &mut mu);
-            for (g, &u) in mg.iter_mut().zip(&mu) {
-                *g = silu(*g) * u;
-            }
-            matmul_acc(&mg, lw.wd, 1, ff, dm, &mut x);
+            gemm_nn(&h1, lw.wg, 1, dm, ff, &mut mg);
+            gemm_nn(&h1, lw.wu, 1, dm, ff, &mut mu);
+            swiglu_rows(&mut mg, &mu);
+            gemm_nn_acc(&mg, lw.wd, 1, ff, dm, &mut x);
         }
 
         let mut hf = vec![0.0f32; dm];
         rms_norm_rows(&x, w.final_norm, cfg.norm_eps, 1, dm, &mut hf, &mut rstd);
         let mut logits = vec![0.0f32; cfg.vocab];
-        matmul_nt_acc(&hf, w.embed, 1, dm, cfg.vocab, &mut logits);
+        gemm_nt_acc(&hf, w.embed, 1, dm, cfg.vocab, &mut logits);
         Ok(DecodeOut { logits, k_cache: k_out, v_cache: v_out })
     }
 
@@ -718,35 +660,6 @@ mod tests {
     }
 
     #[test]
-    fn matmul_helpers_agree_with_reference() {
-        // a = [[1,2],[3,4],[5,6]] (3x2), b = [[1,0,2],[0,1,3]] (2x3)
-        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
-        let b = [1.0f32, 0.0, 2.0, 0.0, 1.0, 3.0];
-        let mut c = vec![0.0f32; 9];
-        matmul_into(&a, &b, 3, 2, 3, &mut c);
-        assert_eq!(c, vec![1.0, 2.0, 8.0, 3.0, 4.0, 18.0, 5.0, 6.0, 28.0]);
-        // aᵀ @ c where c is 3x3: (2x3)
-        let mut tn = vec![0.0f32; 2 * 3];
-        matmul_tn_acc(&a, &c, 3, 2, 3, &mut tn);
-        // ref: a^T = [[1,3,5],[2,4,6]]; a^T@c row0 = 1*c0 + 3*c1 + 5*c2
-        assert_eq!(tn[0], 1.0 * 1.0 + 3.0 * 3.0 + 5.0 * 5.0);
-        // nt: c @ bᵀ? use b (2x3): rows dot rows.
-        let mut nt = vec![0.0f32; 3 * 2];
-        matmul_nt_acc(&c, &b, 3, 3, 2, &mut nt);
-        assert_eq!(nt[0], 1.0 * 1.0 + 2.0 * 0.0 + 8.0 * 2.0);
-        assert_eq!(nt[1], 1.0 * 0.0 + 2.0 * 1.0 + 8.0 * 3.0);
-    }
-
-    #[test]
-    fn softmax_normalizes() {
-        let mut s = vec![1.0f32, 2.0, 3.0];
-        softmax_inplace(&mut s);
-        let sum: f32 = s.iter().sum();
-        assert!((sum - 1.0).abs() < 1e-6);
-        assert!(s[2] > s[1] && s[1] > s[0]);
-    }
-
-    #[test]
     fn prefill_full_shapes_and_determinism() {
         let b = backend();
         let toks = vec![1, 2, 3, 4, 5, 6, 7];
@@ -766,6 +679,27 @@ mod tests {
         assert!(b.prefill_full(&[]).is_err());
         assert!(b.prefill_full(&[0, 24]).is_err());
         assert!(b.prefill_full(&[-1]).is_err());
+    }
+
+    #[test]
+    fn prefill_blocks_matches_serial_bitwise() {
+        let b = backend();
+        let blocks: Vec<Vec<i32>> = vec![
+            vec![1, 2, 3, 4, 5],
+            vec![6, 7],
+            vec![8, 9, 10, 11, 12, 13, 14, 15, 16],
+            vec![1, 2, 3, 4, 5], // duplicate content
+        ];
+        let refs: Vec<&[i32]> = blocks.iter().map(|b| b.as_slice()).collect();
+        let batch = b.prefill_blocks(&refs).unwrap();
+        assert_eq!(batch.len(), blocks.len());
+        for (toks, (k, v)) in blocks.iter().zip(&batch) {
+            let (ks, vs) = b.prefill_block(toks).unwrap();
+            assert_eq!(k, &ks, "K differs from serial prefill");
+            assert_eq!(v, &vs, "V differs from serial prefill");
+        }
+        // Errors propagate.
+        assert!(b.prefill_blocks(&[&[1], &[999]]).is_err());
     }
 
     #[test]

@@ -15,16 +15,26 @@
 //! * The optimizer is Adam(0.9, 0.999, 1e-8) with global-norm clip 1.0
 //!   and bias correction, matching the AOT `train_step` artifact.
 //!
+//! All contractions run on the [`crate::kernels`] layer: tiled GEMMs for
+//! the projection/weight gradients (row-parallel), and the attention
+//! forward/backward split into head-parallel and row-parallel passes
+//! whose per-element reduction order matches the single-threaded loops
+//! exactly — gradients are bitwise identical at every `--threads`
+//! setting.
+//!
 //! Gradients are derived by hand; the correctness anchor is the
 //! directional-derivative check against finite differences in the tests
 //! below.
 
 use super::native::{
-    axpy, dot, matmul_acc, matmul_into, matmul_nt_acc, matmul_tn_acc, rms_norm_rows, sigmoid,
-    silu, softmax_inplace, Weights, N_PARAMS, P_EMBED, P_FINAL_NORM, P_LN1, P_LN2, P_WD, P_WG,
-    P_WK, P_WO, P_WQ, P_WU, P_WV,
+    Weights, N_PARAMS, P_EMBED, P_FINAL_NORM, P_LN1, P_LN2, P_WD, P_WG, P_WK, P_WO, P_WQ, P_WU,
+    P_WV,
 };
 use crate::config::ModelConfig;
+use crate::kernels::{
+    axpy, dot, gemm_nn, gemm_nn_acc, gemm_nt_acc, gemm_tn_acc, par_rows, rms_norm_rows, sigmoid,
+    silu, softmax_inplace,
+};
 use crate::rope::RopeTable;
 use crate::tensor::{Tensor, TensorF, TensorI};
 use anyhow::{ensure, Result};
@@ -68,6 +78,16 @@ fn attends(seg: &[i32], max_seg: i32, t: usize, j: usize) -> bool {
     j <= t && (seg[j] == seg[t] || seg[t] == max_seg)
 }
 
+/// Serial-below chunk floors for the attention passes, shared by the
+/// forward and backward so the chunking heuristics cannot drift apart:
+/// `(head_min_rows, row_min_rows)` for head-parallel passes (~½·L²·hd
+/// mul-adds per head) and query-row-parallel passes respectively.
+fn attn_pass_floors(l: usize, nh: usize, hd: usize) -> (usize, usize) {
+    let head = ((1 << 15) / (l * l * hd).max(1)).max(1);
+    let row = ((1 << 14) / (nh * l * hd / 2).max(1)).max(1);
+    (head, row)
+}
+
 fn row_forward(
     cfg: &ModelConfig,
     rope: &RopeTable,
@@ -89,6 +109,8 @@ fn row_forward(
     let mut xs = vec![x];
     let mut layers = Vec::with_capacity(cfg.layers);
 
+    let (head_min_rows, row_min_rows) = attn_pass_floors(l, nh, hd);
+
     for n in 0..cfg.layers {
         let lw = w.layer(n);
         let x_in = xs[n].clone();
@@ -99,9 +121,9 @@ fn row_forward(
         let mut q = vec![0.0f32; l * nh * hd];
         let mut k = vec![0.0f32; l * kvh * hd];
         let mut v = vec![0.0f32; l * kvh * hd];
-        matmul_into(&h1, lw.wq, l, dm, nh * hd, &mut q);
-        matmul_into(&h1, lw.wk, l, dm, kvh * hd, &mut k);
-        matmul_into(&h1, lw.wv, l, dm, kvh * hd, &mut v);
+        gemm_nn(&h1, lw.wq, l, dm, nh * hd, &mut q);
+        gemm_nn(&h1, lw.wk, l, dm, kvh * hd, &mut k);
+        gemm_nn(&h1, lw.wv, l, dm, kvh * hd, &mut v);
         for t in 0..l {
             let pos = t as i64;
             for h in 0..nh {
@@ -112,50 +134,76 @@ fn row_forward(
             }
         }
 
+        // Attention probabilities, parallel over heads (each head's
+        // `(L, L)` prob block is contiguous).
         let mut probs = vec![0.0f32; nh * l * l];
-        let mut o = vec![0.0f32; l * nh * hd];
-        let mut scores = vec![0.0f32; l];
-        let mut idx = vec![0usize; l];
-        for h in 0..nh {
-            let kh = h / rep;
-            for t in 0..l {
-                let qv = &q[(t * nh + h) * hd..(t * nh + h + 1) * hd];
-                let mut cnt = 0;
-                for j in 0..=t {
-                    if attends(seg, max_seg, t, j) {
-                        scores[cnt] =
-                            dot(qv, &k[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd]) * scale;
-                        idx[cnt] = j;
-                        cnt += 1;
+        {
+            let (q_r, k_r) = (&q, &k);
+            par_rows(&mut probs, l * l, head_min_rows, |h0, chunk| {
+                let mut scores = vec![0.0f32; l];
+                let mut idx = vec![0usize; l];
+                for (hi, p_h) in chunk.chunks_mut(l * l).enumerate() {
+                    let h = h0 + hi;
+                    let kh = h / rep;
+                    for t in 0..l {
+                        let qv = &q_r[(t * nh + h) * hd..(t * nh + h + 1) * hd];
+                        let mut cnt = 0;
+                        for j in 0..=t {
+                            if attends(seg, max_seg, t, j) {
+                                let kr = &k_r[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd];
+                                scores[cnt] = dot(qv, kr) * scale;
+                                idx[cnt] = j;
+                                cnt += 1;
+                            }
+                        }
+                        softmax_inplace(&mut scores[..cnt]);
+                        let p_row = &mut p_h[t * l..(t + 1) * l];
+                        for c in 0..cnt {
+                            p_row[idx[c]] = scores[c];
+                        }
                     }
                 }
-                softmax_inplace(&mut scores[..cnt]);
-                let p_row = &mut probs[(h * l + t) * l..(h * l + t + 1) * l];
-                let ov = &mut o[(t * nh + h) * hd..(t * nh + h + 1) * hd];
-                for c in 0..cnt {
-                    let j = idx[c];
-                    p_row[j] = scores[c];
-                    axpy(scores[c], &v[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd], ov);
+            });
+        }
+        // Attention output, parallel over query rows; the unmasked-j
+        // iteration order matches the fused loop it replaced.
+        let mut o = vec![0.0f32; l * nh * hd];
+        {
+            let (probs_r, v_r) = (&probs, &v);
+            par_rows(&mut o, nh * hd, row_min_rows, |t0, chunk| {
+                for (ti, orow) in chunk.chunks_mut(nh * hd).enumerate() {
+                    let t = t0 + ti;
+                    for h in 0..nh {
+                        let kh = h / rep;
+                        let p_row = &probs_r[(h * l + t) * l..(h * l + t + 1) * l];
+                        let ov = &mut orow[h * hd..(h + 1) * hd];
+                        for j in 0..=t {
+                            if attends(seg, max_seg, t, j) {
+                                let vr = &v_r[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd];
+                                axpy(p_row[j], vr, ov);
+                            }
+                        }
+                    }
                 }
-            }
+            });
         }
 
         let mut xmid = x_in.clone();
-        matmul_acc(&o, lw.wo, l, nh * hd, dm, &mut xmid);
+        gemm_nn_acc(&o, lw.wo, l, nh * hd, dm, &mut xmid);
 
         let mut h2 = vec![0.0f32; l * dm];
         let mut rstd2 = vec![0.0f32; l];
         rms_norm_rows(&xmid, lw.ln2, cfg.norm_eps, l, dm, &mut h2, &mut rstd2);
         let mut gpre = vec![0.0f32; l * ff];
         let mut u = vec![0.0f32; l * ff];
-        matmul_into(&h2, lw.wg, l, dm, ff, &mut gpre);
-        matmul_into(&h2, lw.wu, l, dm, ff, &mut u);
+        gemm_nn(&h2, lw.wg, l, dm, ff, &mut gpre);
+        gemm_nn(&h2, lw.wu, l, dm, ff, &mut u);
         let mut m = vec![0.0f32; l * ff];
         for i in 0..l * ff {
             m[i] = silu(gpre[i]) * u[i];
         }
         let mut x_out = xmid.clone();
-        matmul_acc(&m, lw.wd, l, ff, dm, &mut x_out);
+        gemm_nn_acc(&m, lw.wd, l, ff, dm, &mut x_out);
 
         layers.push(LayerCache {
             rstd1,
@@ -179,7 +227,7 @@ fn row_forward(
     let mut rstdf = vec![0.0f32; l];
     rms_norm_rows(&xs[cfg.layers], w.final_norm, cfg.norm_eps, l, dm, &mut hf, &mut rstdf);
     let mut logits = vec![0.0f32; l * cfg.vocab];
-    matmul_nt_acc(&hf, w.embed, l, dm, cfg.vocab, &mut logits);
+    gemm_nt_acc(&hf, w.embed, l, dm, cfg.vocab, &mut logits);
 
     RowCache { xs, layers, rstdf, hf, logits }
 }
@@ -226,11 +274,12 @@ fn row_backward(
     let l = tokens.len();
     let rep = nh / kvh;
     let scale = 1.0 / (hd as f32).sqrt();
+    let (head_min_rows, row_min_rows) = attn_pass_floors(l, nh, hd);
 
     // Tied head: logits = hf @ embedᵀ.
     let mut dhf = vec![0.0f32; l * dm];
-    matmul_acc(dlogits, w.embed, l, cfg.vocab, dm, &mut dhf);
-    matmul_tn_acc(dlogits, &cache.hf, l, cfg.vocab, dm, grads[P_EMBED].data_mut());
+    gemm_nn_acc(dlogits, w.embed, l, cfg.vocab, dm, &mut dhf);
+    gemm_tn_acc(dlogits, &cache.hf, l, cfg.vocab, dm, grads[P_EMBED].data_mut());
 
     let mut dx = vec![0.0f32; l * dm];
     rms_backward(
@@ -250,8 +299,8 @@ fn row_backward(
 
         // MLP: x_out = x_mid + (silu(h2@wg) ⊙ (h2@wu)) @ wd.
         let mut dmvec = vec![0.0f32; l * ff];
-        matmul_nt_acc(&dx, lw.wd, l, dm, ff, &mut dmvec);
-        matmul_tn_acc(&c.m, &dx, l, ff, dm, grads[P_WD].axis0_mut(n));
+        gemm_nt_acc(&dx, lw.wd, l, dm, ff, &mut dmvec);
+        gemm_tn_acc(&c.m, &dx, l, ff, dm, grads[P_WD].axis0_mut(n));
         let mut dg = vec![0.0f32; l * ff];
         let mut du = vec![0.0f32; l * ff];
         for i in 0..l * ff {
@@ -261,50 +310,121 @@ fn row_backward(
             dg[i] = dmvec[i] * c.u[i] * s * (1.0 + g * (1.0 - s));
         }
         let mut dh2 = vec![0.0f32; l * dm];
-        matmul_nt_acc(&dg, lw.wg, l, ff, dm, &mut dh2);
-        matmul_nt_acc(&du, lw.wu, l, ff, dm, &mut dh2);
-        matmul_tn_acc(&c.h2, &dg, l, dm, ff, grads[P_WG].axis0_mut(n));
-        matmul_tn_acc(&c.h2, &du, l, dm, ff, grads[P_WU].axis0_mut(n));
+        gemm_nt_acc(&dg, lw.wg, l, ff, dm, &mut dh2);
+        gemm_nt_acc(&du, lw.wu, l, ff, dm, &mut dh2);
+        gemm_tn_acc(&c.h2, &dg, l, dm, ff, grads[P_WG].axis0_mut(n));
+        gemm_tn_acc(&c.h2, &du, l, dm, ff, grads[P_WU].axis0_mut(n));
         // Residual: dx (= dL/dx_out) flows to x_mid directly plus
         // through the norm.
         rms_backward(&c.xmid, lw.ln2, &c.rstd2, &dh2, l, dm, &mut dx, grads[P_LN2].axis0_mut(n));
 
         // Attention: x_mid = x_in + o @ wo.
         let mut do_ = vec![0.0f32; l * nh * hd];
-        matmul_nt_acc(&dx, lw.wo, l, dm, nh * hd, &mut do_);
-        matmul_tn_acc(&c.o, &dx, l, nh * hd, dm, grads[P_WO].axis0_mut(n));
+        gemm_nt_acc(&dx, lw.wo, l, dm, nh * hd, &mut do_);
+        gemm_tn_acc(&c.o, &dx, l, nh * hd, dm, grads[P_WO].axis0_mut(n));
 
+        // Softmax/score backward in three deterministic passes.
+        //
+        // Pass A (parallel over heads): dp[h,t,j] = ⟨do_t, v_j⟩ for
+        // unmasked entries, and psum[h,t] = Σ_j p·dp. Buffer row per
+        // head = [dp (L·L) | psum (L)].
+        let dp_row = l * l + l;
+        let mut dp_all = vec![0.0f32; nh * dp_row];
+        {
+            let (probs_r, do_r, v_r) = (&c.probs, &do_, &c.v);
+            par_rows(&mut dp_all, dp_row, head_min_rows, |h0, chunk| {
+                for (hi, row) in chunk.chunks_mut(dp_row).enumerate() {
+                    let h = h0 + hi;
+                    let kh = h / rep;
+                    let (dp_h, psum_h) = row.split_at_mut(l * l);
+                    for t in 0..l {
+                        let p_row = &probs_r[(h * l + t) * l..(h * l + t + 1) * l];
+                        let do_t = &do_r[(t * nh + h) * hd..(t * nh + h + 1) * hd];
+                        let mut psum = 0.0f32;
+                        for j in 0..=t {
+                            let p = p_row[j];
+                            if p != 0.0 {
+                                let vr = &v_r[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd];
+                                let d = dot(do_t, vr);
+                                dp_h[t * l + j] = d;
+                                psum += p * d;
+                            }
+                        }
+                        psum_h[t] = psum;
+                    }
+                }
+            });
+        }
+
+        // Pass B (parallel over query rows): dq[t,h] = Σ_j ds·k_j.
         let mut dq = vec![0.0f32; l * nh * hd];
+        {
+            let (probs_r, k_r, dp_r) = (&c.probs, &c.k, &dp_all);
+            par_rows(&mut dq, nh * hd, row_min_rows, |t0, chunk| {
+                for (ti, dqrow) in chunk.chunks_mut(nh * hd).enumerate() {
+                    let t = t0 + ti;
+                    for h in 0..nh {
+                        let kh = h / rep;
+                        let p_row = &probs_r[(h * l + t) * l..(h * l + t + 1) * l];
+                        let dp_h = &dp_r[h * dp_row..h * dp_row + l * l];
+                        let psum = dp_r[h * dp_row + l * l + t];
+                        let dq_t = &mut dqrow[h * hd..(h + 1) * hd];
+                        for j in 0..=t {
+                            let p = p_row[j];
+                            if p != 0.0 {
+                                let ds = p * (dp_h[t * l + j] - psum) * scale;
+                                let kr = &k_r[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd];
+                                axpy(ds, kr, dq_t);
+                            }
+                        }
+                    }
+                }
+            });
+        }
+
+        // Pass C (parallel over kv-head groups): dk/dv accumulate over
+        // every (h, t) in the group — reduction order (h asc, t asc)
+        // matches the fused loop. Written head-major per group, then
+        // scattered to the token-major layout the projections expect.
+        let mut dkv = vec![0.0f32; kvh * 2 * l * hd];
+        {
+            let (probs_r, do_r, q_r, dp_r) = (&c.probs, &do_, &c.q, &dp_all);
+            par_rows(&mut dkv, 2 * l * hd, head_min_rows, |kh0, chunk| {
+                for (ki, row) in chunk.chunks_mut(2 * l * hd).enumerate() {
+                    let kh = kh0 + ki;
+                    let (dk_h, dv_h) = row.split_at_mut(l * hd);
+                    for h in kh * rep..(kh + 1) * rep {
+                        let dp_base = h * dp_row;
+                        for t in 0..l {
+                            let p_row = &probs_r[(h * l + t) * l..(h * l + t + 1) * l];
+                            let do_t = &do_r[(t * nh + h) * hd..(t * nh + h + 1) * hd];
+                            let q_t = &q_r[(t * nh + h) * hd..(t * nh + h + 1) * hd];
+                            let psum = dp_r[dp_base + l * l + t];
+                            for j in 0..=t {
+                                let p = p_row[j];
+                                if p != 0.0 {
+                                    let ds = p * (dp_r[dp_base + t * l + j] - psum) * scale;
+                                    axpy(p, do_t, &mut dv_h[j * hd..(j + 1) * hd]);
+                                    axpy(ds, q_t, &mut dk_h[j * hd..(j + 1) * hd]);
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        }
         let mut dk = vec![0.0f32; l * kvh * hd];
         let mut dv = vec![0.0f32; l * kvh * hd];
-        let mut dp = vec![0.0f32; l];
-        for h in 0..nh {
-            let kh = h / rep;
-            for t in 0..l {
-                let p_row = &c.probs[(h * l + t) * l..(h * l + t + 1) * l];
-                let do_t = &do_[(t * nh + h) * hd..(t * nh + h + 1) * hd];
-                let mut psum = 0.0f32;
-                for j in 0..=t {
-                    let p = p_row[j];
-                    if p != 0.0 {
-                        let d = dot(do_t, &c.v[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd]);
-                        dp[j] = d;
-                        psum += p * d;
-                    }
-                }
-                let dq_t = &mut dq[(t * nh + h) * hd..(t * nh + h + 1) * hd];
-                let q_t = &c.q[(t * nh + h) * hd..(t * nh + h + 1) * hd];
-                for j in 0..=t {
-                    let p = p_row[j];
-                    if p != 0.0 {
-                        let ds = p * (dp[j] - psum) * scale;
-                        axpy(p, do_t, &mut dv[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd]);
-                        axpy(ds, &c.k[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd], dq_t);
-                        axpy(ds, q_t, &mut dk[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd]);
-                    }
-                }
+        for kh in 0..kvh {
+            let base = kh * 2 * l * hd;
+            for j in 0..l {
+                let dst = (j * kvh + kh) * hd;
+                dk[dst..dst + hd].copy_from_slice(&dkv[base + j * hd..base + (j + 1) * hd]);
+                dv[dst..dst + hd]
+                    .copy_from_slice(&dkv[base + (l + j) * hd..base + (l + j + 1) * hd]);
             }
         }
+
         // RoPE is an orthogonal rotation: its adjoint is rotation by -pos.
         for t in 0..l {
             let pos = t as i64;
@@ -317,12 +437,12 @@ fn row_backward(
         }
 
         let mut dh1 = vec![0.0f32; l * dm];
-        matmul_nt_acc(&dq, lw.wq, l, nh * hd, dm, &mut dh1);
-        matmul_nt_acc(&dk, lw.wk, l, kvh * hd, dm, &mut dh1);
-        matmul_nt_acc(&dv, lw.wv, l, kvh * hd, dm, &mut dh1);
-        matmul_tn_acc(&c.h1, &dq, l, dm, nh * hd, grads[P_WQ].axis0_mut(n));
-        matmul_tn_acc(&c.h1, &dk, l, dm, kvh * hd, grads[P_WK].axis0_mut(n));
-        matmul_tn_acc(&c.h1, &dv, l, dm, kvh * hd, grads[P_WV].axis0_mut(n));
+        gemm_nt_acc(&dq, lw.wq, l, nh * hd, dm, &mut dh1);
+        gemm_nt_acc(&dk, lw.wk, l, kvh * hd, dm, &mut dh1);
+        gemm_nt_acc(&dv, lw.wv, l, kvh * hd, dm, &mut dh1);
+        gemm_tn_acc(&c.h1, &dq, l, dm, nh * hd, grads[P_WQ].axis0_mut(n));
+        gemm_tn_acc(&c.h1, &dk, l, dm, kvh * hd, grads[P_WK].axis0_mut(n));
+        gemm_tn_acc(&c.h1, &dv, l, dm, kvh * hd, grads[P_WV].axis0_mut(n));
         rms_backward(
             &cache.xs[n],
             lw.ln1,
@@ -586,6 +706,30 @@ mod tests {
             rel < 3e-2,
             "directional derivative mismatch: analytic {analytic:.6} vs numeric {numeric:.6} (rel {rel:.4})"
         );
+    }
+
+    /// Gradients must be bitwise identical at every thread budget (the
+    /// kernels' determinism contract, exercised end to end).
+    #[test]
+    fn gradients_identical_across_thread_counts() {
+        let _g = crate::kernels::TEST_THREADS_LOCK.lock().unwrap();
+        let cfg = micro_config();
+        let specs = native_param_specs(&cfg);
+        let params = init_params(&cfg, &specs, 29);
+        let rope = RopeTable::new(cfg.head_dim, cfg.rope_theta);
+        // L = 64 crosses the attention passes' serial-below thresholds,
+        // so the parallel splits actually engage at threads = 8.
+        let (toks, segs, mask) = batch(&cfg, 1, 64, 41);
+        let prev = crate::kernels::num_threads();
+        crate::kernels::set_threads(1);
+        let (l1, g1) = loss_and_grads(&cfg, &rope, &params, &toks, &segs, &mask).unwrap();
+        crate::kernels::set_threads(8);
+        let (l8, g8) = loss_and_grads(&cfg, &rope, &params, &toks, &segs, &mask).unwrap();
+        crate::kernels::set_threads(prev);
+        assert_eq!(l1, l8, "loss differs across thread counts");
+        for (a, b) in g1.iter().zip(&g8) {
+            assert_eq!(a, b, "gradient tensor differs across thread counts");
+        }
     }
 
     #[test]

@@ -64,6 +64,7 @@ pub fn format_response(resp: &Response, tok: &ByteTokenizer) -> String {
         ("id", Json::num(resp.id as f64)),
         ("text", Json::str(tok.decode_until_eos(&resp.tokens))),
         ("ttft_ms", Json::num(resp.ttft * 1e3)),
+        ("block_prefill_ms", Json::num(resp.block_prefill_s * 1e3)),
         ("flops_tft", Json::num(resp.flops_tft)),
         ("cached_blocks", Json::num(resp.cached_blocks as f64)),
         ("total_blocks", Json::num(resp.total_blocks as f64)),
@@ -127,11 +128,17 @@ impl EngineHandle {
                         }
                         Job::Stats(out) => {
                             let s = coord.cache_stats();
+                            let m = &coord.metrics;
                             let line = Json::obj(vec![
-                                ("metrics", Json::str(coord.metrics.report())),
+                                ("metrics", Json::str(m.report())),
+                                ("block_prefill_p50_ms", Json::num(m.block_prefill_p50_ms())),
                                 ("cache_entries", Json::num(s.entries as f64)),
                                 ("cache_bytes", Json::num(s.bytes as f64)),
+                                ("cache_hits", Json::num(s.hits as f64)),
+                                ("cache_misses", Json::num(s.misses as f64)),
+                                ("cache_evictions", Json::num(s.evictions as f64)),
                                 ("cache_hit_rate", Json::num(s.hit_rate())),
+                                ("threads", Json::num(crate::kernels::num_threads() as f64)),
                             ])
                             .to_string();
                             let _ = out.send(line);
@@ -235,6 +242,7 @@ mod tests {
             id: 9,
             tokens: vec![b'h' as i32, b'i' as i32, crate::tokenizer::EOS],
             ttft: 0.0123,
+            block_prefill_s: 0.0042,
             flops_tft: 1e9,
             cached_blocks: 2,
             total_blocks: 3,
@@ -245,5 +253,6 @@ mod tests {
         assert_eq!(j.get("text").as_str(), Some("hi"));
         assert_eq!(j.get("cached_blocks").as_i64(), Some(2));
         assert!((j.get("ttft_ms").as_f64().unwrap() - 12.3).abs() < 0.01);
+        assert!((j.get("block_prefill_ms").as_f64().unwrap() - 4.2).abs() < 0.01);
     }
 }

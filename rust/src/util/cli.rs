@@ -82,6 +82,14 @@ impl Args {
         }
     }
 
+    /// `--threads N` (kernel thread budget). Returns `None` when absent
+    /// or unparsable so the caller can fall through to the
+    /// `BLOCK_ATTN_THREADS` env override and machine default (see
+    /// `kernels::init_threads_from_args`).
+    pub fn threads(&self) -> Option<usize> {
+        self.get("threads").and_then(|v| v.parse().ok()).filter(|&n| n > 0)
+    }
+
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }
@@ -121,6 +129,14 @@ mod tests {
         assert_eq!(b.usize_list_or("lengths", &[]), vec![1, 2, 3]);
         let c = parse("x");
         assert_eq!(c.usize_list_or("lengths", &[9]), vec![9]);
+    }
+
+    #[test]
+    fn threads_accessor() {
+        assert_eq!(parse("--threads 6").threads(), Some(6));
+        assert_eq!(parse("--threads=0").threads(), None);
+        assert_eq!(parse("--threads nope").threads(), None);
+        assert_eq!(parse("run").threads(), None);
     }
 
     #[test]

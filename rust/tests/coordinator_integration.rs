@@ -127,6 +127,25 @@ fn continuous_batching_serves_a_closed_set() {
     }
 }
 
+/// A rejected request must release every pin it acquired — planning
+/// pins cached blocks before the miss prefill runs; leaking them on an
+/// error exit leaves entries unevictable and makes `clear_cache` panic.
+#[test]
+fn failed_request_releases_all_pins() {
+    let mut coord = coordinator();
+    let warm = rag_request(1, 77, AttentionMode::Block);
+    coord.process(&warm).expect("warm-up");
+    // Same blocks (now cache hits, pinned at planning) plus one bad
+    // block: the concurrent miss prefill rejects the out-of-vocab token
+    // and the request errors out with the hit pins still held.
+    let mut bad = warm.clone();
+    bad.id = 2;
+    bad.blocks.push(vec![-5]);
+    assert!(coord.process(&bad).is_err(), "invalid block must be rejected");
+    // All pins released: clearing the cache must not panic.
+    coord.clear_cache();
+}
+
 #[test]
 fn cache_budget_evicts_but_serving_still_correct() {
     // A tiny budget forces eviction churn; outputs must stay correct.

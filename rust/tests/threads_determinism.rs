@@ -1,0 +1,125 @@
+//! Thread-count determinism: the serving stack must produce
+//! byte-identical output at every `--threads` setting.
+//!
+//! The kernels layer guarantees a fixed per-element reduction order and
+//! row-disjoint parallel splits; this test pins the end-to-end
+//! consequence: a coordinator serving the same request stream with 1
+//! kernel thread and with 8 kernel threads emits identical tokens,
+//! TTFT-independent fields, and identical cache behavior — including
+//! the concurrent cache-miss block prefill path.
+
+use block_attn::coordinator::{AttentionMode, Coordinator, Request};
+use block_attn::kernels::set_threads;
+use block_attn::runtime::NativeBackend;
+use block_attn::util::rng::Rng;
+use block_attn::{Backend, ModelConfig};
+use std::sync::Mutex;
+
+/// Both tests flip the process-global thread budget; without
+/// serialization the harness could interleave them and run both sides
+/// of a comparison at the same effective thread count — which would
+/// mask exactly the nondeterminism this file exists to catch.
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn micro_config() -> ModelConfig {
+    ModelConfig {
+        name: "micro".into(),
+        vocab: 24,
+        d_model: 16,
+        layers: 2,
+        heads: 2,
+        kv_heads: 1,
+        head_dim: 8,
+        d_ff: 32,
+        rope_theta: 10000.0,
+        norm_eps: 1e-5,
+        max_len: 256,
+    }
+}
+
+/// A request stream with shared blocks (cache hits on later requests),
+/// fresh blocks (concurrent misses), and a duplicate block inside one
+/// request.
+fn request_stream(vocab: usize) -> Vec<Request> {
+    let mut rng = Rng::new(99);
+    let mut block = |len: usize| -> Vec<i32> {
+        (0..len).map(|_| rng.below(vocab) as i32).collect()
+    };
+    let shared_a = block(10);
+    let shared_b = block(7);
+    let dup = block(5);
+    let mut reqs = Vec::new();
+    for (i, mode) in [
+        AttentionMode::Block,
+        AttentionMode::Block,
+        AttentionMode::BlockNoReencode,
+        AttentionMode::Full,
+    ]
+    .iter()
+    .enumerate()
+    {
+        let blocks = match i {
+            0 => vec![shared_a.clone(), block(9), dup.clone(), dup.clone()],
+            1 => vec![shared_a.clone(), shared_b.clone(), block(12)],
+            _ => vec![shared_b.clone(), block(6)],
+        };
+        reqs.push(Request {
+            id: i as u64,
+            blocks,
+            query: block(8),
+            max_new_tokens: 6,
+            mode: *mode,
+        });
+    }
+    reqs
+}
+
+/// Serve the stream on a fresh coordinator; return everything
+/// deterministic about the responses.
+fn serve(threads: usize) -> Vec<(Vec<i32>, usize, usize, usize)> {
+    set_threads(threads);
+    let engine = NativeBackend::new(micro_config(), 0xD15C);
+    let mut coord = Coordinator::new(engine, 64 << 20);
+    request_stream(24)
+        .iter()
+        .map(|req| {
+            let resp = coord.process(req).expect("process");
+            (resp.tokens.clone(), resp.cached_blocks, resp.total_blocks, resp.prompt_tokens)
+        })
+        .collect()
+}
+
+#[test]
+fn coordinator_output_identical_across_thread_counts() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = block_attn::kernels::num_threads();
+    let one = serve(1);
+    let eight = serve(8);
+    set_threads(prev);
+    assert_eq!(one, eight, "serving output depends on the thread count");
+    // Sanity: the stream exercised cache hits and multi-block requests.
+    assert!(one.iter().any(|(_, cached, _, _)| *cached > 0), "no cache hits exercised");
+    assert!(one.iter().all(|(tokens, ..)| !tokens.is_empty()));
+}
+
+#[test]
+fn prefill_blocks_identical_across_thread_counts() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = block_attn::kernels::num_threads();
+    let engine = NativeBackend::new(micro_config(), 0xBEE);
+    let mut rng = Rng::new(7);
+    let blocks: Vec<Vec<i32>> = (0..5)
+        .map(|i| (0..(3 + i * 2)).map(|_| rng.below(24) as i32).collect())
+        .collect();
+    let refs: Vec<&[i32]> = blocks.iter().map(|b| b.as_slice()).collect();
+    set_threads(1);
+    let serial = engine.prefill_blocks(&refs).unwrap();
+    set_threads(8);
+    let parallel = engine.prefill_blocks(&refs).unwrap();
+    set_threads(prev);
+    assert_eq!(serial.len(), parallel.len());
+    for ((k1, v1), (k8, v8)) in serial.iter().zip(&parallel) {
+        assert_eq!(k1, k8, "block K depends on thread count");
+        assert_eq!(v1, v8, "block V depends on thread count");
+    }
+}
