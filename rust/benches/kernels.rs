@@ -15,8 +15,9 @@
 //! (`--json-out PATH` overrides) so the perf trajectory is tracked
 //! across PRs.
 
+use block_attn::config::KvPrecision;
 use block_attn::coordinator::{AttentionMode, Coordinator, Request};
-use block_attn::kernels::{gemm_nn_acc, set_threads};
+use block_attn::kernels::{gemm_nn_acc, gemm_nt_acc, gemm_nt_i8_acc, quant, set_threads};
 use block_attn::runtime::backend_from_args;
 use block_attn::util::cli::Args;
 use block_attn::util::json::Json;
@@ -91,6 +92,44 @@ fn main() -> anyhow::Result<()> {
         "# speedup: tiled {speed_tiled:.2}x, tiled+{par_threads}t {speed_par:.2}x (target ≥ 3x)"
     );
 
+    // -- int8 × f32 mixed GEMM vs f32 ----------------------------------
+    // The QKᵀ layout of the fused-dequant attention path: `b` plays the
+    // int8-quantized K operand (per shared-dim channel scales). Parity
+    // gate first: the fused dequant must match the f32 kernel over the
+    // pre-dequantized operand bit for bit.
+    let bscale = quant::channel_scales(&b, size, size);
+    let bq: Vec<i8> = b
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| quant::quantize_one(v, bscale[i % size]))
+        .collect();
+    let bdeq: Vec<f32> = bq
+        .iter()
+        .enumerate()
+        .map(|(i, &q)| q as f32 * bscale[i % size])
+        .collect();
+    set_threads(1);
+    let mut want_nt = vec![0.0f32; m * n];
+    gemm_nt_acc(&a, &bdeq, m, k, n, &mut want_nt);
+    let mut got_nt = vec![0.0f32; m * n];
+    gemm_nt_i8_acc(&a, &bq, &bscale, m, k, n, &mut got_nt);
+    assert_eq!(got_nt, want_nt, "int8 GEMM differs from dequantized f32");
+
+    let r_nt_f32 = bench("gemm_nt_f32(1 thread)", &opts, || {
+        out.fill(0.0);
+        gemm_nt_acc(&a, &b, m, k, n, &mut out);
+    });
+    println!("{}  ({:.2} GFLOP/s)", r_nt_f32.report_line(), gflop / (r_nt_f32.p50_ms() / 1e3));
+    let r_nt_i8 = bench("gemm_nt_i8(1 thread)", &opts, || {
+        out.fill(0.0);
+        gemm_nt_i8_acc(&a, &bq, &bscale, m, k, n, &mut out);
+    });
+    println!("{}  ({:.2} GFLOP/s)", r_nt_i8.report_line(), gflop / (r_nt_i8.p50_ms() / 1e3));
+    println!(
+        "# int8-vs-f32 nt GEMM: {:.2}x the f32 time at ¼ the operand bytes",
+        r_nt_i8.p50_ms() / r_nt_f32.p50_ms()
+    );
+
     // -- concurrent block prefill --------------------------------------
     // 8 independent 64-token blocks through the real engine, then the
     // end-to-end coordinator TTFT on a cold cache (miss prefill is the
@@ -149,6 +188,33 @@ fn main() -> anyhow::Result<()> {
     }
     let ttft_speedup = ttft[0] / ttft[1];
     println!("# TTFT cold-cache: {:.1} ms → {:.1} ms ({ttft_speedup:.2}x)", ttft[0], ttft[1]);
+
+    // Warm-cache TTFT per KV tier: every block hits, so the timed path
+    // is fetch (+ fused dequant on the int8 tier) + Eq.-3 re-encode +
+    // context assembly + final prefill. The int8 tier pays the dequant
+    // but stores each block at ~¼ the bytes (reported alongside).
+    set_threads(par_threads);
+    let mut warm_ms = [0.0f64; 2];
+    let mut tier_bytes = [0usize; 2];
+    for (slot, prec) in [(0usize, KvPrecision::F32), (1, KvPrecision::Int8)] {
+        let tier_engine = backend_from_args(&args, "tiny")?;
+        let mut tier_coord = Coordinator::with_kv_precision(tier_engine, 256 << 20, prec);
+        tier_coord.process(&req).expect("cache warm-up");
+        let r = bench(&format!("coordinator_ttft_warm({})", prec.as_str()), &popts, || {
+            tier_coord.process(&req).expect("process");
+        });
+        warm_ms[slot] = r.p50_ms();
+        tier_bytes[slot] = tier_coord.cache_stats().bytes;
+        println!("{}", r.report_line());
+    }
+    println!(
+        "# warm TTFT: f32 {:.1} ms vs int8 {:.1} ms; cache bytes {} vs {} ({:.1}% of f32)",
+        warm_ms[0],
+        warm_ms[1],
+        tier_bytes[0],
+        tier_bytes[1],
+        100.0 * tier_bytes[1] as f64 / tier_bytes[0].max(1) as f64
+    );
     set_threads(machine_threads);
 
     let report = Json::obj(vec![
@@ -168,6 +234,12 @@ fn main() -> anyhow::Result<()> {
         ("prefill_speedup", Json::num(speed_prefill)),
         ("ttft_1t_ms", Json::num(ttft[0])),
         ("ttft_nt_ms", Json::num(ttft[1])),
+        ("gemm_nt_f32_ms", Json::num(r_nt_f32.p50_ms())),
+        ("gemm_nt_i8_ms", Json::num(r_nt_i8.p50_ms())),
+        ("ttft_warm_f32_ms", Json::num(warm_ms[0])),
+        ("ttft_warm_int8_ms", Json::num(warm_ms[1])),
+        ("kv_bytes_f32", Json::num(tier_bytes[0] as f64)),
+        ("kv_bytes_int8", Json::num(tier_bytes[1] as f64)),
     ]);
     let out_path = args.str_or("json-out", "BENCH_kernels.json");
     std::fs::write(&out_path, format!("{report}\n"))?;

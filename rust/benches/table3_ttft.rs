@@ -6,6 +6,7 @@
 //! cargo bench --bench table3_ttft                  # lengths ≤ 8K
 //! cargo bench --bench table3_ttft -- --full        # adds 16K and 32K
 //! cargo bench --bench table3_ttft -- --lengths 512,2048
+//! cargo bench --bench table3_ttft -- --kv-quant int8   # quantized KV tier
 //! ```
 //!
 //! The block path is timed end to end as served: cache fetch + RoPE
@@ -51,6 +52,9 @@ fn main() -> anyhow::Result<()> {
     let cfg = engine.config().clone();
     let flops = FlopsModel::from_config(&cfg);
     let rope = RopeTable::new(cfg.head_dim, cfg.rope_theta);
+    // KV cache tier for the block path (`--kv-quant int8` times the
+    // fused dequant + re-encode fetch instead of the f32 fetch).
+    let kv_precision = block_attn::config::KvPrecision::resolve(&args)?;
     let block_bucket = engine.max_block_tokens()?.min(512);
     let mut rng = Rng::new(7);
 
@@ -86,7 +90,7 @@ fn main() -> anyhow::Result<()> {
         // the passage KV "has been pre-computed and cached in memory").
         let mut ttft_block_ms = r_van.p50_ms();
         if ctx_len > 0 {
-            let mut cache = BlockKvCache::new(rope.clone(), 0);
+            let mut cache = BlockKvCache::with_precision(rope.clone(), 0, kv_precision);
             let blocks: Vec<&[i32]> = tokens[..ctx_len].chunks(block_bucket).collect();
             for b in &blocks {
                 let (k, v) = engine.prefill_block(b)?;
@@ -139,6 +143,7 @@ fn main() -> anyhow::Result<()> {
         ("bench", Json::str("table3_ttft")),
         ("model", Json::str(model)),
         ("backend", Json::str(block_attn::runtime::backend_choice(&args))),
+        ("kv_precision", Json::str(kv_precision.as_str())),
         ("threads", Json::num(threads as f64)),
         ("user_input_tokens", Json::num(q_len as f64)),
         ("rows", Json::Arr(rows)),

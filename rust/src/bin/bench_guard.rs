@@ -1,0 +1,109 @@
+//! `bench_guard` — the CI perf-regression gate.
+//!
+//! Diffs two machine-readable bench reports (the `BENCH_*.json` files
+//! written by `cargo bench --bench kernels` / `--bench table3_ttft`)
+//! and fails when any tracked metric regresses beyond a threshold.
+//!
+//! ```sh
+//! bench_guard --baseline ci/baselines/BENCH_kernels.json \
+//!             --current BENCH_kernels.json [--threshold 1.5] [--min-ms 0.05]
+//! ```
+//!
+//! Tracked metrics are every numeric field whose key ends in `_ms`
+//! (times), found recursively — nested `rows` arrays are matched by
+//! index, which is stable because CI pins the bench shapes. Baselines
+//! below `--min-ms` are skipped: sub-tenth-millisecond timings are
+//! noise-dominated on shared runners. Exit code is non-zero iff any
+//! metric's `current / baseline` exceeds `--threshold` (default 1.5×)
+//! — or a baseline metric is missing from the current report, so a
+//! bench refactor cannot silently drop its own gate.
+
+use block_attn::util::cli::Args;
+use block_attn::util::json::Json;
+
+/// Flatten to `(dotted.path[idx], value)` pairs for every numeric leaf.
+fn flatten(prefix: &str, j: &Json, out: &mut Vec<(String, f64)>) {
+    match j {
+        Json::Num(n) => out.push((prefix.to_string(), *n)),
+        Json::Arr(a) => {
+            for (i, v) in a.iter().enumerate() {
+                flatten(&format!("{prefix}[{i}]"), v, out);
+            }
+        }
+        Json::Obj(o) => {
+            for (k, v) in o {
+                let p = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                flatten(&p, v, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn load_metrics(path: &str) -> anyhow::Result<Vec<(String, f64)>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let mut out = Vec::new();
+    flatten("", &json, &mut out);
+    out.retain(|(k, _)| k.ends_with("_ms"));
+    Ok(out)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let baseline_path = args
+        .get("baseline")
+        .ok_or_else(|| anyhow::anyhow!("--baseline PATH is required"))?
+        .to_string();
+    let current_path = args
+        .get("current")
+        .ok_or_else(|| anyhow::anyhow!("--current PATH is required"))?
+        .to_string();
+    let threshold = args.f64_or("threshold", 1.5);
+    let min_ms = args.f64_or("min-ms", 0.05);
+
+    let baseline = load_metrics(&baseline_path)?;
+    let current = load_metrics(&current_path)?;
+
+    let mut regressions: Vec<String> = Vec::new();
+    let mut compared = 0usize;
+    println!("# bench_guard: {current_path} vs {baseline_path} (fail > {threshold:.2}x)");
+    println!("{:<40} {:>12} {:>12} {:>8}  status", "metric", "baseline", "current", "ratio");
+    for (key, base) in &baseline {
+        let Some((_, cur)) = current.iter().find(|(k, _)| k == key) else {
+            // A vanished metric is a gate failure, not a skip: a bench
+            // refactor that drops or renames a timed metric must not
+            // silently disable its regression coverage.
+            println!("{key:<40} {base:>12.3} {:>12} {:>8}  MISSING", "-", "-");
+            regressions.push(format!("{key}: present in baseline, missing from current run"));
+            continue;
+        };
+        if !base.is_finite() || *base < min_ms {
+            println!("{key:<40} {base:>12.3} {cur:>12.3} {:>8}  below --min-ms (skipped)", "-");
+            continue;
+        }
+        compared += 1;
+        let ratio = cur / base;
+        let status = if ratio > threshold { "REGRESSED" } else { "ok" };
+        println!("{key:<40} {base:>12.3} {cur:>12.3} {ratio:>7.2}x  {status}");
+        if ratio > threshold {
+            regressions.push(format!("{key}: {base:.3} ms -> {cur:.3} ms ({ratio:.2}x)"));
+        }
+    }
+    if compared == 0 {
+        anyhow::bail!(
+            "no comparable *_ms metrics between {baseline_path} and {current_path} — \
+             wrong file, or the bench output format drifted from the baseline"
+        );
+    }
+    if !regressions.is_empty() {
+        anyhow::bail!(
+            "{} perf gate failure(s) (>{threshold:.2}x regression or missing metric):\n  {}",
+            regressions.len(),
+            regressions.join("\n  ")
+        );
+    }
+    println!("# {compared} metrics within {threshold:.2}x of baseline");
+    Ok(())
+}

@@ -11,6 +11,65 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+/// Storage precision of cached block KV states (the `BlockKvCache`
+/// tier).
+///
+/// * `F32` — full-precision storage; cached reuse is bit-lossless.
+/// * `Int8` — symmetric int8 codes with per-(layer, head, channel) f32
+///   scales (see `kernels::quant`): ~¼ the bytes, so ~4× the blocks
+///   per byte budget. Accuracy contract: decode-logit cosine
+///   similarity vs the f32 tier ≥ 0.999 on the workload traces
+///   (`tests/kv_quant.rs`); output stays bitwise identical across
+///   thread counts because quantization is per-element and order-free.
+///
+/// Resolution order: `--kv-quant f32|int8` > `$BLOCK_ATTN_KV_QUANT` >
+/// `F32`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvPrecision {
+    #[default]
+    F32,
+    Int8,
+}
+
+impl KvPrecision {
+    pub fn parse(s: &str) -> Result<KvPrecision> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "full" => KvPrecision::F32,
+            "int8" | "i8" | "q8" => KvPrecision::Int8,
+            other => bail!("unknown KV precision '{other}' (expected 'f32' or 'int8')"),
+        })
+    }
+
+    /// `$BLOCK_ATTN_KV_QUANT`, defaulting to `F32`. An unparsable value
+    /// warns and falls back rather than erroring: this runs inside
+    /// constructors that cannot return a `Result`.
+    pub fn from_env() -> KvPrecision {
+        match std::env::var("BLOCK_ATTN_KV_QUANT") {
+            Ok(v) if !v.trim().is_empty() => KvPrecision::parse(&v).unwrap_or_else(|e| {
+                eprintln!("warning: ignoring $BLOCK_ATTN_KV_QUANT: {e}");
+                KvPrecision::F32
+            }),
+            _ => KvPrecision::F32,
+        }
+    }
+
+    /// `--kv-quant` from parsed CLI options, falling back to the
+    /// environment then `F32`. Errors on an unparsable flag value.
+    pub fn resolve(args: &crate::util::cli::Args) -> Result<KvPrecision> {
+        match args.kv_quant() {
+            Some(v) => KvPrecision::parse(v),
+            None => Ok(KvPrecision::from_env()),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KvPrecision::F32 => "f32",
+            KvPrecision::Int8 => "int8",
+        }
+    }
+}
+
 /// Transformer dimensions for one named config (e.g. `tiny`).
 #[derive(Debug, Clone)]
 pub struct ModelConfig {
@@ -348,6 +407,27 @@ mod tests {
         assert_eq!(bench.vocab, 32000);
         assert!((bench.rope_theta - 500000.0).abs() < 1e-9);
         assert!(ModelConfig::builtin("giant").is_none());
+    }
+
+    #[test]
+    fn kv_precision_parses_and_defaults() {
+        assert_eq!(KvPrecision::parse("f32").unwrap(), KvPrecision::F32);
+        assert_eq!(KvPrecision::parse(" INT8 ").unwrap(), KvPrecision::Int8);
+        assert_eq!(KvPrecision::parse("i8").unwrap(), KvPrecision::Int8);
+        assert!(KvPrecision::parse("int4").is_err());
+        assert_eq!(KvPrecision::default(), KvPrecision::F32);
+        assert_eq!(KvPrecision::Int8.as_str(), "int8");
+        // Flag beats environment; absent flag falls through to env/F32.
+        let args = crate::util::cli::Args::parse_from(vec![
+            "--kv-quant".to_string(),
+            "int8".to_string(),
+        ]);
+        assert_eq!(KvPrecision::resolve(&args).unwrap(), KvPrecision::Int8);
+        let bad = crate::util::cli::Args::parse_from(vec![
+            "--kv-quant".to_string(),
+            "int4".to_string(),
+        ]);
+        assert!(KvPrecision::resolve(&bad).is_err());
     }
 
     #[test]

@@ -22,6 +22,7 @@ pub mod scheduler;
 pub mod segmenter;
 pub mod session;
 
+use crate::config::KvPrecision;
 use crate::kvcache::{block_key, BlockKvCache};
 use crate::rope::RopeTable;
 use crate::runtime::Backend;
@@ -112,13 +113,27 @@ pub struct Coordinator<B: Backend> {
 }
 
 impl<B: Backend> Coordinator<B> {
+    /// Default construction resolves the KV storage precision from
+    /// `$BLOCK_ATTN_KV_QUANT` (so the whole stack — tests included —
+    /// can be flipped to the int8 tier without touching call sites);
+    /// use [`Self::with_kv_precision`] to pin it explicitly.
     pub fn new(engine: B, cache_budget_bytes: usize) -> Coordinator<B> {
+        Self::with_kv_precision(engine, cache_budget_bytes, KvPrecision::from_env())
+    }
+
+    /// A coordinator whose block-KV cache stores at `precision` (the
+    /// `--kv-quant` plumbing; see [`KvPrecision`]).
+    pub fn with_kv_precision(
+        engine: B,
+        cache_budget_bytes: usize,
+        precision: KvPrecision,
+    ) -> Coordinator<B> {
         let cfg = engine.config().clone();
         let rope = RopeTable::new(cfg.head_dim, cfg.rope_theta);
         let flops = crate::flops::FlopsModel::from_config(&cfg);
         Coordinator {
             engine,
-            cache: BlockKvCache::new(rope, cache_budget_bytes),
+            cache: BlockKvCache::with_precision(rope, cache_budget_bytes, precision),
             scheduler: Scheduler::new(),
             metrics: Metrics::new(),
             flops,
@@ -128,6 +143,11 @@ impl<B: Backend> Coordinator<B> {
 
     pub fn engine(&self) -> &B {
         &self.engine
+    }
+
+    /// Storage precision of the block-KV cache.
+    pub fn kv_precision(&self) -> KvPrecision {
+        self.cache.precision()
     }
 
     pub fn cache_stats(&self) -> crate::kvcache::CacheStats {
@@ -368,16 +388,22 @@ impl<B: Backend> Coordinator<B> {
         })
     }
 
-    /// Teacher-forced scoring: per-token NLL (nats) of `target` following
-    /// `blocks + query` under the given attention mode. Runs the real
-    /// serving path (prefill + decode), feeding gold tokens.
-    pub fn score_continuation(
+    /// Teacher-forced raw-logit trace: serve `blocks + query` through
+    /// the real prefill path, then decode feeding `forced` tokens.
+    /// Returns `forced.len() + 1` logit vectors — index 0 is the
+    /// prefill's next-token logits, index `i+1` follows `forced[..=i]`.
+    ///
+    /// This is the quantization accuracy harness: the same forced
+    /// stream through an f32-tier and an int8-tier coordinator yields
+    /// directly comparable logits (`tests/kv_quant.rs` asserts cosine
+    /// similarity ≥ 0.999 per step on the workload traces).
+    pub fn logits_trace(
         &mut self,
         blocks: &[Vec<i32>],
         query: &[i32],
-        target: &[i32],
+        forced: &[i32],
         mode: AttentionMode,
-    ) -> Result<Vec<f64>> {
+    ) -> Result<Vec<Vec<f32>>> {
         let req = Request {
             id: u64::MAX,
             blocks: blocks.to_vec(),
@@ -387,28 +413,45 @@ impl<B: Backend> Coordinator<B> {
         };
         let t0 = Instant::now();
         let (mut state, _) = self.prefill(&req, t0)?;
-        // Re-run the last prefill logits through log-softmax via a fresh
-        // prefill call result: prefill() discarded them into the first
-        // sampled token, so recompute from the decode path instead by
-        // scoring sequentially: logits_i predict target_i.
-        let mut out = Vec::with_capacity(target.len());
-        let mut logits = self.last_prefill_logits.take().ok_or_else(|| {
-            anyhow::anyhow!("prefill did not record logits")
-        })?;
-        for (i, &t) in target.iter().enumerate() {
-            out.push(nll_of(&logits, t));
-            if i + 1 == target.len() {
-                break;
-            }
+        let mut out = Vec::with_capacity(forced.len() + 1);
+        out.push(
+            self.last_prefill_logits
+                .take()
+                .ok_or_else(|| anyhow::anyhow!("prefill did not record logits"))?,
+        );
+        for &t in forced {
             let dec = self
                 .engine
                 .decode(t, &state.k_cache, &state.v_cache, state.len)?;
             state.k_cache = dec.k_cache;
             state.v_cache = dec.v_cache;
             state.len += 1;
-            logits = dec.logits;
+            out.push(dec.logits);
         }
         Ok(out)
+    }
+
+    /// Teacher-forced scoring: per-token NLL (nats) of `target` following
+    /// `blocks + query` under the given attention mode. Runs the real
+    /// serving path (prefill + decode) via [`Self::logits_trace`]:
+    /// logits_i predict target_i.
+    pub fn score_continuation(
+        &mut self,
+        blocks: &[Vec<i32>],
+        query: &[i32],
+        target: &[i32],
+        mode: AttentionMode,
+    ) -> Result<Vec<f64>> {
+        // An empty target still runs the prefill (validation, cache
+        // warming and metrics side effects) — the trace's prefill entry
+        // just goes unscored.
+        let forced = &target[..target.len().saturating_sub(1)];
+        let trace = self.logits_trace(blocks, query, forced, mode)?;
+        Ok(target
+            .iter()
+            .zip(&trace)
+            .map(|(&t, logits)| nll_of(logits, t))
+            .collect())
     }
 
     /// Precompute + cache the KV of a block (offline warm-up of the

@@ -308,6 +308,106 @@ fn tn_row_edge(
     }
 }
 
+// -- mixed precision: int8 operand with per-channel f32 scales -------------
+
+/// `out[m×p] += a[m×n] @ (b_q[p×n] ⊙ scale[n])ᵀ` — the QKᵀ contraction
+/// with an int8-quantized K operand. `scale` has one entry per shared
+/// (channel) index `n`; dequantization `q·s` is fused into the inner
+/// loop, per-element and order-free, so the reduction order (single
+/// f32 accumulator seeded from `out`, ascending `n`) is identical to
+/// running [`gemm_nt_acc`] over a pre-dequantized operand — bitwise.
+pub fn gemm_nt_i8_acc(
+    a: &[f32],
+    b_q: &[i8],
+    b_scale: &[f32],
+    m: usize,
+    n: usize,
+    p: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b_q.len(), p * n);
+    debug_assert_eq!(b_scale.len(), n);
+    debug_assert_eq!(out.len(), m * p);
+    if m * n * p >= PAR_MIN_VOLUME {
+        par_rows(out, p, min_rows_for(n * p), |r0, chunk| {
+            let rows = chunk.len() / p;
+            let a_rows = &a[r0 * n..(r0 + rows) * n];
+            nt_i8_serial(a_rows, b_q, b_scale, rows, n, p, chunk);
+        });
+    } else {
+        nt_i8_serial(a, b_q, b_scale, m, n, p, out);
+    }
+}
+
+fn nt_i8_serial(
+    a: &[f32],
+    b_q: &[i8],
+    b_scale: &[f32],
+    m: usize,
+    n: usize,
+    p: usize,
+    out: &mut [f32],
+) {
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        for (j, o) in out[i * p..(i + 1) * p].iter_mut().enumerate() {
+            let brow = &b_q[j * n..(j + 1) * n];
+            let mut acc = *o;
+            for ((&av, &qv), &sv) in arow.iter().zip(brow).zip(b_scale) {
+                acc += av * (qv as f32 * sv);
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// `out[m×n] += a[m×k] @ (b_q[k×n] ⊙ scale[n])` — the AV contraction
+/// with an int8-quantized V operand (`scale` is per output channel).
+/// Same fused per-element dequant and ascending-`k` in-place
+/// accumulation as the f32 saxpy loop it mirrors.
+pub fn gemm_nn_i8_acc(
+    a: &[f32],
+    b_q: &[i8],
+    b_scale: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b_q.len(), k * n);
+    debug_assert_eq!(b_scale.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    if m * k * n >= PAR_MIN_VOLUME {
+        par_rows(out, n, min_rows_for(k * n), |r0, chunk| {
+            let rows = chunk.len() / n;
+            let a_rows = &a[r0 * k..(r0 + rows) * k];
+            nn_i8_serial(a_rows, b_q, b_scale, rows, k, n, chunk);
+        });
+    } else {
+        nn_i8_serial(a, b_q, b_scale, m, k, n, out);
+    }
+}
+
+fn nn_i8_serial(
+    a: &[f32],
+    b_q: &[i8],
+    b_scale: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (pp, &av) in arow.iter().enumerate() {
+            super::rowops::axpy_i8(av, &b_q[pp * n..(pp + 1) * n], b_scale, orow);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -410,6 +510,83 @@ mod tests {
             gemm_tn_acc(&a, &b, m, k, n, &mut got);
             assert_eq!(got, want, "tn mismatch at {m}x{k}x{n}");
         }
+    }
+
+    /// Quantize per shared-dim channel with the canonical scale formula.
+    fn quant_cols(b: &[f32], rows: usize, n: usize) -> (Vec<i8>, Vec<f32>) {
+        let scale = crate::kernels::quant::channel_scales(b, rows, n);
+        let q = b
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| crate::kernels::quant::quantize_one(v, scale[i % n]))
+            .collect();
+        (q, scale)
+    }
+
+    #[test]
+    fn int8_gemms_match_dequantized_f32_bitwise() {
+        // The fused dequant must be invisible: int8 kernels == f32
+        // kernels over the pre-dequantized operand, bit for bit.
+        let mut rng = Rng::new(21);
+        for &(m, k, n) in SHAPES {
+            let a = randvec(&mut rng, m * k);
+            let b = randvec(&mut rng, k * n);
+            let seed = randvec(&mut rng, m * n);
+            // nn layout: b is k×n, scales per column n.
+            let (bq, bs) = quant_cols(&b, k, n);
+            let deq: Vec<f32> = bq
+                .iter()
+                .enumerate()
+                .map(|(i, &q)| q as f32 * bs[i % n])
+                .collect();
+            let mut want = seed.clone();
+            gemm_nn_acc(&a, &deq, m, k, n, &mut want);
+            let mut got = seed.clone();
+            gemm_nn_i8_acc(&a, &bq, &bs, m, k, n, &mut got);
+            assert_eq!(got, want, "nn_i8 mismatch at {m}x{k}x{n}");
+            // nt layout: a is m×k, b is n×k (shared dim k), scales per k.
+            let bt = randvec(&mut rng, n * k);
+            let (btq, bts) = quant_cols(&bt, n, k);
+            let deqt: Vec<f32> = btq
+                .iter()
+                .enumerate()
+                .map(|(i, &q)| q as f32 * bts[i % k])
+                .collect();
+            let seed2 = randvec(&mut rng, m * n);
+            let mut want2 = seed2.clone();
+            ref_nt(&a, &deqt, m, k, n, &mut want2);
+            let mut got2 = seed2.clone();
+            gemm_nt_i8_acc(&a, &btq, &bts, m, k, n, &mut got2);
+            assert_eq!(got2, want2, "nt_i8 mismatch at {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn int8_gemm_parallel_split_is_bitwise_identical() {
+        let _g = crate::kernels::TEST_THREADS_LOCK.lock().unwrap();
+        let prev = crate::kernels::num_threads();
+        let (m, k, n) = (128, 96, 128);
+        let mut rng = Rng::new(22);
+        let a = randvec(&mut rng, m * k);
+        let b = randvec(&mut rng, k * n);
+        let (bq, bs) = quant_cols(&b, k, n);
+        set_threads(1);
+        let mut serial = vec![0.0f32; m * n];
+        gemm_nn_i8_acc(&a, &bq, &bs, m, k, n, &mut serial);
+        set_threads(8);
+        let mut parallel = vec![0.0f32; m * n];
+        gemm_nn_i8_acc(&a, &bq, &bs, m, k, n, &mut parallel);
+        let bt = randvec(&mut rng, n * k);
+        let (btq, bts) = quant_cols(&bt, n, k);
+        set_threads(1);
+        let mut nt_s = vec![0.0f32; m * n];
+        gemm_nt_i8_acc(&a, &btq, &bts, m, k, n, &mut nt_s);
+        set_threads(8);
+        let mut nt_p = vec![0.0f32; m * n];
+        gemm_nt_i8_acc(&a, &btq, &bts, m, k, n, &mut nt_p);
+        set_threads(prev);
+        assert_eq!(serial, parallel, "nn_i8 differs across thread counts");
+        assert_eq!(nt_s, nt_p, "nt_i8 differs across thread counts");
     }
 
     #[test]

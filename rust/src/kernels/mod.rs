@@ -30,14 +30,24 @@
 //! therefore **bitwise identical for any thread count** — `--threads 1`
 //! and `--threads 8` serve byte-for-byte the same responses, which CI
 //! pins by running the suite at both settings.
+//!
+//! The int8 KV tier rides on the same contract: [`quant`] codes and
+//! dequantizes per element (no cross-element reduction), and the mixed
+//! int8×f32 GEMMs ([`gemm_nt_i8_acc`] / [`gemm_nn_i8_acc`]) fuse `q·s`
+//! into the inner loop without changing the accumulation sequence, so
+//! quantized serving is exactly as deterministic as f32 serving.
 
 pub mod gemm;
 pub mod parallel;
+pub mod quant;
 pub mod rowops;
 
-pub use gemm::{gemm_nn, gemm_nn_acc, gemm_nt_acc, gemm_tn_acc};
+pub use gemm::{gemm_nn, gemm_nn_acc, gemm_nn_i8_acc, gemm_nt_acc, gemm_nt_i8_acc, gemm_tn_acc};
 pub use parallel::{effective_threads, par_map, par_rows};
-pub use rowops::{axpy, dot, rms_norm_rows, sigmoid, silu, softmax_inplace, swiglu_rows};
+pub use quant::QuantizedKv;
+pub use rowops::{
+    axpy, axpy_i8, dot, dot_i8, rms_norm_rows, sigmoid, silu, softmax_inplace, swiglu_rows,
+};
 
 use crate::util::cli::Args;
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -1,0 +1,244 @@
+//! Symmetric int8 quantization of block KV states.
+//!
+//! The cache's int8 storage tier (see [`crate::kvcache`]) stores each
+//! block's K and V tensors as int8 codes plus f32 scales, one scale per
+//! **(layer, kv_head, channel)** — the reduction runs over the token
+//! axis, so a block of any length carries a fixed `layers·kv_heads·
+//! head_dim` scale table and the payload shrinks to ~¼ of f32.
+//!
+//! Determinism contract: quantization and dequantization are
+//! **per-element and order-free** — `q = round(x/s)` and `x̂ = q·s`
+//! touch one element at a time with no cross-element reduction — so the
+//! int8 tier inherits the kernels layer's bitwise-identical-at-every-
+//! thread-count guarantee unchanged. The fused dequantizing re-encode
+//! lives in [`crate::rope::RopeTable::reencode_block_dequant`]; the
+//! mixed int8×f32 GEMM micro-kernels live in [`super::gemm`].
+
+use crate::tensor::{Tensor, TensorF};
+
+/// Quantize one value against its channel scale (round half away from
+/// zero, saturating at ±127 so the code range is symmetric).
+#[inline]
+pub fn quantize_one(x: f32, scale: f32) -> i8 {
+    if scale <= 0.0 {
+        0
+    } else {
+        (x / scale).round().clamp(-127.0, 127.0) as i8
+    }
+}
+
+/// Dequantize one code.
+#[inline]
+pub fn dequant_one(q: i8, scale: f32) -> f32 {
+    q as f32 * scale
+}
+
+/// Per-channel symmetric scales for a row-major `rows × n` operand:
+/// `scales[c] = amax over rows of |b[r][c]| / 127`. This is the single
+/// owner of the scale formula — [`QuantizedKv::quantize`] applies it
+/// per layer over the token axis, and the mixed int8×f32 GEMMs
+/// ([`super::gemm::gemm_nt_i8_acc`] / [`super::gemm::gemm_nn_i8_acc`])
+/// take their `b_scale` in exactly this layout.
+pub fn channel_scales(b: &[f32], rows: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(b.len(), rows * n);
+    let mut scales = vec![0.0f32; n];
+    for row in b.chunks(n) {
+        for (s, &v) in scales.iter_mut().zip(row) {
+            *s = s.max(v.abs());
+        }
+    }
+    for s in scales.iter_mut() {
+        *s /= 127.0;
+    }
+    scales
+}
+
+/// A `(layers, len, kv_heads, head_dim)` KV tensor stored as int8 codes
+/// with per-(layer, head, channel) f32 scales.
+#[derive(Debug, Clone)]
+pub struct QuantizedKv {
+    /// Row-major codes, same element order as the source tensor.
+    pub q: Vec<i8>,
+    /// `scales[(l·kv_heads + h)·head_dim + c] = amax over tokens / 127`.
+    pub scales: Vec<f32>,
+    /// `[layers, len, kv_heads, head_dim]` of the source tensor.
+    pub dims: [usize; 4],
+    /// `Σ(x − x̂)²` accumulated while quantizing (ascending element
+    /// order) — the reconstruction-error stat comes for free, with no
+    /// extra dequant pass on the cache-insert path.
+    pub sq_err: f64,
+    /// `Σx²` of the source, same accumulation.
+    pub sq_ref: f64,
+}
+
+impl QuantizedKv {
+    /// Quantize a `(layers, len, kv_heads, head_dim)` tensor. The scale
+    /// of each (layer, head, channel) is the absolute max over the token
+    /// axis divided by 127 (symmetric, zero-point-free): per layer, the
+    /// `(len, kv_heads·head_dim)` slice is exactly the row-major layout
+    /// [`channel_scales`] reduces over.
+    pub fn quantize(x: &TensorF) -> QuantizedKv {
+        let d = x.dims();
+        assert_eq!(d.len(), 4, "expected (layers, len, kv_heads, head_dim), got {d:?}");
+        let (layers, len, heads, hd) = (d[0], d[1], d[2], d[3]);
+        let row = heads * hd;
+        let mut scales = Vec::with_capacity(layers * row);
+        for l in 0..layers {
+            scales.extend(channel_scales(x.axis0(l), len, row));
+        }
+        let mut q = vec![0i8; x.len()];
+        let (mut sq_err, mut sq_ref) = (0.0f64, 0.0f64);
+        for (l, layer) in x.data().chunks(len * row).enumerate() {
+            let srow = &scales[l * row..(l + 1) * row];
+            let qlayer = &mut q[l * len * row..(l + 1) * len * row];
+            for (i, (&v, code)) in layer.iter().zip(qlayer.iter_mut()).enumerate() {
+                let s = srow[i % row];
+                *code = quantize_one(v, s);
+                let e = (v - dequant_one(*code, s)) as f64;
+                sq_err += e * e;
+                sq_ref += (v as f64) * (v as f64);
+            }
+        }
+        QuantizedKv { q, scales, dims: [layers, len, heads, hd], sq_err, sq_ref }
+    }
+
+    /// Reconstruct the f32 tensor (`q·s` per element).
+    pub fn dequantize(&self) -> TensorF {
+        let [layers, len, heads, hd] = self.dims;
+        let mut out = Tensor::zeros(&self.dims);
+        let od = out.data_mut();
+        for l in 0..layers {
+            for t in 0..len {
+                for h in 0..heads {
+                    let off = ((l * len + t) * heads + h) * hd;
+                    let s0 = (l * heads + h) * hd;
+                    for c in 0..hd {
+                        od[off + c] = dequant_one(self.q[off + c], self.scales[s0 + c]);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Stored bytes: one byte per code plus four per scale.
+    pub fn size_bytes(&self) -> usize {
+        self.q.len() + self.scales.len() * 4
+    }
+
+    /// `(sum of squared reconstruction error, sum of squared reference)`
+    /// recomputed against the f32 source — a test-side cross-check of
+    /// the [`Self::sq_err`]/[`Self::sq_ref`] sums `quantize` accumulates
+    /// inline (the cache reads the fields, not this).
+    pub fn sq_err_vs(&self, x: &TensorF) -> (f64, f64) {
+        assert_eq!(x.dims(), &self.dims[..], "error reference shape mismatch");
+        let deq = self.dequantize();
+        let mut err = 0.0f64;
+        let mut refsq = 0.0f64;
+        for (&a, &b) in x.data().iter().zip(deq.data()) {
+            let e = (a - b) as f64;
+            err += e * e;
+            refsq += (a as f64) * (a as f64);
+        }
+        (err, refsq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_kv(rng: &mut Rng, dims: &[usize; 4]) -> TensorF {
+        let n: usize = dims.iter().product();
+        Tensor::from_vec(dims, (0..n).map(|_| rng.normal() as f32).collect())
+    }
+
+    #[test]
+    fn roundtrip_error_is_bounded_by_channel_amax() {
+        let mut rng = Rng::new(0x8B17);
+        let dims = [2usize, 9, 2, 8];
+        let x = random_kv(&mut rng, &dims);
+        let q = QuantizedKv::quantize(&x);
+        let deq = q.dequantize();
+        // Per element, |x - x̂| ≤ scale/2 (+1 ulp slack); scale = amax/127.
+        let (layers, len, heads, hd) = (dims[0], dims[1], dims[2], dims[3]);
+        for l in 0..layers {
+            for t in 0..len {
+                for h in 0..heads {
+                    for c in 0..hd {
+                        let i = ((l * len + t) * heads + h) * hd + c;
+                        let s = q.scales[(l * heads + h) * hd + c];
+                        let e = (x.data()[i] - deq.data()[i]).abs();
+                        assert!(e <= 0.5001 * s, "elem {i}: err {e} > scale/2 {s}");
+                    }
+                }
+            }
+        }
+        let (err, refsq) = q.sq_err_vs(&x);
+        assert!(err > 0.0 && refsq > 0.0);
+        assert!((err / refsq).sqrt() < 0.01, "relative error too large");
+        // The inline sums quantize() accumulates walk the elements in
+        // the same ascending order as the recomputation — bitwise equal.
+        assert_eq!(q.sq_err, err, "inline error sum drifted from recomputation");
+        assert_eq!(q.sq_ref, refsq);
+    }
+
+    #[test]
+    fn quantize_is_deterministic_and_quarter_size() {
+        let mut rng = Rng::new(7);
+        let dims = [2usize, 64, 1, 8];
+        let x = random_kv(&mut rng, &dims);
+        let a = QuantizedKv::quantize(&x);
+        let b = QuantizedKv::quantize(&x);
+        assert_eq!(a.q, b.q);
+        assert_eq!(a.scales, b.scales);
+        // 64 tokens: codes dominate the fixed scale table.
+        let f32_bytes = x.size_bytes();
+        assert!(
+            a.size_bytes() * 10 <= f32_bytes * 3,
+            "int8 {} vs f32 {f32_bytes}: over 30%",
+            a.size_bytes()
+        );
+    }
+
+    #[test]
+    fn constant_channels_roundtrip_exactly() {
+        // A constant channel has amax = |v|, so v quantizes to ±127 and
+        // dequantizes back to exactly v.
+        let dims = [1usize, 4, 1, 4];
+        let x = Tensor::from_vec(&dims, vec![2.5f32; 16]);
+        let q = QuantizedKv::quantize(&x);
+        assert!(q.q.iter().all(|&c| c == 127));
+        assert_eq!(q.dequantize(), x);
+        assert_eq!(q.sq_err, 0.0);
+    }
+
+    #[test]
+    fn zero_tensor_has_zero_scales_and_codes() {
+        let dims = [1usize, 3, 2, 4];
+        let x = Tensor::zeros(&dims);
+        let q = QuantizedKv::quantize(&x);
+        assert!(q.scales.iter().all(|&s| s == 0.0));
+        assert!(q.q.iter().all(|&c| c == 0));
+        assert_eq!(q.dequantize(), x);
+    }
+
+    #[test]
+    fn channel_scales_take_column_amax() {
+        // 2×3 operand: column amax are (4, 2, 0).
+        let b = [1.0f32, -2.0, 0.0, -4.0, 1.5, 0.0];
+        let s = channel_scales(&b, 2, 3);
+        assert_eq!(s, vec![4.0 / 127.0, 2.0 / 127.0, 0.0]);
+    }
+
+    #[test]
+    fn quantize_one_saturates_and_rounds() {
+        assert_eq!(quantize_one(1.0, 0.0), 0, "zero scale must not divide");
+        assert_eq!(quantize_one(f32::MAX, 1e-30), 127);
+        assert_eq!(quantize_one(-f32::MAX, 1e-30), -127);
+        assert_eq!(quantize_one(0.5, 1.0), 1, "round half away from zero");
+        assert_eq!(quantize_one(-0.5, 1.0), -1);
+        assert_eq!(dequant_one(3, 0.5), 1.5);
+    }
+}

@@ -26,6 +26,33 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// Ascending-index dot product against an int8 row with per-channel
+/// scales: `Σ a[c] · (q[c]·scale[c])` — the QKᵀ inner loop of the
+/// fused-dequant attention path. Dequantization is per-element and
+/// order-free, so the reduction order (single f32 accumulator,
+/// ascending index) matches [`dot`] exactly.
+#[inline]
+pub fn dot_i8(a: &[f32], q: &[i8], scale: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), q.len());
+    debug_assert_eq!(a.len(), scale.len());
+    let mut s = 0.0f32;
+    for ((&av, &qv), &sv) in a.iter().zip(q).zip(scale) {
+        s += av * (qv as f32 * sv);
+    }
+    s
+}
+
+/// `y += alpha · (q·scale)`, elementwise (the AV inner loop of the
+/// fused-dequant attention path; per-channel scales).
+#[inline]
+pub fn axpy_i8(alpha: f32, q: &[i8], scale: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(q.len(), y.len());
+    debug_assert_eq!(q.len(), scale.len());
+    for ((&qv, &sv), yi) in q.iter().zip(scale).zip(y.iter_mut()) {
+        *yi += alpha * (qv as f32 * sv);
+    }
+}
+
 /// Row-wise RMSNorm: `out[t] = x[t] * rstd[t] * w`; returns the
 /// reciprocal RMS per row (needed by the backward pass).
 pub fn rms_norm_rows(
@@ -125,6 +152,22 @@ mod tests {
         let want: Vec<f32> = g.iter().zip(&u).map(|(&gv, &uv)| silu(gv) * uv).collect();
         swiglu_rows(&mut g, &u);
         assert_eq!(g, want);
+    }
+
+    #[test]
+    fn int8_dot_and_axpy_match_dequantized_f32() {
+        // Dequantize-then-f32 must be bitwise identical to the fused
+        // int8 primitives: same per-element expression, same order.
+        let a = [0.5f32, -1.25, 2.0, 0.0];
+        let q = [3i8, -127, 64, 1];
+        let scale = [0.1f32, 0.02, 0.5, 0.0];
+        let deq: Vec<f32> = q.iter().zip(&scale).map(|(&qv, &sv)| qv as f32 * sv).collect();
+        assert_eq!(dot_i8(&a, &q, &scale), dot(&a, &deq));
+        let mut y1 = [1.0f32, 2.0, 3.0, 4.0];
+        let mut y2 = y1;
+        axpy_i8(-0.75, &q, &scale, &mut y1);
+        axpy(-0.75, &deq, &mut y2);
+        assert_eq!(y1, y2);
     }
 
     #[test]

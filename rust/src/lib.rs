@@ -50,6 +50,26 @@
 //! so serving output is **bitwise identical at every thread count** —
 //! CI runs the suite at `BLOCK_ATTN_THREADS=1` and `=4` to pin it.
 //!
+//! ## Quantized KV tier
+//!
+//! The block-KV cache stores at a configurable precision
+//! ([`config::KvPrecision`], `--kv-quant f32|int8` /
+//! `$BLOCK_ATTN_KV_QUANT`). The int8 tier quantizes each block at
+//! insert time — symmetric int8 codes with per-(layer, head, channel)
+//! f32 scales ([`kernels::quant`]) — cutting the per-block byte cost to
+//! ~¼ (≈4× the cached blocks per byte budget), and fuses dequantization
+//! into the Eq.-3 RoPE re-encode on fetch
+//! ([`rope::RopeTable::reencode_block_dequant`]); mixed int8×f32 GEMM
+//! micro-kernels ([`kernels::gemm_nt_i8_acc`] / [`kernels::gemm_nn_i8_acc`])
+//! cover attention-side fusion. Accuracy contract: decode-logit cosine
+//! similarity vs the f32 tier ≥ 0.999 on the workload traces
+//! (`tests/kv_quant.rs`). Because quantize/dequantize are per-element
+//! and order-free, the int8 tier keeps serving bitwise identical at
+//! every thread count; CI runs a third tier-1 leg with
+//! `BLOCK_ATTN_KV_QUANT=int8` so both precisions stay green. Cache
+//! stats report `bytes_saved` and the running relative quantization
+//! error.
+//!
 //! Layering (python never on the request path):
 //! - **L1** `python/compile/kernels/` — Pallas attention + RoPE kernels.
 //! - **L2** `python/compile/model.py` — Llama-style model, AOT-lowered to
@@ -107,6 +127,7 @@ pub fn run_cli(args: &util::cli::Args) -> anyhow::Result<()> {
             eprintln!("  common: --backend native|xla   (default native; xla needs --features xla)");
             eprintln!("          --model tiny|small|bench [--checkpoint FILE]");
             eprintln!("          --threads N            (kernel threads; or $BLOCK_ATTN_THREADS)");
+            eprintln!("          --kv-quant f32|int8    (KV cache tier; or $BLOCK_ATTN_KV_QUANT)");
             eprintln!("  info   [--artifacts DIR]");
             eprintln!("  train  --preset table1 --out DIR [--scale 1.0]");
             eprintln!("  serve  --addr 127.0.0.1:7841 [--workers 4] [--cache-mb 256]");
@@ -128,7 +149,8 @@ fn cli_eval(args: &util::cli::Args) -> anyhow::Result<()> {
     if let Some(ck) = args.get("checkpoint") {
         backend.load_params_file(std::path::Path::new(ck))?;
     }
-    let mut coord = Coordinator::new(backend, 128 << 20);
+    let kv_precision = config::KvPrecision::resolve(args)?;
+    let mut coord = Coordinator::with_kv_precision(backend, 128 << 20, kv_precision);
     let tok = ByteTokenizer::new();
     for (bench_name, samples) in train::presets::rag_eval_by_variant(n) {
         let mut correct = 0;
@@ -161,6 +183,7 @@ fn cli_serve(args: &util::cli::Args) -> anyhow::Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:7841");
     let workers = args.usize_or("workers", 4);
     let cache_mb = args.usize_or("cache-mb", 256);
+    let kv_precision = config::KvPrecision::resolve(args)?;
     let args2 = args.clone();
     let handle = server::EngineHandle::spawn(move || {
         let backend = runtime::backend_from_args(&args2, "tiny")?;
@@ -168,7 +191,7 @@ fn cli_serve(args: &util::cli::Args) -> anyhow::Result<()> {
             backend.load_params_file(std::path::Path::new(ck))?;
         }
         backend.warmup()?;
-        Ok(Coordinator::new(backend, cache_mb << 20))
+        Ok(Coordinator::with_kv_precision(backend, cache_mb << 20, kv_precision))
     })?;
     server::serve(&addr, handle, workers)
 }
@@ -177,7 +200,8 @@ fn cli_train(args: &util::cli::Args) -> anyhow::Result<()> {
     let out = std::path::PathBuf::from(args.str_or("out", "checkpoints"));
     let scale = args.f64_or("scale", 1.0);
     let backend = runtime::backend_from_args(args, "tiny")?;
-    let mut coord = Coordinator::new(backend, 256 << 20);
+    let kv_precision = config::KvPrecision::resolve(args)?;
+    let mut coord = Coordinator::with_kv_precision(backend, 256 << 20, kv_precision);
     let mut opts = train::presets::PresetOpts::scaled(scale);
     opts.only_block = args.flag("only-block");
     match args.str_or("preset", "table1").as_str() {

@@ -109,6 +109,58 @@ impl RopeTable {
             }
         }
     }
+
+    /// Fused dequantize + re-encode: the int8-tier variant of
+    /// [`Self::reencode_block`]. `q` holds int8 key codes in the same
+    /// `(layers, L, kv_heads, head_dim)` row-major order and `scales`
+    /// one f32 per (layer, head, channel) (`layers·kv_heads·head_dim`,
+    /// see [`crate::kernels::quant::QuantizedKv`]); the reconstructed
+    /// keys, rotated by `delta`, are written to `out`.
+    ///
+    /// Dequantization (`x = q·s`) is per-element and order-free, and the
+    /// rotation applies the exact operation sequence of
+    /// [`Self::reencode_block`], so the fused path is **bitwise
+    /// identical** to dequantizing first and re-encoding second — the
+    /// property that keeps the int8 tier inside the serving stack's
+    /// thread-count determinism contract.
+    #[allow(clippy::too_many_arguments)]
+    pub fn reencode_block_dequant(
+        &self,
+        q: &[i8],
+        scales: &[f32],
+        layers: usize,
+        seq_len: usize,
+        kv_heads: usize,
+        delta: i64,
+        out: &mut [f32],
+    ) {
+        let d = self.head_dim;
+        assert_eq!(q.len(), layers * seq_len * kv_heads * d);
+        assert_eq!(scales.len(), layers * kv_heads * d);
+        assert_eq!(out.len(), q.len());
+        let half = d / 2;
+        let (cos, sin) = self.angles(delta);
+        for l in 0..layers {
+            for t in 0..seq_len {
+                for h in 0..kv_heads {
+                    let off = ((l * seq_len + t) * kv_heads + h) * d;
+                    let srow = &scales[(l * kv_heads + h) * d..(l * kv_heads + h + 1) * d];
+                    let x = &mut out[off..off + d];
+                    for (c, xo) in x.iter_mut().enumerate() {
+                        *xo = q[off + c] as f32 * srow[c];
+                    }
+                    if delta != 0 {
+                        for j in 0..half {
+                            let a = x[j];
+                            let b = x[j + half];
+                            x[j] = a * cos[j] - b * sin[j];
+                            x[j + half] = a * sin[j] + b * cos[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -220,6 +272,29 @@ mod tests {
         table.reencode_block(&mut one_hop, 2, 4, 2, 123);
         for (x, y) in two_hops.iter().zip(&one_hop) {
             assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    /// The int8 tier's fused dequant+re-encode must be bitwise identical
+    /// to dequantizing first and re-encoding second — per element the
+    /// same `q·s` then the same rotation sequence.
+    #[test]
+    fn fused_dequant_reencode_matches_two_step_bitwise() {
+        use crate::kernels::quant::QuantizedKv;
+        use crate::tensor::Tensor;
+        let (layers, seq, heads, d) = (2usize, 5, 2, 16);
+        let table = RopeTable::new(d, 10000.0);
+        let mut rng = Rng::new(0x0D9);
+        let raw = random_keys(&mut rng, layers * seq * heads * d);
+        let kq = QuantizedKv::quantize(&Tensor::from_vec(&[layers, seq, heads, d], raw));
+        for &delta in &[0i64, 1, 37, 4096] {
+            // Two-step: dequantize, then the f32 re-encode.
+            let mut want = kq.dequantize();
+            table.reencode_block(want.data_mut(), layers, seq, heads, delta);
+            // Fused.
+            let mut got = vec![0.0f32; kq.q.len()];
+            table.reencode_block_dequant(&kq.q, &kq.scales, layers, seq, heads, delta, &mut got);
+            assert_eq!(got, want.data(), "fused path differs at delta={delta}");
         }
     }
 

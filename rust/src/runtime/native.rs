@@ -27,6 +27,14 @@
 //! independence property), so [`Backend::prefill_blocks`] fans cache-miss
 //! blocks out across the kernel thread budget, one block per worker,
 //! with per-block inner parallelism suppressed.
+//!
+//! The int8 KV cache tier sits entirely *outside* this backend: blocks
+//! are quantized at cache insert and reconstructed to f32 (fused with
+//! the Eq.-3 re-encode) before `prefill_final_at`/`decode` see them, so
+//! the forward pass here is precision-agnostic. Because quantize and
+//! dequantize are per-element and order-free, the bitwise
+//! thread-determinism invariant above holds unchanged under
+//! `--kv-quant int8` — pinned by `tests/kv_quant.rs`.
 
 use super::native_train;
 use super::{Backend, DecodeOut, PrefillFinalOut, PrefillFullOut, TrainOut};

@@ -134,10 +134,13 @@ impl EngineHandle {
                                 ("block_prefill_p50_ms", Json::num(m.block_prefill_p50_ms())),
                                 ("cache_entries", Json::num(s.entries as f64)),
                                 ("cache_bytes", Json::num(s.bytes as f64)),
+                                ("cache_bytes_saved", Json::num(s.bytes_saved as f64)),
                                 ("cache_hits", Json::num(s.hits as f64)),
                                 ("cache_misses", Json::num(s.misses as f64)),
                                 ("cache_evictions", Json::num(s.evictions as f64)),
                                 ("cache_hit_rate", Json::num(s.hit_rate())),
+                                ("cache_quant_rel_err", Json::num(s.quant_rel_err())),
+                                ("kv_precision", Json::str(coord.kv_precision().as_str())),
                                 ("threads", Json::num(crate::kernels::num_threads() as f64)),
                             ])
                             .to_string();

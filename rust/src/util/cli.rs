@@ -90,6 +90,14 @@ impl Args {
         self.get("threads").and_then(|v| v.parse().ok()).filter(|&n| n > 0)
     }
 
+    /// `--kv-quant f32|int8` (block-KV cache storage precision).
+    /// Returns the raw value; parsing/validation lives in
+    /// `config::KvPrecision::resolve`, which also applies the
+    /// `BLOCK_ATTN_KV_QUANT` env fallback.
+    pub fn kv_quant(&self) -> Option<&str> {
+        self.get("kv-quant")
+    }
+
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }
@@ -137,6 +145,13 @@ mod tests {
         assert_eq!(parse("--threads=0").threads(), None);
         assert_eq!(parse("--threads nope").threads(), None);
         assert_eq!(parse("run").threads(), None);
+    }
+
+    #[test]
+    fn kv_quant_accessor() {
+        assert_eq!(parse("--kv-quant int8").kv_quant(), Some("int8"));
+        assert_eq!(parse("--kv-quant=f32").kv_quant(), Some("f32"));
+        assert_eq!(parse("run").kv_quant(), None);
     }
 
     #[test]

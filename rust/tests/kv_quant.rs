@@ -1,0 +1,155 @@
+//! The int8 KV tier's three contracts, end to end on the hermetic
+//! [`NativeBackend`]:
+//!
+//! 1. **Accuracy** — teacher-forced decode logits under `--kv-quant
+//!    int8` stay within cosine similarity ≥ 0.999 of the f32 tier on
+//!    the workload traces (the paper's passage-reuse streams).
+//! 2. **Capacity** — a cached block costs ≤ 30% of its f32 bytes, and
+//!    the saving is visible in `CacheStats::bytes_saved`.
+//! 3. **Determinism** — quantization is per-element and order-free, so
+//!    int8 serving stays bitwise identical across thread counts, just
+//!    like f32 serving.
+
+use block_attn::config::{KvPrecision, ModelConfig};
+use block_attn::coordinator::{AttentionMode, Coordinator};
+use block_attn::kernels::set_threads;
+use block_attn::runtime::NativeBackend;
+use block_attn::tokenizer::ByteTokenizer;
+use block_attn::util::rng::Rng;
+use block_attn::workload::traces::RagTrace;
+use std::sync::Mutex;
+
+/// The determinism test flips the process-global thread budget;
+/// serialize against any future sibling doing the same.
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn coordinator(precision: KvPrecision) -> Coordinator<NativeBackend> {
+    let engine = NativeBackend::new(ModelConfig::builtin("tiny").unwrap(), 0xB10C);
+    Coordinator::with_kv_precision(engine, 64 << 20, precision)
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut ab, mut aa, mut bb) = (0.0f64, 0.0f64, 0.0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        ab += x as f64 * y as f64;
+        aa += x as f64 * x as f64;
+        bb += y as f64 * y as f64;
+    }
+    if aa == 0.0 || bb == 0.0 {
+        return 1.0;
+    }
+    ab / (aa.sqrt() * bb.sqrt())
+}
+
+/// Contract 1: decode-logit cosine similarity f32-vs-int8 ≥ 0.999 on
+/// Zipf-skewed passage-reuse traces served through the full pipeline
+/// (segment → plan → quantized cache → fused dequant re-encode →
+/// final prefill → teacher-forced decode).
+#[test]
+fn int8_decode_logits_cosine_against_f32() {
+    let tok = ByteTokenizer::new();
+    let mut rng = Rng::new(0xACC);
+    let trace = RagTrace::build(&mut rng, 24);
+    let mut f32_coord = coordinator(KvPrecision::F32);
+    let mut int8_coord = coordinator(KvPrecision::Int8);
+    assert_eq!(int8_coord.kv_precision(), KvPrecision::Int8);
+
+    let mut worst = 1.0f64;
+    for _ in 0..5 {
+        let sample = trace.request(&mut rng, 4, 1.1);
+        let sp = sample.segment(&tok);
+        // Teacher-force the gold response so both tiers decode over the
+        // exact same token stream.
+        let mut forced = tok.encode(&sample.response);
+        forced.truncate(6);
+        let a = f32_coord
+            .logits_trace(&sp.blocks, &sp.query, &forced, AttentionMode::Block)
+            .expect("f32 trace");
+        let b = int8_coord
+            .logits_trace(&sp.blocks, &sp.query, &forced, AttentionMode::Block)
+            .expect("int8 trace");
+        assert_eq!(a.len(), b.len());
+        for (step, (la, lb)) in a.iter().zip(&b).enumerate() {
+            let c = cosine(la, lb);
+            worst = worst.min(c);
+            assert!(
+                c >= 0.999,
+                "step {step}: cosine {c} < 0.999 (int8 tier too lossy)"
+            );
+        }
+    }
+    // The tiers must actually differ (int8 is lossy) — a fake pass-through
+    // would report cosine exactly 1.0 everywhere with zero error stats.
+    let s = int8_coord.cache_stats();
+    assert!(s.quant_rel_err() > 0.0, "int8 tier recorded no quantization error");
+    assert!(s.quant_rel_err() < 0.01, "relative error too large: {}", s.quant_rel_err());
+    assert!(worst >= 0.999);
+}
+
+/// Contract 2: the quantized tier stores a block at ≤ 30% of its f32
+/// bytes, and reports the saving.
+#[test]
+fn int8_cache_bytes_at_most_30_percent_of_f32() {
+    let mut rng = Rng::new(0xB17E);
+    let vocab = ModelConfig::builtin("tiny").unwrap().vocab;
+    let blocks: Vec<Vec<i32>> = (0..3)
+        .map(|_| (0..64).map(|_| rng.below(vocab) as i32).collect())
+        .collect();
+    let mut f32_coord = coordinator(KvPrecision::F32);
+    let mut int8_coord = coordinator(KvPrecision::Int8);
+    for b in &blocks {
+        f32_coord.precompute_block(b).expect("f32 precompute");
+        int8_coord.precompute_block(b).expect("int8 precompute");
+    }
+    let sf = f32_coord.cache_stats();
+    let s8 = int8_coord.cache_stats();
+    assert_eq!(sf.entries, 3);
+    assert_eq!(s8.entries, 3);
+    assert_eq!(sf.bytes_saved, 0, "f32 tier must not claim savings");
+    assert!(
+        s8.bytes * 10 <= sf.bytes * 3,
+        "int8 cache {} bytes > 30% of f32 {}",
+        s8.bytes,
+        sf.bytes
+    );
+    assert_eq!(
+        s8.bytes + s8.bytes_saved,
+        sf.bytes,
+        "bytes_saved must account exactly for the f32 difference"
+    );
+}
+
+/// Contract 3: with the int8 tier active, serving output — tokens *and*
+/// raw logits — is bitwise identical at 1 and 4 kernel threads.
+#[test]
+fn int8_serving_is_bitwise_identical_across_thread_counts() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = block_attn::kernels::num_threads();
+
+    let serve = |threads: usize| -> Vec<Vec<Vec<f32>>> {
+        set_threads(threads);
+        let tok = ByteTokenizer::new();
+        let mut rng = Rng::new(0xDE7);
+        let trace = RagTrace::build(&mut rng, 12);
+        let mut coord = coordinator(KvPrecision::Int8);
+        (0..3)
+            .map(|_| {
+                let sample = trace.request(&mut rng, 3, 1.1);
+                let sp = sample.segment(&tok);
+                let mut forced = tok.encode(&sample.response);
+                forced.truncate(4);
+                coord
+                    .logits_trace(&sp.blocks, &sp.query, &forced, AttentionMode::Block)
+                    .expect("trace")
+            })
+            .collect()
+    };
+    let one = serve(1);
+    let four = serve(4);
+    set_threads(prev);
+    assert_eq!(
+        one, four,
+        "int8 serving depends on the thread count (determinism contract broken)"
+    );
+}

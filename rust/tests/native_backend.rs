@@ -17,10 +17,16 @@ use block_attn::tensor::Tensor;
 use block_attn::util::rng::Rng;
 use block_attn::Backend;
 
+/// Pinned to the f32 cache tier: these tests assert *bit-exact*
+/// losslessness of the serving path, which the int8 tier intentionally
+/// trades away (its own contract — cosine ≥ 0.999 — lives in
+/// `tests/kv_quant.rs`). Pinning keeps them meaningful when the suite
+/// runs under `BLOCK_ATTN_KV_QUANT=int8`.
 fn coordinator() -> Coordinator<NativeBackend> {
-    Coordinator::new(
+    Coordinator::with_kv_precision(
         NativeBackend::new(ModelConfig::builtin("tiny").unwrap(), 0xB10C),
         64 << 20,
+        block_attn::config::KvPrecision::F32,
     )
 }
 
