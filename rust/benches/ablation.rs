@@ -28,6 +28,7 @@ fn main() -> anyhow::Result<()> {
     block_attn::kernels::init_threads_from_args(&args);
     block_granularity(&args)?;
     reuse_skew(&args)?;
+    eprintln!("{}", block_attn::kernels::pool_stats_line());
     Ok(())
 }
 

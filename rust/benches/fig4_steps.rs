@@ -89,5 +89,6 @@ fn main() -> anyhow::Result<()> {
         first.1 * 100.0,
         last.1 * 100.0
     );
+    eprintln!("{}", block_attn::kernels::pool_stats_line());
     Ok(())
 }

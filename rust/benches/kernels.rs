@@ -130,6 +130,68 @@ fn main() -> anyhow::Result<()> {
         r_nt_i8.p50_ms() / r_nt_f32.p50_ms()
     );
 
+    // -- dispatch overhead: per-region scoped spawn vs persistent pool -
+    // A decode-sized parallel region (a handful of head rows, ~µs of
+    // math) is launched once per layer per generated token, so the
+    // *launch* cost is the metric. The scoped baseline reproduces the
+    // retired implementation: one std::thread::scope spawn/join per
+    // region. The pool path is the live `par_rows`. Both produce
+    // bitwise-identical buffers (checked below); only the dispatch
+    // mechanism differs.
+    const DISP_ROWS: usize = 8;
+    const DISP_LEN: usize = 64;
+    let disp_reps = args.usize_or("dispatch-reps", 500);
+    fn disp_work(r0: usize, chunk: &mut [f32]) {
+        for (i, row) in chunk.chunks_mut(DISP_LEN).enumerate() {
+            let base = (r0 + i) as f32;
+            for (c, v) in row.iter_mut().enumerate() {
+                *v = base + (c as f32).sqrt();
+            }
+        }
+    }
+    // The retired per-region spawn/join, preserved here as the baseline.
+    fn scoped_par_rows(out: &mut [f32], threads: usize) {
+        let rows = out.len() / DISP_LEN;
+        let chunks = threads.max(1).min(rows);
+        let per = rows.div_ceil(chunks);
+        std::thread::scope(|s| {
+            let mut rest = out;
+            let mut row0 = 0;
+            while !rest.is_empty() {
+                let take = per.min(rows - row0);
+                let (head, tail) = rest.split_at_mut(take * DISP_LEN);
+                rest = tail;
+                let r0 = row0;
+                row0 += take;
+                s.spawn(move || disp_work(r0, head));
+            }
+        });
+    }
+    set_threads(par_threads);
+    let mut buf_scoped = vec![0.0f32; DISP_ROWS * DISP_LEN];
+    let mut buf_pool = vec![0.0f32; DISP_ROWS * DISP_LEN];
+    scoped_par_rows(&mut buf_scoped, par_threads);
+    block_attn::kernels::par_rows(&mut buf_pool, DISP_LEN, 1, disp_work);
+    assert_eq!(buf_scoped, buf_pool, "dispatch mechanisms disagree on the math");
+    let r_disp_scoped = bench(&format!("dispatch_scoped({disp_reps}x)"), &opts, || {
+        for _ in 0..disp_reps {
+            scoped_par_rows(&mut buf_scoped, par_threads);
+        }
+    });
+    println!("{}", r_disp_scoped.report_line());
+    let r_disp_pool = bench(&format!("dispatch_pool({disp_reps}x)"), &opts, || {
+        for _ in 0..disp_reps {
+            block_attn::kernels::par_rows(&mut buf_pool, DISP_LEN, 1, disp_work);
+        }
+    });
+    println!("{}", r_disp_pool.report_line());
+    println!(
+        "# dispatch overhead, {disp_reps} decode-sized regions: scoped {:.2} ms vs pool {:.2} ms ({:.2}x)",
+        r_disp_scoped.p50_ms(),
+        r_disp_pool.p50_ms(),
+        r_disp_scoped.p50_ms() / r_disp_pool.p50_ms().max(1e-9),
+    );
+
     // -- concurrent block prefill --------------------------------------
     // 8 independent 64-token blocks through the real engine, then the
     // end-to-end coordinator TTFT on a cold cache (miss prefill is the
@@ -216,6 +278,8 @@ fn main() -> anyhow::Result<()> {
         100.0 * tier_bytes[1] as f64 / tier_bytes[0].max(1) as f64
     );
     set_threads(machine_threads);
+    let pool_end = block_attn::kernels::pool_stats();
+    eprintln!("{}", block_attn::kernels::pool_stats_line());
 
     let report = Json::obj(vec![
         ("bench", Json::str("kernels")),
@@ -240,6 +304,13 @@ fn main() -> anyhow::Result<()> {
         ("ttft_warm_int8_ms", Json::num(warm_ms[1])),
         ("kv_bytes_f32", Json::num(tier_bytes[0] as f64)),
         ("kv_bytes_int8", Json::num(tier_bytes[1] as f64)),
+        ("dispatch_reps", Json::num(disp_reps as f64)),
+        ("dispatch_scoped_ms", Json::num(r_disp_scoped.p50_ms())),
+        ("dispatch_pool_ms", Json::num(r_disp_pool.p50_ms())),
+        ("pool_workers", Json::num(pool_end.workers as f64)),
+        ("pool_jobs_executed", Json::num(pool_end.jobs_executed as f64)),
+        ("pool_jobs_panicked", Json::num(pool_end.jobs_panicked as f64)),
+        ("pool_queue_peak", Json::num(pool_end.queue_peak as f64)),
     ]);
     let out_path = args.str_or("json-out", "BENCH_kernels.json");
     std::fs::write(&out_path, format!("{report}\n"))?;

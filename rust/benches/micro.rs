@@ -113,4 +113,5 @@ fn main() {
         r.report_line(),
         frame_str.len() as f64 / 1e6 / r.summary.mean()
     );
+    eprintln!("{}", block_attn::kernels::pool_stats_line());
 }

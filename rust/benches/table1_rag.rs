@@ -97,6 +97,7 @@ fn main() -> anyhow::Result<()> {
     }
     println!("\n# paper shape: block-ft ≈ RAG-ft; w/o-ft degrades; promptCache/superposition");
     println!("# worse still; w/o-pos degrades; block-ft-full ≥ RAG-ft (mode switch is free).");
+    eprintln!("{}", block_attn::kernels::pool_stats_line());
     Ok(())
 }
 

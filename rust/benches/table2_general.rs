@@ -72,5 +72,6 @@ fn main() -> anyhow::Result<()> {
     }
     println!("\n# paper shape: block-ft ≈ the full-attention models on every column;");
     println!("# mode switching (0-shot full fallback) costs nothing.");
+    eprintln!("{}", block_attn::kernels::pool_stats_line());
     Ok(())
 }

@@ -151,5 +151,6 @@ fn main() -> anyhow::Result<()> {
     let out_path = args.str_or("json-out", "BENCH_ttft.json");
     std::fs::write(&out_path, format!("{report}\n"))?;
     eprintln!("# wrote {out_path}");
+    eprintln!("{}", block_attn::kernels::pool_stats_line());
     Ok(())
 }

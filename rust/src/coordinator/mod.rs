@@ -293,10 +293,11 @@ impl<B: Backend> Coordinator<B> {
         // 1. Compute KV for missing blocks (cache misses) concurrently:
         // blocks are independent by construction (block-diagonal
         // attention at local positions), so the engine fans the batch
-        // out across its thread budget. Results return in input order
-        // and are inserted in plan order — byte-identical serving at
-        // every `--threads` setting. Duplicate blocks within one
-        // request are computed once.
+        // out over the persistent kernel worker pool, one block per
+        // budgeted thread. Results return in input order and are
+        // inserted in plan order — byte-identical serving at every
+        // `--threads` setting. Duplicate blocks within one request are
+        // computed once.
         let t_blocks = Instant::now();
         let mut miss_idx: Vec<usize> = Vec::new();
         let mut miss_toks: Vec<&[i32]> = Vec::new();

@@ -35,11 +35,14 @@ const MR: usize = 4;
 /// Columns per register tile (two AVX lanes worth of f32).
 const NR: usize = 16;
 
-/// Below this `m·k·n` volume a GEMM is not worth forking threads for.
-const PAR_MIN_VOLUME: usize = 1 << 20;
+/// Below this `m·k·n` volume a GEMM is not worth dispatching to the
+/// worker pool. Pool dispatch (queue push + condvar wake) is ~two
+/// orders cheaper than the per-region thread spawn it replaced, so the
+/// floor sits well below the old spawn-amortization point.
+const PAR_MIN_VOLUME: usize = 1 << 19;
 
-/// Minimum per-chunk volume when splitting rows across threads.
-const CHUNK_MIN_VOLUME: usize = 1 << 17;
+/// Minimum per-chunk volume when splitting rows across workers.
+const CHUNK_MIN_VOLUME: usize = 1 << 16;
 
 fn min_rows_for(vol_per_row: usize) -> usize {
     (CHUNK_MIN_VOLUME / vol_per_row.max(1)).max(MR)

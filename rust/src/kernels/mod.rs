@@ -17,10 +17,27 @@
 //! * `BLOCK_ATTN_THREADS` in the environment, else
 //! * the machine's available parallelism.
 //!
-//! Parallel regions fork scoped threads over contiguous, disjoint
-//! output ranges; nested regions split the budget instead of
-//! oversubscribing (a GEMM inside a 2-block concurrent prefill on 8
-//! threads gets 4), and leaf row-splits run their workers serially.
+//! Parallel regions dispatch contiguous, disjoint output ranges to a
+//! **persistent worker pool** ([`crate::util::pool::ThreadPool`]):
+//! workers are spawned once from the budget (and grown by
+//! [`set_threads`], never shrunk), so a region costs a queue push +
+//! condvar wake instead of a per-region thread spawn/join — the
+//! difference that makes decode-sized ops worth splitting. The calling
+//! thread runs the first chunk and then executes its own region's
+//! still-queued chunks while it waits, so regions complete at any
+//! worker count. Nested regions
+//! split the *budget* instead of oversubscribing (a GEMM inside a
+//! 2-block concurrent prefill on 8 threads gets 4), and leaf
+//! row-splits run their workers serially. [`pool_stats`] exposes the
+//! pool's counters (workers, jobs executed, queue-depth high-water)
+//! for the server stats endpoint and the bench reports.
+//!
+//! To add a new parallel consumer: express the work as disjoint output
+//! rows and call [`par_rows`] (leaf split) or [`par_map`] (coarse items
+//! that run nested kernels — each item inherits an even budget share).
+//! Never spawn threads directly, and keep each output element's
+//! reduction order fixed; the pool, budget inheritance, and the
+//! determinism tests then come for free.
 //!
 //! ## Determinism guarantee
 //!
@@ -29,7 +46,11 @@
 //! split assigns whole output rows to exactly one worker. Results are
 //! therefore **bitwise identical for any thread count** — `--threads 1`
 //! and `--threads 8` serve byte-for-byte the same responses, which CI
-//! pins by running the suite at both settings.
+//! pins by running the suite at `BLOCK_ATTN_THREADS=1`, `=3` (odd, so
+//! row chunks and nested budget splits are non-divisible) and `=4`.
+//! Chunk layout is a function of the budget alone — never of pool
+//! state or which worker runs a chunk — so pool dispatch cannot
+//! perturb the contract.
 //!
 //! The int8 KV tier rides on the same contract: [`quant`] codes and
 //! dequantizes per element (no cross-element reduction), and the mixed
@@ -43,7 +64,7 @@ pub mod quant;
 pub mod rowops;
 
 pub use gemm::{gemm_nn, gemm_nn_acc, gemm_nn_i8_acc, gemm_nt_acc, gemm_nt_i8_acc, gemm_tn_acc};
-pub use parallel::{effective_threads, par_map, par_rows};
+pub use parallel::{effective_threads, par_map, par_rows, pool_stats};
 pub use quant::QuantizedKv;
 pub use rowops::{
     axpy, axpy_i8, dot, dot_i8, rms_norm_rows, sigmoid, silu, softmax_inplace, swiglu_rows,
@@ -76,9 +97,14 @@ pub fn num_threads() -> usize {
 }
 
 /// Set the thread budget explicitly (clamped to ≥ 1). Results are
-/// identical for every setting; only wall-clock changes.
+/// identical for every setting; only wall-clock changes. Raising the
+/// budget grows the persistent worker pool so the extra width is real;
+/// lowering it leaves excess workers idle (chunk counts follow the
+/// budget, not the worker count).
 pub fn set_threads(n: usize) {
-    THREADS.store(n.max(1), Ordering::Relaxed);
+    let n = n.max(1);
+    THREADS.store(n, Ordering::Relaxed);
+    parallel::grow_pool(n);
 }
 
 /// Apply `--threads N` from parsed CLI options (every bin/bench/example
@@ -89,6 +115,16 @@ pub fn init_threads_from_args(args: &Args) -> usize {
         set_threads(n);
     }
     num_threads()
+}
+
+/// One-line human-readable worker-pool summary (bench/bin footers all
+/// print it, so dispatch volume is visible next to every timing).
+pub fn pool_stats_line() -> String {
+    let ps = pool_stats();
+    format!(
+        "# pool: {} workers, {} jobs dispatched, {} panicked, queue peak {}",
+        ps.workers, ps.jobs_executed, ps.jobs_panicked, ps.queue_peak
+    )
 }
 
 /// Unit tests mutate the process-global budget; they serialize on this

@@ -1,13 +1,27 @@
-//! Scoped fork/join parallelism for the compute kernels.
+//! Fork/join parallelism for the compute kernels, dispatched to one
+//! process-global **persistent worker pool**.
 //!
 //! Everything here partitions work into **contiguous, disjoint output
-//! ranges** and runs each range on its own thread via
-//! [`std::thread::scope`]. Because every output element is produced by
-//! exactly one task, and each task performs the same sequence of
-//! floating-point operations it would under a single thread, results
-//! are **bitwise identical** for any thread count — the determinism
-//! guarantee the coordinator's `--threads 1` vs `--threads 8` parity
-//! tests pin down.
+//! ranges**. Each range used to run on a freshly scoped thread
+//! (`std::thread::scope`); it now runs as a task on
+//! [`crate::util::pool::ThreadPool`] workers that are spawned once from
+//! the `--threads`/`$BLOCK_ATTN_THREADS` budget and live for the
+//! process. A parallel region costs a queue push + condvar wake instead
+//! of an OS thread spawn/join — the difference that makes decode-sized
+//! ops (one dispatch per layer per generated token) worth splitting at
+//! all. The calling thread always executes the first chunk itself and
+//! then runs its region's still-queued chunks while it waits
+//! ([`ThreadPool::run_scoped`]), so regions complete at any worker
+//! count and nested regions cannot deadlock.
+//!
+//! **Determinism is untouched by the pool.** Chunk layout is a pure
+//! function of the thread *budget* ([`effective_threads`]) — never of
+//! pool state, queue order, or which thread ends up running a chunk —
+//! and every output element is produced by exactly one task performing
+//! the same floating-point sequence it would under a single thread.
+//! Results are therefore **bitwise identical** for any thread count —
+//! the guarantee the coordinator's `--threads 1` vs `--threads 8`
+//! parity tests pin down.
 //!
 //! Nested parallelism is *budgeted*, not forbidden: a worker inherits a
 //! share of the global budget (its parent's budget divided by the
@@ -16,7 +30,9 @@
 //! six cores. Leaf row-splits ([`par_rows`]) hand their workers a
 //! budget of 1 — re-splitting a leaf chunk is never useful.
 
+use crate::util::pool::{PoolStats, ScopedJob, ThreadPool};
 use std::cell::Cell;
+use std::sync::OnceLock;
 
 thread_local! {
     /// Thread budget assigned to this worker thread; `None` outside any
@@ -24,15 +40,48 @@ thread_local! {
     static WORKER_BUDGET: Cell<Option<usize>> = const { Cell::new(None) };
 }
 
+/// The process-global kernel worker pool, created on first parallel
+/// region with one worker per budgeted thread. [`super::set_threads`]
+/// grows it (via [`grow_pool`]) when the budget is raised later; it is
+/// never shut down — workers idle on a condvar between regions.
+static POOL: OnceLock<ThreadPool> = OnceLock::new();
+
+pub(crate) fn global_pool() -> &'static ThreadPool {
+    POOL.get_or_init(|| ThreadPool::new(super::num_threads()))
+}
+
+/// Grow the global pool to at least `n` workers if it already exists
+/// (if it does not, first use will size it from the current budget).
+pub(crate) fn grow_pool(n: usize) {
+    if let Some(pool) = POOL.get() {
+        pool.ensure_workers(n);
+    }
+}
+
+/// Counters of the global pool: worker count, jobs executed, queue
+/// depth high-water. All zero before the first parallel region (the
+/// query never forces the pool into existence).
+pub fn pool_stats() -> PoolStats {
+    POOL.get().map(|p| p.stats()).unwrap_or_default()
+}
+
 /// Run `f` with this thread's budget set to `budget` (≥ 1); nested
 /// parallel regions see that many [`effective_threads`].
+///
+/// The previous budget is restored by a drop guard, so it survives a
+/// panic in `f`. That matters now that threads are persistent: the
+/// pool contains a panicking job and reuses the thread, and a
+/// help-while-wait caller outlives any panicking task it steals — a
+/// leaked `Some(1)` would silently pin that thread serial forever.
 pub(crate) fn with_budget<R>(budget: usize, f: impl FnOnce() -> R) -> R {
-    WORKER_BUDGET.with(|c| {
-        let prev = c.replace(Some(budget.max(1)));
-        let r = f();
-        c.set(prev);
-        r
-    })
+    struct Restore(Option<usize>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            WORKER_BUDGET.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(WORKER_BUDGET.with(|c| c.replace(Some(budget.max(1)))));
+    f()
 }
 
 /// Run `f` as a leaf worker (no nested parallelism).
@@ -52,8 +101,9 @@ pub fn effective_threads() -> usize {
 /// `out` is split into contiguous chunks of whole rows (`row_len`
 /// elements each); `f(row0, chunk)` receives the index of its first row
 /// and a mutable view of its rows. Chunks smaller than `min_rows` are
-/// not worth a thread and are merged; with one chunk (or inside a
-/// worker) `f` runs inline on the caller's thread.
+/// not worth a dispatch and are merged; with one chunk (or inside a
+/// worker) `f` runs inline on the caller's thread. With more, the first
+/// chunk runs on the calling thread and the rest dispatch to the pool.
 ///
 /// `f` must compute each row independently of which chunk it lands in —
 /// that is what makes the split invisible to the results.
@@ -78,19 +128,19 @@ pub fn par_rows<T: Send>(
         return;
     }
     let per = rows.div_ceil(chunks);
-    std::thread::scope(|s| {
-        let f = &f;
-        let mut rest = out;
-        let mut row0 = 0;
-        while !rest.is_empty() {
-            let take = per.min(rows - row0);
-            let (head, tail) = rest.split_at_mut(take * row_len);
-            rest = tail;
-            let r0 = row0;
-            row0 += take;
-            s.spawn(move || enter_worker(|| f(r0, head)));
-        }
-    });
+    let f = &f;
+    let (head, mut rest) = out.split_at_mut(per * row_len);
+    let mut tasks: Vec<ScopedJob<'_>> = Vec::with_capacity(chunks - 1);
+    let mut row0 = per;
+    while !rest.is_empty() {
+        let take = per.min(rows - row0);
+        let (chunk, tail) = rest.split_at_mut(take * row_len);
+        rest = tail;
+        let r0 = row0;
+        row0 += take;
+        tasks.push(Box::new(move || enter_worker(|| f(r0, chunk))));
+    }
+    global_pool().run_scoped(|| enter_worker(|| f(0, head)), tasks);
 }
 
 /// Parallel map over a slice, preserving order. Each worker handles a
@@ -98,7 +148,8 @@ pub fn par_rows<T: Send>(
 /// budget for its own nested kernels (8 threads over 2 items → 2
 /// workers × 4 inner threads). With one effective thread (or a single
 /// item) it degenerates to a plain serial map with the full budget
-/// still available to inner parallelism.
+/// still available to inner parallelism. The first range runs on the
+/// calling thread; the rest dispatch to the pool.
 pub fn par_map<I: Sync, T: Send>(items: &[I], f: impl Fn(usize, &I) -> T + Sync) -> Vec<T> {
     let threads = effective_threads();
     if threads <= 1 || items.len() <= 1 {
@@ -108,19 +159,32 @@ pub fn par_map<I: Sync, T: Send>(items: &[I], f: impl Fn(usize, &I) -> T + Sync)
     let workers = threads.min(items.len());
     let per = items.len().div_ceil(workers);
     let inner_budget = threads / workers;
-    std::thread::scope(|s| {
-        let f = &f;
-        for (ci, slots) in out.chunks_mut(per).enumerate() {
-            let base = ci * per;
-            s.spawn(move || {
+    let f = &f;
+    let mut chunks = out.chunks_mut(per);
+    let head = chunks.next().expect("at least one chunk");
+    let tasks: Vec<ScopedJob<'_>> = chunks
+        .enumerate()
+        .map(|(ci, slots)| {
+            let base = (ci + 1) * per;
+            Box::new(move || {
                 with_budget(inner_budget, || {
                     for (j, slot) in slots.iter_mut().enumerate() {
                         *slot = Some(f(base + j, &items[base + j]));
                     }
                 })
-            });
-        }
-    });
+            }) as ScopedJob<'_>
+        })
+        .collect();
+    global_pool().run_scoped(
+        || {
+            with_budget(inner_budget, || {
+                for (j, slot) in head.iter_mut().enumerate() {
+                    *slot = Some(f(j, &items[j]));
+                }
+            })
+        },
+        tasks,
+    );
     out.into_iter().map(|o| o.expect("par_map slot unfilled")).collect()
 }
 
@@ -185,5 +249,28 @@ mod tests {
         let e: Vec<u8> = vec![];
         assert!(par_map(&e, |_, &x| x).is_empty());
         assert_eq!(par_map(&[7u8], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn regions_reuse_the_persistent_pool() {
+        let _g = crate::kernels::TEST_THREADS_LOCK.lock().unwrap();
+        let prev = crate::kernels::num_threads();
+        crate::kernels::set_threads(4);
+        let before = pool_stats().jobs_executed;
+        let mut buf = vec![0u64; 64];
+        for _ in 0..10 {
+            par_rows(&mut buf, 1, 1, |r0, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v += (r0 + i) as u64;
+                }
+            });
+        }
+        crate::kernels::set_threads(prev);
+        let after = pool_stats();
+        assert!(
+            after.jobs_executed > before,
+            "parallel regions did not dispatch to the pool"
+        );
+        assert!(after.workers >= 4, "set_threads(4) did not grow the pool");
     }
 }

@@ -37,18 +37,40 @@
 //!
 //! All native dense math runs on the [`kernels`] layer: cache-blocked
 //! (tiled) GEMMs in the three layouts the forward/backward passes need,
-//! fused row kernels (RMSNorm, softmax, SwiGLU), and a scoped
-//! fork/join parallel-for. One process-global thread budget
-//! (`--threads N` > `$BLOCK_ATTN_THREADS` > available parallelism)
-//! drives attention row/head parallelism, GEMM row splits, and the
-//! coordinator's **concurrent block prefill**: cache-miss blocks are
-//! independent (block-diagonal attention), so
-//! [`runtime::Backend::prefill_blocks`] fans them out one per worker.
+//! fused row kernels (RMSNorm, softmax, SwiGLU), and a fork/join
+//! parallel-for dispatched to a **persistent worker pool**
+//! ([`util::pool::ThreadPool`]). Workers are spawned once from the
+//! process-global thread budget (`--threads N` >
+//! `$BLOCK_ATTN_THREADS` > available parallelism) and live for the
+//! process, so a parallel region costs a queue push + condvar wake
+//! instead of a per-region thread spawn/join — cheap enough that even
+//! decode-sized ops (one dispatch per layer per generated token)
+//! parallelize. The budget drives attention row/head parallelism, GEMM
+//! row splits, the **batch-parallel train step** (per-row gradients
+//! reduced in ascending row order), and the coordinator's **concurrent
+//! block prefill**: cache-miss blocks are independent (block-diagonal
+//! attention), so [`runtime::Backend::prefill_blocks`] fans them out
+//! one per budgeted worker.
+//!
+//! Budget inheritance: nested regions split their parent's budget
+//! evenly instead of oversubscribing (2 blocks on 8 threads → 2
+//! workers × 4 inner threads); leaf row-splits hand their chunks a
+//! budget of 1. The submitting thread always runs the first chunk and
+//! then executes its own region's still-queued tasks while it waits,
+//! so regions complete at any worker count and nested regions cannot
+//! deadlock. To add a new
+//! parallel consumer, express the work as disjoint output rows and
+//! call [`kernels::par_rows`] / [`kernels::par_map`] — never spawn
+//! threads directly (see the [`kernels`] module docs).
 //!
 //! Determinism: every kernel accumulates each output element in a fixed
-//! ascending reduction order and every parallel split is row-disjoint,
-//! so serving output is **bitwise identical at every thread count** —
-//! CI runs the suite at `BLOCK_ATTN_THREADS=1` and `=4` to pin it.
+//! ascending reduction order and every parallel split is row-disjoint
+//! and a pure function of the *budget* (never of pool state), so
+//! serving output is **bitwise identical at every thread count** — CI
+//! runs the suite at `BLOCK_ATTN_THREADS=1`, `=3` (odd, non-divisible
+//! splits) and `=4` to pin it. Pool counters (workers, jobs executed,
+//! queue-depth high-water) surface in the server stats endpoint and
+//! the bench reports via [`kernels::pool_stats`].
 //!
 //! ## Quantized KV tier
 //!

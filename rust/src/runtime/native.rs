@@ -25,8 +25,9 @@
 //!
 //! Independent blocks are embarrassingly parallel (the paper's §2.1
 //! independence property), so [`Backend::prefill_blocks`] fans cache-miss
-//! blocks out across the kernel thread budget, one block per worker,
-//! with per-block inner parallelism suppressed.
+//! blocks out over the persistent kernel worker pool, one block per
+//! worker; with fewer blocks than budgeted threads each block inherits
+//! an even share of the budget for its inner kernels.
 //!
 //! The int8 KV cache tier sits entirely *outside* this backend: blocks
 //! are quantized at cache insert and reconstructed to f32 (fused with
@@ -503,11 +504,14 @@ impl Backend for NativeBackend {
         let mut mu = vec![0.0f32; ff];
         let pos = cache_len as i64;
 
-        // Per-head attention work. Decode pays a scope spawn per layer
-        // per *token*, so the per-chunk floor sits at thread-spawn
-        // scale (~10⁵ mul-adds): only long-context decodes fork.
+        // Per-head attention work. Decode dispatches to the persistent
+        // worker pool once per layer per *token*; a dispatch is a queue
+        // push + condvar wake (µs-scale), so the per-chunk floor sits
+        // at ~32K mul-adds instead of the thread-spawn scale the scoped
+        // implementation needed — decode-sized contexts start forking
+        // as soon as a head's work covers the dispatch cost.
         let head_cost = (cache_len + 1) * hd * 2;
-        let head_min_rows = ((1 << 17) / head_cost.max(1)).max(1);
+        let head_min_rows = ((1 << 15) / head_cost.max(1)).max(1);
 
         for n in 0..cfg.layers {
             let lw = w.layer(n);

@@ -19,8 +19,12 @@
 //! the projection/weight gradients (row-parallel), and the attention
 //! forward/backward split into head-parallel and row-parallel passes
 //! whose per-element reduction order matches the single-threaded loops
-//! exactly — gradients are bitwise identical at every `--threads`
-//! setting.
+//! exactly. The step is additionally **batch-parallel**: rows fan out
+//! over the persistent worker pool via [`crate::kernels::par_map`]
+//! (each row computing a private gradient set), and the per-row grads
+//! are reduced in ascending row order on the calling thread — a fixed
+//! reduction sequence at every thread budget, so gradients stay
+//! bitwise identical at every `--threads` setting.
 //!
 //! Gradients are derived by hand; the correctness anchor is the
 //! directional-derivative check against finite differences in the tests
@@ -493,8 +497,6 @@ pub(crate) fn loss_and_grads(
     let w = Weights::split(params);
     let vocab = cfg.vocab;
 
-    let mut grads: Vec<TensorF> = params.iter().map(|p| Tensor::zeros(p.dims())).collect();
-
     // Total masked weight of the batch (targets are positions 1..L).
     let mut w_total = 0.0f64;
     for r in 0..b {
@@ -503,16 +505,30 @@ pub(crate) fn loss_and_grads(
         }
     }
     if w_total <= 0.0 {
+        let grads = params.iter().map(|p| Tensor::zeros(p.dims())).collect();
         return Ok((0.0, grads));
     }
 
-    let mut loss_sum = 0.0f64;
-    for r in 0..b {
+    // Batch rows are independent given `w_total`, so forward + backward
+    // run **batch-parallel** on the kernel worker pool: each row
+    // produces its loss contribution and a private gradient set (the
+    // `par_map` budget split leaves rows inner-kernel parallelism when
+    // the batch is narrower than the thread budget). Rows are processed
+    // in windows of the thread budget so peak memory stays
+    // O(threads × params) instead of O(batch × params), and each
+    // window's results fold into the running total on the calling
+    // thread in **ascending row order**, element-wise. The fold
+    // sequence is strictly row 0, 1, …, B−1 regardless of the window
+    // size, so it is a fixed floating-point sequence independent of the
+    // thread count — which is what keeps gradients bitwise identical at
+    // every `--threads` setting (pinned by the parity test below).
+    let per_row = |r: usize| -> (f64, Vec<TensorF>) {
         let toks = &tokens.data()[r * l..(r + 1) * l];
         let segs = &seg.data()[r * l..(r + 1) * l];
         let mask = &loss_mask.data()[r * l..(r + 1) * l];
         let cache = row_forward(cfg, rope, &w, toks, segs);
 
+        let mut row_loss = 0.0f64;
         let mut dlogits = vec![0.0f32; l * vocab];
         for t in 0..l - 1 {
             let wgt = mask[t + 1];
@@ -530,7 +546,7 @@ pub(crate) fn loss_and_grads(
             }
             let tgt = toks[t + 1] as usize;
             let lse = se.ln() + mx as f64;
-            loss_sum += wgt as f64 * (lse - row[tgt] as f64);
+            row_loss += wgt as f64 * (lse - row[tgt] as f64);
             let scale_w = (wgt as f64 / w_total) as f32;
             let drow = &mut dlogits[t * vocab..(t + 1) * vocab];
             for (dv, &v) in drow.iter_mut().zip(row) {
@@ -538,7 +554,31 @@ pub(crate) fn loss_and_grads(
             }
             drow[tgt] -= scale_w;
         }
-        row_backward(cfg, rope, &w, toks, &cache, &dlogits, &mut grads);
+        let mut row_grads: Vec<TensorF> =
+            params.iter().map(|p| Tensor::zeros(p.dims())).collect();
+        row_backward(cfg, rope, &w, toks, &cache, &dlogits, &mut row_grads);
+        (row_loss, row_grads)
+    };
+
+    let window = crate::kernels::effective_threads().max(1);
+    let mut loss_sum = 0.0f64;
+    // Every row folds into zero-initialized buffers in ascending row
+    // order — a fixed element-wise sequence (row 0, 1, …, B−1 onto
+    // zeros), so the result is bitwise identical at every window size
+    // and thread budget.
+    let mut grads: Vec<TensorF> = params.iter().map(|p| Tensor::zeros(p.dims())).collect();
+    let mut r0 = 0;
+    while r0 < b {
+        let rows: Vec<usize> = (r0..(r0 + window).min(b)).collect();
+        r0 += rows.len();
+        for (row_loss, row_grads) in crate::kernels::par_map(&rows, |_, &r| per_row(r)) {
+            loss_sum += row_loss;
+            for (gv, rgv) in grads.iter_mut().zip(&row_grads) {
+                for (a, &v) in gv.data_mut().iter_mut().zip(rgv.data()) {
+                    *a += v;
+                }
+            }
+        }
     }
     Ok(((loss_sum / w_total) as f32, grads))
 }
@@ -709,7 +749,10 @@ mod tests {
     }
 
     /// Gradients must be bitwise identical at every thread budget (the
-    /// kernels' determinism contract, exercised end to end).
+    /// kernels' determinism contract, exercised end to end through the
+    /// batch-parallel step). B = 3 rows over a 1/3/8 sweep covers the
+    /// serial path, one-row-per-worker, and rows-with-inner-splits plus
+    /// the non-divisible 8-over-3 budget split.
     #[test]
     fn gradients_identical_across_thread_counts() {
         let _g = crate::kernels::TEST_THREADS_LOCK.lock().unwrap();
@@ -718,18 +761,20 @@ mod tests {
         let params = init_params(&cfg, &specs, 29);
         let rope = RopeTable::new(cfg.head_dim, cfg.rope_theta);
         // L = 64 crosses the attention passes' serial-below thresholds,
-        // so the parallel splits actually engage at threads = 8.
-        let (toks, segs, mask) = batch(&cfg, 1, 64, 41);
+        // so the inner parallel splits actually engage at threads = 8.
+        let (toks, segs, mask) = batch(&cfg, 3, 64, 41);
         let prev = crate::kernels::num_threads();
         crate::kernels::set_threads(1);
         let (l1, g1) = loss_and_grads(&cfg, &rope, &params, &toks, &segs, &mask).unwrap();
-        crate::kernels::set_threads(8);
-        let (l8, g8) = loss_and_grads(&cfg, &rope, &params, &toks, &segs, &mask).unwrap();
-        crate::kernels::set_threads(prev);
-        assert_eq!(l1, l8, "loss differs across thread counts");
-        for (a, b) in g1.iter().zip(&g8) {
-            assert_eq!(a, b, "gradient tensor differs across thread counts");
+        for t in [3usize, 8] {
+            crate::kernels::set_threads(t);
+            let (lt, gt) = loss_and_grads(&cfg, &rope, &params, &toks, &segs, &mask).unwrap();
+            assert_eq!(l1, lt, "loss differs between 1 and {t} threads");
+            for (a, b) in g1.iter().zip(&gt) {
+                assert_eq!(a, b, "gradient tensor differs between 1 and {t} threads");
+            }
         }
+        crate::kernels::set_threads(prev);
     }
 
     #[test]

@@ -128,6 +128,7 @@ impl EngineHandle {
                         }
                         Job::Stats(out) => {
                             let s = coord.cache_stats();
+                            let ps = crate::kernels::pool_stats();
                             let m = &coord.metrics;
                             let line = Json::obj(vec![
                                 ("metrics", Json::str(m.report())),
@@ -142,6 +143,10 @@ impl EngineHandle {
                                 ("cache_quant_rel_err", Json::num(s.quant_rel_err())),
                                 ("kv_precision", Json::str(coord.kv_precision().as_str())),
                                 ("threads", Json::num(crate::kernels::num_threads() as f64)),
+                                ("pool_workers", Json::num(ps.workers as f64)),
+                                ("pool_jobs_executed", Json::num(ps.jobs_executed as f64)),
+                                ("pool_jobs_panicked", Json::num(ps.jobs_panicked as f64)),
+                                ("pool_queue_peak", Json::num(ps.queue_peak as f64)),
                             ])
                             .to_string();
                             let _ = out.send(line);

@@ -1,61 +1,219 @@
-//! A small fixed-size thread pool with a shared FIFO queue (tokio
+//! A persistent fixed-size thread pool with a shared FIFO queue (tokio
 //! replacement for the offline build).
 //!
-//! The coordinator uses it for concurrent block prefills and for serving
-//! connections; on the 1-core CI box it mainly provides *logical*
-//! concurrency, but the code is written for real multi-core parallelism.
+//! Two consumers with very different shapes share this type:
+//!
+//! * The **server** spawns fire-and-forget connection handlers via
+//!   [`ThreadPool::spawn`] / [`ThreadPool::submit`].
+//! * The **kernel layer** runs its fork/join parallel regions through
+//!   [`ThreadPool::run_scoped`] on one process-global pool, retiring the
+//!   per-region `std::thread::scope` spawn/join it used to pay. Workers
+//!   are spawned once; a decode-sized parallel region costs a queue
+//!   push + condvar wake instead of an OS thread spawn.
+//!
+//! Design points the tests pin down:
+//!
+//! * **Panic containment.** Every job runs under `catch_unwind`; a
+//!   panicking job never kills a worker, never poisons the queue, and
+//!   never leaks the in-flight count — remaining jobs still run and
+//!   [`ThreadPool::wait_idle`] still drains. Scoped regions capture the
+//!   first panic payload and re-raise it on the submitting thread
+//!   *after* the whole region has completed.
+//! * **Help-while-wait.** A thread waiting for its scoped region
+//!   executes that region's still-queued tasks instead of blocking
+//!   (and only those — stealing an unrelated ms-scale job would wedge
+//!   a µs-scale region behind it). Every region is therefore
+//!   self-sufficient: even with every worker busy, the submitter
+//!   drains its own tasks, so regions complete at any worker count and
+//!   nested regions cannot deadlock — the bottom of every nesting
+//!   chain is a budget-1 leaf that runs inline.
+//! * **Loud shutdown.** [`ThreadPool::shutdown`] (also run by `Drop`)
+//!   drains the queue, then joins the workers; submitting into a
+//!   shut-down pool panics instead of silently dropping the job.
 
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// A borrowed task handed to [`ThreadPool::run_scoped`]; may capture
+/// non-`'static` references — the region does not return until every
+/// task has run.
+pub type ScopedJob<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+/// A queued job plus the scoped region it belongs to (`None` for
+/// fire-and-forget `spawn` jobs). Carrying the region here — instead
+/// of wrapping every task in a bookkeeping shim closure — lets a
+/// waiting submitter pick out *its own* tasks from the shared FIFO by
+/// pointer identity and keeps the per-task dispatch cost to the one
+/// `Box` the caller already paid.
+struct Queued {
+    region: Option<Arc<RegionState>>,
+    job: Job,
+}
+
 struct Shared {
     queue: Mutex<QueueState>,
     cond: Condvar,
 }
 
-struct QueueState {
-    jobs: std::collections::VecDeque<Job>,
-    shutdown: bool,
-    in_flight: usize,
+impl Shared {
+    /// Queue lock, poison-tolerant. Jobs never run under this lock and
+    /// the pool's own critical sections are plain bookkeeping that
+    /// cannot be left half-done by a panic, so entering a poisoned
+    /// mutex is always safe here. This matters for soundness:
+    /// [`ThreadPool::run_scoped`]'s completion barrier must be
+    /// genuinely no-unwind (its lifetime erasure rests on it), so its
+    /// wait loop must not panic on a `PoisonError` some other thread
+    /// left behind.
+    fn lock(&self) -> std::sync::MutexGuard<'_, QueueState> {
+        self.queue.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn wait<'a>(
+        &self,
+        g: std::sync::MutexGuard<'a, QueueState>,
+    ) -> std::sync::MutexGuard<'a, QueueState> {
+        self.cond.wait(g).unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Run one dequeued job with the bookkeeping every execution site
+    /// (worker loop and help-while-wait loop) must agree on. The caller
+    /// has already popped the entry and incremented `in_flight` under
+    /// the lock, now released. Contains panics, routes a scoped task's
+    /// outcome (panic payload + completion) to its region, settles the
+    /// counters, and notifies every waiter (idle workers, `wait_idle`,
+    /// region joins).
+    fn execute(&self, queued: Queued) {
+        let result = catch_unwind(AssertUnwindSafe(queued.job));
+        let panicked = result.is_err();
+        if let Some(region) = queued.region {
+            // Payload stored and `remaining` decremented before the
+            // notify below, so a woken waiter observes completion.
+            region.complete(result.err());
+        }
+        let mut q = self.lock();
+        q.in_flight -= 1;
+        q.jobs_executed += 1;
+        q.jobs_panicked += panicked as u64;
+        drop(q);
+        self.cond.notify_all();
+    }
 }
 
-/// Fixed-size thread pool. Dropping the pool joins all workers after the
-/// queue drains.
+struct QueueState {
+    jobs: std::collections::VecDeque<Queued>,
+    shutdown: bool,
+    in_flight: usize,
+    /// Jobs fully executed (completed or panicked), all execution sites.
+    jobs_executed: u64,
+    /// Queued jobs whose closure panicked — fire-and-forget `spawn`
+    /// jobs and scoped-region tasks alike, counted uniformly at the
+    /// execution sites ([`Shared::execute`]). Contained and counted,
+    /// never fatal. A panic in `run_scoped`'s *local* closure is not a
+    /// queued job and is re-raised to the caller instead.
+    jobs_panicked: u64,
+    /// High-water mark of the queue depth (dispatch backlog).
+    queue_peak: usize,
+}
+
+/// Point-in-time pool counters (serialized into server stats and the
+/// bench reports).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub workers: usize,
+    pub jobs_executed: u64,
+    pub jobs_panicked: u64,
+    pub queue_peak: usize,
+}
+
+/// Bookkeeping for one scoped region: outstanding tasks plus the first
+/// panic payload. Completion is signalled through the pool's condvar.
+struct RegionState {
+    remaining: AtomicUsize,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl RegionState {
+    fn complete(&self, payload: Option<Box<dyn Any + Send>>) {
+        if let Some(p) = payload {
+            let mut slot = self.panic.lock().unwrap_or_else(|e| e.into_inner());
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+        }
+        // Release pairs with the Acquire in the region wait loop: once
+        // the waiter reads 0, every task's writes are visible.
+        self.remaining.fetch_sub(1, Ordering::Release);
+    }
+}
+
+/// Persistent thread pool. Dropping the pool joins all workers after
+/// the queue drains.
 pub struct ThreadPool {
     shared: Arc<Shared>,
-    workers: Vec<thread::JoinHandle<()>>,
+    workers: Mutex<Vec<thread::JoinHandle<()>>>,
 }
 
 impl ThreadPool {
     pub fn new(threads: usize) -> ThreadPool {
-        let threads = threads.max(1);
         let shared = Arc::new(Shared {
             queue: Mutex::new(QueueState {
                 jobs: Default::default(),
                 shutdown: false,
                 in_flight: 0,
+                jobs_executed: 0,
+                jobs_panicked: 0,
+                queue_peak: 0,
             }),
             cond: Condvar::new(),
         });
-        let workers = (0..threads)
-            .map(|i| {
-                let shared = shared.clone();
+        let pool = ThreadPool { shared, workers: Mutex::new(Vec::new()) };
+        pool.ensure_workers(threads.max(1));
+        pool
+    }
+
+    /// Grow the worker set to at least `n` threads (never shrinks —
+    /// idle workers just sleep on the condvar; the *budget* arithmetic
+    /// in the kernel layer decides how many are actually used).
+    /// No-op on a shut-down pool.
+    pub fn ensure_workers(&self, n: usize) {
+        let mut ws = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+        if self.shared.lock().shutdown {
+            return;
+        }
+        while ws.len() < n {
+            let shared = self.shared.clone();
+            let i = ws.len();
+            ws.push(
                 thread::Builder::new()
                     .name(format!("block-attn-worker-{i}"))
                     .spawn(move || worker_loop(shared))
-                    .expect("spawn worker")
-            })
-            .collect();
-        ThreadPool { shared, workers }
+                    .expect("spawn worker"),
+            );
+        }
     }
 
-    /// Submit a job.
+    /// Submit a fire-and-forget job.
+    ///
+    /// Panics if the pool has been shut down: a job silently dropped on
+    /// the floor is a bug at the call site, and the failure must be
+    /// loud enough to surface it.
     pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
-        let mut q = self.shared.queue.lock().unwrap();
-        q.jobs.push_back(Box::new(job));
+        let mut q = self.shared.lock();
+        if q.shutdown {
+            // Release the guard before panicking: the panic is the
+            // API's loud failure, not grounds to poison the mutex for
+            // every other pool user (including `Drop`).
+            drop(q);
+            panic!("ThreadPool::spawn on a shut-down pool");
+        }
+        q.jobs.push_back(Queued { region: None, job: Box::new(job) });
+        q.queue_peak = q.queue_peak.max(q.jobs.len());
         drop(q);
         self.shared.cond.notify_one();
     }
@@ -90,52 +248,162 @@ impl ThreadPool {
         handles.into_iter().map(|h| h.join()).collect()
     }
 
+    /// Run a fork/join region: `tasks` are dispatched to the pool,
+    /// `local` runs on the calling thread, and the call returns only
+    /// when **every** task has finished. While it waits, the calling
+    /// thread executes *this region's* still-queued tasks
+    /// ("help-while-wait"), so the region completes even with zero
+    /// free workers and nested regions cannot deadlock: every queued
+    /// task is always runnable by its own submitter. Stealing is
+    /// deliberately scoped to the waiter's own region — popping an
+    /// unrelated job would wedge a µs-scale region behind a foreign
+    /// ms-scale one and nest arbitrary work on this stack.
+    ///
+    /// Tasks may borrow from the caller's stack (the `'env` lifetime):
+    /// the completion barrier is what makes that sound. If `local` or
+    /// any task panics, the remaining tasks still run to completion and
+    /// the first payload is re-raised here afterwards — a panicking
+    /// region never leaves the pool wedged or the queue poisoned.
+    pub fn run_scoped<'env>(&self, local: impl FnOnce(), tasks: Vec<ScopedJob<'env>>) {
+        if tasks.is_empty() {
+            local();
+            return;
+        }
+        let region = Arc::new(RegionState {
+            remaining: AtomicUsize::new(tasks.len()),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut q = self.shared.lock();
+            if q.shutdown {
+                // Nothing queued yet; dropping `tasks` un-run is safe,
+                // and releasing the guard first keeps the loud failure
+                // from poisoning the mutex (see `spawn`).
+                drop(q);
+                panic!("ThreadPool::run_scoped on a shut-down pool");
+            }
+            for task in tasks {
+                // SAFETY: lifetime erasure. This function does not
+                // return (or unwind — the wait below runs even when
+                // `local` panics, and uses only poison-tolerant locks,
+                // so it cannot itself panic) until `region.remaining`
+                // reaches zero, i.e. until every task has run to
+                // completion ([`Shared::execute`] decrements it after
+                // the task returns or panics), so the `'env` borrows
+                // the tasks capture strictly outlive their last use.
+                let task: ScopedJob<'static> = unsafe {
+                    std::mem::transmute::<ScopedJob<'env>, ScopedJob<'static>>(task)
+                };
+                q.jobs.push_back(Queued { region: Some(region.clone()), job: task });
+            }
+            q.queue_peak = q.queue_peak.max(q.jobs.len());
+        }
+        self.shared.cond.notify_all();
+
+        let local_panic = catch_unwind(AssertUnwindSafe(local)).err();
+
+        // Help-while-wait: run this region's still-queued tasks until
+        // it drains (tasks already in flight on workers finish there).
+        // The completion signal rides the pool condvar: every execution
+        // site notifies after finishing a job.
+        let mut q = self.shared.lock();
+        while region.remaining.load(Ordering::Acquire) != 0 {
+            let mine = q
+                .jobs
+                .iter()
+                .position(|j| matches!(&j.region, Some(r) if Arc::ptr_eq(r, &region)));
+            if let Some(idx) = mine {
+                let queued = q.jobs.remove(idx).expect("indexed job vanished");
+                q.in_flight += 1;
+                drop(q);
+                self.shared.execute(queued);
+                q = self.shared.lock();
+            } else {
+                q = self.shared.wait(q);
+            }
+        }
+        drop(q);
+
+        let payload = local_panic
+            .or_else(|| region.panic.lock().unwrap_or_else(|e| e.into_inner()).take());
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+    }
+
     /// Block until the queue is empty and no job is running.
     pub fn wait_idle(&self) {
-        let mut q = self.shared.queue.lock().unwrap();
+        let mut q = self.shared.lock();
         while !q.jobs.is_empty() || q.in_flight > 0 {
-            q = self.shared.cond.wait(q).unwrap();
+            q = self.shared.wait(q);
+        }
+    }
+
+    /// Drain the queue, then join all workers. Idempotent; `Drop` calls
+    /// it. Afterwards `spawn`/`run_scoped` panic (fail loudly) instead
+    /// of silently dropping work.
+    pub fn shutdown(&self) {
+        self.shared.lock().shutdown = true;
+        self.shared.cond.notify_all();
+        // Drain the handles out of the lock before joining: a join
+        // performed while holding the workers mutex would deadlock
+        // against a job on the joined worker that calls
+        // `threads()`/`stats()` on its own pool.
+        let handles: Vec<_> = {
+            let mut ws = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+            ws.drain(..).collect()
+        };
+        for w in handles {
+            let _ = w.join();
         }
     }
 
     pub fn threads(&self) -> usize {
-        self.workers.len()
+        self.workers.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        // Take the two locks one at a time: `ensure_workers` holds
+        // `workers` while touching `queue`, so holding them here in the
+        // opposite order could deadlock.
+        let (jobs_executed, jobs_panicked, queue_peak) = {
+            let q = self.shared.lock();
+            (q.jobs_executed, q.jobs_panicked, q.queue_peak)
+        };
+        PoolStats {
+            workers: self.threads(),
+            jobs_executed,
+            jobs_panicked,
+            queue_peak,
+        }
     }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            q.shutdown = true;
-        }
-        self.shared.cond.notify_all();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.shutdown();
     }
 }
 
 fn worker_loop(shared: Arc<Shared>) {
     loop {
-        let job = {
-            let mut q = shared.queue.lock().unwrap();
+        let queued = {
+            let mut q = shared.lock();
             loop {
-                if let Some(job) = q.jobs.pop_front() {
+                if let Some(queued) = q.jobs.pop_front() {
                     q.in_flight += 1;
-                    break job;
+                    break queued;
                 }
                 if q.shutdown {
                     return;
                 }
-                q = shared.cond.wait(q).unwrap();
+                q = shared.wait(q);
             }
         };
-        job();
-        let mut q = shared.queue.lock().unwrap();
-        q.in_flight -= 1;
-        drop(q);
-        shared.cond.notify_all();
+        // Panics are contained inside `execute`: the worker survives,
+        // the in-flight count drains, and a scoped task's payload and
+        // completion are routed to its region.
+        shared.execute(queued);
     }
 }
 
@@ -145,7 +413,8 @@ pub struct JobHandle<T> {
 }
 
 impl<T> JobHandle<T> {
-    /// Wait for the job to finish. Panics if the job panicked.
+    /// Wait for the job to finish. Panics if the job panicked (its
+    /// result sender is dropped without sending).
     pub fn join(self) -> T {
         self.rx.recv().expect("worker job panicked")
     }
@@ -199,5 +468,40 @@ mod tests {
         }
         drop(pool); // must drain queue before join
         assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn run_scoped_borrows_stack_data() {
+        let pool = ThreadPool::new(3);
+        let mut data = [0u32; 7];
+        let (head, rest) = data.split_at_mut(1);
+        let tasks: Vec<ScopedJob<'_>> = rest
+            .iter_mut()
+            .enumerate()
+            .map(|(i, slot)| {
+                Box::new(move || *slot = i as u32 + 2) as ScopedJob<'_>
+            })
+            .collect();
+        pool.run_scoped(|| head[0] = 1, tasks);
+        assert_eq!(data, [1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn run_scoped_empty_tasks_runs_local_inline() {
+        let pool = ThreadPool::new(1);
+        let mut hit = false;
+        pool.run_scoped(|| hit = true, Vec::new());
+        assert!(hit);
+    }
+
+    #[test]
+    fn ensure_workers_grows_never_shrinks() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        pool.ensure_workers(3);
+        assert_eq!(pool.threads(), 3);
+        pool.ensure_workers(2);
+        assert_eq!(pool.threads(), 3);
+        assert_eq!(pool.stats().workers, 3);
     }
 }

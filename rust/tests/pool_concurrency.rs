@@ -1,0 +1,217 @@
+//! Lifecycle and concurrency battery for the persistent worker pool —
+//! the substrate every kernel parallel region now dispatches through.
+//!
+//! What must hold (and what each test pins):
+//!
+//! * A panicking job is **contained**: no dead worker, no poisoned
+//!   queue, no leaked in-flight count — later jobs still run and
+//!   `wait_idle` still drains.
+//! * Scoped regions re-raise the panic on the submitting thread only
+//!   *after* the whole region has completed (sibling tasks always run).
+//! * `Drop`/`shutdown` join the workers only after the queue drains,
+//!   and submitting into a shut-down pool fails loudly instead of
+//!   silently dropping the job.
+//! * 10k tiny jobs across 1/2/3/8 workers complete **exactly once** —
+//!   a seen-set plus a counter catches both lost wakeups in the
+//!   condvar loop (jobs that never run) and double-execution.
+
+use block_attn::util::pool::{ScopedJob, ThreadPool};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+#[test]
+fn panicking_job_does_not_deadlock_or_poison() {
+    let pool = ThreadPool::new(2);
+    let counter = Arc::new(AtomicUsize::new(0));
+    // Interleave panicking jobs with normal ones; every normal job must
+    // still run and the pool must still drain.
+    for i in 0..60 {
+        let c = counter.clone();
+        if i % 10 == 3 {
+            pool.spawn(move || panic!("job {i} exploded"));
+        } else {
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+    }
+    pool.wait_idle();
+    assert_eq!(counter.load(Ordering::SeqCst), 54, "a surviving job was lost");
+    let stats = pool.stats();
+    assert_eq!(stats.jobs_panicked, 6, "panics must be counted, not fatal");
+    assert_eq!(stats.jobs_executed, 60);
+    // The pool is still fully functional after the panics.
+    let h = pool.submit(|| 41 + 1);
+    assert_eq!(h.join(), 42);
+    pool.wait_idle();
+}
+
+#[test]
+fn scoped_region_panic_propagates_after_siblings_finish() {
+    let pool = ThreadPool::new(3);
+    let ran = Arc::new(AtomicUsize::new(0));
+    let tasks: Vec<ScopedJob<'_>> = (0..8)
+        .map(|i| {
+            let ran = ran.clone();
+            Box::new(move || {
+                if i == 2 {
+                    panic!("task 2 exploded");
+                }
+                ran.fetch_add(1, Ordering::SeqCst);
+            }) as ScopedJob<'_>
+        })
+        .collect();
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        pool.run_scoped(|| {}, tasks);
+    }));
+    assert!(result.is_err(), "region panic must reach the submitting thread");
+    // Every sibling ran even though one task panicked: the region
+    // drains first, then re-raises.
+    assert_eq!(ran.load(Ordering::SeqCst), 7);
+    // Region-task panics are counted too (the region shim fields the
+    // payload before the execution site's catch_unwind can see it).
+    assert_eq!(pool.stats().jobs_panicked, 1, "region panic not counted");
+    // And the pool survives for the next region.
+    let mut touched = [false; 4];
+    let tasks: Vec<ScopedJob<'_>> = touched
+        .iter_mut()
+        .map(|t| Box::new(move || *t = true) as ScopedJob<'_>)
+        .collect();
+    pool.run_scoped(|| {}, tasks);
+    assert!(touched.iter().all(|&t| t));
+}
+
+#[test]
+fn scoped_local_panic_still_waits_for_tasks() {
+    // The caller's own closure panicking must not let the region return
+    // (or unwind) while borrowed tasks are still in flight.
+    let pool = ThreadPool::new(2);
+    let ran = Arc::new(AtomicUsize::new(0));
+    let tasks: Vec<ScopedJob<'_>> = (0..6)
+        .map(|_| {
+            let ran = ran.clone();
+            Box::new(move || {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                ran.fetch_add(1, Ordering::SeqCst);
+            }) as ScopedJob<'_>
+        })
+        .collect();
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        pool.run_scoped(|| panic!("local exploded"), tasks);
+    }));
+    assert!(result.is_err());
+    assert_eq!(ran.load(Ordering::SeqCst), 6, "tasks must complete before the unwind");
+}
+
+#[test]
+fn drop_joins_after_drain() {
+    let counter = Arc::new(AtomicUsize::new(0));
+    {
+        let pool = ThreadPool::new(2);
+        for _ in 0..40 {
+            let c = counter.clone();
+            pool.spawn(move || {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // `drop` runs here: shutdown must drain the queue before joining.
+    }
+    assert_eq!(counter.load(Ordering::SeqCst), 40, "drop lost queued jobs");
+}
+
+#[test]
+fn spawn_into_shut_down_pool_fails_loudly() {
+    let pool = ThreadPool::new(1);
+    pool.shutdown();
+    let r = catch_unwind(AssertUnwindSafe(|| pool.spawn(|| {})));
+    assert!(r.is_err(), "spawn on a shut-down pool must panic, not drop the job");
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        pool.run_scoped(|| {}, vec![Box::new(|| {}) as ScopedJob<'_>]);
+    }));
+    assert!(r.is_err(), "run_scoped on a shut-down pool must panic");
+    // The loud failures must not have poisoned the pool's mutex: every
+    // later call (stats, the idempotent shutdown, Drop at scope exit)
+    // still works instead of cascading PoisonError panics — a poisoned
+    // Drop would double-panic and abort the whole test binary.
+    assert_eq!(pool.stats().jobs_executed, 0);
+    pool.shutdown();
+    assert_eq!(pool.threads(), 0);
+}
+
+/// 10k tiny jobs per worker count: each must run exactly once. The
+/// seen-set (per-slot AtomicBool swap) catches double execution; the
+/// counter + wait_idle catches lost wakeups (a job stranded in the
+/// queue would leave `wait_idle` hanging or the counter short).
+#[test]
+fn stress_tiny_jobs_complete_exactly_once() {
+    const JOBS: usize = 10_000;
+    for workers in [1usize, 2, 3, 8] {
+        let pool = ThreadPool::new(workers);
+        let seen: Arc<Vec<AtomicBool>> =
+            Arc::new((0..JOBS).map(|_| AtomicBool::new(false)).collect());
+        let done = Arc::new(AtomicUsize::new(0));
+        for i in 0..JOBS {
+            let seen = seen.clone();
+            let done = done.clone();
+            pool.spawn(move || {
+                let prev = seen[i].swap(true, Ordering::SeqCst);
+                assert!(!prev, "job {i} ran twice ({workers} workers)");
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(
+            done.load(Ordering::SeqCst),
+            JOBS,
+            "lost jobs at {workers} workers"
+        );
+        assert!(
+            seen.iter().all(|s| s.load(Ordering::SeqCst)),
+            "unexecuted slot at {workers} workers"
+        );
+        let stats = pool.stats();
+        assert!(stats.jobs_executed >= JOBS as u64);
+        assert_eq!(stats.jobs_panicked, 0);
+        assert!(stats.queue_peak > 0, "queue peak must track the backlog");
+    }
+}
+
+/// Scoped regions from several submitting threads at once, against one
+/// small pool: help-while-wait must keep every region making progress
+/// (no deadlock with more regions than workers) and every region must
+/// see exactly its own results.
+#[test]
+fn concurrent_scoped_regions_share_one_pool() {
+    let pool = Arc::new(ThreadPool::new(2));
+    let mut joins = Vec::new();
+    for t in 0..6u64 {
+        let pool = pool.clone();
+        joins.push(std::thread::spawn(move || {
+            for round in 0..20u64 {
+                let mut out = vec![0u64; 32];
+                let (head, rest) = out.split_at_mut(16);
+                let tasks: Vec<ScopedJob<'_>> = vec![Box::new(move || {
+                    for (i, v) in rest.iter_mut().enumerate() {
+                        *v = (16 + i) as u64;
+                    }
+                })];
+                pool.run_scoped(
+                    || {
+                        for (i, v) in head.iter_mut().enumerate() {
+                            *v = i as u64;
+                        }
+                    },
+                    tasks,
+                );
+                for (i, &v) in out.iter().enumerate() {
+                    assert_eq!(v, i as u64, "thread {t} round {round} corrupted");
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("submitting thread panicked");
+    }
+}

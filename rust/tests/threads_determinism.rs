@@ -2,12 +2,15 @@
 //! byte-identical output at every `--threads` setting.
 //!
 //! The kernels layer guarantees a fixed per-element reduction order and
-//! row-disjoint parallel splits; this test pins the end-to-end
-//! consequence: a coordinator serving the same request stream with 1
-//! kernel thread and with 8 kernel threads emits identical tokens,
+//! row-disjoint parallel splits, dispatched to the persistent worker
+//! pool; this test pins the end-to-end consequence: a coordinator
+//! serving the same request stream at a sweep of kernel thread budgets
+//! (1, 3, 8 — including 3, whose non-divisible splits exercise the
+//! uneven chunk and budget-inheritance paths) emits identical tokens,
 //! TTFT-independent fields, and identical cache behavior — including
-//! the concurrent cache-miss block prefill path.
+//! the concurrent cache-miss block prefill path and the int8 KV tier.
 
+use block_attn::config::KvPrecision;
 use block_attn::coordinator::{AttentionMode, Coordinator, Request};
 use block_attn::kernels::set_threads;
 use block_attn::runtime::NativeBackend;
@@ -15,7 +18,11 @@ use block_attn::util::rng::Rng;
 use block_attn::{Backend, ModelConfig};
 use std::sync::Mutex;
 
-/// Both tests flip the process-global thread budget; without
+/// The budget sweep: serial, an odd non-divisible width, and a wide
+/// power of two.
+const THREAD_SWEEP: [usize; 3] = [1, 3, 8];
+
+/// Every test here flips the process-global thread budget; without
 /// serialization the harness could interleave them and run both sides
 /// of a comparison at the same effective thread count — which would
 /// mask exactly the nondeterminism this file exists to catch.
@@ -74,12 +81,12 @@ fn request_stream(vocab: usize) -> Vec<Request> {
     reqs
 }
 
-/// Serve the stream on a fresh coordinator; return everything
-/// deterministic about the responses.
-fn serve(threads: usize) -> Vec<(Vec<i32>, usize, usize, usize)> {
+/// Serve the stream on a fresh coordinator at the given budget and KV
+/// tier; return everything deterministic about the responses.
+fn serve(threads: usize, precision: KvPrecision) -> Vec<(Vec<i32>, usize, usize, usize)> {
     set_threads(threads);
     let engine = NativeBackend::new(micro_config(), 0xD15C);
-    let mut coord = Coordinator::new(engine, 64 << 20);
+    let mut coord = Coordinator::with_kv_precision(engine, 64 << 20, precision);
     request_stream(24)
         .iter()
         .map(|req| {
@@ -93,13 +100,39 @@ fn serve(threads: usize) -> Vec<(Vec<i32>, usize, usize, usize)> {
 fn coordinator_output_identical_across_thread_counts() {
     let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let prev = block_attn::kernels::num_threads();
-    let one = serve(1);
-    let eight = serve(8);
+    let baseline = serve(THREAD_SWEEP[0], KvPrecision::F32);
+    for &t in &THREAD_SWEEP[1..] {
+        let run = serve(t, KvPrecision::F32);
+        assert_eq!(
+            baseline, run,
+            "serving output differs between {} and {t} threads",
+            THREAD_SWEEP[0]
+        );
+    }
     set_threads(prev);
-    assert_eq!(one, eight, "serving output depends on the thread count");
     // Sanity: the stream exercised cache hits and multi-block requests.
-    assert!(one.iter().any(|(_, cached, _, _)| *cached > 0), "no cache hits exercised");
-    assert!(one.iter().all(|(tokens, ..)| !tokens.is_empty()));
+    assert!(baseline.iter().any(|(_, cached, _, _)| *cached > 0), "no cache hits exercised");
+    assert!(baseline.iter().all(|(tokens, ..)| !tokens.is_empty()));
+}
+
+/// The int8 tier quantizes per element (order-free), so quantized
+/// serving must be exactly as thread-count deterministic as f32 —
+/// including at the odd budget where splits are uneven.
+#[test]
+fn coordinator_int8_tier_identical_across_thread_counts() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = block_attn::kernels::num_threads();
+    let baseline = serve(THREAD_SWEEP[0], KvPrecision::Int8);
+    for &t in &THREAD_SWEEP[1..] {
+        let run = serve(t, KvPrecision::Int8);
+        assert_eq!(
+            baseline, run,
+            "int8 serving output differs between {} and {t} threads",
+            THREAD_SWEEP[0]
+        );
+    }
+    set_threads(prev);
+    assert!(baseline.iter().all(|(tokens, ..)| !tokens.is_empty()));
 }
 
 #[test]
@@ -114,12 +147,14 @@ fn prefill_blocks_identical_across_thread_counts() {
     let refs: Vec<&[i32]> = blocks.iter().map(|b| b.as_slice()).collect();
     set_threads(1);
     let serial = engine.prefill_blocks(&refs).unwrap();
-    set_threads(8);
-    let parallel = engine.prefill_blocks(&refs).unwrap();
-    set_threads(prev);
-    assert_eq!(serial.len(), parallel.len());
-    for ((k1, v1), (k8, v8)) in serial.iter().zip(&parallel) {
-        assert_eq!(k1, k8, "block K depends on thread count");
-        assert_eq!(v1, v8, "block V depends on thread count");
+    for &t in &THREAD_SWEEP[1..] {
+        set_threads(t);
+        let parallel = engine.prefill_blocks(&refs).unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for ((k1, v1), (kt, vt)) in serial.iter().zip(&parallel) {
+            assert_eq!(k1, kt, "block K differs between 1 and {t} threads");
+            assert_eq!(v1, vt, "block V differs between 1 and {t} threads");
+        }
     }
+    set_threads(prev);
 }
