@@ -17,7 +17,9 @@
 
 use block_attn::config::KvPrecision;
 use block_attn::coordinator::{AttentionMode, Coordinator, Request};
-use block_attn::kernels::{gemm_nn_acc, gemm_nt_acc, gemm_nt_i8_acc, quant, set_threads};
+use block_attn::kernels::{
+    gemm_nn_acc, gemm_nt_acc, gemm_nt_i4_acc, gemm_nt_i8_acc, quant, set_threads,
+};
 use block_attn::runtime::backend_from_args;
 use block_attn::util::cli::Args;
 use block_attn::util::json::Json;
@@ -128,6 +130,29 @@ fn main() -> anyhow::Result<()> {
     println!(
         "# int8-vs-f32 nt GEMM: {:.2}x the f32 time at ¼ the operand bytes",
         r_nt_i8.p50_ms() / r_nt_f32.p50_ms()
+    );
+
+    // -- int4 × f32 mixed GEMM vs f32 ----------------------------------
+    // The same QKᵀ layout with a packed int4 K operand (two codes per
+    // byte along the shared dim, per-channel amax/7 scales — the
+    // shipped recipe from kernels::quant). Parity gate first: fused
+    // unpack+dequant must match the f32 kernel over the pre-dequantized
+    // operand bit for bit.
+    let (bq4, bscale4) = quant::quantize_cols_i4(&b, size, size);
+    let bdeq4 = quant::dequantize_cols_i4(&bq4, &bscale4, size);
+    let mut want_nt4 = vec![0.0f32; m * n];
+    gemm_nt_acc(&a, &bdeq4, m, k, n, &mut want_nt4);
+    let mut got_nt4 = vec![0.0f32; m * n];
+    gemm_nt_i4_acc(&a, &bq4, &bscale4, m, k, n, &mut got_nt4);
+    assert_eq!(got_nt4, want_nt4, "int4 GEMM differs from dequantized f32");
+    let r_nt_i4 = bench("gemm_nt_i4(1 thread)", &opts, || {
+        out.fill(0.0);
+        gemm_nt_i4_acc(&a, &bq4, &bscale4, m, k, n, &mut out);
+    });
+    println!("{}  ({:.2} GFLOP/s)", r_nt_i4.report_line(), gflop / (r_nt_i4.p50_ms() / 1e3));
+    println!(
+        "# int4-vs-f32 nt GEMM: {:.2}x the f32 time at ⅛ the operand bytes",
+        r_nt_i4.p50_ms() / r_nt_f32.p50_ms()
     );
 
     // -- dispatch overhead: per-region scoped spawn vs persistent pool -
@@ -252,13 +277,19 @@ fn main() -> anyhow::Result<()> {
     println!("# TTFT cold-cache: {:.1} ms → {:.1} ms ({ttft_speedup:.2}x)", ttft[0], ttft[1]);
 
     // Warm-cache TTFT per KV tier: every block hits, so the timed path
-    // is fetch (+ fused dequant on the int8 tier) + Eq.-3 re-encode +
-    // context assembly + final prefill. The int8 tier pays the dequant
-    // but stores each block at ~¼ the bytes (reported alongside).
+    // is fetch (+ fused dequant on the quantized tiers) + Eq.-3
+    // re-encode + context assembly + final prefill + the tier-precision
+    // decode-context build. The quantized tiers pay the dequant but
+    // store each block at ~¼ (int8) / ~⅛ (int4) the bytes (reported
+    // alongside).
     set_threads(par_threads);
-    let mut warm_ms = [0.0f64; 2];
-    let mut tier_bytes = [0usize; 2];
-    for (slot, prec) in [(0usize, KvPrecision::F32), (1, KvPrecision::Int8)] {
+    let mut warm_ms = [0.0f64; 3];
+    let mut tier_bytes = [0usize; 3];
+    for (slot, prec) in [
+        (0usize, KvPrecision::F32),
+        (1, KvPrecision::Int8),
+        (2, KvPrecision::Int4),
+    ] {
         let tier_engine = backend_from_args(&args, "tiny")?;
         let mut tier_coord = Coordinator::with_kv_precision(tier_engine, 256 << 20, prec);
         tier_coord.process(&req).expect("cache warm-up");
@@ -270,12 +301,15 @@ fn main() -> anyhow::Result<()> {
         println!("{}", r.report_line());
     }
     println!(
-        "# warm TTFT: f32 {:.1} ms vs int8 {:.1} ms; cache bytes {} vs {} ({:.1}% of f32)",
+        "# warm TTFT: f32 {:.1} ms vs int8 {:.1} ms vs int4 {:.1} ms; cache bytes {} vs {} ({:.1}% of f32) vs {} ({:.1}% of f32)",
         warm_ms[0],
         warm_ms[1],
+        warm_ms[2],
         tier_bytes[0],
         tier_bytes[1],
-        100.0 * tier_bytes[1] as f64 / tier_bytes[0].max(1) as f64
+        100.0 * tier_bytes[1] as f64 / tier_bytes[0].max(1) as f64,
+        tier_bytes[2],
+        100.0 * tier_bytes[2] as f64 / tier_bytes[0].max(1) as f64
     );
     set_threads(machine_threads);
     let pool_end = block_attn::kernels::pool_stats();
@@ -300,10 +334,13 @@ fn main() -> anyhow::Result<()> {
         ("ttft_nt_ms", Json::num(ttft[1])),
         ("gemm_nt_f32_ms", Json::num(r_nt_f32.p50_ms())),
         ("gemm_nt_i8_ms", Json::num(r_nt_i8.p50_ms())),
+        ("gemm_nt_i4_ms", Json::num(r_nt_i4.p50_ms())),
         ("ttft_warm_f32_ms", Json::num(warm_ms[0])),
         ("ttft_warm_int8_ms", Json::num(warm_ms[1])),
+        ("ttft_warm_int4_ms", Json::num(warm_ms[2])),
         ("kv_bytes_f32", Json::num(tier_bytes[0] as f64)),
         ("kv_bytes_int8", Json::num(tier_bytes[1] as f64)),
+        ("kv_bytes_int4", Json::num(tier_bytes[2] as f64)),
         ("dispatch_reps", Json::num(disp_reps as f64)),
         ("dispatch_scoped_ms", Json::num(r_disp_scoped.p50_ms())),
         ("dispatch_pool_ms", Json::num(r_disp_pool.p50_ms())),

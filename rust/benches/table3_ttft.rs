@@ -7,6 +7,7 @@
 //! cargo bench --bench table3_ttft -- --full        # adds 16K and 32K
 //! cargo bench --bench table3_ttft -- --lengths 512,2048
 //! cargo bench --bench table3_ttft -- --kv-quant int8   # quantized KV tier
+//! cargo bench --bench table3_ttft -- --kv-quant int4   # packed low-bit tier
 //! ```
 //!
 //! The block path is timed end to end as served: cache fetch + RoPE

@@ -12,23 +12,32 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 /// Storage precision of cached block KV states (the `BlockKvCache`
-/// tier).
+/// tier) **and** of the assembled decode-path context attended to by
+/// `Backend::decode_ctx`.
 ///
 /// * `F32` — full-precision storage; cached reuse is bit-lossless.
 /// * `Int8` — symmetric int8 codes with per-(layer, head, channel) f32
 ///   scales (see `kernels::quant`): ~¼ the bytes, so ~4× the blocks
 ///   per byte budget. Accuracy contract: decode-logit cosine
 ///   similarity vs the f32 tier ≥ 0.999 on the workload traces
-///   (`tests/kv_quant.rs`); output stays bitwise identical across
-///   thread counts because quantization is per-element and order-free.
+///   (`tests/kv_quant.rs`).
+/// * `Int4` — packed 4-bit codes (two per byte along the channel axis)
+///   with group-wise f32 scales per (layer, head, channel, 32-token
+///   group): ~⅛ the bytes (≤ 16% with scales), so ~8× the blocks per
+///   byte budget. Accuracy contract: decode-logit cosine ≥ 0.99 on the
+///   same traces.
 ///
-/// Resolution order: `--kv-quant f32|int8` > `$BLOCK_ATTN_KV_QUANT` >
-/// `F32`.
+/// Every tier keeps output bitwise identical across thread counts
+/// because quantization is per-element and order-free.
+///
+/// Resolution order: `--kv-quant f32|int8|int4` >
+/// `$BLOCK_ATTN_KV_QUANT` > `F32`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum KvPrecision {
     #[default]
     F32,
     Int8,
+    Int4,
 }
 
 impl KvPrecision {
@@ -36,20 +45,32 @@ impl KvPrecision {
         Ok(match s.trim().to_ascii_lowercase().as_str() {
             "f32" | "fp32" | "full" => KvPrecision::F32,
             "int8" | "i8" | "q8" => KvPrecision::Int8,
-            other => bail!("unknown KV precision '{other}' (expected 'f32' or 'int8')"),
+            "int4" | "i4" | "q4" => KvPrecision::Int4,
+            other => bail!("unknown KV precision '{other}' (expected 'f32', 'int8' or 'int4')"),
         })
     }
 
-    /// `$BLOCK_ATTN_KV_QUANT`, defaulting to `F32`. An unparsable value
-    /// warns and falls back rather than erroring: this runs inside
-    /// constructors that cannot return a `Result`.
+    /// `$BLOCK_ATTN_KV_QUANT`, defaulting to `F32` when unset or empty.
+    /// An unparsable value **panics**: this runs inside constructors
+    /// that cannot return a `Result`, and silently serving the f32 tier
+    /// when the operator asked for a quantized one (or typo'd it) would
+    /// hide a 4-8× capacity misconfiguration. Bins fail loudly at
+    /// startup instead.
     pub fn from_env() -> KvPrecision {
-        match std::env::var("BLOCK_ATTN_KV_QUANT") {
-            Ok(v) if !v.trim().is_empty() => KvPrecision::parse(&v).unwrap_or_else(|e| {
-                eprintln!("warning: ignoring $BLOCK_ATTN_KV_QUANT: {e}");
-                KvPrecision::F32
-            }),
-            _ => KvPrecision::F32,
+        match Self::parse_env_value(std::env::var("BLOCK_ATTN_KV_QUANT").ok().as_deref()) {
+            Ok(p) => p,
+            Err(e) => panic!("invalid $BLOCK_ATTN_KV_QUANT: {e}"),
+        }
+    }
+
+    /// The pure resolution behind [`Self::from_env`]: `None` or an
+    /// empty/whitespace value defaults to `F32`, anything else must
+    /// parse. Split out so both paths are unit-testable without
+    /// touching the process environment.
+    pub fn parse_env_value(v: Option<&str>) -> Result<KvPrecision> {
+        match v {
+            Some(s) if !s.trim().is_empty() => KvPrecision::parse(s),
+            _ => Ok(KvPrecision::F32),
         }
     }
 
@@ -58,7 +79,9 @@ impl KvPrecision {
     pub fn resolve(args: &crate::util::cli::Args) -> Result<KvPrecision> {
         match args.kv_quant() {
             Some(v) => KvPrecision::parse(v),
-            None => Ok(KvPrecision::from_env()),
+            None => KvPrecision::parse_env_value(
+                std::env::var("BLOCK_ATTN_KV_QUANT").ok().as_deref(),
+            ),
         }
     }
 
@@ -66,6 +89,7 @@ impl KvPrecision {
         match self {
             KvPrecision::F32 => "f32",
             KvPrecision::Int8 => "int8",
+            KvPrecision::Int4 => "int4",
         }
     }
 }
@@ -414,20 +438,40 @@ mod tests {
         assert_eq!(KvPrecision::parse("f32").unwrap(), KvPrecision::F32);
         assert_eq!(KvPrecision::parse(" INT8 ").unwrap(), KvPrecision::Int8);
         assert_eq!(KvPrecision::parse("i8").unwrap(), KvPrecision::Int8);
-        assert!(KvPrecision::parse("int4").is_err());
+        assert_eq!(KvPrecision::parse("int4").unwrap(), KvPrecision::Int4);
+        assert_eq!(KvPrecision::parse("q4").unwrap(), KvPrecision::Int4);
+        assert!(KvPrecision::parse("int2").is_err());
         assert_eq!(KvPrecision::default(), KvPrecision::F32);
         assert_eq!(KvPrecision::Int8.as_str(), "int8");
+        assert_eq!(KvPrecision::Int4.as_str(), "int4");
         // Flag beats environment; absent flag falls through to env/F32.
         let args = crate::util::cli::Args::parse_from(vec![
             "--kv-quant".to_string(),
-            "int8".to_string(),
-        ]);
-        assert_eq!(KvPrecision::resolve(&args).unwrap(), KvPrecision::Int8);
-        let bad = crate::util::cli::Args::parse_from(vec![
-            "--kv-quant".to_string(),
             "int4".to_string(),
         ]);
+        assert_eq!(KvPrecision::resolve(&args).unwrap(), KvPrecision::Int4);
+        let bad = crate::util::cli::Args::parse_from(vec![
+            "--kv-quant".to_string(),
+            "int2".to_string(),
+        ]);
         assert!(KvPrecision::resolve(&bad).is_err());
+    }
+
+    /// The two `$BLOCK_ATTN_KV_QUANT` paths, on the pure resolver so
+    /// the test never mutates the process environment: unset/empty
+    /// stays the `F32` default, anything unparsable is an error (which
+    /// [`KvPrecision::from_env`] escalates to a startup panic — a typo
+    /// must not silently serve the f32 tier at 4-8× the expected cache
+    /// footprint).
+    #[test]
+    fn kv_precision_env_value_defaults_and_fails_loudly() {
+        assert_eq!(KvPrecision::parse_env_value(None).unwrap(), KvPrecision::F32);
+        assert_eq!(KvPrecision::parse_env_value(Some("")).unwrap(), KvPrecision::F32);
+        assert_eq!(KvPrecision::parse_env_value(Some("  ")).unwrap(), KvPrecision::F32);
+        assert_eq!(KvPrecision::parse_env_value(Some("int8")).unwrap(), KvPrecision::Int8);
+        assert_eq!(KvPrecision::parse_env_value(Some("int4")).unwrap(), KvPrecision::Int4);
+        let err = KvPrecision::parse_env_value(Some("in8t")).unwrap_err();
+        assert!(format!("{err}").contains("in8t"), "error must name the bad value");
     }
 
     #[test]

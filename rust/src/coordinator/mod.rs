@@ -8,8 +8,16 @@
 //!   misses ──engine.prefill_block──► KV ──► cache (content-addressed)
 //!   all blocks ──RoPE re-encode to prompt offsets──► context tensor
 //!   final block ──engine.prefill_final──► first token  ← TTFT stops here
-//!   decode loop (continuous batching across active requests)
+//!   context + final KV ──quantize at tier──► DecodeCtx prefix
+//!   decode loop over DecodeCtx (continuous batching across requests)
 //! ```
+//!
+//! On the quantized KV tiers the decode loop attends **directly over
+//! the quantized assembled context**: the prompt prefix is stored once
+//! as int8/int4 codes in the request's [`DecodeCtx`] and the backend's
+//! `decode_ctx` reads them through the fused mixed-precision kernels —
+//! the old dense f32 decode cache (full decode capacity, cloned every
+//! step) no longer exists.
 //!
 //! Modes ([`AttentionMode`]) cover the paper's serving variants: `Full`
 //! (vanilla baseline), `Block` (the contribution), `BlockNoReencode`
@@ -25,7 +33,7 @@ pub mod session;
 use crate::config::KvPrecision;
 use crate::kvcache::{block_key, BlockKvCache};
 use crate::rope::RopeTable;
-use crate::runtime::Backend;
+use crate::runtime::{Backend, DecodeCtx};
 use crate::tensor::{argmax, TensorF};
 use crate::tokenizer::EOS;
 use anyhow::{bail, Result};
@@ -145,9 +153,19 @@ impl<B: Backend> Coordinator<B> {
         &self.engine
     }
 
-    /// Storage precision of the block-KV cache.
+    /// Storage precision of the block-KV cache (and of the decode
+    /// contexts built for new requests).
     pub fn kv_precision(&self) -> KvPrecision {
         self.cache.precision()
+    }
+
+    /// Switch the KV tier for *future* cache inserts and decode
+    /// contexts. Resident cache entries keep the tier they were stored
+    /// at (mixed-tier populations are fully supported — see
+    /// [`BlockKvCache::set_precision`]); in-flight requests keep their
+    /// decode context's tier.
+    pub fn set_kv_precision(&mut self, precision: KvPrecision) {
+        self.cache.set_precision(precision);
     }
 
     pub fn cache_stats(&self) -> crate::kvcache::CacheStats {
@@ -224,15 +242,12 @@ impl<B: Backend> Coordinator<B> {
     }
 
     /// One decode step for an in-flight request (used by the batcher for
-    /// round-robin continuous batching).
+    /// round-robin continuous batching). Runs over the request's
+    /// [`DecodeCtx`] — on the quantized tiers, attention reads the
+    /// assembled context's codes directly (no dense f32 cache exists).
     pub(crate) fn decode_one(&mut self, state: &mut DecodeState, last: i32) -> Result<i32> {
-        let out = self
-            .engine
-            .decode(last, &state.k_cache, &state.v_cache, state.len)?;
-        state.k_cache = out.k_cache;
-        state.v_cache = out.v_cache;
-        state.len += 1;
-        Ok(argmax(&out.logits) as i32)
+        let logits = self.engine.decode_ctx(last, &mut state.ctx)?;
+        Ok(argmax(&logits) as i32)
     }
 
     // -- prefill paths -----------------------------------------------------
@@ -245,18 +260,14 @@ impl<B: Backend> Coordinator<B> {
         all.extend_from_slice(&req.query);
         let n = all.len();
         let out = self.engine.prefill_full(&all)?;
-        // Dense decode cache.
+        // Decode context at the serving tier: the prompt KV is the
+        // static prefix (quantized on the int8/int4 tiers), generated
+        // tokens land in the growing f32 tail.
         let cap = self.engine.decode_ctx_capacity()?;
-        if n >= cap {
-            bail!("prompt of {n} tokens exceeds decode capacity {cap}");
-        }
-        let mut kc = self.engine.kv_zeros(cap);
-        let mut vc = self.engine.kv_zeros(cap);
-        write_ctx(&mut kc, &out.k, 0);
-        write_ctx(&mut vc, &out.v, 0);
+        let ctx = DecodeCtx::new(out.k, out.v, self.cache.precision(), cap)?;
         Ok(PrefillOutcome {
             last_logits: out.last_logits,
-            state: DecodeState { k_cache: kc, v_cache: vc, len: n },
+            state: DecodeState { ctx },
             flops_tft: self.flops.prefill_full(n),
             block_prefill_s: 0.0,
             cached_blocks: 0,
@@ -364,24 +375,25 @@ impl<B: Backend> Coordinator<B> {
             .prefill_final_at(&req.query, &past_k, &past_v, ctx_len, q_pos0)?;
         flops += self.flops.prefill_final(req.query.len(), ctx_len);
 
-        // 4. Dense decode cache = context + final block. (Pins are
-        // released by the caller once this returns — the context tensor
+        // 4. Decode context = context + final block, stored at the
+        // serving tier: the assembled prompt prefix is quantized once
+        // here (int8/int4) and decode attention reads the codes
+        // directly — no dense f32 decode cache is materialized. (Pins
+        // are released by the caller once this returns — the context
         // owns the data from here.)
         let cap_d = self.engine.decode_ctx_capacity()?;
         let total = ctx_len + req.query.len();
-        if total >= cap_d {
-            bail!("prompt of {total} tokens exceeds decode capacity {cap_d}");
-        }
-        let mut kc = self.engine.kv_zeros(cap_d);
-        let mut vc = self.engine.kv_zeros(cap_d);
-        copy_ctx_prefix(&mut kc, &past_k, ctx_len);
-        copy_ctx_prefix(&mut vc, &past_v, ctx_len);
-        write_ctx(&mut kc, &out.k, ctx_len);
-        write_ctx(&mut vc, &out.v, ctx_len);
+        let mut kp = self.engine.kv_zeros(total);
+        let mut vp = self.engine.kv_zeros(total);
+        copy_ctx_prefix(&mut kp, &past_k, ctx_len);
+        copy_ctx_prefix(&mut vp, &past_v, ctx_len);
+        write_ctx(&mut kp, &out.k, ctx_len);
+        write_ctx(&mut vp, &out.v, ctx_len);
+        let ctx = DecodeCtx::new(kp, vp, self.cache.precision(), cap_d)?;
 
         Ok(PrefillOutcome {
             last_logits: out.last_logits,
-            state: DecodeState { k_cache: kc, v_cache: vc, len: total },
+            state: DecodeState { ctx },
             flops_tft: flops,
             block_prefill_s,
             cached_blocks: plan.cached_count(),
@@ -421,13 +433,7 @@ impl<B: Backend> Coordinator<B> {
                 .ok_or_else(|| anyhow::anyhow!("prefill did not record logits"))?,
         );
         for &t in forced {
-            let dec = self
-                .engine
-                .decode(t, &state.k_cache, &state.v_cache, state.len)?;
-            state.k_cache = dec.k_cache;
-            state.v_cache = dec.v_cache;
-            state.len += 1;
-            out.push(dec.logits);
+            out.push(self.engine.decode_ctx(t, &mut state.ctx)?);
         }
         Ok(out)
     }
@@ -480,11 +486,11 @@ impl<B: Backend> Coordinator<B> {
     }
 }
 
-/// In-flight decode state of one request.
+/// In-flight decode state of one request: the decode context holds the
+/// prompt prefix at the serving tier plus the growing f32 tail of
+/// generated tokens (see [`DecodeCtx`]).
 pub struct DecodeState {
-    pub k_cache: TensorF,
-    pub v_cache: TensorF,
-    pub len: usize,
+    pub ctx: DecodeCtx,
 }
 
 struct PrefillOutcome {

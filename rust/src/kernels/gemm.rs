@@ -411,6 +411,116 @@ fn nn_i8_serial(
     }
 }
 
+// -- mixed precision: packed int4 operand, per-channel f32 scales ----------
+
+/// `out[m×p] += a[m×n] @ (unpack(b_q4[p×n]) ⊙ scale[n])ᵀ` — the QKᵀ
+/// contraction with a packed-int4 K operand (two codes per byte along
+/// the shared axis `n`, which must be even; `scale` has one entry per
+/// shared index). Unpack + dequant are per-element and order-free, so
+/// the reduction order matches [`gemm_nt_acc`] over a pre-dequantized
+/// operand — bitwise.
+pub fn gemm_nt_i4_acc(
+    a: &[f32],
+    b_q4: &[u8],
+    b_scale: &[f32],
+    m: usize,
+    n: usize,
+    p: usize,
+    out: &mut [f32],
+) {
+    assert!(n % 2 == 0, "int4 GEMM needs an even shared dim, got {n}");
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b_q4.len(), p * n / 2);
+    debug_assert_eq!(b_scale.len(), n);
+    debug_assert_eq!(out.len(), m * p);
+    if m * n * p >= PAR_MIN_VOLUME {
+        par_rows(out, p, min_rows_for(n * p), |r0, chunk| {
+            let rows = chunk.len() / p;
+            let a_rows = &a[r0 * n..(r0 + rows) * n];
+            nt_i4_serial(a_rows, b_q4, b_scale, rows, n, p, chunk);
+        });
+    } else {
+        nt_i4_serial(a, b_q4, b_scale, m, n, p, out);
+    }
+}
+
+fn nt_i4_serial(
+    a: &[f32],
+    b_q4: &[u8],
+    b_scale: &[f32],
+    m: usize,
+    n: usize,
+    p: usize,
+    out: &mut [f32],
+) {
+    let half = n / 2;
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        for (j, o) in out[i * p..(i + 1) * p].iter_mut().enumerate() {
+            let brow = &b_q4[j * half..(j + 1) * half];
+            // Single accumulator seeded from `out`, ascending shared
+            // index (each byte contributes its even then odd channel) —
+            // the same sequence as the f32 row-edge kernel.
+            let mut acc = *o;
+            for (q, &byte) in brow.iter().enumerate() {
+                let c = 2 * q;
+                acc += arow[c] * (super::quant::nibble_lo(byte) as f32 * b_scale[c]);
+                acc += arow[c + 1] * (super::quant::nibble_hi(byte) as f32 * b_scale[c + 1]);
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// `out[m×n] += a[m×k] @ (unpack(b_q4[k×n]) ⊙ scale[n])` — the AV
+/// contraction with a packed-int4 V operand (`n` even, two codes per
+/// byte along it; `scale` per output channel). Same fused per-element
+/// dequant and ascending-`k` in-place accumulation as the f32 saxpy
+/// loop it mirrors.
+pub fn gemm_nn_i4_acc(
+    a: &[f32],
+    b_q4: &[u8],
+    b_scale: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    assert!(n % 2 == 0, "int4 GEMM needs an even packed dim, got {n}");
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b_q4.len(), k * n / 2);
+    debug_assert_eq!(b_scale.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    if m * k * n >= PAR_MIN_VOLUME {
+        par_rows(out, n, min_rows_for(k * n), |r0, chunk| {
+            let rows = chunk.len() / n;
+            let a_rows = &a[r0 * k..(r0 + rows) * k];
+            nn_i4_serial(a_rows, b_q4, b_scale, rows, k, n, chunk);
+        });
+    } else {
+        nn_i4_serial(a, b_q4, b_scale, m, k, n, out);
+    }
+}
+
+fn nn_i4_serial(
+    a: &[f32],
+    b_q4: &[u8],
+    b_scale: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let half = n / 2;
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (pp, &av) in arow.iter().enumerate() {
+            super::rowops::axpy_i4(av, &b_q4[pp * half..(pp + 1) * half], b_scale, orow);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -562,6 +672,77 @@ mod tests {
             gemm_nt_i8_acc(&a, &btq, &bts, m, k, n, &mut got2);
             assert_eq!(got2, want2, "nt_i8 mismatch at {m}x{k}x{n}");
         }
+    }
+
+    /// The shipped 2-D int4 operand recipe (canonical owner in
+    /// `kernels::quant`).
+    fn quant_cols_i4(b: &[f32], rows: usize, n: usize) -> (Vec<u8>, Vec<f32>) {
+        crate::kernels::quant::quantize_cols_i4(b, rows, n)
+    }
+
+    /// Unpack + dequantize a packed operand back to f32 (test oracle;
+    /// canonical owner in `kernels::quant`).
+    fn dequant_cols_i4(packed: &[u8], scale: &[f32], n: usize) -> Vec<f32> {
+        crate::kernels::quant::dequantize_cols_i4(packed, scale, n)
+    }
+
+    #[test]
+    fn int4_gemms_match_dequantized_f32_bitwise() {
+        // The fused unpack+dequant must be invisible: int4 kernels ==
+        // f32 kernels over the pre-dequantized operand, bit for bit.
+        // Even shared/packed dims only (nibble pairing).
+        let mut rng = Rng::new(31);
+        for &(m, k, n) in &[(1usize, 2usize, 2usize), (3, 6, 8), (5, 18, 20), (17, 34, 10)] {
+            let a = randvec(&mut rng, m * k);
+            let b = randvec(&mut rng, k * n);
+            let seed = randvec(&mut rng, m * n);
+            // nn layout: b is k×n packed along n, scales per column n.
+            let (bq, bs) = quant_cols_i4(&b, k, n);
+            let deq = dequant_cols_i4(&bq, &bs, n);
+            let mut want = seed.clone();
+            gemm_nn_acc(&a, &deq, m, k, n, &mut want);
+            let mut got = seed.clone();
+            gemm_nn_i4_acc(&a, &bq, &bs, m, k, n, &mut got);
+            assert_eq!(got, want, "nn_i4 mismatch at {m}x{k}x{n}");
+            // nt layout: a is m×k, b is n×k (shared dim k), scales per k.
+            let bt = randvec(&mut rng, n * k);
+            let (btq, bts) = quant_cols_i4(&bt, n, k);
+            let deqt = dequant_cols_i4(&btq, &bts, k);
+            let seed2 = randvec(&mut rng, m * n);
+            let mut want2 = seed2.clone();
+            ref_nt(&a, &deqt, m, k, n, &mut want2);
+            let mut got2 = seed2.clone();
+            gemm_nt_i4_acc(&a, &btq, &bts, m, k, n, &mut got2);
+            assert_eq!(got2, want2, "nt_i4 mismatch at {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn int4_gemm_parallel_split_is_bitwise_identical() {
+        let _g = crate::kernels::TEST_THREADS_LOCK.lock().unwrap();
+        let prev = crate::kernels::num_threads();
+        let (m, k, n) = (128, 96, 128);
+        let mut rng = Rng::new(32);
+        let a = randvec(&mut rng, m * k);
+        let b = randvec(&mut rng, k * n);
+        let (bq, bs) = quant_cols_i4(&b, k, n);
+        set_threads(1);
+        let mut serial = vec![0.0f32; m * n];
+        gemm_nn_i4_acc(&a, &bq, &bs, m, k, n, &mut serial);
+        set_threads(8);
+        let mut parallel = vec![0.0f32; m * n];
+        gemm_nn_i4_acc(&a, &bq, &bs, m, k, n, &mut parallel);
+        let bt = randvec(&mut rng, n * k);
+        let (btq, bts) = quant_cols_i4(&bt, n, k);
+        set_threads(1);
+        let mut nt_s = vec![0.0f32; m * n];
+        gemm_nt_i4_acc(&a, &btq, &bts, m, k, n, &mut nt_s);
+        set_threads(8);
+        let mut nt_p = vec![0.0f32; m * n];
+        gemm_nt_i4_acc(&a, &btq, &bts, m, k, n, &mut nt_p);
+        set_threads(prev);
+        assert_eq!(serial, parallel, "nn_i4 differs across thread counts");
+        assert_eq!(nt_s, nt_p, "nt_i4 differs across thread counts");
     }
 
     #[test]

@@ -52,22 +52,30 @@
 //! state or which worker runs a chunk — so pool dispatch cannot
 //! perturb the contract.
 //!
-//! The int8 KV tier rides on the same contract: [`quant`] codes and
-//! dequantizes per element (no cross-element reduction), and the mixed
-//! int8×f32 GEMMs ([`gemm_nt_i8_acc`] / [`gemm_nn_i8_acc`]) fuse `q·s`
-//! into the inner loop without changing the accumulation sequence, so
-//! quantized serving is exactly as deterministic as f32 serving.
+//! The quantized KV tiers ride on the same contract: [`quant`] codes
+//! and dequantizes per element (no cross-element reduction), and the
+//! mixed low-bit×f32 GEMMs ([`gemm_nt_i8_acc`] / [`gemm_nn_i8_acc`] /
+//! [`gemm_nt_i4_acc`] / [`gemm_nn_i4_acc`], plus the [`dot_i8`] /
+//! [`dot_i4`] / [`axpy_i8`] / [`axpy_i4`] row primitives the decode
+//! attention is built from) fuse `q·s` — and, for int4, the nibble
+//! unpack — into the inner loop without changing the accumulation
+//! sequence, so quantized serving is exactly as deterministic as f32
+//! serving.
 
 pub mod gemm;
 pub mod parallel;
 pub mod quant;
 pub mod rowops;
 
-pub use gemm::{gemm_nn, gemm_nn_acc, gemm_nn_i8_acc, gemm_nt_acc, gemm_nt_i8_acc, gemm_tn_acc};
+pub use gemm::{
+    gemm_nn, gemm_nn_acc, gemm_nn_i4_acc, gemm_nn_i8_acc, gemm_nt_acc, gemm_nt_i4_acc,
+    gemm_nt_i8_acc, gemm_tn_acc,
+};
 pub use parallel::{effective_threads, par_map, par_rows, pool_stats};
-pub use quant::QuantizedKv;
+pub use quant::{QuantizedKv, QuantizedKv4};
 pub use rowops::{
-    axpy, axpy_i8, dot, dot_i8, rms_norm_rows, sigmoid, silu, softmax_inplace, swiglu_rows,
+    axpy, axpy_i4, axpy_i8, dot, dot_i4, dot_i8, rms_norm_rows, sigmoid, silu, softmax_inplace,
+    swiglu_rows,
 };
 
 use crate::util::cli::Args;

@@ -1,20 +1,34 @@
-//! Symmetric int8 quantization of block KV states.
+//! Symmetric low-bit quantization of block KV states (int8 and int4).
 //!
-//! The cache's int8 storage tier (see [`crate::kvcache`]) stores each
-//! block's K and V tensors as int8 codes plus f32 scales, one scale per
-//! **(layer, kv_head, channel)** — the reduction runs over the token
-//! axis, so a block of any length carries a fixed `layers·kv_heads·
-//! head_dim` scale table and the payload shrinks to ~¼ of f32.
+//! The cache's **int8** storage tier (see [`crate::kvcache`]) stores
+//! each block's K and V tensors as int8 codes plus f32 scales, one
+//! scale per **(layer, kv_head, channel)** — the reduction runs over
+//! the token axis, so a block of any length carries a fixed
+//! `layers·kv_heads·head_dim` scale table and the payload shrinks to
+//! ~¼ of f32.
+//!
+//! The **int4** tier ([`QuantizedKv4`]) packs two 4-bit codes per byte
+//! along the channel axis (head rows have even length, so pairs never
+//! straddle a head) and refines the scale granularity to **per
+//! (layer, kv_head, channel, token-group)** with groups of
+//! [`I4_GROUP`] = 32 tokens — the coarser 15-level code range needs the
+//! finer amax. Payload: ½ byte per element plus a scale table of
+//! `groups·layers·kv_heads·head_dim` f32 — ~⅛ of f32 for block-sized
+//! inputs (≤ 16% including scales once groups are mostly full).
 //!
 //! Determinism contract: quantization and dequantization are
 //! **per-element and order-free** — `q = round(x/s)` and `x̂ = q·s`
-//! touch one element at a time with no cross-element reduction — so the
-//! int8 tier inherits the kernels layer's bitwise-identical-at-every-
-//! thread-count guarantee unchanged. The fused dequantizing re-encode
-//! lives in [`crate::rope::RopeTable::reencode_block_dequant`]; the
-//! mixed int8×f32 GEMM micro-kernels live in [`super::gemm`].
+//! touch one element at a time with no cross-element reduction — so
+//! both tiers inherit the kernels layer's bitwise-identical-at-every-
+//! thread-count guarantee unchanged. The fused dequantizing re-encodes
+//! live in [`crate::rope::RopeTable::reencode_block_dequant`] /
+//! [`crate::rope::RopeTable::reencode_block_dequant_i4`]; the mixed
+//! low-bit×f32 GEMM micro-kernels live in [`super::gemm`].
 
 use crate::tensor::{Tensor, TensorF};
+
+/// Tokens per int4 scale group (the "group-wise" in group-wise scales).
+pub const I4_GROUP: usize = 32;
 
 /// Quantize one value against its channel scale (round half away from
 /// zero, saturating at ±127 so the code range is symmetric).
@@ -27,19 +41,47 @@ pub fn quantize_one(x: f32, scale: f32) -> i8 {
     }
 }
 
+/// Quantize one value to a 4-bit code in `[-7, 7]` (symmetric,
+/// zero-point-free — the −8 code is unused so the range mirrors).
+#[inline]
+pub fn quantize_one_i4(x: f32, scale: f32) -> i8 {
+    if scale <= 0.0 {
+        0
+    } else {
+        (x / scale).round().clamp(-7.0, 7.0) as i8
+    }
+}
+
 /// Dequantize one code.
 #[inline]
 pub fn dequant_one(q: i8, scale: f32) -> f32 {
     q as f32 * scale
 }
 
-/// Per-channel symmetric scales for a row-major `rows × n` operand:
-/// `scales[c] = amax over rows of |b[r][c]| / 127`. This is the single
-/// owner of the scale formula — [`QuantizedKv::quantize`] applies it
-/// per layer over the token axis, and the mixed int8×f32 GEMMs
-/// ([`super::gemm::gemm_nt_i8_acc`] / [`super::gemm::gemm_nn_i8_acc`])
-/// take their `b_scale` in exactly this layout.
-pub fn channel_scales(b: &[f32], rows: usize, n: usize) -> Vec<f32> {
+/// Pack two 4-bit codes into one byte: `lo` in the low nibble (even
+/// channel), `hi` in the high nibble (odd channel).
+#[inline]
+pub fn pack_nibbles(lo: i8, hi: i8) -> u8 {
+    ((lo as u8) & 0x0F) | (((hi as u8) & 0x0F) << 4)
+}
+
+/// Sign-extended low nibble of a packed byte (the even channel).
+#[inline]
+pub fn nibble_lo(b: u8) -> i8 {
+    ((b as i8) << 4) >> 4
+}
+
+/// Sign-extended high nibble of a packed byte (the odd channel).
+#[inline]
+pub fn nibble_hi(b: u8) -> i8 {
+    (b as i8) >> 4
+}
+
+/// Per-channel symmetric scales for a row-major `rows × n` operand with
+/// an arbitrary code range: `scales[c] = amax over rows of |b[r][c]| /
+/// qmax`. The single owner of the scale formula for both tiers
+/// (`qmax = 127` for int8, `7` for int4).
+pub fn channel_scales_for(b: &[f32], rows: usize, n: usize, qmax: f32) -> Vec<f32> {
     debug_assert_eq!(b.len(), rows * n);
     let mut scales = vec![0.0f32; n];
     for row in b.chunks(n) {
@@ -48,9 +90,55 @@ pub fn channel_scales(b: &[f32], rows: usize, n: usize) -> Vec<f32> {
         }
     }
     for s in scales.iter_mut() {
-        *s /= 127.0;
+        *s /= qmax;
     }
     scales
+}
+
+/// Per-channel int8 scales (`amax / 127`): [`QuantizedKv::quantize`]
+/// applies this per layer over the token axis, and the mixed int8×f32
+/// GEMMs ([`super::gemm::gemm_nt_i8_acc`] /
+/// [`super::gemm::gemm_nn_i8_acc`]) take their `b_scale` in exactly
+/// this layout.
+pub fn channel_scales(b: &[f32], rows: usize, n: usize) -> Vec<f32> {
+    channel_scales_for(b, rows, n, 127.0)
+}
+
+/// Quantize a row-major `rows × n` operand to packed int4 with one
+/// `amax / 7` scale per column (`n` must be even): exactly the
+/// `(b_q4, b_scale)` operand pair the mixed int4 GEMMs
+/// ([`super::gemm::gemm_nt_i4_acc`] / [`super::gemm::gemm_nn_i4_acc`])
+/// take — the single owner of the 2-D int4 recipe, so benches and
+/// parity tests exercise the shipped formula.
+pub fn quantize_cols_i4(b: &[f32], rows: usize, n: usize) -> (Vec<u8>, Vec<f32>) {
+    assert!(n % 2 == 0, "int4 packing needs an even column count, got {n}");
+    debug_assert_eq!(b.len(), rows * n);
+    let scales = channel_scales_for(b, rows, n, 7.0);
+    let mut packed = Vec::with_capacity(rows * n / 2);
+    for row in b.chunks(n) {
+        for cp in 0..n / 2 {
+            packed.push(pack_nibbles(
+                quantize_one_i4(row[2 * cp], scales[2 * cp]),
+                quantize_one_i4(row[2 * cp + 1], scales[2 * cp + 1]),
+            ));
+        }
+    }
+    (packed, scales)
+}
+
+/// Unpack + dequantize a [`quantize_cols_i4`] operand back to row-major
+/// f32 (byte `i` holds channels `2i` and `2i+1`; scale per column) —
+/// the reconstruction rule's single owner, used as the oracle by the
+/// GEMM parity tests and benches.
+pub fn dequantize_cols_i4(packed: &[u8], scales: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(n % 2, 0);
+    let mut out = Vec::with_capacity(packed.len() * 2);
+    for (i, &b) in packed.iter().enumerate() {
+        let c = (2 * i) % n;
+        out.push(dequant_one(nibble_lo(b), scales[c]));
+        out.push(dequant_one(nibble_hi(b), scales[c + 1]));
+    }
+    out
 }
 
 /// A `(layers, len, kv_heads, head_dim)` KV tensor stored as int8 codes
@@ -132,15 +220,138 @@ impl QuantizedKv {
     /// inline (the cache reads the fields, not this).
     pub fn sq_err_vs(&self, x: &TensorF) -> (f64, f64) {
         assert_eq!(x.dims(), &self.dims[..], "error reference shape mismatch");
-        let deq = self.dequantize();
-        let mut err = 0.0f64;
-        let mut refsq = 0.0f64;
-        for (&a, &b) in x.data().iter().zip(deq.data()) {
-            let e = (a - b) as f64;
-            err += e * e;
-            refsq += (a as f64) * (a as f64);
+        sq_err_between(x, &self.dequantize())
+    }
+}
+
+/// `(Σ(x − x̂)², Σx²)` between a source tensor and its reconstruction
+/// (ascending element order — shared by both tiers' test cross-checks).
+fn sq_err_between(x: &TensorF, deq: &TensorF) -> (f64, f64) {
+    let mut err = 0.0f64;
+    let mut refsq = 0.0f64;
+    for (&a, &b) in x.data().iter().zip(deq.data()) {
+        let e = (a - b) as f64;
+        err += e * e;
+        refsq += (a as f64) * (a as f64);
+    }
+    (err, refsq)
+}
+
+/// A `(layers, len, kv_heads, head_dim)` KV tensor stored as packed
+/// int4 codes (two per byte along the channel axis) with f32 scales per
+/// **(layer, token-group, kv_head, channel)**, groups of [`I4_GROUP`]
+/// tokens.
+#[derive(Debug, Clone)]
+pub struct QuantizedKv4 {
+    /// Packed codes, same element order as the source tensor: byte `i`
+    /// holds channels `2i` (low nibble) and `2i+1` (high nibble) of the
+    /// row-major element stream. Head rows have even length
+    /// (`head_dim` is even), so a byte never straddles a head.
+    pub packed: Vec<u8>,
+    /// `scales[((l·groups + g)·kv_heads + h)·head_dim + c]` =
+    /// amax over the tokens of group `g` / 7. The per-token scale row
+    /// of a (layer, token, head) is the contiguous `head_dim` slice at
+    /// `g = token / I4_GROUP`.
+    pub scales: Vec<f32>,
+    /// `[layers, len, kv_heads, head_dim]` of the source tensor.
+    pub dims: [usize; 4],
+    /// `Σ(x − x̂)²` accumulated while quantizing (ascending element
+    /// order), as in [`QuantizedKv`].
+    pub sq_err: f64,
+    /// `Σx²` of the source, same accumulation.
+    pub sq_ref: f64,
+}
+
+impl QuantizedKv4 {
+    /// Token groups along the length axis (`ceil(len / I4_GROUP)`).
+    pub fn groups(&self) -> usize {
+        self.dims[1].div_ceil(I4_GROUP)
+    }
+
+    /// Quantize a `(layers, len, kv_heads, head_dim)` tensor. Each
+    /// (layer, head, channel) takes one scale **per group of
+    /// [`I4_GROUP`] tokens** (amax over the group / 7) — finer than the
+    /// int8 tier's whole-token-axis reduction, which the 15-level code
+    /// range needs. `head_dim` must be even (nibble pairing).
+    pub fn quantize(x: &TensorF) -> QuantizedKv4 {
+        let d = x.dims();
+        assert_eq!(d.len(), 4, "expected (layers, len, kv_heads, head_dim), got {d:?}");
+        let (layers, len, heads, hd) = (d[0], d[1], d[2], d[3]);
+        assert!(hd % 2 == 0, "int4 packing needs an even head_dim, got {hd}");
+        let groups = len.div_ceil(I4_GROUP);
+        let row = heads * hd;
+
+        let mut scales = vec![0.0f32; layers * groups * row];
+        for l in 0..layers {
+            let layer = x.axis0(l);
+            for g in 0..groups {
+                let srow = &mut scales[(l * groups + g) * row..(l * groups + g + 1) * row];
+                for t in g * I4_GROUP..((g + 1) * I4_GROUP).min(len) {
+                    for (s, &v) in srow.iter_mut().zip(&layer[t * row..(t + 1) * row]) {
+                        *s = s.max(v.abs());
+                    }
+                }
+                for s in srow.iter_mut() {
+                    *s /= 7.0;
+                }
+            }
         }
-        (err, refsq)
+
+        let mut packed = Vec::with_capacity(layers * len * row / 2);
+        let (mut sq_err, mut sq_ref) = (0.0f64, 0.0f64);
+        for l in 0..layers {
+            let layer = x.axis0(l);
+            for t in 0..len {
+                let srow = &scales[(l * groups + t / I4_GROUP) * row..][..row];
+                let trow = &layer[t * row..(t + 1) * row];
+                for cp in 0..row / 2 {
+                    let (c0, c1) = (2 * cp, 2 * cp + 1);
+                    let q0 = quantize_one_i4(trow[c0], srow[c0]);
+                    let e0 = (trow[c0] - dequant_one(q0, srow[c0])) as f64;
+                    sq_err += e0 * e0;
+                    sq_ref += (trow[c0] as f64) * (trow[c0] as f64);
+                    let q1 = quantize_one_i4(trow[c1], srow[c1]);
+                    let e1 = (trow[c1] - dequant_one(q1, srow[c1])) as f64;
+                    sq_err += e1 * e1;
+                    sq_ref += (trow[c1] as f64) * (trow[c1] as f64);
+                    packed.push(pack_nibbles(q0, q1));
+                }
+            }
+        }
+        QuantizedKv4 { packed, scales, dims: [layers, len, heads, hd], sq_err, sq_ref }
+    }
+
+    /// Reconstruct the f32 tensor (`q·s` per element).
+    pub fn dequantize(&self) -> TensorF {
+        let [layers, len, heads, hd] = self.dims;
+        let groups = self.groups();
+        let row = heads * hd;
+        let mut out = Tensor::zeros(&self.dims);
+        let od = out.data_mut();
+        for l in 0..layers {
+            for t in 0..len {
+                let srow = &self.scales[(l * groups + t / I4_GROUP) * row..][..row];
+                let orow = &mut od[(l * len + t) * row..(l * len + t + 1) * row];
+                let brow = &self.packed[(l * len + t) * row / 2..][..row / 2];
+                for (cp, &b) in brow.iter().enumerate() {
+                    orow[2 * cp] = dequant_one(nibble_lo(b), srow[2 * cp]);
+                    orow[2 * cp + 1] = dequant_one(nibble_hi(b), srow[2 * cp + 1]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Stored bytes: half a byte per code plus four per scale.
+    pub fn size_bytes(&self) -> usize {
+        self.packed.len() + self.scales.len() * 4
+    }
+
+    /// Test-side recomputation of the inline error sums (see
+    /// [`QuantizedKv::sq_err_vs`]).
+    pub fn sq_err_vs(&self, x: &TensorF) -> (f64, f64) {
+        assert_eq!(x.dims(), &self.dims[..], "error reference shape mismatch");
+        sq_err_between(x, &self.dequantize())
     }
 }
 
@@ -240,5 +451,117 @@ mod tests {
         assert_eq!(quantize_one(0.5, 1.0), 1, "round half away from zero");
         assert_eq!(quantize_one(-0.5, 1.0), -1);
         assert_eq!(dequant_one(3, 0.5), 1.5);
+    }
+
+    #[test]
+    fn nibble_pack_roundtrips_all_codes() {
+        for lo in -8i8..8 {
+            for hi in -8i8..8 {
+                let b = pack_nibbles(lo, hi);
+                assert_eq!(nibble_lo(b), lo, "lo nibble of ({lo}, {hi})");
+                assert_eq!(nibble_hi(b), hi, "hi nibble of ({lo}, {hi})");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_one_i4_saturates_and_rounds() {
+        assert_eq!(quantize_one_i4(1.0, 0.0), 0, "zero scale must not divide");
+        assert_eq!(quantize_one_i4(f32::MAX, 1e-30), 7);
+        assert_eq!(quantize_one_i4(-f32::MAX, 1e-30), -7);
+        assert_eq!(quantize_one_i4(0.5, 1.0), 1, "round half away from zero");
+        assert_eq!(quantize_one_i4(-0.5, 1.0), -1);
+    }
+
+    #[test]
+    fn int4_roundtrip_error_is_bounded_by_group_amax() {
+        let mut rng = Rng::new(0x4B17);
+        // 67 tokens: three groups, the last partial.
+        let dims = [2usize, 67, 2, 8];
+        let x = random_kv(&mut rng, &dims);
+        let q = QuantizedKv4::quantize(&x);
+        assert_eq!(q.groups(), 3);
+        let deq = q.dequantize();
+        let (layers, len, heads, hd) = (dims[0], dims[1], dims[2], dims[3]);
+        let row = heads * hd;
+        for l in 0..layers {
+            for t in 0..len {
+                let srow = &q.scales[(l * q.groups() + t / I4_GROUP) * row..][..row];
+                for c in 0..row {
+                    let i = (l * len + t) * row + c;
+                    let e = (x.data()[i] - deq.data()[i]).abs();
+                    assert!(
+                        e <= 0.5001 * srow[c],
+                        "elem {i}: err {e} > scale/2 {}",
+                        srow[c]
+                    );
+                }
+            }
+        }
+        let (err, refsq) = q.sq_err_vs(&x);
+        assert!(err > 0.0 && refsq > 0.0);
+        // ~15-level codes with per-group amax: coarse but bounded.
+        assert!((err / refsq).sqrt() < 0.15, "relative error too large");
+        assert_eq!(q.sq_err, err, "inline error sum drifted from recomputation");
+        assert_eq!(q.sq_ref, refsq);
+    }
+
+    #[test]
+    fn int4_is_deterministic_and_under_one_eighth_plus_scales() {
+        let mut rng = Rng::new(0x44);
+        let dims = [2usize, 64, 1, 8];
+        let x = random_kv(&mut rng, &dims);
+        let a = QuantizedKv4::quantize(&x);
+        let b = QuantizedKv4::quantize(&x);
+        assert_eq!(a.packed, b.packed);
+        assert_eq!(a.scales, b.scales);
+        assert_eq!(a.packed.len() * 2, x.len(), "two codes per byte");
+        // 64 tokens = two full groups: ≤ 16% of the f32 bytes.
+        let f32_bytes = x.size_bytes();
+        assert!(
+            a.size_bytes() * 100 <= f32_bytes * 16,
+            "int4 {} vs f32 {f32_bytes}: over 16%",
+            a.size_bytes()
+        );
+    }
+
+    #[test]
+    fn int4_constant_channels_roundtrip_exactly() {
+        // A constant channel has group amax = |v|, so v quantizes to ±7
+        // and dequantizes back to exactly v.
+        let dims = [1usize, 4, 1, 4];
+        let x = Tensor::from_vec(&dims, vec![2.5f32; 16]);
+        let q = QuantizedKv4::quantize(&x);
+        assert!(q.packed.iter().all(|&b| nibble_lo(b) == 7 && nibble_hi(b) == 7));
+        assert_eq!(q.dequantize(), x);
+        assert_eq!(q.sq_err, 0.0);
+    }
+
+    #[test]
+    fn int4_group_scales_are_per_token_group() {
+        // One channel, two groups: tokens 0..32 hold amax 1, tokens
+        // 32..40 hold amax 10 — the second group's scale must not bleed
+        // into the first.
+        let len = 40usize;
+        let mut data = vec![0.0f32; len * 2];
+        for t in 0..len {
+            let v = if t < I4_GROUP { 1.0 } else { 10.0 };
+            data[t * 2] = v;
+            data[t * 2 + 1] = -v;
+        }
+        let x = Tensor::from_vec(&[1usize, len, 1, 2], data);
+        let q = QuantizedKv4::quantize(&x);
+        assert_eq!(q.groups(), 2);
+        assert_eq!(&q.scales[..2], &[1.0 / 7.0, 1.0 / 7.0]);
+        assert_eq!(&q.scales[2..], &[10.0 / 7.0, 10.0 / 7.0]);
+        // Both magnitudes are exact at their group's amax.
+        assert_eq!(q.dequantize(), x);
+    }
+
+    #[test]
+    fn channel_scales_for_generalizes_qmax() {
+        let b = [7.0f32, -14.0];
+        assert_eq!(channel_scales_for(&b, 1, 2, 7.0), vec![1.0, 2.0]);
+        assert_eq!(channel_scales(&b, 1, 2), vec![7.0 / 127.0, 14.0 / 127.0]);
     }
 }

@@ -53,6 +53,39 @@ pub fn axpy_i8(alpha: f32, q: &[i8], scale: &[f32], y: &mut [f32]) {
     }
 }
 
+/// Ascending-index dot product against a packed-int4 row (two codes per
+/// byte, channel-axis packing) with per-channel scales — the QKᵀ inner
+/// loop of the int4 decode-attention path. Each byte contributes its
+/// even channel then its odd channel, so the accumulation order is the
+/// plain ascending channel order of [`dot`]: the fused unpack+dequant
+/// is bitwise invisible.
+#[inline]
+pub fn dot_i4(a: &[f32], packed: &[u8], scale: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), packed.len() * 2);
+    debug_assert_eq!(a.len(), scale.len());
+    let mut s = 0.0f32;
+    for (i, &b) in packed.iter().enumerate() {
+        let c = 2 * i;
+        s += a[c] * (super::quant::nibble_lo(b) as f32 * scale[c]);
+        s += a[c + 1] * (super::quant::nibble_hi(b) as f32 * scale[c + 1]);
+    }
+    s
+}
+
+/// `y += alpha · (q·scale)` over a packed-int4 row (the AV inner loop
+/// of the int4 decode-attention path; per-channel scales, ascending
+/// channel order as in [`axpy`]).
+#[inline]
+pub fn axpy_i4(alpha: f32, packed: &[u8], scale: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(y.len(), packed.len() * 2);
+    debug_assert_eq!(y.len(), scale.len());
+    for (i, &b) in packed.iter().enumerate() {
+        let c = 2 * i;
+        y[c] += alpha * (super::quant::nibble_lo(b) as f32 * scale[c]);
+        y[c + 1] += alpha * (super::quant::nibble_hi(b) as f32 * scale[c + 1]);
+    }
+}
+
 /// Row-wise RMSNorm: `out[t] = x[t] * rstd[t] * w`; returns the
 /// reciprocal RMS per row (needed by the backward pass).
 pub fn rms_norm_rows(
@@ -166,6 +199,28 @@ mod tests {
         let mut y1 = [1.0f32, 2.0, 3.0, 4.0];
         let mut y2 = y1;
         axpy_i8(-0.75, &q, &scale, &mut y1);
+        axpy(-0.75, &deq, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn int4_dot_and_axpy_match_dequantized_f32() {
+        use crate::kernels::quant::{nibble_hi, nibble_lo, pack_nibbles};
+        let a = [0.5f32, -1.25, 2.0, 0.0];
+        let codes = [7i8, -7, 3, 0];
+        let packed = [pack_nibbles(codes[0], codes[1]), pack_nibbles(codes[2], codes[3])];
+        let scale = [0.1f32, 0.02, 0.5, 0.0];
+        let deq: Vec<f32> = (0..4)
+            .map(|c| {
+                let b = packed[c / 2];
+                let q = if c % 2 == 0 { nibble_lo(b) } else { nibble_hi(b) };
+                q as f32 * scale[c]
+            })
+            .collect();
+        assert_eq!(dot_i4(&a, &packed, &scale), dot(&a, &deq));
+        let mut y1 = [1.0f32, 2.0, 3.0, 4.0];
+        let mut y2 = y1;
+        axpy_i4(-0.75, &packed, &scale, &mut y1);
         axpy(-0.75, &deq, &mut y2);
         assert_eq!(y1, y2);
     }

@@ -24,15 +24,29 @@
 //!   byte cost to ~¼ — i.e. ~4× the blocks for the same budget. On use,
 //!   dequantization is **fused into the Eq.-3 re-encode**
 //!   ([`RopeTable::reencode_block_dequant`]): one pass reconstructs and
-//!   rotates the keys. Both quantize and dequantize are per-element and
-//!   order-free, so the int8 tier preserves the stack's bitwise
-//!   thread-count determinism; the accuracy contract (decode-logit
-//!   cosine ≥ 0.999 vs f32 on the workload traces) is pinned by
-//!   `tests/kv_quant.rs`. [`CacheStats`] reports the bytes saved and
-//!   the running relative quantization error.
+//!   rotates the keys.
+//! * **int4** — packed 4-bit codes (two per byte along the channel
+//!   axis) with group-wise scales per (layer, head, channel, 32-token
+//!   group) ([`crate::kernels::quant::QuantizedKv4`]): ~⅛ the bytes
+//!   (≤ 16% with scales) — ~8× the blocks per budget. Fetch fuses the
+//!   nibble unpack into the re-encode
+//!   ([`RopeTable::reencode_block_dequant_i4`]).
+//!
+//! Quantize and dequantize are per-element and order-free on every
+//! tier, so the stack's bitwise thread-count determinism is preserved;
+//! the accuracy contracts (decode-logit cosine vs f32 ≥ 0.999 for int8,
+//! ≥ 0.99 for int4, on the workload traces) are pinned by
+//! `tests/kv_quant.rs`. [`CacheStats`] reports the bytes saved (total
+//! and per tier) and the running relative quantization error.
+//!
+//! The tier is a property of the *entry*, not the cache:
+//! [`BlockKvCache::set_precision`] switches the precision for future
+//! inserts while resident entries keep serving at the tier they were
+//! stored at, so mixed-tier populations (precision changed between
+//! requests) coexist with exact per-tier byte accounting.
 
 use crate::config::KvPrecision;
-use crate::kernels::quant::QuantizedKv;
+use crate::kernels::quant::{QuantizedKv, QuantizedKv4};
 use crate::rope::RopeTable;
 use crate::tensor::{Tensor, TensorF};
 use std::collections::HashMap;
@@ -51,19 +65,33 @@ pub fn block_key(tokens: &[i32]) -> u128 {
     h
 }
 
-/// The stored KV payload of one block, at the cache's precision.
+/// The stored KV payload of one block, at the precision the cache had
+/// when the block was inserted.
 enum KvData {
     /// `(layers, len, kv_heads, head_dim)` keys at positions `0..len`.
     F32 { k_local: TensorF, v: TensorF },
     /// Int8 codes + per-(layer, head, channel) scales for K and V.
     Int8 { k: QuantizedKv, v: QuantizedKv },
+    /// Packed int4 codes + per-(layer, head, channel, token-group)
+    /// scales for K and V.
+    Int4 { k: QuantizedKv4, v: QuantizedKv4 },
+}
+
+impl KvData {
+    fn tier(&self) -> KvPrecision {
+        match self {
+            KvData::F32 { .. } => KvPrecision::F32,
+            KvData::Int8 { .. } => KvPrecision::Int8,
+            KvData::Int4 { .. } => KvPrecision::Int4,
+        }
+    }
 }
 
 /// One cached block: KV states at local positions.
 struct Entry {
     data: KvData,
     len: usize,
-    /// Bytes actually held (codes + scales for the int8 tier).
+    /// Bytes actually held (codes + scales for the quantized tiers).
     bytes: usize,
     /// What the same block would cost at f32 (for bytes-saved stats).
     bytes_f32: usize,
@@ -77,15 +105,21 @@ struct Entry {
 pub struct CacheStats {
     pub entries: usize,
     pub bytes: usize,
-    /// Bytes the int8 tier saves for the *currently resident* entries
-    /// vs storing them at f32 (0 on the f32 tier).
+    /// Bytes the quantized tiers save for the *currently resident*
+    /// entries vs storing them at f32 (0 when everything resident is
+    /// f32); always `bytes_saved_int8 + bytes_saved_int4`.
     pub bytes_saved: usize,
+    /// Bytes saved by the resident int8 entries alone.
+    pub bytes_saved_int8: usize,
+    /// Bytes saved by the resident int4 entries alone.
+    pub bytes_saved_int4: usize,
     pub hits: u64,
     pub misses: u64,
     pub insertions: u64,
     pub evictions: u64,
-    /// Running sums over every int8 insertion: squared reconstruction
-    /// error and squared reference magnitude (see [`Self::quant_rel_err`]).
+    /// Running sums over every quantized (int8 or int4) insertion:
+    /// squared reconstruction error and squared reference magnitude
+    /// (see [`Self::quant_rel_err`]).
     pub quant_err_sq: f64,
     pub quant_ref_sq: f64,
 }
@@ -104,10 +138,11 @@ impl CacheStats {
         }
     }
 
-    /// Relative quantization error of the int8 tier,
-    /// `sqrt(Σ‖x − x̂‖² / Σ‖x‖²)` over all int8 insertions. 0.0 when
-    /// nothing was quantized (f32 tier, or an empty cache) — like
-    /// [`Self::hit_rate`], this must stay finite for the stats JSON.
+    /// Relative quantization error of the quantized tiers,
+    /// `sqrt(Σ‖x − x̂‖² / Σ‖x‖²)` over all int8 and int4 insertions.
+    /// 0.0 when nothing was quantized (f32 tier, or an empty cache) —
+    /// like [`Self::hit_rate`], this must stay finite for the stats
+    /// JSON.
     pub fn quant_rel_err(&self) -> f64 {
         if self.quant_ref_sq <= 0.0 {
             0.0
@@ -157,15 +192,32 @@ impl BlockKvCache {
         self.precision
     }
 
+    /// Change the storage precision for **future** inserts. Resident
+    /// entries keep the tier they were stored at (their codes cannot be
+    /// retroactively re-quantized without the source f32 states), so a
+    /// precision change mid-run yields a mixed-tier population — which
+    /// the per-entry byte accounting and [`CacheStats`] per-tier fields
+    /// handle exactly.
+    pub fn set_precision(&mut self, precision: KvPrecision) {
+        self.precision = precision;
+    }
+
     pub fn stats(&self) -> CacheStats {
         let mut s = self.stats.clone();
         s.entries = self.map.len();
-        s.bytes = self.map.values().map(|e| e.bytes).sum();
-        s.bytes_saved = self
-            .map
-            .values()
-            .map(|e| e.bytes_f32.saturating_sub(e.bytes))
-            .sum();
+        // Byte totals are derived from the resident entries, not the
+        // running counters.
+        (s.bytes, s.bytes_saved_int8, s.bytes_saved_int4) = (0, 0, 0);
+        for e in self.map.values() {
+            s.bytes += e.bytes;
+            let saved = e.bytes_f32.saturating_sub(e.bytes);
+            match e.data.tier() {
+                KvPrecision::F32 => {}
+                KvPrecision::Int8 => s.bytes_saved_int8 += saved,
+                KvPrecision::Int4 => s.bytes_saved_int4 += saved,
+            }
+        }
+        s.bytes_saved = s.bytes_saved_int8 + s.bytes_saved_int4;
         s
     }
 
@@ -216,11 +268,11 @@ impl BlockKvCache {
 
     /// Insert a block computed by `prefill_block` (keys at local
     /// positions). The entry starts pinned (the inserting request is
-    /// about to use it). On the int8 tier the block is quantized here —
-    /// every later use (including by the inserting request itself) reads
-    /// the quantized states, so cold and warm servings of a block are
-    /// identical by construction. Evicts LRU unpinned entries to honor
-    /// the budget.
+    /// about to use it). On the quantized tiers the block is quantized
+    /// here — every later use (including by the inserting request
+    /// itself) reads the quantized states, so cold and warm servings of
+    /// a block are identical by construction. Evicts LRU unpinned
+    /// entries to honor the budget.
     pub fn insert_pinned(&mut self, key: u128, k_local: TensorF, v: TensorF) {
         let len = k_local.dims()[1];
         let bytes_f32 = k_local.size_bytes() + v.size_bytes();
@@ -235,10 +287,18 @@ impl BlockKvCache {
                 self.stats.quant_ref_sq += kq.sq_ref + vq.sq_ref;
                 KvData::Int8 { k: kq, v: vq }
             }
+            KvPrecision::Int4 => {
+                let kq = QuantizedKv4::quantize(&k_local);
+                let vq = QuantizedKv4::quantize(&v);
+                self.stats.quant_err_sq += kq.sq_err + vq.sq_err;
+                self.stats.quant_ref_sq += kq.sq_ref + vq.sq_ref;
+                KvData::Int4 { k: kq, v: vq }
+            }
         };
         let bytes = match &data {
             KvData::F32 { .. } => bytes_f32,
             KvData::Int8 { k, v } => k.size_bytes() + v.size_bytes(),
+            KvData::Int4 { k, v } => k.size_bytes() + v.size_bytes(),
         };
         let t = self.tick();
         self.map.insert(
@@ -260,9 +320,10 @@ impl BlockKvCache {
 
     /// Fetch a pinned block with its keys re-encoded to absolute offset
     /// `delta` (paper Eq. 3). `delta = 0` returns the cached keys as-is.
-    /// On the int8 tier dequantization is fused into the re-encode: one
-    /// pass reconstructs and rotates the keys
-    /// ([`RopeTable::reencode_block_dequant`]).
+    /// On the quantized tiers dequantization (and for int4 the nibble
+    /// unpack) is fused into the re-encode: one pass reconstructs and
+    /// rotates the keys ([`RopeTable::reencode_block_dequant`] /
+    /// [`RopeTable::reencode_block_dequant_i4`]).
     pub fn get_reencoded(&self, key: u128, delta: usize) -> Option<ReencodedBlock> {
         let e = self.map.get(&key)?;
         match &e.data {
@@ -283,6 +344,20 @@ impl BlockKvCache {
                 let mut kf: TensorF = Tensor::zeros(&dims);
                 self.rope.reencode_block_dequant(
                     &k.q,
+                    &k.scales,
+                    dims[0],
+                    dims[1],
+                    dims[2],
+                    delta as i64,
+                    kf.data_mut(),
+                );
+                Some(ReencodedBlock { k: kf, v: v.dequantize(), len: e.len })
+            }
+            KvData::Int4 { k, v } => {
+                let dims = k.dims;
+                let mut kf: TensorF = Tensor::zeros(&dims);
+                self.rope.reencode_block_dequant_i4(
+                    &k.packed,
                     &k.scales,
                     dims[0],
                     dims[1],
@@ -572,6 +647,151 @@ mod tests {
         }
         c8.unpin(key);
         cf.unpin(key);
+    }
+
+    /// The int4 tier: ≤ 16% of the f32 bytes per block (codes are ⅛,
+    /// plus the group-wise scale table), finite error, and a fetch path
+    /// bitwise identical to dequantize-then-f32-re-encode.
+    #[test]
+    fn int4_tier_shrinks_bytes_and_reencodes_bitwise() {
+        let mut rng = Rng::new(0x14);
+        let mut c4 = BlockKvCache::with_precision(rope(), 0, crate::config::KvPrecision::Int4);
+        assert_eq!(c4.precision(), crate::config::KvPrecision::Int4);
+        let key = block_key(&[43]);
+        let (k, v) = kv_rand(&mut rng, 64);
+        let f32_bytes = k.size_bytes() + v.size_bytes();
+        c4.insert_pinned(key, k.clone(), v.clone());
+        let s = c4.stats();
+        assert!(
+            s.bytes * 100 <= f32_bytes * 16,
+            "int4 block {} bytes > 16% of f32 {f32_bytes}",
+            s.bytes
+        );
+        assert_eq!(s.bytes_saved, f32_bytes - s.bytes);
+        assert_eq!(s.bytes_saved_int4, s.bytes_saved, "saving must be attributed to int4");
+        assert_eq!(s.bytes_saved_int8, 0);
+        let rel = s.quant_rel_err();
+        assert!(rel > 0.0 && rel < 0.15, "relative error {rel} out of range");
+
+        // Reconstruction error is bounded per element (scale/2 with
+        // per-group amax over ~2.5σ of N(0,1) data).
+        let b0 = c4.get_reencoded(key, 0).unwrap();
+        assert!(b0.k.max_abs_diff(&k) < 0.35);
+        assert!(b0.v.max_abs_diff(&v) < 0.35);
+
+        // Fused unpack+dequant+re-encode == storing the dequantized
+        // states in an f32 cache and re-encoding there, bit for bit.
+        let mut cf = BlockKvCache::new(rope(), 0);
+        cf.insert_pinned(key, b0.k.clone(), b0.v.clone());
+        for delta in [0usize, 7, 1000] {
+            let a = c4.get_reencoded(key, delta).unwrap();
+            let b = cf.get_reencoded(key, delta).unwrap();
+            assert_eq!(a.k, b.k, "fused int4 re-encode differs at delta={delta}");
+            assert_eq!(a.v, b.v);
+            assert_eq!(a.len, 64);
+        }
+        c4.unpin(key);
+        cf.unpin(key);
+    }
+
+    /// Mixed-tier coexistence: precision changed between inserts leaves
+    /// earlier entries at their original tier, with exact per-tier byte
+    /// accounting and LRU eviction order that ignores tiers.
+    #[test]
+    fn mixed_tier_population_accounts_and_evicts_correctly() {
+        let mut rng = Rng::new(0x3711);
+        let mut c = BlockKvCache::new(rope(), 0);
+        let (kf, vf) = kv_rand(&mut rng, 32);
+        let f32_bytes = kf.size_bytes() + vf.size_bytes();
+        let (key_f, key_8, key_4) = (block_key(&[1]), block_key(&[2]), block_key(&[3]));
+
+        c.insert_pinned(key_f, kf.clone(), vf.clone());
+        assert_eq!(c.stats().quant_rel_err(), 0.0, "f32 insert must not record error");
+        c.set_precision(crate::config::KvPrecision::Int8);
+        assert_eq!(c.precision(), crate::config::KvPrecision::Int8);
+        let (k8, v8) = kv_rand(&mut rng, 32);
+        c.insert_pinned(key_8, k8, v8);
+        c.set_precision(crate::config::KvPrecision::Int4);
+        let (k4, v4) = kv_rand(&mut rng, 32);
+        c.insert_pinned(key_4, k4, v4);
+
+        let s = c.stats();
+        assert_eq!(s.entries, 3);
+        // Per-tier savings: the f32 entry saves nothing, the int8 entry
+        // ~75%, the int4 entry ~85% — and the totals must reconcile.
+        assert!(s.bytes_saved_int8 * 10 >= f32_bytes * 7, "int8 saving too small");
+        assert!(s.bytes_saved_int4 > s.bytes_saved_int8, "int4 must save more than int8");
+        assert_eq!(s.bytes_saved, s.bytes_saved_int8 + s.bytes_saved_int4);
+        assert_eq!(s.bytes + s.bytes_saved, 3 * f32_bytes, "bytes + saved == f32 total");
+        let rel = s.quant_rel_err();
+        assert!(rel > 0.0 && rel < 0.15, "mixed-tier relative error {rel}");
+
+        // Every tier still serves (the f32 entry stayed f32: lossless).
+        let bf = c.get_reencoded(key_f, 5).unwrap();
+        let mut kf_want = kf.clone();
+        {
+            let d = kf_want.dims().to_vec();
+            rope().reencode_block(kf_want.data_mut(), d[0], d[1], d[2], 5);
+        }
+        assert_eq!(bf.k, kf_want, "resident f32 entry must stay bit-lossless");
+        assert!(c.get_reencoded(key_8, 5).is_some());
+        assert!(c.get_reencoded(key_4, 5).is_some());
+
+        // Eviction order is LRU across tiers, not per tier: unpin all,
+        // touch the f32 entry, then shrink the budget so only the two
+        // most-recent survive — the *int8* entry (oldest untouched) goes.
+        c.unpin(key_f);
+        c.unpin(key_8);
+        c.unpin(key_4);
+        assert!(c.lookup_pin(key_f));
+        c.unpin(key_f);
+        c.byte_budget = c.stats().bytes - 1; // force exactly one eviction
+        c.enforce_budget();
+        assert!(!c.contains(key_8), "LRU (int8) entry must evict first");
+        assert!(c.contains(key_f) && c.contains(key_4));
+        let s2 = c.stats();
+        assert_eq!(s2.evictions, 1);
+        // Per-tier stats track the eviction: no int8 savings remain.
+        assert_eq!(s2.bytes_saved_int8, 0);
+        assert!(s2.bytes_saved_int4 > 0);
+    }
+
+    /// The oversized-insert and pinned-LRU edges hold on the quantized
+    /// tiers exactly as on f32 (sizes just shrink).
+    #[test]
+    fn quantized_tiers_keep_eviction_edges() {
+        for prec in [crate::config::KvPrecision::Int8, crate::config::KvPrecision::Int4] {
+            let mut rng = Rng::new(0xE3);
+            // Budget below one quantized block: the pinned insert must
+            // stay usable and go at unpin.
+            let (k, v) = kv_rand(&mut rng, 32);
+            let mut c = BlockKvCache::with_precision(rope(), 64, prec);
+            let big = block_key(&[9]);
+            c.insert_pinned(big, k.clone(), v.clone());
+            assert!(c.contains(big), "{prec:?}: pinned oversize entry must be usable");
+            assert!(c.get_reencoded(big, 3).is_some());
+            c.unpin(big);
+            assert!(!c.contains(big), "{prec:?}: oversize entry must go at unpin");
+            assert_eq!(c.stats().evictions, 1);
+
+            // Pinned-LRU skip: oldest pinned survives, next-oldest goes.
+            let one_block = {
+                let mut probe = BlockKvCache::with_precision(rope(), 0, prec);
+                probe.insert_pinned(big, k.clone(), v.clone());
+                probe.stats().bytes
+            };
+            let mut c = BlockKvCache::with_precision(rope(), 2 * one_block, prec);
+            let (k1, k2, k3) = (block_key(&[1]), block_key(&[2]), block_key(&[3]));
+            c.insert_pinned(k1, k.clone(), v.clone()); // oldest, stays pinned
+            c.insert_pinned(k2, k.clone(), v.clone());
+            c.unpin(k2);
+            c.insert_pinned(k3, k.clone(), v.clone());
+            assert!(c.contains(k1), "{prec:?}: pinned LRU entry was evicted");
+            assert!(!c.contains(k2), "{prec:?}: unpinned next-LRU entry survived");
+            assert!(c.contains(k3));
+            c.unpin(k1);
+            c.unpin(k3);
+        }
     }
 
     #[test]

@@ -72,25 +72,46 @@
 //! queue-depth high-water) surface in the server stats endpoint and
 //! the bench reports via [`kernels::pool_stats`].
 //!
-//! ## Quantized KV tier
+//! ## Quantized KV tiers
 //!
-//! The block-KV cache stores at a configurable precision
-//! ([`config::KvPrecision`], `--kv-quant f32|int8` /
-//! `$BLOCK_ATTN_KV_QUANT`). The int8 tier quantizes each block at
-//! insert time — symmetric int8 codes with per-(layer, head, channel)
-//! f32 scales ([`kernels::quant`]) — cutting the per-block byte cost to
-//! ~¼ (≈4× the cached blocks per byte budget), and fuses dequantization
-//! into the Eq.-3 RoPE re-encode on fetch
-//! ([`rope::RopeTable::reencode_block_dequant`]); mixed int8×f32 GEMM
-//! micro-kernels ([`kernels::gemm_nt_i8_acc`] / [`kernels::gemm_nn_i8_acc`])
-//! cover attention-side fusion. Accuracy contract: decode-logit cosine
-//! similarity vs the f32 tier ≥ 0.999 on the workload traces
-//! (`tests/kv_quant.rs`). Because quantize/dequantize are per-element
-//! and order-free, the int8 tier keeps serving bitwise identical at
-//! every thread count; CI runs a third tier-1 leg with
-//! `BLOCK_ATTN_KV_QUANT=int8` so both precisions stay green. Cache
-//! stats report `bytes_saved` and the running relative quantization
-//! error.
+//! The block-KV cache **and the decode-path context** store at a
+//! configurable precision ([`config::KvPrecision`],
+//! `--kv-quant f32|int8|int4` / `$BLOCK_ATTN_KV_QUANT`):
+//!
+//! | tier | codes | scales | bytes/block | blocks per budget | accuracy contract |
+//! |------|-------|--------|-------------|-------------------|-------------------|
+//! | `f32`  | — | — | 100% | 1× | bit-lossless reuse |
+//! | `int8` | 1 B/elem | per (layer, head, channel) | ~27% | ~4× | decode-logit cosine ≥ 0.999 vs f32 |
+//! | `int4` | ½ B/elem, packed pairs | per (layer, head, channel, 32-token group) | ≤ 16% | ~8× | decode-logit cosine ≥ 0.99 vs f32 |
+//!
+//! Pick `f32` when bit-exact reuse matters more than capacity, `int8`
+//! as the default capacity tier (TurboRAG-style: more resident passage
+//! blocks ⇒ more hits ⇒ lower TTFT), and `int4` when the corpus is far
+//! larger than memory and the relaxed 0.99 cosine bound is acceptable.
+//!
+//! Blocks are quantized once at cache insert ([`kernels::quant`]);
+//! fetch fuses dequantization (and the int4 nibble unpack) into the
+//! Eq.-3 RoPE re-encode ([`rope::RopeTable::reencode_block_dequant`] /
+//! [`rope::RopeTable::reencode_block_dequant_i4`]).
+//!
+//! **Decode-path data flow** (the f32-dense assumption is gone): after
+//! the final-block prefill, the assembled context + query KV is stored
+//! once at tier precision as the static prefix of a
+//! [`runtime::DecodeCtx`]; generated tokens append to a small growing
+//! f32 tail. Each decode step's attention reads the prefix **codes**
+//! directly through the fused mixed-precision kernels
+//! ([`kernels::dot_i8`] / [`kernels::dot_i4`] and their `axpy` twins —
+//! the same inner loops as the [`kernels::gemm_nt_i8_acc`] /
+//! [`kernels::gemm_nt_i4_acc`] micro-kernel family), so no dense f32
+//! copy of the context exists between fetch and attention — and the
+//! old capacity-sized cache clone per decode step is gone with it.
+//!
+//! Because quantize/dequantize are per-element and order-free and the
+//! fused kernels keep the ascending accumulation order, every tier
+//! keeps serving bitwise identical at every thread count; CI runs
+//! tier-1 legs with `BLOCK_ATTN_KV_QUANT=int8` and `=int4` so all
+//! precisions stay green. Cache stats report `bytes_saved` (total and
+//! per tier) and the running relative quantization error.
 //!
 //! Layering (python never on the request path):
 //! - **L1** `python/compile/kernels/` — Pallas attention + RoPE kernels.
@@ -149,7 +170,7 @@ pub fn run_cli(args: &util::cli::Args) -> anyhow::Result<()> {
             eprintln!("  common: --backend native|xla   (default native; xla needs --features xla)");
             eprintln!("          --model tiny|small|bench [--checkpoint FILE]");
             eprintln!("          --threads N            (kernel threads; or $BLOCK_ATTN_THREADS)");
-            eprintln!("          --kv-quant f32|int8    (KV cache tier; or $BLOCK_ATTN_KV_QUANT)");
+            eprintln!("          --kv-quant f32|int8|int4  (KV cache tier; or $BLOCK_ATTN_KV_QUANT)");
             eprintln!("  info   [--artifacts DIR]");
             eprintln!("  train  --preset table1 --out DIR [--scale 1.0]");
             eprintln!("  serve  --addr 127.0.0.1:7841 [--workers 4] [--cache-mb 256]");

@@ -161,6 +161,63 @@ impl RopeTable {
             }
         }
     }
+
+    /// Fused unpack + dequantize + re-encode for the **packed int4**
+    /// layout ([`crate::kernels::quant::QuantizedKv4`]): `packed` holds
+    /// two 4-bit key codes per byte in `(layers, L, kv_heads,
+    /// head_dim)` row-major element order, and `scales` one f32 per
+    /// (layer, token-group, kv_head, channel) with groups of
+    /// [`crate::kernels::quant::I4_GROUP`] tokens. The reconstructed
+    /// keys, rotated by `delta`, are written to `out`.
+    ///
+    /// Like [`Self::reencode_block_dequant`], the unpack and `q·s` are
+    /// per-element and the rotation applies the exact operation
+    /// sequence of [`Self::reencode_block`], so the fused path is
+    /// **bitwise identical** to dequantizing first and re-encoding
+    /// second.
+    pub fn reencode_block_dequant_i4(
+        &self,
+        packed: &[u8],
+        scales: &[f32],
+        layers: usize,
+        seq_len: usize,
+        kv_heads: usize,
+        delta: i64,
+        out: &mut [f32],
+    ) {
+        use crate::kernels::quant::{nibble_hi, nibble_lo, I4_GROUP};
+        let d = self.head_dim;
+        let groups = seq_len.div_ceil(I4_GROUP);
+        assert!(d % 2 == 0, "int4 packing needs an even head_dim");
+        assert_eq!(packed.len() * 2, layers * seq_len * kv_heads * d);
+        assert_eq!(scales.len(), layers * groups * kv_heads * d);
+        assert_eq!(out.len(), packed.len() * 2);
+        let half = d / 2;
+        let (cos, sin) = self.angles(delta);
+        for l in 0..layers {
+            for t in 0..seq_len {
+                let g = t / I4_GROUP;
+                for h in 0..kv_heads {
+                    let off = ((l * seq_len + t) * kv_heads + h) * d;
+                    let srow = &scales[((l * groups + g) * kv_heads + h) * d..][..d];
+                    let brow = &packed[off / 2..off / 2 + half];
+                    let x = &mut out[off..off + d];
+                    for (cp, &b) in brow.iter().enumerate() {
+                        x[2 * cp] = nibble_lo(b) as f32 * srow[2 * cp];
+                        x[2 * cp + 1] = nibble_hi(b) as f32 * srow[2 * cp + 1];
+                    }
+                    if delta != 0 {
+                        for j in 0..half {
+                            let a = x[j];
+                            let b = x[j + half];
+                            x[j] = a * cos[j] - b * sin[j];
+                            x[j + half] = a * sin[j] + b * cos[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -295,6 +352,32 @@ mod tests {
             let mut got = vec![0.0f32; kq.q.len()];
             table.reencode_block_dequant(&kq.q, &kq.scales, layers, seq, heads, delta, &mut got);
             assert_eq!(got, want.data(), "fused path differs at delta={delta}");
+        }
+    }
+
+    /// The int4 tier's fused unpack+dequant+re-encode must be bitwise
+    /// identical to dequantizing first and re-encoding second — per
+    /// element the same nibble unpack and `q·s`, then the same rotation
+    /// sequence. 37 tokens ⇒ a partial second scale group.
+    #[test]
+    fn fused_dequant_reencode_i4_matches_two_step_bitwise() {
+        use crate::kernels::quant::QuantizedKv4;
+        use crate::tensor::Tensor;
+        let (layers, seq, heads, d) = (2usize, 37, 2, 16);
+        let table = RopeTable::new(d, 10000.0);
+        let mut rng = Rng::new(0x0D4);
+        let raw = random_keys(&mut rng, layers * seq * heads * d);
+        let kq = QuantizedKv4::quantize(&Tensor::from_vec(&[layers, seq, heads, d], raw));
+        for &delta in &[0i64, 1, 37, 4096] {
+            // Two-step: dequantize, then the f32 re-encode.
+            let mut want = kq.dequantize();
+            table.reencode_block(want.data_mut(), layers, seq, heads, delta);
+            // Fused.
+            let mut got = vec![0.0f32; kq.packed.len() * 2];
+            table.reencode_block_dequant_i4(
+                &kq.packed, &kq.scales, layers, seq, heads, delta, &mut got,
+            );
+            assert_eq!(got, want.data(), "fused int4 path differs at delta={delta}");
         }
     }
 

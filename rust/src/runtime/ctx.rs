@@ -1,0 +1,344 @@
+//! [`DecodeCtx`] — the decode-path KV context at tier precision.
+//!
+//! Before this type existed, the coordinator materialized a **dense
+//! f32 cache at full decode capacity** right after prefill: every
+//! cached block was dequantized into it, every decode step cloned it,
+//! and attention always ran over f32 — so on the quantized tiers the
+//! bytes saved in the block cache were spent right back on the decode
+//! path, and attention never actually read quantized data.
+//!
+//! [`DecodeCtx`] splits the decode-time KV into two parts:
+//!
+//! * **prefix** — the assembled prompt context (re-encoded cached
+//!   blocks + the final query block), *static* for the life of the
+//!   request. It is stored at the serving tier ([`CtxKv`]): f32
+//!   verbatim, or re-quantized int8 / packed int4 straight from the
+//!   assembly pass. Decode attention reads the codes directly through
+//!   the mixed-precision row kernels ([`crate::kernels::dot_i8`] /
+//!   [`crate::kernels::dot_i4`] / the `axpy` twins — the same inner
+//!   loops as the `gemm_*_i8/i4` micro-kernels), so the capacity win
+//!   holds end to end.
+//! * **tail** — the tokens generated so far, appended one per decode
+//!   step, kept in f32 (they are written once and read every step;
+//!   quantizing a growing tensor would re-scale history every token
+//!   and break step-to-step determinism). The tail grows geometrically
+//!   up to `capacity − prefix_len`, so a request never allocates the
+//!   full decode capacity it does not use.
+//!
+//! Because quantization is per-element and order-free and the fused
+//! kernels accumulate in the exact ascending order of their f32
+//! counterparts, a [`crate::runtime::Backend::decode_ctx`] step over a
+//! quantized prefix is bitwise identical to dequantizing the prefix and
+//! decoding over f32 — at every thread count. That is what keeps the
+//! quantized decode path inside the stack's determinism contract
+//! (pinned by `tests/kv_quant.rs` and the fused-vs-dense tests in
+//! `runtime::native`).
+
+use crate::config::KvPrecision;
+use crate::kernels::quant::{QuantizedKv, QuantizedKv4};
+use crate::tensor::{Tensor, TensorF};
+use anyhow::{ensure, Result};
+
+/// Initial tail capacity (tokens); grows by doubling.
+const TAIL_INITIAL: usize = 32;
+
+/// The static prompt prefix of a [`DecodeCtx`], at tier precision.
+pub enum CtxKv {
+    /// Full-precision prefix (the f32 tier; bit-lossless).
+    F32 { k: TensorF, v: TensorF },
+    /// Int8 codes with per-(layer, head, channel) scales.
+    Int8 { k: QuantizedKv, v: QuantizedKv },
+    /// Packed int4 codes with per-(layer, head, channel, token-group)
+    /// scales.
+    Int4 { k: QuantizedKv4, v: QuantizedKv4 },
+}
+
+/// In-flight decode KV of one request: a tier-precision static prefix
+/// plus a growing f32 tail (see the module docs).
+pub struct DecodeCtx {
+    pub(crate) prefix: CtxKv,
+    prefix_len: usize,
+    /// `(layers, tail_capacity, kv_heads, head_dim)`; rows
+    /// `0..tail_len` are valid.
+    pub(crate) k_tail: TensorF,
+    pub(crate) v_tail: TensorF,
+    tail_len: usize,
+    /// Max total tokens (prefix + tail) this context may hold.
+    capacity: usize,
+    layers: usize,
+    kv_heads: usize,
+    head_dim: usize,
+}
+
+impl DecodeCtx {
+    /// Build a decode context from the assembled prompt KV
+    /// (`(layers, prefix_len, kv_heads, head_dim)`, exact length, keys
+    /// already at absolute positions), storing the prefix at
+    /// `precision`. `capacity` bounds the total tokens (prefix plus
+    /// generated tail); the prefix must leave room for at least one
+    /// generated token.
+    pub fn new(
+        k: TensorF,
+        v: TensorF,
+        precision: KvPrecision,
+        capacity: usize,
+    ) -> Result<DecodeCtx> {
+        let d = k.dims().to_vec();
+        ensure!(
+            d.len() == 4 && v.dims() == &d[..],
+            "decode context KV dims {:?}/{:?} must match (layers, len, kv_heads, head_dim)",
+            k.dims(),
+            v.dims()
+        );
+        let (layers, prefix_len, kv_heads, head_dim) = (d[0], d[1], d[2], d[3]);
+        ensure!(
+            prefix_len < capacity,
+            "prompt of {prefix_len} tokens exceeds decode capacity {capacity}"
+        );
+        let prefix = match precision {
+            KvPrecision::F32 => CtxKv::F32 { k, v },
+            KvPrecision::Int8 => CtxKv::Int8 {
+                k: QuantizedKv::quantize(&k),
+                v: QuantizedKv::quantize(&v),
+            },
+            KvPrecision::Int4 => CtxKv::Int4 {
+                k: QuantizedKv4::quantize(&k),
+                v: QuantizedKv4::quantize(&v),
+            },
+        };
+        let tail_cap = TAIL_INITIAL.min(capacity - prefix_len);
+        Ok(DecodeCtx {
+            prefix,
+            prefix_len,
+            k_tail: Tensor::zeros(&[layers, tail_cap, kv_heads, head_dim]),
+            v_tail: Tensor::zeros(&[layers, tail_cap, kv_heads, head_dim]),
+            tail_len: 0,
+            capacity,
+            layers,
+            kv_heads,
+            head_dim,
+        })
+    }
+
+    /// Storage tier of the prefix.
+    pub fn precision(&self) -> KvPrecision {
+        match self.prefix {
+            CtxKv::F32 { .. } => KvPrecision::F32,
+            CtxKv::Int8 { .. } => KvPrecision::Int8,
+            CtxKv::Int4 { .. } => KvPrecision::Int4,
+        }
+    }
+
+    /// Total valid tokens (prefix + generated tail).
+    pub fn len(&self) -> usize {
+        self.prefix_len + self.tail_len
+    }
+
+    /// A decode context always holds at least the prompt prefix.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn prefix_len(&self) -> usize {
+        self.prefix_len
+    }
+
+    pub fn tail_len(&self) -> usize {
+        self.tail_len
+    }
+
+    /// Max total tokens this context may hold.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// `(layers, kv_heads, head_dim)` of the KV states.
+    pub fn kv_dims(&self) -> (usize, usize, usize) {
+        (self.layers, self.kv_heads, self.head_dim)
+    }
+
+    /// Bytes held by the prefix (codes + scales on the quantized
+    /// tiers) — the decode-path counterpart of the cache's per-block
+    /// accounting.
+    pub fn prefix_bytes(&self) -> usize {
+        match &self.prefix {
+            CtxKv::F32 { k, v } => k.size_bytes() + v.size_bytes(),
+            CtxKv::Int8 { k, v } => k.size_bytes() + v.size_bytes(),
+            CtxKv::Int4 { k, v } => k.size_bytes() + v.size_bytes(),
+        }
+    }
+
+    /// Ensure the tail can absorb one more token, growing geometrically
+    /// up to `capacity − prefix_len`. Errors when the context is full —
+    /// the decode-capacity guard every backend relies on.
+    pub(crate) fn reserve_one(&mut self) -> Result<()> {
+        ensure!(
+            self.len() < self.capacity,
+            "decode context full: {} tokens at capacity {}",
+            self.len(),
+            self.capacity
+        );
+        let tail_cap = self.k_tail.dims()[1];
+        if self.tail_len < tail_cap {
+            return Ok(());
+        }
+        let new_cap = (tail_cap * 2).max(TAIL_INITIAL).min(self.capacity - self.prefix_len);
+        let mut k = Tensor::zeros(&[self.layers, new_cap, self.kv_heads, self.head_dim]);
+        let mut v = Tensor::zeros(&[self.layers, new_cap, self.kv_heads, self.head_dim]);
+        let row = self.kv_heads * self.head_dim;
+        for l in 0..self.layers {
+            k.axis0_mut(l)[..self.tail_len * row]
+                .copy_from_slice(&self.k_tail.axis0(l)[..self.tail_len * row]);
+            v.axis0_mut(l)[..self.tail_len * row]
+                .copy_from_slice(&self.v_tail.axis0(l)[..self.tail_len * row]);
+        }
+        self.k_tail = k;
+        self.v_tail = v;
+        Ok(())
+    }
+
+    /// Commit the tail row written at `tail_len` (backends call this
+    /// after filling the row for every layer).
+    pub(crate) fn advance_tail(&mut self) {
+        debug_assert!(self.tail_len < self.k_tail.dims()[1], "advance past tail capacity");
+        self.tail_len += 1;
+    }
+
+    /// Materialize a dense f32 cache of token capacity `cap`
+    /// (dequantized prefix + tail, zero-padded) — the compatibility
+    /// bridge for backends without a fused quantized decode path (the
+    /// default [`crate::runtime::Backend::decode_ctx`] and the bucketed
+    /// AOT engine).
+    pub fn to_dense(&self, cap: usize) -> Result<(TensorF, TensorF)> {
+        ensure!(
+            self.len() <= cap,
+            "decode context of {} tokens exceeds dense capacity {cap}",
+            self.len()
+        );
+        let mut kc: TensorF = Tensor::zeros(&[self.layers, cap, self.kv_heads, self.head_dim]);
+        let mut vc: TensorF = Tensor::zeros(&[self.layers, cap, self.kv_heads, self.head_dim]);
+        let row = self.kv_heads * self.head_dim;
+        let (pk, pv) = match &self.prefix {
+            CtxKv::F32 { k, v } => (k.clone(), v.clone()),
+            CtxKv::Int8 { k, v } => (k.dequantize(), v.dequantize()),
+            CtxKv::Int4 { k, v } => (k.dequantize(), v.dequantize()),
+        };
+        for l in 0..self.layers {
+            let kd = kc.axis0_mut(l);
+            kd[..self.prefix_len * row].copy_from_slice(pk.axis0(l));
+            kd[self.prefix_len * row..self.len() * row]
+                .copy_from_slice(&self.k_tail.axis0(l)[..self.tail_len * row]);
+            let vd = vc.axis0_mut(l);
+            vd[..self.prefix_len * row].copy_from_slice(pv.axis0(l));
+            vd[self.prefix_len * row..self.len() * row]
+                .copy_from_slice(&self.v_tail.axis0(l)[..self.tail_len * row]);
+        }
+        Ok((kc, vc))
+    }
+
+    /// Append the token row at index `at` of a dense `(layers, C,
+    /// kv_heads, head_dim)` cache pair to the tail — how the default
+    /// dense-decode bridge feeds a step's new KV back into the context.
+    pub fn push_row_from_dense(&mut self, k_cache: &TensorF, v_cache: &TensorF) -> Result<()> {
+        let at = self.len();
+        self.reserve_one()?;
+        for cache in [k_cache, v_cache] {
+            ensure!(
+                cache.dims().len() == 4 && cache.dims()[1] > at,
+                "dense cache of {:?} has no row {at}",
+                cache.dims()
+            );
+        }
+        let row = self.kv_heads * self.head_dim;
+        for l in 0..self.layers {
+            let dst = self.tail_len * row..(self.tail_len + 1) * row;
+            self.k_tail.axis0_mut(l)[dst.clone()]
+                .copy_from_slice(&k_cache.axis0(l)[at * row..(at + 1) * row]);
+            self.v_tail.axis0_mut(l)[dst]
+                .copy_from_slice(&v_cache.axis0(l)[at * row..(at + 1) * row]);
+        }
+        self.advance_tail();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_kv(rng: &mut Rng, len: usize) -> (TensorF, TensorF) {
+        let dims = [2usize, len, 1, 8];
+        let n: usize = dims.iter().product();
+        let mk = |rng: &mut Rng| {
+            Tensor::from_vec(&dims, (0..n).map(|_| rng.normal() as f32).collect())
+        };
+        (mk(rng), mk(rng))
+    }
+
+    #[test]
+    fn f32_prefix_is_lossless_and_tail_grows() {
+        let mut rng = Rng::new(1);
+        let (k, v) = rand_kv(&mut rng, 5);
+        let mut ctx = DecodeCtx::new(k.clone(), v.clone(), KvPrecision::F32, 200).unwrap();
+        assert_eq!(ctx.precision(), KvPrecision::F32);
+        assert_eq!((ctx.len(), ctx.prefix_len(), ctx.tail_len()), (5, 5, 0));
+        assert!(!ctx.is_empty());
+        assert_eq!(ctx.kv_dims(), (2, 1, 8));
+        // Push rows beyond the initial tail capacity to force growth.
+        let (kc, vc) = ctx.to_dense(200).unwrap();
+        assert_eq!(kc.dims(), &[2, 200, 1, 8]);
+        for i in 0..40 {
+            let (kstep, vstep) = rand_kv(&mut rng, ctx.len() + 1);
+            ctx.push_row_from_dense(&kstep, &vstep).unwrap();
+            assert_eq!(ctx.len(), 6 + i);
+        }
+        // The f32 prefix round-trips bitwise through to_dense.
+        let (kd, _) = ctx.to_dense(200).unwrap();
+        let row = 8;
+        for l in 0..2 {
+            assert_eq!(&kd.axis0(l)[..5 * row], &k.axis0(l)[..]);
+        }
+    }
+
+    #[test]
+    fn quantized_prefix_to_dense_equals_dequantize() {
+        let mut rng = Rng::new(2);
+        let (k, v) = rand_kv(&mut rng, 37);
+        for prec in [KvPrecision::Int8, KvPrecision::Int4] {
+            let ctx = DecodeCtx::new(k.clone(), v.clone(), prec, 64).unwrap();
+            assert_eq!(ctx.precision(), prec);
+            assert!(
+                ctx.prefix_bytes() * 10 < (k.size_bytes() + v.size_bytes()) * 4,
+                "{prec:?} prefix must be well under 40% of f32"
+            );
+            let (kd, vd) = ctx.to_dense(40).unwrap();
+            let (want_k, want_v) = match &ctx.prefix {
+                CtxKv::Int8 { k, v } => (k.dequantize(), v.dequantize()),
+                CtxKv::Int4 { k, v } => (k.dequantize(), v.dequantize()),
+                CtxKv::F32 { .. } => unreachable!(),
+            };
+            let row = 8;
+            for l in 0..2 {
+                assert_eq!(&kd.axis0(l)[..37 * row], want_k.axis0(l));
+                assert_eq!(&vd.axis0(l)[..37 * row], want_v.axis0(l));
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_guards_fail_loudly() {
+        let mut rng = Rng::new(3);
+        let (k, v) = rand_kv(&mut rng, 8);
+        // Prefix must leave decode room.
+        assert!(DecodeCtx::new(k.clone(), v.clone(), KvPrecision::F32, 8).is_err());
+        let mut ctx = DecodeCtx::new(k.clone(), v.clone(), KvPrecision::F32, 10).unwrap();
+        let (kstep, vstep) = rand_kv(&mut rng, 10);
+        ctx.push_row_from_dense(&kstep, &vstep).unwrap();
+        ctx.push_row_from_dense(&kstep, &vstep).unwrap();
+        assert_eq!(ctx.len(), 10);
+        let err = ctx.push_row_from_dense(&kstep, &vstep);
+        assert!(err.is_err(), "pushing past capacity must error");
+        assert!(ctx.to_dense(9).is_err(), "dense cap below len must error");
+    }
+}

@@ -22,6 +22,7 @@
 //! Select at runtime with `--backend native|xla` (see
 //! [`backend_from_args`]).
 
+pub mod ctx;
 pub mod native;
 mod native_train;
 mod params;
@@ -35,6 +36,7 @@ mod literal;
 pub use engine::ModelEngine;
 #[cfg(feature = "xla")]
 pub use literal::{literal_to_f32, literal_to_i32, tensor_f, tensor_i};
+pub use ctx::{CtxKv, DecodeCtx};
 pub use native::NativeBackend;
 pub use params::{read_flat_params, write_flat_params};
 
@@ -151,6 +153,25 @@ pub trait Backend {
         cache_len: usize,
     ) -> Result<DecodeOut>;
 
+    /// One decode step over a [`DecodeCtx`] — the serving decode path.
+    /// Appends the token's KV to the context's f32 tail and returns the
+    /// logits; on the quantized tiers attention must read the prefix
+    /// codes (see [`NativeBackend`]'s fused implementation).
+    ///
+    /// The default bridges to [`Self::decode`] by materializing a dense
+    /// f32 cache at [`Self::decode_ctx_capacity`] — correct for any
+    /// backend (bitwise identical to the fused path, because
+    /// dequantization is per-element), but it re-dequantizes the prefix
+    /// every step; backends with a native quantized path should
+    /// override.
+    fn decode_ctx(&self, token: i32, ctx: &mut DecodeCtx) -> Result<Vec<f32>> {
+        let cap = self.decode_ctx_capacity()?;
+        let (kc, vc) = ctx.to_dense(cap)?;
+        let out = self.decode(token, &kc, &vc, ctx.len())?;
+        ctx.push_row_from_dense(&out.k_cache, &out.v_cache)?;
+        Ok(out.logits)
+    }
+
     /// One block-fine-tune step (paper §2.4). `seg` carries the
     /// Figure-1 segment ids (uniform ids = full-attention mode),
     /// `loss_mask` marks target tokens. Updates the backend's
@@ -260,6 +281,10 @@ impl Backend for Box<dyn Backend> {
         cache_len: usize,
     ) -> Result<DecodeOut> {
         (**self).decode(token, k_cache, v_cache, cache_len)
+    }
+
+    fn decode_ctx(&self, token: i32, ctx: &mut DecodeCtx) -> Result<Vec<f32>> {
+        (**self).decode_ctx(token, ctx)
     }
 
     fn train_step(

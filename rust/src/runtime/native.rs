@@ -29,20 +29,29 @@
 //! worker; with fewer blocks than budgeted threads each block inherits
 //! an even share of the budget for its inner kernels.
 //!
-//! The int8 KV cache tier sits entirely *outside* this backend: blocks
-//! are quantized at cache insert and reconstructed to f32 (fused with
-//! the Eq.-3 re-encode) before `prefill_final_at`/`decode` see them, so
-//! the forward pass here is precision-agnostic. Because quantize and
-//! dequantize are per-element and order-free, the bitwise
-//! thread-determinism invariant above holds unchanged under
-//! `--kv-quant int8` — pinned by `tests/kv_quant.rs`.
+//! The quantized KV tiers intersect this backend in exactly one place:
+//! [`Backend::decode_ctx`]. The *prefill* side stays precision-agnostic
+//! (blocks are quantized at cache insert and reconstructed to f32,
+//! fused with the Eq.-3 re-encode, before `prefill_final_at` sees
+//! them), but the *decode* side attends directly over the quantized
+//! assembled context ([`DecodeCtx`]): the per-head attention inner
+//! loops read int8 codes / packed int4 nibbles through
+//! [`crate::kernels::dot_i8`] / [`crate::kernels::dot_i4`] (and the
+//! `axpy` twins for V) — the same fused-dequant kernels the mixed
+//! low-bit GEMMs are built from — so no dense f32 copy of the context
+//! ever exists on the decode path. Because quantize and dequantize are
+//! per-element and order-free and the fused kernels keep the ascending
+//! accumulation order, the bitwise thread-determinism invariant above
+//! holds unchanged under `--kv-quant int8|int4` — pinned by
+//! `tests/kv_quant.rs` and the fused-vs-dense parity tests below.
 
 use super::native_train;
-use super::{Backend, DecodeOut, PrefillFinalOut, PrefillFullOut, TrainOut};
+use super::{Backend, CtxKv, DecodeCtx, DecodeOut, PrefillFinalOut, PrefillFullOut, TrainOut};
 use crate::config::{ModelConfig, ParamSpec};
+use crate::kernels::quant::I4_GROUP;
 use crate::kernels::{
-    axpy, dot, gemm_nn, gemm_nn_acc, gemm_nt_acc, par_map, par_rows, rms_norm_rows,
-    softmax_inplace, swiglu_rows,
+    axpy, axpy_i4, axpy_i8, dot, dot_i4, dot_i8, gemm_nn, gemm_nn_acc, gemm_nt_acc, par_map,
+    par_rows, rms_norm_rows, softmax_inplace, swiglu_rows,
 };
 use crate::rope::RopeTable;
 use crate::tensor::{Tensor, TensorF, TensorI};
@@ -568,6 +577,170 @@ impl Backend for NativeBackend {
         Ok(DecodeOut { logits, k_cache: k_out, v_cache: v_out })
     }
 
+    /// Fused quantized decode — the serving decode path. The context
+    /// prefix is read **at its stored tier**: per head, the QKᵀ scores
+    /// over the prefix run through [`dot`] / [`dot_i8`] / [`dot_i4`]
+    /// and the AV accumulation through the matching `axpy` kernel, all
+    /// in ascending token order (prefix first, then the f32 tail), so
+    /// the step is bitwise identical to materializing the dequantized
+    /// prefix and decoding over dense f32 — at every thread count. The
+    /// token's new KV lands in the context's tail in place: no
+    /// capacity-sized cache is allocated or cloned per step.
+    fn decode_ctx(&self, token: i32, ctx: &mut DecodeCtx) -> Result<Vec<f32>> {
+        check_tokens(&self.cfg, &[token])?;
+        let cfg = &self.cfg;
+        let (dm, nh, kvh, hd, ff) = (cfg.d_model, cfg.heads, cfg.kv_heads, cfg.head_dim, cfg.d_ff);
+        let rep = nh / kvh;
+        let scale = 1.0 / (hd as f32).sqrt();
+        ensure!(
+            ctx.kv_dims() == (cfg.layers, kvh, hd),
+            "decode context dims {:?} do not match model (layers={}, kv_heads={}, head_dim={})",
+            ctx.kv_dims(),
+            cfg.layers,
+            kvh,
+            hd
+        );
+        ctx.reserve_one()?;
+        let len = ctx.len();
+        let plen = ctx.prefix_len();
+        let tlen = ctx.tail_len();
+        // Token groups of the int4 prefix scale table.
+        let groups = plen.div_ceil(I4_GROUP);
+
+        let params = self.params.borrow();
+        let w = Weights::split(&params);
+
+        let mut x = vec![0.0f32; dm];
+        x.copy_from_slice(&w.embed[token as usize * dm..(token as usize + 1) * dm]);
+        let mut h1 = vec![0.0f32; dm];
+        let mut rstd = [0.0f32; 1];
+        let mut q = vec![0.0f32; nh * hd];
+        let mut kb = vec![0.0f32; kvh * hd];
+        let mut vb = vec![0.0f32; kvh * hd];
+        let mut o = vec![0.0f32; nh * hd];
+        let mut mg = vec![0.0f32; ff];
+        let mut mu = vec![0.0f32; ff];
+        let pos = len as i64;
+
+        // Same per-head dispatch floor as the dense `decode`.
+        let head_cost = (len + 1) * hd * 2;
+        let head_min_rows = ((1 << 15) / head_cost.max(1)).max(1);
+
+        for n in 0..cfg.layers {
+            let lw = w.layer(n);
+            rms_norm_rows(&x, lw.ln1, cfg.norm_eps, 1, dm, &mut h1, &mut rstd);
+            gemm_nn(&h1, lw.wq, 1, dm, nh * hd, &mut q);
+            gemm_nn(&h1, lw.wk, 1, dm, kvh * hd, &mut kb);
+            gemm_nn(&h1, lw.wv, 1, dm, kvh * hd, &mut vb);
+            for h in 0..nh {
+                self.rope.rotate_head(&mut q[h * hd..(h + 1) * hd], pos);
+            }
+            for h in 0..kvh {
+                self.rope.rotate_head(&mut kb[h * hd..(h + 1) * hd], pos);
+            }
+            {
+                let kl = ctx.k_tail.axis0_mut(n);
+                kl[tlen * kvh * hd..(tlen + 1) * kvh * hd].copy_from_slice(&kb);
+                let vl = ctx.v_tail.axis0_mut(n);
+                vl[tlen * kvh * hd..(tlen + 1) * kvh * hd].copy_from_slice(&vb);
+            }
+            let kt = ctx.k_tail.axis0(n);
+            let vt = ctx.v_tail.axis0(n);
+            let prefix = &ctx.prefix;
+            let q_r = &q;
+            par_rows(&mut o, hd, head_min_rows, |h0, chunk| {
+                let mut scores = vec![0.0f32; len + 1];
+                for (hi, ov) in chunk.chunks_mut(hd).enumerate() {
+                    let h = h0 + hi;
+                    let kh = h / rep;
+                    let qv = &q_r[h * hd..(h + 1) * hd];
+                    // Prefix keys at tier precision, ascending token
+                    // order; dequantization fuses into the dot kernel.
+                    match prefix {
+                        CtxKv::F32 { k, .. } => {
+                            let kl = k.axis0(n);
+                            for (j, s) in scores.iter_mut().take(plen).enumerate() {
+                                *s = dot(qv, &kl[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd])
+                                    * scale;
+                            }
+                        }
+                        CtxKv::Int8 { k, .. } => {
+                            let srow = &k.scales[(n * kvh + kh) * hd..(n * kvh + kh + 1) * hd];
+                            for (j, s) in scores.iter_mut().take(plen).enumerate() {
+                                let off = ((n * plen + j) * kvh + kh) * hd;
+                                *s = dot_i8(qv, &k.q[off..off + hd], srow) * scale;
+                            }
+                        }
+                        CtxKv::Int4 { k, .. } => {
+                            for (j, s) in scores.iter_mut().take(plen).enumerate() {
+                                let at = ((n * groups + j / I4_GROUP) * kvh + kh) * hd;
+                                let srow = &k.scales[at..at + hd];
+                                let off = ((n * plen + j) * kvh + kh) * (hd / 2);
+                                *s = dot_i4(qv, &k.packed[off..off + hd / 2], srow) * scale;
+                            }
+                        }
+                    }
+                    // Generated tail (f32), including the just-appended
+                    // token.
+                    for j in 0..=tlen {
+                        scores[plen + j] =
+                            dot(qv, &kt[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd]) * scale;
+                    }
+                    softmax_inplace(&mut scores);
+                    ov.fill(0.0);
+                    match prefix {
+                        CtxKv::F32 { v, .. } => {
+                            let vl = v.axis0(n);
+                            for j in 0..plen {
+                                axpy(
+                                    scores[j],
+                                    &vl[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd],
+                                    ov,
+                                );
+                            }
+                        }
+                        CtxKv::Int8 { v, .. } => {
+                            let srow = &v.scales[(n * kvh + kh) * hd..(n * kvh + kh + 1) * hd];
+                            for j in 0..plen {
+                                let off = ((n * plen + j) * kvh + kh) * hd;
+                                axpy_i8(scores[j], &v.q[off..off + hd], srow, ov);
+                            }
+                        }
+                        CtxKv::Int4 { v, .. } => {
+                            for j in 0..plen {
+                                let at = ((n * groups + j / I4_GROUP) * kvh + kh) * hd;
+                                let srow = &v.scales[at..at + hd];
+                                let off = ((n * plen + j) * kvh + kh) * (hd / 2);
+                                axpy_i4(scores[j], &v.packed[off..off + hd / 2], srow, ov);
+                            }
+                        }
+                    }
+                    for j in 0..=tlen {
+                        axpy(
+                            scores[plen + j],
+                            &vt[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd],
+                            ov,
+                        );
+                    }
+                }
+            });
+            gemm_nn_acc(&o, lw.wo, 1, nh * hd, dm, &mut x);
+
+            rms_norm_rows(&x, lw.ln2, cfg.norm_eps, 1, dm, &mut h1, &mut rstd);
+            gemm_nn(&h1, lw.wg, 1, dm, ff, &mut mg);
+            gemm_nn(&h1, lw.wu, 1, dm, ff, &mut mu);
+            swiglu_rows(&mut mg, &mu);
+            gemm_nn_acc(&mg, lw.wd, 1, ff, dm, &mut x);
+        }
+
+        let mut hf = vec![0.0f32; dm];
+        rms_norm_rows(&x, w.final_norm, cfg.norm_eps, 1, dm, &mut hf, &mut rstd);
+        let mut logits = vec![0.0f32; cfg.vocab];
+        gemm_nt_acc(&hf, w.embed, 1, dm, cfg.vocab, &mut logits);
+        ctx.advance_tail();
+        Ok(logits)
+    }
+
     fn train_step(
         &self,
         step: usize,
@@ -737,6 +910,86 @@ mod tests {
         assert_eq!(out.logits, out2.logits);
         // Capacity guard.
         assert!(b.decode(4, &kc, &vc, 10).is_err());
+    }
+
+    /// The fused quantized decode must be **bitwise** equal to the
+    /// dense bridge (the default `Backend::decode_ctx` body:
+    /// dequantize-materialize, dense `decode`, feed the row back) at
+    /// every tier — the property that lets the serving stack route
+    /// decode attention over codes without renegotiating any numeric
+    /// contract. The quantized tiers must also actually differ from
+    /// f32 (they are lossy; a pass-through would fake the parity).
+    #[test]
+    fn decode_ctx_fused_matches_dense_bridge_bitwise() {
+        use crate::config::KvPrecision;
+        let b = backend();
+        let pre = b.prefill_full(&[1, 2, 3, 4, 5]).unwrap();
+        let cap = b.decode_ctx_capacity().unwrap();
+        let mut first_logits: Vec<Vec<f32>> = Vec::new();
+        for prec in [KvPrecision::F32, KvPrecision::Int8, KvPrecision::Int4] {
+            let mut fused = DecodeCtx::new(pre.k.clone(), pre.v.clone(), prec, cap).unwrap();
+            let mut dense = DecodeCtx::new(pre.k.clone(), pre.v.clone(), prec, cap).unwrap();
+            assert_eq!(fused.precision(), prec);
+            let mut tok = 6i32;
+            for step in 0..6 {
+                let lf = b.decode_ctx(tok, &mut fused).unwrap();
+                let (kc, vc) = dense.to_dense(cap).unwrap();
+                let out = b.decode(tok, &kc, &vc, dense.len()).unwrap();
+                dense.push_row_from_dense(&out.k_cache, &out.v_cache).unwrap();
+                assert_eq!(
+                    lf, out.logits,
+                    "{prec:?} fused decode differs from the dense bridge at step {step}"
+                );
+                if step == 0 {
+                    first_logits.push(lf.clone());
+                }
+                tok = crate::tensor::argmax(&lf) as i32;
+            }
+            assert_eq!(fused.len(), dense.len());
+            assert_eq!(fused.len(), 5 + 6);
+        }
+        assert_ne!(first_logits[0], first_logits[1], "int8 tier must be lossy vs f32");
+        assert_ne!(first_logits[0], first_logits[2], "int4 tier must be lossy vs f32");
+        assert_ne!(first_logits[1], first_logits[2], "int4 must differ from int8");
+    }
+
+    /// The f32-tier `decode_ctx` reproduces the legacy dense `decode`
+    /// loop bit for bit — the refactor that removed the
+    /// capacity-sized clone-per-step must be numerically invisible.
+    #[test]
+    fn decode_ctx_f32_matches_legacy_dense_decode() {
+        use crate::config::KvPrecision;
+        let b = backend();
+        let toks = [1, 2, 3, 4, 5, 6, 7];
+        let pre = b.prefill_full(&toks).unwrap();
+        let cap = 24;
+        // Legacy path: dense cache at fixed capacity, cloned per step.
+        let mut kc = b.kv_zeros(cap);
+        let mut vc = b.kv_zeros(cap);
+        let row = 8;
+        for n in 0..2 {
+            kc.axis0_mut(n)[..toks.len() * row].copy_from_slice(pre.k.axis0(n));
+            vc.axis0_mut(n)[..toks.len() * row].copy_from_slice(pre.v.axis0(n));
+        }
+        let mut legacy = Vec::new();
+        let mut len = toks.len();
+        let mut tok = 8i32;
+        for _ in 0..5 {
+            let out = b.decode(tok, &kc, &vc, len).unwrap();
+            kc = out.k_cache;
+            vc = out.v_cache;
+            len += 1;
+            tok = crate::tensor::argmax(&out.logits) as i32;
+            legacy.push(out.logits);
+        }
+        // DecodeCtx path.
+        let mut ctx = DecodeCtx::new(pre.k.clone(), pre.v.clone(), KvPrecision::F32, cap).unwrap();
+        let mut tok = 8i32;
+        for want in &legacy {
+            let logits = b.decode_ctx(tok, &mut ctx).unwrap();
+            assert_eq!(&logits, want, "f32 decode_ctx drifted from the legacy decode");
+            tok = crate::tensor::argmax(&logits) as i32;
+        }
     }
 
     #[test]

@@ -136,6 +136,8 @@ impl EngineHandle {
                                 ("cache_entries", Json::num(s.entries as f64)),
                                 ("cache_bytes", Json::num(s.bytes as f64)),
                                 ("cache_bytes_saved", Json::num(s.bytes_saved as f64)),
+                                ("cache_bytes_saved_int8", Json::num(s.bytes_saved_int8 as f64)),
+                                ("cache_bytes_saved_int4", Json::num(s.bytes_saved_int4 as f64)),
                                 ("cache_hits", Json::num(s.hits as f64)),
                                 ("cache_misses", Json::num(s.misses as f64)),
                                 ("cache_evictions", Json::num(s.evictions as f64)),

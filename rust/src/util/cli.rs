@@ -90,7 +90,8 @@ impl Args {
         self.get("threads").and_then(|v| v.parse().ok()).filter(|&n| n > 0)
     }
 
-    /// `--kv-quant f32|int8` (block-KV cache storage precision).
+    /// `--kv-quant f32|int8|int4` (block-KV cache + decode-context
+    /// storage precision).
     /// Returns the raw value; parsing/validation lives in
     /// `config::KvPrecision::resolve`, which also applies the
     /// `BLOCK_ATTN_KV_QUANT` env fallback.

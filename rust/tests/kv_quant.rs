@@ -1,14 +1,19 @@
-//! The int8 KV tier's three contracts, end to end on the hermetic
-//! [`NativeBackend`]:
+//! The quantized KV tiers' three contracts, end to end on the hermetic
+//! [`NativeBackend`] — now with decode-path attention running **over
+//! the quantized assembled context** (the decode prefix is stored at
+//! tier precision and read through the fused mixed-precision kernels,
+//! not dequantized into a dense f32 cache):
 //!
-//! 1. **Accuracy** — teacher-forced decode logits under `--kv-quant
-//!    int8` stay within cosine similarity ≥ 0.999 of the f32 tier on
-//!    the workload traces (the paper's passage-reuse streams).
-//! 2. **Capacity** — a cached block costs ≤ 30% of its f32 bytes, and
-//!    the saving is visible in `CacheStats::bytes_saved`.
+//! 1. **Accuracy** — teacher-forced decode logits on the workload
+//!    traces (the paper's passage-reuse streams) stay within cosine
+//!    similarity of the f32 tier: ≥ 0.999 under `--kv-quant int8`,
+//!    ≥ 0.99 under `--kv-quant int4`.
+//! 2. **Capacity** — a cached block costs ≤ 30% (int8) / ≤ 16% (int4)
+//!    of its f32 bytes, and the saving is visible in
+//!    `CacheStats::bytes_saved` (attributed per tier).
 //! 3. **Determinism** — quantization is per-element and order-free, so
-//!    int8 serving stays bitwise identical across thread counts, just
-//!    like f32 serving.
+//!    quantized serving stays bitwise identical across thread counts,
+//!    just like f32 serving — including the quantized decode path.
 
 use block_attn::config::{KvPrecision, ModelConfig};
 use block_attn::coordinator::{AttentionMode, Coordinator};
@@ -87,6 +92,47 @@ fn int8_decode_logits_cosine_against_f32() {
     assert!(worst >= 0.999);
 }
 
+/// Contract 1 for int4: the coarser 15-level codes with group-wise
+/// scales hold decode-logit cosine ≥ 0.99 vs f32 on the same traces —
+/// with decode attention reading the packed codes directly.
+#[test]
+fn int4_decode_logits_cosine_against_f32() {
+    let tok = ByteTokenizer::new();
+    let mut rng = Rng::new(0xACC);
+    let trace = RagTrace::build(&mut rng, 24);
+    let mut f32_coord = coordinator(KvPrecision::F32);
+    let mut int4_coord = coordinator(KvPrecision::Int4);
+    assert_eq!(int4_coord.kv_precision(), KvPrecision::Int4);
+
+    let mut worst = 1.0f64;
+    for _ in 0..5 {
+        let sample = trace.request(&mut rng, 4, 1.1);
+        let sp = sample.segment(&tok);
+        let mut forced = tok.encode(&sample.response);
+        forced.truncate(6);
+        let a = f32_coord
+            .logits_trace(&sp.blocks, &sp.query, &forced, AttentionMode::Block)
+            .expect("f32 trace");
+        let b = int4_coord
+            .logits_trace(&sp.blocks, &sp.query, &forced, AttentionMode::Block)
+            .expect("int4 trace");
+        assert_eq!(a.len(), b.len());
+        for (step, (la, lb)) in a.iter().zip(&b).enumerate() {
+            let c = cosine(la, lb);
+            worst = worst.min(c);
+            assert!(
+                c >= 0.99,
+                "step {step}: cosine {c} < 0.99 (int4 tier too lossy)"
+            );
+        }
+    }
+    // The tier must actually be lossy — and lossier than int8's bound.
+    let s = int4_coord.cache_stats();
+    assert!(s.quant_rel_err() > 0.0, "int4 tier recorded no quantization error");
+    assert!(s.quant_rel_err() < 0.15, "relative error too large: {}", s.quant_rel_err());
+    assert!(worst >= 0.99);
+}
+
 /// Contract 2: the quantized tier stores a block at ≤ 30% of its f32
 /// bytes, and reports the saving.
 #[test]
@@ -120,19 +166,55 @@ fn int8_cache_bytes_at_most_30_percent_of_f32() {
     );
 }
 
-/// Contract 3: with the int8 tier active, serving output — tokens *and*
-/// raw logits — is bitwise identical at 1 and 4 kernel threads.
+/// Contract 2 for int4: ≤ 16% of the f32 bytes per cached block (the
+/// packed codes are ⅛; the group-wise scale table rides on top), with
+/// the saving attributed to the int4 tier.
 #[test]
-fn int8_serving_is_bitwise_identical_across_thread_counts() {
+fn int4_cache_bytes_at_most_16_percent_of_f32() {
+    let mut rng = Rng::new(0xB17E);
+    let vocab = ModelConfig::builtin("tiny").unwrap().vocab;
+    let blocks: Vec<Vec<i32>> = (0..3)
+        .map(|_| (0..64).map(|_| rng.below(vocab) as i32).collect())
+        .collect();
+    let mut f32_coord = coordinator(KvPrecision::F32);
+    let mut int4_coord = coordinator(KvPrecision::Int4);
+    for b in &blocks {
+        f32_coord.precompute_block(b).expect("f32 precompute");
+        int4_coord.precompute_block(b).expect("int4 precompute");
+    }
+    let sf = f32_coord.cache_stats();
+    let s4 = int4_coord.cache_stats();
+    assert_eq!(sf.entries, 3);
+    assert_eq!(s4.entries, 3);
+    assert!(
+        s4.bytes * 100 <= sf.bytes * 16,
+        "int4 cache {} bytes > 16% of f32 {}",
+        s4.bytes,
+        sf.bytes
+    );
+    assert_eq!(
+        s4.bytes + s4.bytes_saved,
+        sf.bytes,
+        "bytes_saved must account exactly for the f32 difference"
+    );
+    assert_eq!(s4.bytes_saved_int4, s4.bytes_saved, "saving must be attributed to int4");
+    assert_eq!(s4.bytes_saved_int8, 0);
+}
+
+/// Contract 3: with a quantized tier active, serving output — tokens
+/// *and* raw logits, through the quantized decode path — is bitwise
+/// identical at 1 and 4 kernel threads.
+#[test]
+fn quantized_serving_is_bitwise_identical_across_thread_counts() {
     let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let prev = block_attn::kernels::num_threads();
 
-    let serve = |threads: usize| -> Vec<Vec<Vec<f32>>> {
+    let serve = |threads: usize, precision: KvPrecision| -> Vec<Vec<Vec<f32>>> {
         set_threads(threads);
         let tok = ByteTokenizer::new();
         let mut rng = Rng::new(0xDE7);
         let trace = RagTrace::build(&mut rng, 12);
-        let mut coord = coordinator(KvPrecision::Int8);
+        let mut coord = coordinator(precision);
         (0..3)
             .map(|_| {
                 let sample = trace.request(&mut rng, 3, 1.1);
@@ -145,11 +227,13 @@ fn int8_serving_is_bitwise_identical_across_thread_counts() {
             })
             .collect()
     };
-    let one = serve(1);
-    let four = serve(4);
+    for precision in [KvPrecision::Int8, KvPrecision::Int4] {
+        let one = serve(1, precision);
+        let four = serve(4, precision);
+        assert_eq!(
+            one, four,
+            "{precision:?} serving depends on the thread count (determinism contract broken)"
+        );
+    }
     set_threads(prev);
-    assert_eq!(
-        one, four,
-        "int8 serving depends on the thread count (determinism contract broken)"
-    );
 }

@@ -1,0 +1,238 @@
+//! Property-style round-trip battery for `kernels::quant` — the
+//! per-element contracts both quantized KV tiers rest on, hammered
+//! across randomized shapes and the degenerate corners:
+//!
+//! * **Error bound** — per element, `|x − x̂| ≤ scale/2` (the scale
+//!   being per-channel amax/127 for int8, per-(channel, 32-token
+//!   group) amax/7 for int4).
+//! * **Determinism / order-freedom** — quantize is a pure per-element
+//!   function of (value, scale): repeat calls are identical, negating
+//!   the input negates the codes, and the inline `sq_err`/`sq_ref`
+//!   sums match a from-scratch recomputation **bitwise** (same
+//!   ascending element order).
+//! * **Corners** — single-token blocks, single-channel heads,
+//!   odd channel counts (int8), token counts on and off the int4
+//!   group boundary, all-zero rows, max-abs ties (±v in one channel),
+//!   and ±extreme magnitudes.
+//! * **Byte accounting** — `size_bytes` is exactly codes + 4·scales on
+//!   both tiers.
+
+use block_attn::kernels::quant::{
+    channel_scales_for, QuantizedKv, QuantizedKv4, I4_GROUP,
+};
+use block_attn::tensor::{Tensor, TensorF};
+use block_attn::util::prop;
+use block_attn::util::rng::Rng;
+use block_attn::{prop_assert, prop_assert_eq};
+
+/// Random KV tensor with a magnitude profile chosen per case: plain
+/// N(0,1), scaled by an extreme power of ten, with whole-token zero
+/// rows, or with exact ±v tie pairs inside a channel.
+fn random_kv(rng: &mut Rng, dims: &[usize; 4]) -> TensorF {
+    let n: usize = dims.iter().product();
+    let magnitude = match rng.below(4) {
+        0 => 1.0,
+        1 => 1e-20,
+        2 => 1e20,
+        _ => 1e30,
+    };
+    let mut data: Vec<f32> = (0..n)
+        .map(|_| (rng.normal() * magnitude) as f32)
+        .collect();
+    let row = dims[2] * dims[3];
+    let tokens_total = dims[0] * dims[1];
+    if rng.chance(0.3) {
+        // Zero out a whole token row.
+        let t = rng.below(tokens_total);
+        data[t * row..(t + 1) * row].fill(0.0);
+    }
+    if rng.chance(0.3) && dims[1] >= 2 {
+        // Max-abs tie: plant ±v in the same channel of two tokens of
+        // one layer (both candidates for the amax).
+        let l = rng.below(dims[0]);
+        let c = rng.below(row);
+        let t0 = l * dims[1];
+        let v = (rng.normal() * magnitude) as f32;
+        data[(t0) * row + c] = v;
+        data[(t0 + 1) * row + c] = -v;
+    }
+    Tensor::from_vec(dims, data)
+}
+
+fn flip_sign(x: &TensorF) -> TensorF {
+    Tensor::from_vec(x.dims(), x.data().iter().map(|&v| -v).collect())
+}
+
+#[test]
+fn prop_int8_roundtrip_bounded_deterministic() {
+    prop::check("int8-roundtrip", 0x18A7, 150, |rng: &mut Rng| {
+        // Shapes include single-row (len 1), single-channel and odd
+        // channel counts — int8 has no packing constraint.
+        let dims = [rng.range(1, 4), rng.range(1, 41), rng.range(1, 4), rng.range(1, 13)];
+        let x = random_kv(rng, &dims);
+        let q = QuantizedKv::quantize(&x);
+        let (layers, len, heads, hd) = (dims[0], dims[1], dims[2], dims[3]);
+        let row = heads * hd;
+        prop_assert_eq!(q.q.len(), x.len());
+        prop_assert_eq!(q.scales.len(), layers * row);
+        prop_assert_eq!(q.size_bytes(), q.q.len() + q.scales.len() * 4);
+        // Per-element error bound against the per-channel scale.
+        let deq = q.dequantize();
+        for l in 0..layers {
+            for t in 0..len {
+                for c in 0..row {
+                    let i = (l * len + t) * row + c;
+                    let s = q.scales[l * row + c];
+                    let e = (x.data()[i] - deq.data()[i]).abs();
+                    prop_assert!(
+                        e <= 0.5001 * s,
+                        "elem {i}: err {e} > scale/2 ({s})"
+                    );
+                }
+            }
+        }
+        // Determinism: identical codes and scales on a second pass.
+        let q2 = QuantizedKv::quantize(&x);
+        prop_assert_eq!(q.q, q2.q);
+        prop_assert_eq!(q.scales, q2.scales);
+        // Inline error sums equal the recomputation bitwise.
+        let (err, refsq) = q.sq_err_vs(&x);
+        prop_assert!(q.sq_err == err, "inline sq_err {} != recomputed {err}", q.sq_err);
+        prop_assert!(q.sq_ref == refsq, "inline sq_ref {} != recomputed {refsq}", q.sq_ref);
+        // Symmetry (order-free per-element map): q(-x) == -q(x),
+        // identical scales.
+        let qn = QuantizedKv::quantize(&flip_sign(&x));
+        prop_assert_eq!(qn.scales, q.scales);
+        for (a, b) in q.q.iter().zip(&qn.q) {
+            prop_assert_eq!(*a, -*b);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_int4_roundtrip_bounded_deterministic() {
+    prop::check("int4-roundtrip", 0x4A47, 150, |rng: &mut Rng| {
+        // Even head_dim (nibble packing); lengths sweep the group
+        // boundary: 1, 31, 32, 33, 63, 64, 65 all reachable.
+        let len = *rng.pick(&[1usize, 2, 7, 31, 32, 33, 63, 64, 65]);
+        let dims = [rng.range(1, 4), len, rng.range(1, 4), 2 * rng.range(1, 7)];
+        let x = random_kv(rng, &dims);
+        let q = QuantizedKv4::quantize(&x);
+        let (layers, _, heads, hd) = (dims[0], dims[1], dims[2], dims[3]);
+        let row = heads * hd;
+        let groups = len.div_ceil(I4_GROUP);
+        prop_assert_eq!(q.groups(), groups);
+        prop_assert_eq!(q.packed.len() * 2, x.len());
+        prop_assert_eq!(q.scales.len(), layers * groups * row);
+        prop_assert_eq!(q.size_bytes(), q.packed.len() + q.scales.len() * 4);
+        // Per-element error bound against the per-group scale.
+        let deq = q.dequantize();
+        for l in 0..layers {
+            for t in 0..len {
+                let srow = &q.scales[(l * groups + t / I4_GROUP) * row..][..row];
+                for c in 0..row {
+                    let i = (l * len + t) * row + c;
+                    let e = (x.data()[i] - deq.data()[i]).abs();
+                    prop_assert!(
+                        e <= 0.5001 * srow[c],
+                        "elem {i}: err {e} > scale/2 ({})",
+                        srow[c]
+                    );
+                }
+            }
+        }
+        // Determinism + bitwise-exact inline sums.
+        let q2 = QuantizedKv4::quantize(&x);
+        prop_assert_eq!(q.packed, q2.packed);
+        prop_assert_eq!(q.scales, q2.scales);
+        let (err, refsq) = q.sq_err_vs(&x);
+        prop_assert!(q.sq_err == err, "inline sq_err {} != recomputed {err}", q.sq_err);
+        prop_assert!(q.sq_ref == refsq, "inline sq_ref {} != recomputed {refsq}", q.sq_ref);
+        // Symmetry: negating the input negates every reconstructed
+        // element (codes are clamped symmetrically to ±7).
+        let qn = QuantizedKv4::quantize(&flip_sign(&x));
+        prop_assert_eq!(qn.scales, q.scales);
+        let dn = qn.dequantize();
+        for (a, b) in deq.data().iter().zip(dn.data()) {
+            prop_assert_eq!(*a, -*b);
+        }
+        Ok(())
+    });
+}
+
+/// All-zero tensors are exact on both tiers: zero scales, zero codes,
+/// zero inline error.
+#[test]
+fn all_zero_tensors_roundtrip_exactly() {
+    let dims = [2usize, 33, 2, 4];
+    let x: TensorF = Tensor::zeros(&dims);
+    let q8 = QuantizedKv::quantize(&x);
+    assert!(q8.scales.iter().all(|&s| s == 0.0));
+    assert!(q8.q.iter().all(|&c| c == 0));
+    assert_eq!(q8.dequantize(), x);
+    assert_eq!(q8.sq_err, 0.0);
+    let q4 = QuantizedKv4::quantize(&x);
+    assert!(q4.scales.iter().all(|&s| s == 0.0));
+    assert!(q4.packed.iter().all(|&b| b == 0));
+    assert_eq!(q4.dequantize(), x);
+    assert_eq!(q4.sq_err, 0.0);
+}
+
+/// Group isolation: bumping a token in group 1 must not change group
+/// 0's scales or codes (the whole point of group-wise scales).
+#[test]
+fn int4_groups_are_isolated() {
+    let mut rng = Rng::new(0x150);
+    let dims = [1usize, I4_GROUP + 5, 1, 4];
+    let n: usize = dims.iter().product();
+    let base: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let a = QuantizedKv4::quantize(&Tensor::from_vec(&dims, base.clone()));
+    let mut bumped = base;
+    // Token I4_GROUP + 1 lives in group 1; make it the dominant amax.
+    let row = 4;
+    bumped[(I4_GROUP + 1) * row..(I4_GROUP + 2) * row].fill(1000.0);
+    let b = QuantizedKv4::quantize(&Tensor::from_vec(&dims, bumped));
+    assert_eq!(
+        &a.scales[..row],
+        &b.scales[..row],
+        "group-0 scales moved when group 1 changed"
+    );
+    assert_eq!(
+        &a.packed[..I4_GROUP * row / 2],
+        &b.packed[..I4_GROUP * row / 2],
+        "group-0 codes moved when group 1 changed"
+    );
+    assert_ne!(&a.scales[row..], &b.scales[row..], "group-1 scales must move");
+}
+
+/// ±extremes survive: scales stay finite, codes saturate at the rail,
+/// and reconstruction is finite on both tiers.
+#[test]
+fn extreme_magnitudes_stay_finite() {
+    let dims = [1usize, 2, 1, 4];
+    let x = Tensor::from_vec(
+        &dims,
+        vec![1e37f32, -1e37, 1e-30, -1e-30, 5e36, -2e36, 0.0, 1e-37],
+    );
+    let q8 = QuantizedKv::quantize(&x);
+    assert!(q8.scales.iter().all(|s| s.is_finite()));
+    assert!(q8.dequantize().data().iter().all(|v| v.is_finite()));
+    assert_eq!(q8.q[0], 127, "amax element must sit on the +rail");
+    assert_eq!(q8.q[1], -127, "amax element must sit on the -rail");
+    let q4 = QuantizedKv4::quantize(&x);
+    assert!(q4.scales.iter().all(|s| s.is_finite()));
+    assert!(q4.dequantize().data().iter().all(|v| v.is_finite()));
+    assert!(q4.sq_err.is_finite() && q4.sq_ref.is_finite());
+}
+
+/// The shared scale formula: `channel_scales_for` is the single owner
+/// for both qmax values, including zero columns.
+#[test]
+fn channel_scales_for_handles_zero_columns() {
+    let b = [0.0f32, 3.0, 0.0, -6.0];
+    let s8 = channel_scales_for(&b, 2, 2, 127.0);
+    assert_eq!(s8, vec![0.0, 6.0 / 127.0]);
+    let s4 = channel_scales_for(&b, 2, 2, 7.0);
+    assert_eq!(s4, vec![0.0, 6.0 / 7.0]);
+}

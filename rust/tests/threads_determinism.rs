@@ -8,7 +8,9 @@
 //! (1, 3, 8 — including 3, whose non-divisible splits exercise the
 //! uneven chunk and budget-inheritance paths) emits identical tokens,
 //! TTFT-independent fields, and identical cache behavior — including
-//! the concurrent cache-miss block prefill path and the int8 KV tier.
+//! the concurrent cache-miss block prefill path and the int8 and int4
+//! KV tiers (whose decode path attends directly over quantized
+//! context codes).
 
 use block_attn::config::KvPrecision;
 use block_attn::coordinator::{AttentionMode, Coordinator, Request};
@@ -115,9 +117,11 @@ fn coordinator_output_identical_across_thread_counts() {
     assert!(baseline.iter().all(|(tokens, ..)| !tokens.is_empty()));
 }
 
-/// The int8 tier quantizes per element (order-free), so quantized
-/// serving must be exactly as thread-count deterministic as f32 —
-/// including at the odd budget where splits are uneven.
+/// The quantized tiers code per element (order-free) and their decode
+/// path reads the context codes through fused kernels that keep the
+/// ascending accumulation order, so quantized serving must be exactly
+/// as thread-count deterministic as f32 — including at the odd budget
+/// where splits are uneven.
 #[test]
 fn coordinator_int8_tier_identical_across_thread_counts() {
     let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
@@ -128,6 +132,27 @@ fn coordinator_int8_tier_identical_across_thread_counts() {
         assert_eq!(
             baseline, run,
             "int8 serving output differs between {} and {t} threads",
+            THREAD_SWEEP[0]
+        );
+    }
+    set_threads(prev);
+    assert!(baseline.iter().all(|(tokens, ..)| !tokens.is_empty()));
+}
+
+/// Same sweep on the int4 tier: packed nibbles + group-wise scales are
+/// still per-element maps, and the int4 decode attention (dot_i4 /
+/// axpy_i4 over the packed prefix) splits by whole head rows — the
+/// stream must be bitwise identical at 1/3/8 threads.
+#[test]
+fn coordinator_int4_tier_identical_across_thread_counts() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = block_attn::kernels::num_threads();
+    let baseline = serve(THREAD_SWEEP[0], KvPrecision::Int4);
+    for &t in &THREAD_SWEEP[1..] {
+        let run = serve(t, KvPrecision::Int4);
+        assert_eq!(
+            baseline, run,
+            "int4 serving output differs between {} and {t} threads",
             THREAD_SWEEP[0]
         );
     }
