@@ -1,0 +1,161 @@
+//! Continuous-batching serving throughput: aggregate decode tokens/s
+//! at a sweep of concurrent session counts over a warm passage pool.
+//!
+//! ```sh
+//! cargo bench --bench serving                         # 1, 8, 64 sessions
+//! cargo bench --bench serving -- --sessions 1,16
+//! cargo bench --bench serving -- --kv-quant int8      # quantized KV tier
+//! ```
+//!
+//! Each sweep point serves `S` concurrent requests through `run_batch`
+//! with `max_active = S`: FIFO admission, at most one prefill per
+//! decode round, and every round's decode fused into one GEMM dispatch
+//! per projection by `Backend::decode_batch`. The passage pool KV is
+//! pre-computed (not timed), so the sweep isolates what batching is
+//! for: turning S memory-bound decode GEMVs into one compute-dense
+//! GEMM. The bench fails if the widest batch does not out-throughput
+//! serial serving — the acceptance bar for the batched decode path.
+//!
+//! Results are written machine-readable to `BENCH_serving.json`
+//! (`--json-out PATH` overrides); per-token `tok_ms` and `ttft_p50_ms`
+//! are gated by `bench_guard` in CI (see ci/baselines/README.md).
+
+use anyhow::ensure;
+use block_attn::coordinator::batcher::{run_batch, BatchPolicy};
+use block_attn::coordinator::{AttentionMode, Coordinator, Request};
+use block_attn::runtime::backend_from_args;
+use block_attn::tokenizer::ByteTokenizer;
+use block_attn::util::cli::Args;
+use block_attn::util::json::Json;
+use block_attn::util::rng::Rng;
+use block_attn::util::stats::Summary;
+use block_attn::workload::traces::RagTrace;
+use block_attn::Backend;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let threads = block_attn::kernels::init_threads_from_args(&args);
+    let sessions = args.usize_list_or("sessions", &[1, 8, 64]);
+    let max_new = args.usize_or("max-new-tokens", 16);
+    let k = args.usize_or("passages-per-query", 4);
+    let pool_size = args.usize_or("pool", 32);
+    let zipf_s = args.f64_or("zipf", 1.1);
+
+    let engine = backend_from_args(&args, "tiny")?;
+    engine.warmup()?;
+    let model = engine.config().name.clone();
+    let kv_precision = block_attn::config::KvPrecision::resolve(&args)?;
+    let mut coord = Coordinator::with_kv_precision(engine, 256 << 20, kv_precision);
+    let tok = ByteTokenizer::new();
+
+    // The external database + one query sample per concurrent session.
+    let mut rng = Rng::new(args.u64_or("seed", 42));
+    let trace = RagTrace::build(&mut rng, pool_size);
+    let max_s = sessions.iter().copied().max().unwrap_or(1);
+    let samples: Vec<_> = (0..max_s)
+        .map(|_| trace.request(&mut rng, k, zipf_s))
+        .collect();
+
+    // Offline KV pre-computation of the pool (paper §1: passage KV
+    // "might have been computed"); not timed.
+    for p in &trace.pool {
+        let mut ids = tok.encode(p);
+        ids.push(block_attn::tokenizer::SEP);
+        coord.precompute_block(&ids)?;
+    }
+
+    let build = |n: usize| -> Vec<Request> {
+        samples[..n]
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let sp = s.segment(&tok);
+                Request {
+                    id: i as u64,
+                    blocks: sp.blocks,
+                    query: sp.query,
+                    max_new_tokens: max_new,
+                    mode: AttentionMode::Block,
+                }
+            })
+            .collect()
+    };
+    // Warm the serving path (final-prefill buffers, worker pool) before
+    // the timed sweep.
+    run_batch(&mut coord, build(1), &BatchPolicy::default())?;
+
+    println!(
+        "# serving throughput — config '{model}', {kv_precision:?} KV, {max_new} new tokens/request"
+    );
+    println!(
+        "{:>10} {:>12} {:>14} {:>10} {:>12}",
+        "sessions", "tokens", "tokens/s", "tok-ms", "ttft-p50-ms"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut tput: Vec<(usize, f64)> = Vec::new();
+    for &s in &sessions {
+        let policy = BatchPolicy {
+            max_active: s.max(1),
+            max_active_tokens: 1 << 20,
+            ..BatchPolicy::default()
+        };
+        let reqs = build(s);
+        let t0 = Instant::now();
+        let out = run_batch(&mut coord, reqs, &policy)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let generated: usize = out.iter().map(|r| r.tokens.len()).sum();
+        ensure!(generated > 0, "no tokens generated at {s} sessions");
+        let tokens_per_s = generated as f64 / wall;
+        let tok_ms = wall * 1e3 / generated as f64;
+        let mut ttft = Summary::new();
+        for r in &out {
+            ttft.add(r.ttft * 1e3);
+        }
+        println!(
+            "{:>10} {:>12} {:>14.1} {:>10.3} {:>12.2}",
+            s, generated, tokens_per_s, tok_ms, ttft.p50()
+        );
+        rows.push(Json::obj(vec![
+            ("sessions", Json::num(s as f64)),
+            ("generated_tokens", Json::num(generated as f64)),
+            ("tokens_per_s", Json::num(tokens_per_s)),
+            ("tok_ms", Json::num(tok_ms)),
+            ("ttft_p50_ms", Json::num(ttft.p50())),
+        ]));
+        tput.push((s, tokens_per_s));
+    }
+
+    // The point of batching: the widest batch must beat serial serving
+    // on aggregate throughput.
+    let mut speedup = 1.0;
+    let lo = tput.iter().min_by_key(|(s, _)| *s).copied();
+    let hi = tput.iter().max_by_key(|(s, _)| *s).copied();
+    if let (Some((s_lo, t_lo)), Some((s_hi, t_hi))) = (lo, hi) {
+        if s_hi > s_lo {
+            speedup = t_hi / t_lo;
+            println!("# throughput {s_hi} vs {s_lo} sessions: {speedup:.2}x");
+            ensure!(
+                speedup > 1.0,
+                "batched serving at {s_hi} sessions must out-throughput {s_lo} session(s), got {speedup:.2}x"
+            );
+        }
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("serving")),
+        ("model", Json::str(model)),
+        ("backend", Json::str(block_attn::runtime::backend_choice(&args))),
+        ("kv_precision", Json::str(kv_precision.as_str())),
+        ("threads", Json::num(threads as f64)),
+        ("max_new_tokens", Json::num(max_new as f64)),
+        ("passages_per_query", Json::num(k as f64)),
+        ("throughput_speedup", Json::num(speedup)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let out_path = args.str_or("json-out", "BENCH_serving.json");
+    std::fs::write(&out_path, format!("{report}\n"))?;
+    eprintln!("# wrote {out_path}");
+    eprintln!("{}", block_attn::kernels::pool_stats_line());
+    Ok(())
+}

@@ -79,6 +79,7 @@ fn main() -> anyhow::Result<()> {
     let policy = BatchPolicy {
         max_active: args.usize_or("max-active", 4),
         max_active_tokens: args.usize_or("max-active-tokens", 4096),
+        ..BatchPolicy::default()
     };
 
     println!("── serving {n_requests} requests ({k} passages each, zipf {zipf_s}) ──");

@@ -15,6 +15,11 @@ pub struct Metrics {
     pub requests: u64,
     pub blocks_seen: u64,
     pub blocks_cached: u64,
+    /// Decode rounds issued by the continuous-batching loop (one round
+    /// = one `decode_batch` dispatch advancing every active session).
+    pub decode_rounds: u64,
+    /// Tokens decoded by those rounds (sum of per-round batch sizes).
+    pub decode_tokens: u64,
     started: std::time::Instant,
 }
 
@@ -34,7 +39,26 @@ impl Metrics {
             requests: 0,
             blocks_seen: 0,
             blocks_cached: 0,
+            decode_rounds: 0,
+            decode_tokens: 0,
             started: std::time::Instant::now(),
+        }
+    }
+
+    /// One continuous-batching decode round advanced `batched` sessions.
+    pub fn record_decode_round(&mut self, batched: usize) {
+        self.decode_rounds += 1;
+        self.decode_tokens += batched as u64;
+    }
+
+    /// Mean sessions advanced per decode round — the batching win is
+    /// this number approaching `BatchPolicy::max_active` under load
+    /// (1.0 means the loop degenerated to serial decoding).
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.decode_rounds == 0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 / self.decode_rounds as f64
         }
     }
 
@@ -90,7 +114,8 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} ttft_p50={:.1}ms ttft_p95={:.1}ms block_prefill_p50={:.1}ms \
-             flops_tft_mean={:.3e} block_hit_rate={:.1}% throughput={:.2} req/s",
+             flops_tft_mean={:.3e} block_hit_rate={:.1}% throughput={:.2} req/s \
+             decode_rounds={} batch_occupancy={:.2}",
             self.requests,
             self.ttft.p50() * 1e3,
             self.ttft.p95() * 1e3,
@@ -98,6 +123,8 @@ impl Metrics {
             self.flops_tft.mean(),
             self.block_hit_rate() * 100.0,
             self.throughput_rps(),
+            self.decode_rounds,
+            self.batch_occupancy(),
         )
     }
 }
@@ -117,6 +144,13 @@ mod tests {
         m.record_cache(3, 4);
         m.record_cache(1, 4);
         m.record_completion(7);
+        assert_eq!(m.batch_occupancy(), 0.0, "no rounds yet");
+        m.record_decode_round(3);
+        m.record_decode_round(1);
+        assert_eq!(m.decode_rounds, 2);
+        assert_eq!(m.decode_tokens, 4);
+        assert!((m.batch_occupancy() - 2.0).abs() < 1e-12);
+        assert!(m.report().contains("decode_rounds=2"));
         assert_eq!(m.requests, 2);
         assert!((m.block_hit_rate() - 0.5).abs() < 1e-12);
         assert!((m.flops_tft.mean() - 1.5e9).abs() < 1.0);

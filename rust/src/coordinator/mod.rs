@@ -250,6 +250,20 @@ impl<B: Backend> Coordinator<B> {
         Ok(argmax(&logits) as i32)
     }
 
+    /// One decode round across several in-flight requests: routes to
+    /// [`Backend::decode_batch`], so every session advances one token
+    /// through a single kernel dispatch per layer (the continuous
+    /// batching hot path). Bitwise identical to per-session
+    /// [`Self::decode_one`] calls — see the `Backend` contract.
+    pub(crate) fn decode_batch(
+        &mut self,
+        states: &mut [&mut DecodeState],
+        last: &[i32],
+    ) -> Result<Vec<i32>> {
+        let mut ctxs: Vec<&mut DecodeCtx> = states.iter_mut().map(|s| &mut s.ctx).collect();
+        self.engine.decode_batch(&mut ctxs, last)
+    }
+
     // -- prefill paths -----------------------------------------------------
 
     fn prefill_vanilla(&mut self, req: &Request) -> Result<PrefillOutcome> {

@@ -113,6 +113,36 @@
 //! precisions stay green. Cache stats report `bytes_saved` (total and
 //! per tier) and the running relative quantization error.
 //!
+//! ## Continuous batching
+//!
+//! The live server runs a vLLM-shaped **engine loop** on the dedicated
+//! engine thread ([`server::EngineHandle`]): requests land in a bounded
+//! admission queue (`--queue-depth`; a full queue blocks `submit` — the
+//! client-facing backpressure), the scheduler
+//! ([`coordinator::batcher::BatchRunner`]) admits at most **one**
+//! prefill per decode round under the slot + token budgets
+//! (`--max-active`, `--max-active-tokens`), and each round advances
+//! every active session one token through
+//! [`runtime::Backend::decode_batch`] — the native backend fuses all
+//! sessions' per-token GEMV rows into one GEMM dispatch per projection,
+//! turning memory-bound single-session decode into compute-dense
+//! batched decode. Clients see each token as a streamed
+//! `{"id":..,"token":..}` frame followed by one final full-response
+//! line (see [`server`] for the wire protocol).
+//!
+//! TTFT is charged from each request's own arrival time (queueing
+//! included), and per-round batch occupancy surfaces in the `stats`
+//! endpoint (`decode_rounds`, `batch_occupancy`).
+//!
+//! Determinism contract: a batched decode round is **bitwise
+//! identical** to decoding each session serially, at every thread
+//! count and KV tier — GEMM output rows are functions of their input
+//! row only (fixed ascending-k reduction), RMSNorm/SwiGLU are
+//! row-local, and each session's KV tail is written independently. So
+//! batching — like threading and quantization tiering — is a pure
+//! performance decision, never an accuracy one
+//! (`tests/serving_batch.rs` pins this across threads × tiers).
+//!
 //! Layering (python never on the request path):
 //! - **L1** `python/compile/kernels/` — Pallas attention + RoPE kernels.
 //! - **L2** `python/compile/model.py` — Llama-style model, AOT-lowered to
@@ -174,6 +204,8 @@ pub fn run_cli(args: &util::cli::Args) -> anyhow::Result<()> {
             eprintln!("  info   [--artifacts DIR]");
             eprintln!("  train  --preset table1 --out DIR [--scale 1.0]");
             eprintln!("  serve  --addr 127.0.0.1:7841 [--workers 4] [--cache-mb 256]");
+            eprintln!("         [--max-active 4] [--max-active-tokens 16384] [--queue-depth 64]");
+            eprintln!("         (continuous batching; or $BLOCK_ATTN_MAX_ACTIVE etc.)");
             eprintln!("  eval   [--mode full|block] [--samples 10] [--show]");
             Ok(())
         }
@@ -227,15 +259,19 @@ fn cli_serve(args: &util::cli::Args) -> anyhow::Result<()> {
     let workers = args.usize_or("workers", 4);
     let cache_mb = args.usize_or("cache-mb", 256);
     let kv_precision = config::KvPrecision::resolve(args)?;
+    let policy = coordinator::batcher::BatchPolicy::resolve(args);
     let args2 = args.clone();
-    let handle = server::EngineHandle::spawn(move || {
-        let backend = runtime::backend_from_args(&args2, "tiny")?;
-        if let Some(ck) = args2.get("checkpoint") {
-            backend.load_params_file(std::path::Path::new(ck))?;
-        }
-        backend.warmup()?;
-        Ok(Coordinator::with_kv_precision(backend, cache_mb << 20, kv_precision))
-    })?;
+    let handle = server::EngineHandle::spawn_with_policy(
+        move || {
+            let backend = runtime::backend_from_args(&args2, "tiny")?;
+            if let Some(ck) = args2.get("checkpoint") {
+                backend.load_params_file(std::path::Path::new(ck))?;
+            }
+            backend.warmup()?;
+            Ok(Coordinator::with_kv_precision(backend, cache_mb << 20, kv_precision))
+        },
+        policy,
+    )?;
     server::serve(&addr, handle, workers)
 }
 

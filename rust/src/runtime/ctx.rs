@@ -197,6 +197,18 @@ impl DecodeCtx {
         Ok(())
     }
 
+    /// Write the in-flight token's KV row for layer `n` at the current
+    /// tail position (call [`Self::reserve_one`] first; the row only
+    /// becomes visible to [`Self::len`] once [`Self::advance_tail`]
+    /// commits the step). Shared by the fused serial decode and the
+    /// batched decode so both paths write the tail identically.
+    pub(crate) fn write_tail_row(&mut self, n: usize, kb: &[f32], vb: &[f32]) {
+        let row = self.kv_heads * self.head_dim;
+        let at = self.tail_len * row..(self.tail_len + 1) * row;
+        self.k_tail.axis0_mut(n)[at.clone()].copy_from_slice(kb);
+        self.v_tail.axis0_mut(n)[at].copy_from_slice(vb);
+    }
+
     /// Commit the tail row written at `tail_len` (backends call this
     /// after filling the row for every layer).
     pub(crate) fn advance_tail(&mut self) {

@@ -41,9 +41,9 @@ pub use native::NativeBackend;
 pub use params::{read_flat_params, write_flat_params};
 
 use crate::config::{ModelConfig, ParamSpec};
-use crate::tensor::{Tensor, TensorF, TensorI};
+use crate::tensor::{argmax, Tensor, TensorF, TensorI};
 use crate::util::cli::Args;
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 /// Output of a vanilla full prefill.
 pub struct PrefillFullOut {
@@ -172,6 +172,35 @@ pub trait Backend {
         Ok(out.logits)
     }
 
+    /// One decode step for a **batch** of independent in-flight
+    /// sessions (continuous batching): append each session's token to
+    /// its own context and return the greedy next token per session, in
+    /// input order. Sessions may sit at different lengths and different
+    /// KV tiers.
+    ///
+    /// Contract: the result — tokens *and* every context's KV tail —
+    /// must be bitwise identical to calling [`Self::decode_ctx`] on
+    /// each session one at a time, at every thread count. This is what
+    /// lets the serving loop batch sessions freely: batching is a pure
+    /// performance decision, never an accuracy one. The default is that
+    /// serial loop; `NativeBackend` overrides it to fuse all sessions'
+    /// per-token GEMV rows into one GEMM dispatch per projection
+    /// (memory-bound GEMV → compute-dense GEMM), which preserves the
+    /// contract because the GEMM kernels guarantee row independence
+    /// (see `kernels::gemm`).
+    fn decode_batch(&self, ctxs: &mut [&mut DecodeCtx], last: &[i32]) -> Result<Vec<i32>> {
+        ensure!(
+            ctxs.len() == last.len(),
+            "decode_batch: {} contexts vs {} tokens",
+            ctxs.len(),
+            last.len()
+        );
+        ctxs.iter_mut()
+            .zip(last)
+            .map(|(ctx, &t)| Ok(argmax(&self.decode_ctx(t, ctx)?) as i32))
+            .collect()
+    }
+
     /// One block-fine-tune step (paper §2.4). `seg` carries the
     /// Figure-1 segment ids (uniform ids = full-attention mode),
     /// `loss_mask` marks target tokens. Updates the backend's
@@ -285,6 +314,10 @@ impl Backend for Box<dyn Backend> {
 
     fn decode_ctx(&self, token: i32, ctx: &mut DecodeCtx) -> Result<Vec<f32>> {
         (**self).decode_ctx(token, ctx)
+    }
+
+    fn decode_batch(&self, ctxs: &mut [&mut DecodeCtx], last: &[i32]) -> Result<Vec<i32>> {
+        (**self).decode_batch(ctxs, last)
     }
 
     fn train_step(

@@ -54,7 +54,7 @@ use crate::kernels::{
     par_rows, rms_norm_rows, softmax_inplace, swiglu_rows,
 };
 use crate::rope::RopeTable;
-use crate::tensor::{Tensor, TensorF, TensorI};
+use crate::tensor::{argmax, Tensor, TensorF, TensorI};
 use crate::util::rng::Rng;
 use anyhow::{bail, ensure, Result};
 use std::cell::RefCell;
@@ -185,6 +185,93 @@ fn check_tokens(cfg: &ModelConfig, tokens: &[i32]) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// One head's decode attention over one session's context: QKᵀ scores
+/// over the tier-precision prefix (dequantization fused into the dot
+/// kernel), then the f32 tail — including the just-written row at
+/// `tail_len` — softmax, and the AV accumulation through the matching
+/// `axpy` kernel, all in ascending token order.
+///
+/// This is the single copy of the fused tier-matching inner loop:
+/// [`Backend::decode_ctx`] (one session, parallel over heads) and
+/// [`Backend::decode_batch`] (one row per session × head) both call it,
+/// so batched decode is bitwise identical to serial decode by
+/// construction, not only by test. `scores` must hold `ctx.len() + 1`
+/// entries; every entry is overwritten before use.
+fn attend_ctx_head(
+    ctx: &DecodeCtx,
+    n: usize,
+    kh: usize,
+    qv: &[f32],
+    scale: f32,
+    scores: &mut [f32],
+    ov: &mut [f32],
+) {
+    let (_, kvh, hd) = ctx.kv_dims();
+    let plen = ctx.prefix_len();
+    let tlen = ctx.tail_len();
+    debug_assert_eq!(scores.len(), plen + tlen + 1);
+    // Token groups of the int4 prefix scale table.
+    let groups = plen.div_ceil(I4_GROUP);
+    let kt = ctx.k_tail.axis0(n);
+    let vt = ctx.v_tail.axis0(n);
+    // Prefix keys at tier precision, ascending token order.
+    match &ctx.prefix {
+        CtxKv::F32 { k, .. } => {
+            let kl = k.axis0(n);
+            for (j, s) in scores.iter_mut().take(plen).enumerate() {
+                *s = dot(qv, &kl[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd]) * scale;
+            }
+        }
+        CtxKv::Int8 { k, .. } => {
+            let srow = &k.scales[(n * kvh + kh) * hd..(n * kvh + kh + 1) * hd];
+            for (j, s) in scores.iter_mut().take(plen).enumerate() {
+                let off = ((n * plen + j) * kvh + kh) * hd;
+                *s = dot_i8(qv, &k.q[off..off + hd], srow) * scale;
+            }
+        }
+        CtxKv::Int4 { k, .. } => {
+            for (j, s) in scores.iter_mut().take(plen).enumerate() {
+                let at = ((n * groups + j / I4_GROUP) * kvh + kh) * hd;
+                let srow = &k.scales[at..at + hd];
+                let off = ((n * plen + j) * kvh + kh) * (hd / 2);
+                *s = dot_i4(qv, &k.packed[off..off + hd / 2], srow) * scale;
+            }
+        }
+    }
+    // Generated tail (f32), including the just-appended token.
+    for j in 0..=tlen {
+        scores[plen + j] = dot(qv, &kt[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd]) * scale;
+    }
+    softmax_inplace(scores);
+    ov.fill(0.0);
+    match &ctx.prefix {
+        CtxKv::F32 { v, .. } => {
+            let vl = v.axis0(n);
+            for j in 0..plen {
+                axpy(scores[j], &vl[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd], ov);
+            }
+        }
+        CtxKv::Int8 { v, .. } => {
+            let srow = &v.scales[(n * kvh + kh) * hd..(n * kvh + kh + 1) * hd];
+            for j in 0..plen {
+                let off = ((n * plen + j) * kvh + kh) * hd;
+                axpy_i8(scores[j], &v.q[off..off + hd], srow, ov);
+            }
+        }
+        CtxKv::Int4 { v, .. } => {
+            for j in 0..plen {
+                let at = ((n * groups + j / I4_GROUP) * kvh + kh) * hd;
+                let srow = &v.scales[at..at + hd];
+                let off = ((n * plen + j) * kvh + kh) * (hd / 2);
+                axpy_i4(scores[j], &v.packed[off..off + hd / 2], srow, ov);
+            }
+        }
+    }
+    for j in 0..=tlen {
+        axpy(scores[plen + j], &vt[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd], ov);
+    }
 }
 
 // -- the forward pass ------------------------------------------------------
@@ -602,10 +689,6 @@ impl Backend for NativeBackend {
         );
         ctx.reserve_one()?;
         let len = ctx.len();
-        let plen = ctx.prefix_len();
-        let tlen = ctx.tail_len();
-        // Token groups of the int4 prefix scale table.
-        let groups = plen.div_ceil(I4_GROUP);
 
         let params = self.params.borrow();
         let w = Weights::split(&params);
@@ -638,15 +721,8 @@ impl Backend for NativeBackend {
             for h in 0..kvh {
                 self.rope.rotate_head(&mut kb[h * hd..(h + 1) * hd], pos);
             }
-            {
-                let kl = ctx.k_tail.axis0_mut(n);
-                kl[tlen * kvh * hd..(tlen + 1) * kvh * hd].copy_from_slice(&kb);
-                let vl = ctx.v_tail.axis0_mut(n);
-                vl[tlen * kvh * hd..(tlen + 1) * kvh * hd].copy_from_slice(&vb);
-            }
-            let kt = ctx.k_tail.axis0(n);
-            let vt = ctx.v_tail.axis0(n);
-            let prefix = &ctx.prefix;
+            ctx.write_tail_row(n, &kb, &vb);
+            let ctx_r: &DecodeCtx = ctx;
             let q_r = &q;
             par_rows(&mut o, hd, head_min_rows, |h0, chunk| {
                 let mut scores = vec![0.0f32; len + 1];
@@ -654,74 +730,7 @@ impl Backend for NativeBackend {
                     let h = h0 + hi;
                     let kh = h / rep;
                     let qv = &q_r[h * hd..(h + 1) * hd];
-                    // Prefix keys at tier precision, ascending token
-                    // order; dequantization fuses into the dot kernel.
-                    match prefix {
-                        CtxKv::F32 { k, .. } => {
-                            let kl = k.axis0(n);
-                            for (j, s) in scores.iter_mut().take(plen).enumerate() {
-                                *s = dot(qv, &kl[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd])
-                                    * scale;
-                            }
-                        }
-                        CtxKv::Int8 { k, .. } => {
-                            let srow = &k.scales[(n * kvh + kh) * hd..(n * kvh + kh + 1) * hd];
-                            for (j, s) in scores.iter_mut().take(plen).enumerate() {
-                                let off = ((n * plen + j) * kvh + kh) * hd;
-                                *s = dot_i8(qv, &k.q[off..off + hd], srow) * scale;
-                            }
-                        }
-                        CtxKv::Int4 { k, .. } => {
-                            for (j, s) in scores.iter_mut().take(plen).enumerate() {
-                                let at = ((n * groups + j / I4_GROUP) * kvh + kh) * hd;
-                                let srow = &k.scales[at..at + hd];
-                                let off = ((n * plen + j) * kvh + kh) * (hd / 2);
-                                *s = dot_i4(qv, &k.packed[off..off + hd / 2], srow) * scale;
-                            }
-                        }
-                    }
-                    // Generated tail (f32), including the just-appended
-                    // token.
-                    for j in 0..=tlen {
-                        scores[plen + j] =
-                            dot(qv, &kt[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd]) * scale;
-                    }
-                    softmax_inplace(&mut scores);
-                    ov.fill(0.0);
-                    match prefix {
-                        CtxKv::F32 { v, .. } => {
-                            let vl = v.axis0(n);
-                            for j in 0..plen {
-                                axpy(
-                                    scores[j],
-                                    &vl[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd],
-                                    ov,
-                                );
-                            }
-                        }
-                        CtxKv::Int8 { v, .. } => {
-                            let srow = &v.scales[(n * kvh + kh) * hd..(n * kvh + kh + 1) * hd];
-                            for j in 0..plen {
-                                let off = ((n * plen + j) * kvh + kh) * hd;
-                                axpy_i8(scores[j], &v.q[off..off + hd], srow, ov);
-                            }
-                        }
-                        CtxKv::Int4 { v, .. } => {
-                            for j in 0..plen {
-                                let at = ((n * groups + j / I4_GROUP) * kvh + kh) * hd;
-                                let srow = &v.scales[at..at + hd];
-                                let off = ((n * plen + j) * kvh + kh) * (hd / 2);
-                                axpy_i4(scores[j], &v.packed[off..off + hd / 2], srow, ov);
-                            }
-                        }
-                    }
-                    for j in 0..=tlen {
-                        axpy(
-                            scores[plen + j],
-                            &vt[(j * kvh + kh) * hd..(j * kvh + kh + 1) * hd],
-                            ov,
-                        );
-                    }
+                    attend_ctx_head(ctx_r, n, kh, qv, scale, &mut scores, ov);
                 }
             });
             gemm_nn_acc(&o, lw.wo, 1, nh * hd, dm, &mut x);
@@ -739,6 +748,141 @@ impl Backend for NativeBackend {
         gemm_nt_acc(&hf, w.embed, 1, dm, cfg.vocab, &mut logits);
         ctx.advance_tail();
         Ok(logits)
+    }
+
+    /// Batched continuous-batching decode: one forward pass advances
+    /// every in-flight session by one token. Each session's row is an
+    /// independent row of every GEMM (`m = batch` instead of `m = 1`),
+    /// which turns the memory-bound per-session GEMV into one
+    /// compute-dense GEMM dispatch per projection per layer — the
+    /// throughput lever of the serving loop. Attention still runs
+    /// per (session, head) through [`attend_ctx_head`], the same inner
+    /// loop as [`Self::decode_ctx`], at each session's own length and
+    /// KV tier (mixed tiers in one batch are fine).
+    ///
+    /// Bitwise identical to decoding the sessions one at a time: GEMM
+    /// rows are independent with a fixed ascending-k reduction order
+    /// (`kernels::gemm`), `rms_norm_rows`/`swiglu_rows` are row-local,
+    /// and the attention kernel is literally shared — at every thread
+    /// count (pinned by `tests/serving_batch.rs`).
+    fn decode_batch(&self, ctxs: &mut [&mut DecodeCtx], last: &[i32]) -> Result<Vec<i32>> {
+        ensure!(
+            ctxs.len() == last.len(),
+            "decode_batch: {} contexts vs {} tokens",
+            ctxs.len(),
+            last.len()
+        );
+        let bsz = ctxs.len();
+        if bsz == 0 {
+            return Ok(Vec::new());
+        }
+        check_tokens(&self.cfg, last)?;
+        let cfg = &self.cfg;
+        let (dm, nh, kvh, hd, ff) = (cfg.d_model, cfg.heads, cfg.kv_heads, cfg.head_dim, cfg.d_ff);
+        let rep = nh / kvh;
+        let scale = 1.0 / (hd as f32).sqrt();
+        for ctx in ctxs.iter() {
+            ensure!(
+                ctx.kv_dims() == (cfg.layers, kvh, hd),
+                "decode context dims {:?} do not match model (layers={}, kv_heads={}, head_dim={})",
+                ctx.kv_dims(),
+                cfg.layers,
+                kvh,
+                hd
+            );
+        }
+        // Reserve every tail up front: all capacity errors surface
+        // before any state is touched, so a failed batch leaves every
+        // session's length unchanged.
+        for ctx in ctxs.iter_mut() {
+            ctx.reserve_one()?;
+        }
+        let lens: Vec<usize> = ctxs.iter().map(|c| c.len()).collect();
+
+        let params = self.params.borrow();
+        let w = Weights::split(&params);
+
+        let mut x = vec![0.0f32; bsz * dm];
+        for (i, &t) in last.iter().enumerate() {
+            x[i * dm..(i + 1) * dm]
+                .copy_from_slice(&w.embed[t as usize * dm..(t as usize + 1) * dm]);
+        }
+        let mut h1 = vec![0.0f32; bsz * dm];
+        let mut rstd = vec![0.0f32; bsz];
+        let mut q = vec![0.0f32; bsz * nh * hd];
+        let mut kb = vec![0.0f32; bsz * kvh * hd];
+        let mut vb = vec![0.0f32; bsz * kvh * hd];
+        let mut o = vec![0.0f32; bsz * nh * hd];
+        let mut mg = vec![0.0f32; bsz * ff];
+        let mut mu = vec![0.0f32; bsz * ff];
+
+        // Per-head dispatch floor at the mean session length (the floor
+        // only shapes the parallel split, never the values — rows are
+        // whole heads either way).
+        let mean_len = lens.iter().sum::<usize>() / bsz;
+        let head_cost = (mean_len + 1) * hd * 2;
+        let head_min_rows = ((1 << 15) / head_cost.max(1)).max(1);
+
+        for n in 0..cfg.layers {
+            let lw = w.layer(n);
+            rms_norm_rows(&x, lw.ln1, cfg.norm_eps, bsz, dm, &mut h1, &mut rstd);
+            gemm_nn(&h1, lw.wq, bsz, dm, nh * hd, &mut q);
+            gemm_nn(&h1, lw.wk, bsz, dm, kvh * hd, &mut kb);
+            gemm_nn(&h1, lw.wv, bsz, dm, kvh * hd, &mut vb);
+            for (i, &len) in lens.iter().enumerate() {
+                let pos = len as i64;
+                for h in 0..nh {
+                    let at = (i * nh + h) * hd;
+                    self.rope.rotate_head(&mut q[at..at + hd], pos);
+                }
+                for h in 0..kvh {
+                    let at = (i * kvh + h) * hd;
+                    self.rope.rotate_head(&mut kb[at..at + hd], pos);
+                }
+            }
+            for (i, ctx) in ctxs.iter_mut().enumerate() {
+                ctx.write_tail_row(
+                    n,
+                    &kb[i * kvh * hd..(i + 1) * kvh * hd],
+                    &vb[i * kvh * hd..(i + 1) * kvh * hd],
+                );
+            }
+            // Attention over all sessions' head rows in one dispatch;
+            // row r of `o` is (session r / heads, head r % heads).
+            let views: Vec<&DecodeCtx> = ctxs.iter().map(|c| &**c).collect();
+            let q_r = &q;
+            let views_r = &views;
+            par_rows(&mut o, hd, head_min_rows, |r0, chunk| {
+                let mut scores: Vec<f32> = Vec::new();
+                for (ri, ov) in chunk.chunks_mut(hd).enumerate() {
+                    let r = r0 + ri;
+                    let ctx = views_r[r / nh];
+                    let kh = (r % nh) / rep;
+                    let qv = &q_r[r * hd..(r + 1) * hd];
+                    scores.resize(ctx.len() + 1, 0.0);
+                    attend_ctx_head(ctx, n, kh, qv, scale, &mut scores, ov);
+                }
+            });
+            drop(views);
+            gemm_nn_acc(&o, lw.wo, bsz, nh * hd, dm, &mut x);
+
+            rms_norm_rows(&x, lw.ln2, cfg.norm_eps, bsz, dm, &mut h1, &mut rstd);
+            gemm_nn(&h1, lw.wg, bsz, dm, ff, &mut mg);
+            gemm_nn(&h1, lw.wu, bsz, dm, ff, &mut mu);
+            swiglu_rows(&mut mg, &mu);
+            gemm_nn_acc(&mg, lw.wd, bsz, ff, dm, &mut x);
+        }
+
+        let mut hf = vec![0.0f32; bsz * dm];
+        rms_norm_rows(&x, w.final_norm, cfg.norm_eps, bsz, dm, &mut hf, &mut rstd);
+        let mut logits = vec![0.0f32; bsz * cfg.vocab];
+        gemm_nt_acc(&hf, w.embed, bsz, dm, cfg.vocab, &mut logits);
+        for ctx in ctxs.iter_mut() {
+            ctx.advance_tail();
+        }
+        Ok((0..bsz)
+            .map(|i| argmax(&logits[i * cfg.vocab..(i + 1) * cfg.vocab]) as i32)
+            .collect())
     }
 
     fn train_step(
@@ -990,6 +1134,69 @@ mod tests {
             assert_eq!(&logits, want, "f32 decode_ctx drifted from the legacy decode");
             tok = crate::tensor::argmax(&logits) as i32;
         }
+    }
+
+    /// `decode_batch` must be bitwise identical to advancing each
+    /// session serially through `decode_ctx` — tokens and KV tails —
+    /// including sessions at different lengths and mixed KV tiers in
+    /// one batch. (The thread-count sweep lives in
+    /// `tests/serving_batch.rs`; this pins the single-process contract.)
+    #[test]
+    fn decode_batch_matches_serial_decode_ctx_bitwise() {
+        use crate::config::KvPrecision;
+        let b = backend();
+        let cap = b.decode_ctx_capacity().unwrap();
+        let prompts: [&[i32]; 3] = [&[1, 2, 3, 4, 5], &[6, 7], &[8, 9, 10, 11, 12, 13, 2, 1]];
+        let tiers = [KvPrecision::F32, KvPrecision::Int8, KvPrecision::Int4];
+        let build = |b: &NativeBackend| -> (Vec<DecodeCtx>, Vec<i32>) {
+            let mut ctxs = Vec::new();
+            let mut first = Vec::new();
+            for (toks, prec) in prompts.iter().zip(tiers) {
+                let pre = b.prefill_full(toks).unwrap();
+                first.push(argmax(&pre.last_logits) as i32);
+                ctxs.push(DecodeCtx::new(pre.k, pre.v, prec, cap).unwrap());
+            }
+            (ctxs, first)
+        };
+        // Serial reference: one session at a time.
+        let (mut serial, mut stok) = build(&b);
+        let mut serial_tokens: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+        for _ in 0..6 {
+            for (i, ctx) in serial.iter_mut().enumerate() {
+                let logits = b.decode_ctx(stok[i], ctx).unwrap();
+                stok[i] = argmax(&logits) as i32;
+                serial_tokens[i].push(stok[i]);
+            }
+        }
+        // Batched: all sessions per round through one dispatch.
+        let (mut batch, mut btok) = build(&b);
+        let mut batch_tokens: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+        for _ in 0..6 {
+            let mut refs: Vec<&mut DecodeCtx> = batch.iter_mut().collect();
+            let next = b.decode_batch(&mut refs, &btok).unwrap();
+            for (i, &t) in next.iter().enumerate() {
+                btok[i] = t;
+                batch_tokens[i].push(t);
+            }
+        }
+        assert_eq!(serial_tokens, batch_tokens, "batched tokens differ from serial");
+        for (s, bc) in serial.iter().zip(&batch) {
+            let (ks, vs) = s.to_dense(cap).unwrap();
+            let (kb, vb) = bc.to_dense(cap).unwrap();
+            assert_eq!(ks, kb, "batched K tail differs from serial");
+            assert_eq!(vs, vb, "batched V tail differs from serial");
+        }
+
+        // Validation: an empty batch is a no-op; a malformed batch
+        // errors before touching any session.
+        let mut none: Vec<&mut DecodeCtx> = Vec::new();
+        assert!(b.decode_batch(&mut none, &[]).unwrap().is_empty());
+        let len_before = batch[0].len();
+        let mut one: Vec<&mut DecodeCtx> = batch.iter_mut().take(1).collect();
+        assert!(b.decode_batch(&mut one, &[1, 2]).is_err(), "length mismatch must error");
+        assert!(b.decode_batch(&mut one, &[999]).is_err(), "bad token must error");
+        drop(one);
+        assert_eq!(batch[0].len(), len_before, "failed batch must not advance sessions");
     }
 
     #[test]

@@ -1,51 +1,86 @@
 //! TCP JSON-line serving front-end.
 //!
-//! Protocol: one JSON object per line.
+//! Protocol: one JSON object per line. A generation request:
 //!
-//! Request:
 //! ```json
 //! {"id": 1, "passages": ["doc a", "doc b"], "query": "what ...?",
 //!  "max_new_tokens": 16, "mode": "block"}
 //! ```
-//! Response:
+//!
+//! is answered with zero or more **token frames** as decode progresses,
+//!
+//! ```json
+//! {"id": 1, "token": 104}
+//! ```
+//!
+//! followed by exactly one final line carrying the full response:
+//!
 //! ```json
 //! {"id": 1, "text": "...", "ttft_ms": 12.3, "flops_tft": 1.2e9,
 //!  "cached_blocks": 2, "total_blocks": 2}
 //! ```
 //!
+//! Failures (parse errors, engine errors, an engine thread death) also
+//! terminate the exchange with exactly one line: `{"id": ..,
+//! "error": ".."}` — a client can always read until it sees a line with
+//! a `text` or `error` field. Error lines echo the request's `id`
+//! whenever one can be recovered from the input line. The literal line
+//! `stats` returns a one-line JSON summary of serving metrics, cache
+//! state, batching occupancy and kernel-pool counters.
+//!
 //! Architecture: the engine is `!Send`, so a dedicated **engine thread**
-//! owns the [`Coordinator`] and serves jobs from an mpsc channel;
-//! connection handlers (on the [`ThreadPool`]) parse requests, submit
-//! jobs and stream responses back — the vLLM-router shape at miniature
-//! scale. Python is nowhere in this path.
+//! owns the [`Coordinator`] and runs the **continuous-batching loop**:
+//! requests land in a bounded admission queue (bound =
+//! `BatchPolicy::queue_depth`; a full queue blocks `submit`, which is
+//! the client-facing backpressure), the loop admits at most one prefill
+//! per decode round under the [`BatchPolicy`] slot + token budgets, and
+//! every decode round advances *all* active sessions one token through
+//! a single `Backend::decode_batch` dispatch per layer. Connection
+//! handlers (on the [`ThreadPool`]) parse requests, submit jobs and
+//! stream frames back — the vLLM-router shape at miniature scale.
+//! Python is nowhere in this path.
+//!
+//! Determinism contract: a batched decode round is **bitwise identical**
+//! to decoding each session serially (see `Backend::decode_batch`), at
+//! every thread count and KV tier — so continuous batching changes
+//! throughput and latency, never output text.
 
-use crate::coordinator::{AttentionMode, Coordinator, Request, Response};
+use crate::coordinator::batcher::{BatchEvent, BatchPolicy, BatchRunner, Pending};
+use crate::coordinator::{AttentionMode, Coordinator, DecodeState, Request, Response};
 use crate::runtime::Backend;
 use crate::tokenizer::ByteTokenizer;
 use crate::util::json::Json;
 use crate::util::pool::ThreadPool;
 use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
+use std::time::Instant;
 
 /// A parsed wire request.
 pub fn parse_request(line: &str, tok: &ByteTokenizer) -> Result<Request> {
     let j = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
     let id = j.get("id").as_usize().unwrap_or(0) as u64;
     let mode = AttentionMode::parse(j.get("mode").as_str().unwrap_or("block"))?;
-    let passages = j
-        .get("passages")
-        .as_arr()
-        .unwrap_or(&[])
-        .iter()
-        .filter_map(|p| p.as_str())
-        .map(|p| {
-            let mut ids = tok.encode(p);
-            ids.push(crate::tokenizer::SEP);
-            ids
-        })
-        .collect();
+    let passages_j = j.get("passages");
+    let passages: Vec<Vec<i32>> = match passages_j {
+        Json::Null => Vec::new(),
+        _ => passages_j
+            .as_arr()
+            .ok_or_else(|| anyhow!("'passages' must be an array of strings"))?
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let text = p
+                    .as_str()
+                    .ok_or_else(|| anyhow!("passages[{i}] is not a string (got {p})"))?;
+                let mut ids = tok.encode(text);
+                ids.push(crate::tokenizer::SEP);
+                Ok(ids)
+            })
+            .collect::<Result<_>>()?,
+    };
     let query_text = j.req_str("query")?;
     let mut query = vec![crate::tokenizer::QRY];
     query.extend(tok.encode(query_text));
@@ -58,7 +93,7 @@ pub fn parse_request(line: &str, tok: &ByteTokenizer) -> Result<Request> {
     })
 }
 
-/// Serialize a response line.
+/// Serialize the final response line.
 pub fn format_response(resp: &Response, tok: &ByteTokenizer) -> String {
     Json::obj(vec![
         ("id", Json::num(resp.id as f64)),
@@ -73,6 +108,15 @@ pub fn format_response(resp: &Response, tok: &ByteTokenizer) -> String {
     .to_string()
 }
 
+/// Serialize one streamed token frame.
+pub fn format_token_frame(id: u64, token: i32) -> String {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("token", Json::num(token as f64)),
+    ])
+    .to_string()
+}
+
 fn format_error(id: u64, err: &str) -> String {
     Json::obj(vec![
         ("id", Json::num(id as f64)),
@@ -81,32 +125,62 @@ fn format_error(id: u64, err: &str) -> String {
     .to_string()
 }
 
+/// Best-effort request id of a line that failed [`parse_request`]: when
+/// the line is still parsable JSON carrying a numeric `id` (e.g. a
+/// request with a malformed `passages` field), error lines echo it so
+/// the client can correlate; otherwise 0.
+pub fn request_id_hint(line: &str) -> u64 {
+    Json::parse(line)
+        .map(|j| j.get("id").as_usize().unwrap_or(0) as u64)
+        .unwrap_or(0)
+}
+
+/// One line of a streamed reply: intermediate token frames, then
+/// exactly one `Final` (full response or error).
+#[derive(Debug)]
+pub enum Frame {
+    Token(String),
+    Final(String),
+}
+
 enum Job {
-    Generate(Request, mpsc::Sender<String>),
+    /// A generation request, its arrival time (TTFT is charged from
+    /// here, including any time spent blocked on the full admission
+    /// queue) and the per-request reply channel.
+    Generate(Request, Instant, mpsc::Sender<Frame>),
     Stats(mpsc::Sender<String>),
 }
 
 /// Handle to the engine thread.
 #[derive(Clone)]
 pub struct EngineHandle {
-    tx: mpsc::Sender<Job>,
+    tx: mpsc::SyncSender<Job>,
 }
 
 impl EngineHandle {
-    /// Spawn the engine thread around a coordinator factory. The factory
-    /// runs *on* the engine thread: backends need not be `Send` (the
-    /// PJRT engine wraps raw C pointers), so the coordinator is built
-    /// where it lives.
+    /// Spawn the engine thread around a coordinator factory, with the
+    /// batching policy resolved from the environment. The factory runs
+    /// *on* the engine thread: backends need not be `Send` (the PJRT
+    /// engine wraps raw C pointers), so the coordinator is built where
+    /// it lives.
     pub fn spawn<B: Backend + 'static>(
         make: impl FnOnce() -> Result<Coordinator<B>> + Send + 'static,
     ) -> Result<EngineHandle> {
-        let (tx, rx) = mpsc::channel::<Job>();
+        Self::spawn_with_policy(make, BatchPolicy::from_env())
+    }
+
+    /// [`Self::spawn`] with an explicit batching policy (the `serve`
+    /// CLI resolves flags > env > defaults via `BatchPolicy::resolve`).
+    pub fn spawn_with_policy<B: Backend + 'static>(
+        make: impl FnOnce() -> Result<Coordinator<B>> + Send + 'static,
+        policy: BatchPolicy,
+    ) -> Result<EngineHandle> {
+        let (tx, rx) = mpsc::sync_channel::<Job>(policy.queue_depth);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         std::thread::Builder::new()
             .name("block-attn-engine".into())
             .spawn(move || {
-                let tok = ByteTokenizer::new();
-                let mut coord = match make() {
+                let coord = match make() {
                     Ok(c) => {
                         let _ = ready_tx.send(Ok(()));
                         c
@@ -116,57 +190,35 @@ impl EngineHandle {
                         return;
                     }
                 };
-                while let Ok(job) = rx.recv() {
-                    match job {
-                        Job::Generate(req, out) => {
-                            let id = req.id;
-                            let line = match coord.process(&req) {
-                                Ok(resp) => format_response(&resp, &tok),
-                                Err(e) => format_error(id, &format!("{e:#}")),
-                            };
-                            let _ = out.send(line);
-                        }
-                        Job::Stats(out) => {
-                            let s = coord.cache_stats();
-                            let ps = crate::kernels::pool_stats();
-                            let m = &coord.metrics;
-                            let line = Json::obj(vec![
-                                ("metrics", Json::str(m.report())),
-                                ("block_prefill_p50_ms", Json::num(m.block_prefill_p50_ms())),
-                                ("cache_entries", Json::num(s.entries as f64)),
-                                ("cache_bytes", Json::num(s.bytes as f64)),
-                                ("cache_bytes_saved", Json::num(s.bytes_saved as f64)),
-                                ("cache_bytes_saved_int8", Json::num(s.bytes_saved_int8 as f64)),
-                                ("cache_bytes_saved_int4", Json::num(s.bytes_saved_int4 as f64)),
-                                ("cache_hits", Json::num(s.hits as f64)),
-                                ("cache_misses", Json::num(s.misses as f64)),
-                                ("cache_evictions", Json::num(s.evictions as f64)),
-                                ("cache_hit_rate", Json::num(s.hit_rate())),
-                                ("cache_quant_rel_err", Json::num(s.quant_rel_err())),
-                                ("kv_precision", Json::str(coord.kv_precision().as_str())),
-                                ("threads", Json::num(crate::kernels::num_threads() as f64)),
-                                ("pool_workers", Json::num(ps.workers as f64)),
-                                ("pool_jobs_executed", Json::num(ps.jobs_executed as f64)),
-                                ("pool_jobs_panicked", Json::num(ps.jobs_panicked as f64)),
-                                ("pool_queue_peak", Json::num(ps.queue_peak as f64)),
-                            ])
-                            .to_string();
-                            let _ = out.send(line);
-                        }
-                    }
-                }
+                engine_loop(coord, rx, policy);
             })?;
         ready_rx.recv().map_err(|_| anyhow!("engine thread died"))??;
         Ok(EngineHandle { tx })
     }
 
-    /// Synchronous generate (used by connection handlers and tests).
-    pub fn generate(&self, req: Request) -> Result<String> {
+    /// Submit a request; returns the receiver of its streamed
+    /// [`Frame`]s. Blocks while the engine's admission queue is full
+    /// (backpressure). The stream ends with a `Final` frame; a receiver
+    /// that disconnects without one means the engine thread died.
+    pub fn submit(&self, req: Request) -> Result<mpsc::Receiver<Frame>> {
         let (tx, rx) = mpsc::channel();
         self.tx
-            .send(Job::Generate(req, tx))
+            .send(Job::Generate(req, Instant::now(), tx))
             .map_err(|_| anyhow!("engine gone"))?;
-        rx.recv().map_err(|_| anyhow!("engine gone"))
+        Ok(rx)
+    }
+
+    /// Synchronous generate: submit, discard intermediate token frames
+    /// and return the final line (used by tests and non-streaming
+    /// tools).
+    pub fn generate(&self, req: Request) -> Result<String> {
+        let rx = self.submit(req)?;
+        for frame in rx {
+            if let Frame::Final(line) = frame {
+                return Ok(line);
+            }
+        }
+        Err(anyhow!("engine thread died mid-request"))
     }
 
     pub fn stats(&self) -> Result<String> {
@@ -176,6 +228,125 @@ impl EngineHandle {
             .map_err(|_| anyhow!("engine gone"))?;
         rx.recv().map_err(|_| anyhow!("engine gone"))
     }
+}
+
+/// The continuous-batching engine loop. Owns the coordinator for the
+/// thread's lifetime: ingest jobs (blocking only when idle), admit at
+/// most one prefill per round, then advance every active session one
+/// token through a single batched decode dispatch. Exits when every
+/// handle is dropped and the remaining work has drained.
+fn engine_loop<B: Backend>(
+    mut coord: Coordinator<B>,
+    rx: mpsc::Receiver<Job>,
+    policy: BatchPolicy,
+) {
+    let tok = ByteTokenizer::new();
+    let mut runner: BatchRunner<DecodeState, mpsc::Sender<Frame>> = BatchRunner::new(policy);
+    let mut queue: VecDeque<Pending<mpsc::Sender<Frame>>> = VecDeque::new();
+    let mut disconnected = false;
+
+    loop {
+        // Ingest. Park on the channel only when there is nothing to
+        // decode; under load, just drain whatever arrived while the
+        // last round ran.
+        let mut jobs: Vec<Job> = Vec::new();
+        if queue.is_empty() && !runner.has_active() && !disconnected {
+            match rx.recv() {
+                Ok(j) => jobs.push(j),
+                Err(_) => disconnected = true,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(j) => jobs.push(j),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        for job in jobs {
+            match job {
+                Job::Generate(req, arrived, out) => {
+                    queue.push_back(Pending { req, arrived, tag: out });
+                }
+                Job::Stats(out) => {
+                    let _ = out.send(stats_line(
+                        &coord,
+                        runner.policy(),
+                        runner.active_len(),
+                        queue.len(),
+                    ));
+                }
+            }
+        }
+
+        // Schedule: one admission, then a decode round for everyone.
+        // A dropped client receiver just discards that request's
+        // remaining frames; its session still decodes to completion.
+        let mut sink = |ev: BatchEvent<mpsc::Sender<Frame>>| match ev {
+            BatchEvent::Token { tag, id, token } => {
+                let _ = tag.send(Frame::Token(format_token_frame(id, token)));
+            }
+            BatchEvent::Done { tag, resp } => {
+                let _ = tag.send(Frame::Final(format_response(&resp, &tok)));
+            }
+            BatchEvent::Failed { tag, id, error } => {
+                let _ = tag.send(Frame::Final(format_error(id, &error)));
+            }
+        };
+        if queue.front().map(|p| runner.can_admit(&p.req)).unwrap_or(false) {
+            let p = queue.pop_front().unwrap();
+            runner.admit(&mut coord, p, &mut sink);
+        }
+        runner.decode_round(&mut coord, &mut sink);
+
+        if disconnected && queue.is_empty() && !runner.has_active() {
+            return;
+        }
+    }
+}
+
+/// The one-line JSON `stats` reply: serving metrics, cache state,
+/// batching state and kernel-pool counters.
+fn stats_line<B: Backend>(
+    coord: &Coordinator<B>,
+    policy: &BatchPolicy,
+    active: usize,
+    queued: usize,
+) -> String {
+    let s = coord.cache_stats();
+    let ps = crate::kernels::pool_stats();
+    let m = &coord.metrics;
+    Json::obj(vec![
+        ("metrics", Json::str(m.report())),
+        ("block_prefill_p50_ms", Json::num(m.block_prefill_p50_ms())),
+        ("cache_entries", Json::num(s.entries as f64)),
+        ("cache_bytes", Json::num(s.bytes as f64)),
+        ("cache_bytes_saved", Json::num(s.bytes_saved as f64)),
+        ("cache_bytes_saved_int8", Json::num(s.bytes_saved_int8 as f64)),
+        ("cache_bytes_saved_int4", Json::num(s.bytes_saved_int4 as f64)),
+        ("cache_hits", Json::num(s.hits as f64)),
+        ("cache_misses", Json::num(s.misses as f64)),
+        ("cache_evictions", Json::num(s.evictions as f64)),
+        ("cache_hit_rate", Json::num(s.hit_rate())),
+        ("cache_quant_rel_err", Json::num(s.quant_rel_err())),
+        ("kv_precision", Json::str(coord.kv_precision().as_str())),
+        ("threads", Json::num(crate::kernels::num_threads() as f64)),
+        ("pool_workers", Json::num(ps.workers as f64)),
+        ("pool_jobs_executed", Json::num(ps.jobs_executed as f64)),
+        ("pool_jobs_panicked", Json::num(ps.jobs_panicked as f64)),
+        ("pool_queue_peak", Json::num(ps.queue_peak as f64)),
+        ("batch_max_active", Json::num(policy.max_active as f64)),
+        ("batch_max_active_tokens", Json::num(policy.max_active_tokens as f64)),
+        ("batch_queue_depth", Json::num(policy.queue_depth as f64)),
+        ("active_requests", Json::num(active as f64)),
+        ("queued_requests", Json::num(queued as f64)),
+        ("decode_rounds", Json::num(m.decode_rounds as f64)),
+        ("batch_occupancy", Json::num(m.batch_occupancy())),
+    ])
+    .to_string()
 }
 
 /// Serve forever on `addr` (e.g. "127.0.0.1:7841").
@@ -195,6 +366,13 @@ pub fn serve(addr: &str, handle: EngineHandle, workers: usize) -> Result<()> {
     Ok(())
 }
 
+fn write_line(w: &mut impl Write, line: &str) -> Result<()> {
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()?;
+    Ok(())
+}
+
 fn handle_conn(stream: TcpStream, handle: EngineHandle) -> Result<()> {
     let tok = ByteTokenizer::new();
     let mut writer = stream.try_clone()?;
@@ -204,17 +382,52 @@ fn handle_conn(stream: TcpStream, handle: EngineHandle) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let out = if line.trim() == "stats" {
-            handle.stats()?
-        } else {
-            match parse_request(&line, &tok) {
-                Ok(req) => handle.generate(req)?,
-                Err(e) => format_error(0, &format!("{e:#}")),
+        if line.trim() == "stats" {
+            let out = handle
+                .stats()
+                .unwrap_or_else(|e| format_error(0, &format!("{e:#}")));
+            write_line(&mut writer, &out)?;
+            continue;
+        }
+        let req = match parse_request(&line, &tok) {
+            Ok(req) => req,
+            Err(e) => {
+                // Echo the client's id when the line is recoverable
+                // JSON, so errors can be correlated with requests.
+                write_line(
+                    &mut writer,
+                    &format_error(request_id_hint(&line), &format!("{e:#}")),
+                )?;
+                continue;
             }
         };
-        writer.write_all(out.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        let id = req.id;
+        match handle.submit(req) {
+            Err(e) => write_line(&mut writer, &format_error(id, &format!("{e:#}")))?,
+            Ok(rx) => {
+                // Stream frames until the final line. If the engine
+                // thread dies mid-request the frame stream ends without
+                // a `Final`; the client still gets a clean JSON error
+                // line instead of an aborted socket.
+                let mut finished = false;
+                for frame in rx {
+                    match frame {
+                        Frame::Token(l) => write_line(&mut writer, &l)?,
+                        Frame::Final(l) => {
+                            write_line(&mut writer, &l)?;
+                            finished = true;
+                            break;
+                        }
+                    }
+                }
+                if !finished {
+                    write_line(
+                        &mut writer,
+                        &format_error(id, "engine thread died mid-request"),
+                    )?;
+                }
+            }
+        }
     }
     Ok(())
 }
@@ -222,6 +435,9 @@ fn handle_conn(stream: TcpStream, handle: EngineHandle) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{KvPrecision, ModelConfig, ParamSpec};
+    use crate::runtime::{DecodeOut, NativeBackend, PrefillFinalOut, PrefillFullOut, TrainOut};
+    use crate::tensor::{TensorF, TensorI};
 
     #[test]
     fn parse_request_roundtrip() {
@@ -246,6 +462,33 @@ mod tests {
     }
 
     #[test]
+    fn parse_rejects_non_string_passage_entries() {
+        // Pre-fix, `filter_map` silently dropped non-string entries and
+        // served the request with part of its context missing.
+        let tok = ByteTokenizer::new();
+        let err =
+            parse_request(r#"{"id": 7, "passages": ["ok", 42], "query": "q"}"#, &tok).unwrap_err();
+        assert!(
+            format!("{err}").contains("passages[1]"),
+            "error must name the offending entry: {err}"
+        );
+        let err = parse_request(r#"{"id": 7, "passages": "nope", "query": "q"}"#, &tok)
+            .unwrap_err();
+        assert!(format!("{err}").contains("passages"));
+        // Absent passages stay legal (query-only request).
+        assert!(parse_request(r#"{"id": 7, "query": "q"}"#, &tok).is_ok());
+    }
+
+    #[test]
+    fn error_lines_can_echo_the_request_id() {
+        // Valid JSON failing request validation: the id is recoverable.
+        assert_eq!(request_id_hint(r#"{"id": 7, "passages": [1], "query": "q"}"#), 7);
+        // Unparsable input: fall back to 0.
+        assert_eq!(request_id_hint("not json"), 0);
+        assert_eq!(request_id_hint(r#"{"passages": [], "query": "q"}"#), 0);
+    }
+
+    #[test]
     fn response_is_valid_json() {
         let tok = ByteTokenizer::new();
         let resp = Response {
@@ -264,5 +507,241 @@ mod tests {
         assert_eq!(j.get("cached_blocks").as_i64(), Some(2));
         assert!((j.get("ttft_ms").as_f64().unwrap() - 12.3).abs() < 0.01);
         assert!((j.get("block_prefill_ms").as_f64().unwrap() - 4.2).abs() < 0.01);
+    }
+
+    #[test]
+    fn token_frame_is_valid_json() {
+        let j = Json::parse(&format_token_frame(5, 104)).unwrap();
+        assert_eq!(j.get("id").as_i64(), Some(5));
+        assert_eq!(j.get("token").as_i64(), Some(104));
+    }
+
+    fn tiny_coordinator() -> Result<Coordinator<NativeBackend>> {
+        let cfg = ModelConfig::builtin("tiny").unwrap();
+        Ok(Coordinator::with_kv_precision(
+            NativeBackend::new(cfg, 0xB10C),
+            32 << 20,
+            KvPrecision::F32,
+        ))
+    }
+
+    /// The live engine loop (admission queue + batched decode rounds)
+    /// must produce exactly the text the serial `Coordinator::process`
+    /// path produces — continuous batching is a scheduling decision,
+    /// never an output one.
+    #[test]
+    fn engine_loop_matches_serial_processing() {
+        let lines = [
+            r#"{"id": 1, "passages": ["alpha doc", "beta doc"], "query": "one?", "max_new_tokens": 6}"#,
+            r#"{"id": 2, "passages": ["beta doc", "gamma doc"], "query": "two?", "max_new_tokens": 6}"#,
+            r#"{"id": 3, "passages": ["alpha doc"], "query": "three?", "max_new_tokens": 6}"#,
+        ];
+        let tok = ByteTokenizer::new();
+
+        let mut serial = tiny_coordinator().unwrap();
+        let expect: Vec<String> = lines
+            .iter()
+            .map(|l| {
+                let req = parse_request(l, &tok).unwrap();
+                let resp = serial.process(&req).unwrap();
+                tok.decode_until_eos(&resp.tokens)
+            })
+            .collect();
+
+        let policy =
+            BatchPolicy { max_active: 4, max_active_tokens: 4096, ..BatchPolicy::default() };
+        let handle = EngineHandle::spawn_with_policy(tiny_coordinator, policy).unwrap();
+        // Submit everything before draining so the sessions really
+        // overlap inside the engine loop.
+        let rxs: Vec<_> = lines
+            .iter()
+            .map(|l| handle.submit(parse_request(l, &tok).unwrap()).unwrap())
+            .collect();
+        for (rx, want) in rxs.into_iter().zip(&expect) {
+            let mut text = None;
+            let mut streamed = 0usize;
+            for frame in rx {
+                match frame {
+                    Frame::Token(line) => {
+                        assert!(
+                            Json::parse(&line).unwrap().get("token").as_i64().is_some(),
+                            "bad token frame: {line}"
+                        );
+                        streamed += 1;
+                    }
+                    Frame::Final(line) => {
+                        let j = Json::parse(&line).unwrap();
+                        text = Some(j.get("text").as_str().unwrap().to_string());
+                        break;
+                    }
+                }
+            }
+            assert!(streamed >= 1, "no token frames streamed");
+            assert_eq!(text.as_deref(), Some(want.as_str()), "batched decode diverged");
+        }
+    }
+
+    /// A backend that panics mid-prefill when it sees the byte sequence
+    /// "BOOM" — simulates an engine-thread death under a live request.
+    struct PanickyBackend(NativeBackend);
+
+    const BOOM: [i32; 4] = [66, 79, 79, 77];
+
+    impl Backend for PanickyBackend {
+        fn config(&self) -> &ModelConfig {
+            self.0.config()
+        }
+        fn param_specs(&self) -> &[ParamSpec] {
+            self.0.param_specs()
+        }
+        fn set_params(&self, tensors: Vec<TensorF>) -> Result<()> {
+            self.0.set_params(tensors)
+        }
+        fn params_host(&self) -> Result<Vec<TensorF>> {
+            self.0.params_host()
+        }
+        fn reset_opt_state(&self) {
+            self.0.reset_opt_state()
+        }
+        fn prefill_full(&self, tokens: &[i32]) -> Result<PrefillFullOut> {
+            assert!(
+                !tokens.windows(4).any(|w| *w == BOOM),
+                "poison prompt hit the engine"
+            );
+            self.0.prefill_full(tokens)
+        }
+        fn prefill_block(&self, tokens: &[i32]) -> Result<(TensorF, TensorF)> {
+            self.0.prefill_block(tokens)
+        }
+        fn prefill_final_at(
+            &self,
+            tokens: &[i32],
+            past_k: &TensorF,
+            past_v: &TensorF,
+            past_len: usize,
+            q_pos0: usize,
+        ) -> Result<PrefillFinalOut> {
+            self.0.prefill_final_at(tokens, past_k, past_v, past_len, q_pos0)
+        }
+        fn decode(
+            &self,
+            token: i32,
+            k_cache: &TensorF,
+            v_cache: &TensorF,
+            cache_len: usize,
+        ) -> Result<DecodeOut> {
+            self.0.decode(token, k_cache, v_cache, cache_len)
+        }
+        fn train_step(
+            &self,
+            step: usize,
+            lr: f32,
+            tokens: &TensorI,
+            seg: &TensorI,
+            loss_mask: &TensorF,
+        ) -> Result<TrainOut> {
+            self.0.train_step(step, lr, tokens, seg, loss_mask)
+        }
+        fn final_ctx_capacity(&self, ctx_len: usize) -> Result<usize> {
+            self.0.final_ctx_capacity(ctx_len)
+        }
+        fn final_q_capacity(&self) -> Result<usize> {
+            self.0.final_q_capacity()
+        }
+        fn decode_ctx_capacity(&self) -> Result<usize> {
+            self.0.decode_ctx_capacity()
+        }
+        fn max_block_tokens(&self) -> Result<usize> {
+            self.0.max_block_tokens()
+        }
+        fn train_shape(&self) -> Result<(usize, usize)> {
+            self.0.train_shape()
+        }
+    }
+
+    /// A request in flight when the engine thread dies must still yield
+    /// a clean JSON error line over the socket (pre-fix, `handle_conn`
+    /// aborted the connection via `?`). Also pins error-line id echoing
+    /// end to end.
+    #[test]
+    fn conn_gets_clean_error_line_when_engine_dies() {
+        let handle = EngineHandle::spawn(|| {
+            let cfg = ModelConfig::builtin("tiny").unwrap();
+            Ok(Coordinator::with_kv_precision(
+                PanickyBackend(NativeBackend::new(cfg, 0xB10C)),
+                16 << 20,
+                KvPrecision::F32,
+            ))
+        })
+        .unwrap();
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let _ = handle_conn(stream, handle);
+        });
+
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+
+        // 1. Malformed request (non-string passage): the error line
+        //    echoes the client's id instead of 0.
+        writeln!(writer, r#"{{"id": 7, "passages": [1], "query": "q"}}"#).unwrap();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("id").as_i64(), Some(7), "line: {line}");
+        assert!(j.get("error").as_str().unwrap().contains("passages[0]"), "line: {line}");
+
+        // 2. A healthy request streams frames and a final line.
+        line.clear();
+        writeln!(
+            writer,
+            r#"{{"id": 8, "passages": [], "query": "hi", "mode": "full", "max_new_tokens": 2}}"#
+        )
+        .unwrap();
+        let mut saw_final = false;
+        while reader.read_line(&mut line).unwrap() > 0 {
+            let j = Json::parse(line.trim()).unwrap();
+            if j.get("text").as_str().is_some() {
+                assert_eq!(j.get("id").as_i64(), Some(8));
+                saw_final = true;
+                break;
+            }
+            assert!(j.get("token").as_i64().is_some(), "unexpected frame: {line}");
+            line.clear();
+        }
+        assert!(saw_final, "healthy request never finished");
+
+        // 3. Poison request: the engine thread panics mid-prefill. The
+        //    client must get a clean JSON error line, not a dead socket.
+        line.clear();
+        writeln!(
+            writer,
+            r#"{{"id": 9, "passages": [], "query": "BOOM", "mode": "full", "max_new_tokens": 2}}"#
+        )
+        .unwrap();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("id").as_i64(), Some(9), "line: {line}");
+        assert!(j.get("error").as_str().is_some(), "line: {line}");
+
+        // 4. The engine is gone; later requests error cleanly too.
+        line.clear();
+        writeln!(
+            writer,
+            r#"{{"id": 10, "passages": [], "query": "hi", "mode": "full", "max_new_tokens": 2}}"#
+        )
+        .unwrap();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("id").as_i64(), Some(10), "line: {line}");
+        assert!(j.get("error").as_str().is_some(), "line: {line}");
+
+        drop(writer);
+        drop(reader);
+        server.join().unwrap();
     }
 }

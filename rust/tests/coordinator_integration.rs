@@ -114,7 +114,7 @@ fn continuous_batching_serves_a_closed_set() {
     let out = run_batch(
         &mut coord,
         reqs,
-        &BatchPolicy { max_active: 3, max_active_tokens: 2048 },
+        &BatchPolicy { max_active: 3, max_active_tokens: 2048, ..BatchPolicy::default() },
     )
     .unwrap();
     assert_eq!(out.len(), 6);
@@ -270,7 +270,7 @@ mod xla_artifacts {
         let out = run_batch(
             &mut coord,
             reqs,
-            &BatchPolicy { max_active: 2, max_active_tokens: 2048 },
+            &BatchPolicy { max_active: 2, max_active_tokens: 2048, ..BatchPolicy::default() },
         )
         .unwrap();
         assert_eq!(out.len(), 4);

@@ -1,0 +1,270 @@
+//! Continuous-batching determinism: batching decode is a **pure
+//! performance decision**, never an accuracy one.
+//!
+//! Two layers of the contract are pinned here, both across the kernel
+//! thread-budget sweep and across KV tiers:
+//!
+//! * [`Backend::decode_batch`] — one batched round over N in-flight
+//!   [`DecodeCtx`] sessions must be bitwise identical (tokens *and*
+//!   dense KV) to stepping each session serially through
+//!   [`Backend::decode_ctx`], including mixed-tier batches where f32,
+//!   int8 and int4 sessions share one dispatch.
+//! * `run_batch` — the continuous-batching scheduler over a request
+//!   stream with cache hits and multi-block prompts must emit exactly
+//!   the tokens of a serial `Coordinator::process` loop.
+//!
+//! The unit-level contract (single thread count) is pinned next to the
+//! fused implementation in `runtime::native`; this file owns the
+//! end-to-end sweep.
+
+use block_attn::config::KvPrecision;
+use block_attn::coordinator::batcher::{run_batch, BatchPolicy};
+use block_attn::coordinator::{AttentionMode, Coordinator, Request};
+use block_attn::kernels::set_threads;
+use block_attn::runtime::{DecodeCtx, NativeBackend};
+use block_attn::tensor::{argmax, TensorF};
+use block_attn::util::rng::Rng;
+use block_attn::{Backend, ModelConfig};
+use std::sync::Mutex;
+
+/// The budget sweep: serial, an odd non-divisible width, and a wide
+/// power of two (mirrors `tests/threads_determinism.rs`).
+const THREAD_SWEEP: [usize; 3] = [1, 3, 8];
+
+/// Decode rounds per comparison — enough to cross the sessions' first
+/// tail rows and make any drift compound visibly.
+const STEPS: usize = 10;
+
+/// Every test here flips the process-global thread budget; serialize so
+/// concurrent tests cannot mask a thread-count dependence.
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn micro_config() -> ModelConfig {
+    ModelConfig {
+        name: "micro".into(),
+        vocab: 24,
+        d_model: 16,
+        layers: 2,
+        heads: 2,
+        kv_heads: 1,
+        head_dim: 8,
+        d_ff: 32,
+        rope_theta: 10000.0,
+        norm_eps: 1e-5,
+        max_len: 256,
+    }
+}
+
+/// Four prompts of different lengths, so the batch always holds
+/// sessions at different context sizes (the ragged case the fused GEMM
+/// rows must keep independent).
+fn session_prompts() -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(0xABE);
+    (0..4)
+        .map(|i| (0..(4 + i * 3)).map(|_| rng.below(24) as i32).collect())
+        .collect()
+}
+
+/// Full-prefill each prompt into a [`DecodeCtx`] at its tier; return
+/// the contexts plus each session's first greedy token.
+fn build_sessions(engine: &NativeBackend, tiers: &[KvPrecision; 4]) -> (Vec<DecodeCtx>, Vec<i32>) {
+    let cap = engine.decode_ctx_capacity().expect("decode capacity");
+    let mut ctxs = Vec::new();
+    let mut first = Vec::new();
+    for (toks, &prec) in session_prompts().iter().zip(tiers) {
+        let pre = engine.prefill_full(toks).expect("prefill");
+        first.push(argmax(&pre.last_logits) as i32);
+        ctxs.push(DecodeCtx::new(pre.k, pre.v, prec, cap).expect("ctx"));
+    }
+    (ctxs, first)
+}
+
+type SessionOut = (Vec<Vec<i32>>, Vec<(TensorF, TensorF)>);
+
+/// The reference: each session stepped one at a time through
+/// `decode_ctx` at a single kernel thread.
+fn serial_reference(engine: &NativeBackend, tiers: &[KvPrecision; 4]) -> SessionOut {
+    set_threads(1);
+    let cap = engine.decode_ctx_capacity().expect("decode capacity");
+    let (mut ctxs, mut last) = build_sessions(engine, tiers);
+    let mut tokens = vec![Vec::new(); ctxs.len()];
+    for _ in 0..STEPS {
+        for (i, ctx) in ctxs.iter_mut().enumerate() {
+            let logits = engine.decode_ctx(last[i], ctx).expect("decode_ctx");
+            last[i] = argmax(&logits) as i32;
+            tokens[i].push(last[i]);
+        }
+    }
+    let kv = ctxs
+        .iter()
+        .map(|c| c.to_dense(cap).expect("to_dense"))
+        .collect();
+    (tokens, kv)
+}
+
+/// The candidate: all sessions advanced per round through one
+/// `decode_batch` dispatch at the given thread budget.
+fn batched_run(engine: &NativeBackend, tiers: &[KvPrecision; 4], threads: usize) -> SessionOut {
+    set_threads(threads);
+    let cap = engine.decode_ctx_capacity().expect("decode capacity");
+    let (mut ctxs, mut last) = build_sessions(engine, tiers);
+    let mut tokens = vec![Vec::new(); ctxs.len()];
+    for _ in 0..STEPS {
+        let mut refs: Vec<&mut DecodeCtx> = ctxs.iter_mut().collect();
+        let next = engine.decode_batch(&mut refs, &last).expect("decode_batch");
+        for (i, &t) in next.iter().enumerate() {
+            last[i] = t;
+            tokens[i].push(t);
+        }
+    }
+    let kv = ctxs
+        .iter()
+        .map(|c| c.to_dense(cap).expect("to_dense"))
+        .collect();
+    (tokens, kv)
+}
+
+/// Pin bitwise equality — tokens and dense KV — between the serial
+/// reference and the batched run at every budget in the sweep.
+fn assert_batched_matches_serial(tiers: &[KvPrecision; 4]) {
+    let engine = NativeBackend::new(micro_config(), 0xD15C);
+    let (want_tokens, want_kv) = serial_reference(&engine, tiers);
+    assert!(want_tokens.iter().all(|t| t.len() == STEPS));
+    for &threads in &THREAD_SWEEP {
+        let (tokens, kv) = batched_run(&engine, tiers, threads);
+        assert_eq!(
+            want_tokens, tokens,
+            "{tiers:?}: batched tokens differ from serial at {threads} threads"
+        );
+        for (i, ((ks, vs), (kb, vb))) in want_kv.iter().zip(&kv).enumerate() {
+            assert_eq!(ks, kb, "session {i}: batched K differs from serial at {threads} threads");
+            assert_eq!(vs, vb, "session {i}: batched V differs from serial at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn decode_batch_bitwise_identical_f32() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = block_attn::kernels::num_threads();
+    assert_batched_matches_serial(&[KvPrecision::F32; 4]);
+    set_threads(prev);
+}
+
+#[test]
+fn decode_batch_bitwise_identical_int8() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = block_attn::kernels::num_threads();
+    assert_batched_matches_serial(&[KvPrecision::Int8; 4]);
+    set_threads(prev);
+}
+
+#[test]
+fn decode_batch_bitwise_identical_int4() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = block_attn::kernels::num_threads();
+    assert_batched_matches_serial(&[KvPrecision::Int4; 4]);
+    set_threads(prev);
+}
+
+/// A single batch mixing all three tiers: the per-session attention
+/// reads different storage formats, but the shared GEMM rows and the
+/// per-session kernels must still reproduce the serial stream exactly.
+#[test]
+fn decode_batch_bitwise_identical_mixed_tiers() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = block_attn::kernels::num_threads();
+    assert_batched_matches_serial(&[
+        KvPrecision::F32,
+        KvPrecision::Int8,
+        KvPrecision::Int4,
+        KvPrecision::Int8,
+    ]);
+    set_threads(prev);
+}
+
+/// A request stream with shared blocks (cache hits on later requests),
+/// fresh blocks (concurrent misses) and mixed attention modes — the
+/// shapes the scheduler actually serves.
+fn request_stream() -> Vec<Request> {
+    let mut rng = Rng::new(41);
+    let mut block = |len: usize| -> Vec<i32> {
+        (0..len).map(|_| rng.below(24) as i32).collect()
+    };
+    let shared = block(10);
+    let mut reqs = Vec::new();
+    for (i, mode) in [
+        AttentionMode::Block,
+        AttentionMode::Full,
+        AttentionMode::Block,
+        AttentionMode::BlockNoReencode,
+        AttentionMode::Block,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let blocks = match i {
+            0 => vec![shared.clone(), block(6)],
+            1 => vec![block(9)],
+            _ => vec![shared.clone(), block(5), block(7)],
+        };
+        reqs.push(Request {
+            id: i as u64,
+            blocks,
+            query: block(8),
+            max_new_tokens: 6,
+            mode,
+        });
+    }
+    reqs
+}
+
+fn serve_stream_batched(
+    threads: usize,
+    precision: KvPrecision,
+    policy: &BatchPolicy,
+) -> Vec<(u64, Vec<i32>)> {
+    set_threads(threads);
+    let engine = NativeBackend::new(micro_config(), 0xD15C);
+    let mut coord = Coordinator::with_kv_precision(engine, 64 << 20, precision);
+    let mut out: Vec<(u64, Vec<i32>)> = run_batch(&mut coord, request_stream(), policy)
+        .expect("run_batch")
+        .into_iter()
+        .map(|r| (r.id, r.tokens))
+        .collect();
+    out.sort_by_key(|(id, _)| *id);
+    out
+}
+
+/// The scheduler path end to end: `run_batch` (FIFO admission, one
+/// prefill per round, batched decode) must emit exactly the tokens of
+/// a serial `process` loop over the same stream — per tier, at every
+/// thread budget.
+#[test]
+fn run_batch_matches_serial_process_across_threads_and_tiers() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = block_attn::kernels::num_threads();
+    for precision in [KvPrecision::F32, KvPrecision::Int8, KvPrecision::Int4] {
+        set_threads(1);
+        let engine = NativeBackend::new(micro_config(), 0xD15C);
+        let mut coord = Coordinator::with_kv_precision(engine, 64 << 20, precision);
+        let want: Vec<(u64, Vec<i32>)> = request_stream()
+            .iter()
+            .map(|r| (r.id, coord.process(r).expect("process").tokens))
+            .collect();
+        assert!(want.iter().all(|(_, tokens)| !tokens.is_empty()));
+        let policy = BatchPolicy {
+            max_active: 3,
+            max_active_tokens: 4096,
+            ..BatchPolicy::default()
+        };
+        for &threads in &THREAD_SWEEP {
+            let got = serve_stream_batched(threads, precision, &policy);
+            assert_eq!(
+                want, got,
+                "{precision:?}: batched serving differs from serial at {threads} threads"
+            );
+        }
+    }
+    set_threads(prev);
+}
