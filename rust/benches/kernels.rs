@@ -11,6 +11,11 @@
 //! Every variant is checked bitwise-identical before timing — the
 //! speedup must come for free, not from a different reduction order.
 //!
+//! The nt family and the decode `dot_i4` GEMV are timed twice: once
+//! with `--simd off` (the `gemm_nt_*_ms` / `dot_i4_ms` keys, comparable
+//! across machines) and once at the resolved SIMD mode (the `*_simd_ms`
+//! twins; the active ISA lands in the `simd_isa` JSON field).
+//!
 //! Results are written machine-readable to `BENCH_kernels.json`
 //! (`--json-out PATH` overrides) so the perf trajectory is tracked
 //! across PRs.
@@ -18,7 +23,8 @@
 use block_attn::config::KvPrecision;
 use block_attn::coordinator::{AttentionMode, Coordinator, Request};
 use block_attn::kernels::{
-    gemm_nn_acc, gemm_nt_acc, gemm_nt_i4_acc, gemm_nt_i8_acc, quant, set_threads,
+    dot_i4, gemm_nn_acc, gemm_nt_acc, gemm_nt_i4_acc, gemm_nt_i8_acc, isa_name, quant,
+    set_simd_mode, set_threads, SimdMode,
 };
 use block_attn::runtime::backend_from_args;
 use block_attn::util::cli::Args;
@@ -43,6 +49,11 @@ fn scalar_matmul_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &m
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
     let machine_threads = block_attn::kernels::init_threads_from_args(&args);
+    // Scalar legs force the reference kernels (so the historical
+    // gemm_nt_*_ms keys stay comparable across machines and with the
+    // pre-SIMD baselines); the *_simd_ms twins run at this resolved
+    // mode (auto on CI → the detected ISA).
+    let simd_mode = SimdMode::resolve(&args)?;
     // The headline comparison is pinned at 4 threads (the acceptance
     // configuration); override with --par-threads.
     let par_threads = args.usize_or("par-threads", 4);
@@ -117,20 +128,14 @@ fn main() -> anyhow::Result<()> {
     gemm_nt_i8_acc(&a, &bq, &bscale, m, k, n, &mut got_nt);
     assert_eq!(got_nt, want_nt, "int8 GEMM differs from dequantized f32");
 
-    let r_nt_f32 = bench("gemm_nt_f32(1 thread)", &opts, || {
-        out.fill(0.0);
-        gemm_nt_acc(&a, &b, m, k, n, &mut out);
-    });
-    println!("{}  ({:.2} GFLOP/s)", r_nt_f32.report_line(), gflop / (r_nt_f32.p50_ms() / 1e3));
-    let r_nt_i8 = bench("gemm_nt_i8(1 thread)", &opts, || {
-        out.fill(0.0);
-        gemm_nt_i8_acc(&a, &bq, &bscale, m, k, n, &mut out);
-    });
-    println!("{}  ({:.2} GFLOP/s)", r_nt_i8.report_line(), gflop / (r_nt_i8.p50_ms() / 1e3));
-    println!(
-        "# int8-vs-f32 nt GEMM: {:.2}x the f32 time at ¼ the operand bytes",
-        r_nt_i8.p50_ms() / r_nt_f32.p50_ms()
-    );
+    // SIMD-off vs resolved-mode parity before any nt timing: the
+    // lane-striped scalar reference and the dispatched vector body must
+    // agree bitwise.
+    set_simd_mode(SimdMode::Off);
+    let mut got_scalar = vec![0.0f32; m * n];
+    gemm_nt_acc(&a, &bdeq, m, k, n, &mut got_scalar);
+    assert_eq!(got_scalar, want_nt, "scalar nt GEMM differs from SIMD nt GEMM");
+    set_simd_mode(simd_mode);
 
     // -- int4 × f32 mixed GEMM vs f32 ----------------------------------
     // The same QKᵀ layout with a packed int4 K operand (two codes per
@@ -145,14 +150,97 @@ fn main() -> anyhow::Result<()> {
     let mut got_nt4 = vec![0.0f32; m * n];
     gemm_nt_i4_acc(&a, &bq4, &bscale4, m, k, n, &mut got_nt4);
     assert_eq!(got_nt4, want_nt4, "int4 GEMM differs from dequantized f32");
-    let r_nt_i4 = bench("gemm_nt_i4(1 thread)", &opts, || {
+
+    // -- scalar vs SIMD timing, nt family ------------------------------
+    set_simd_mode(SimdMode::Off);
+    let r_nt_f32 = bench("gemm_nt_f32(scalar)", &opts, || {
+        out.fill(0.0);
+        gemm_nt_acc(&a, &b, m, k, n, &mut out);
+    });
+    println!("{}  ({:.2} GFLOP/s)", r_nt_f32.report_line(), gflop / (r_nt_f32.p50_ms() / 1e3));
+    let r_nt_i8 = bench("gemm_nt_i8(scalar)", &opts, || {
+        out.fill(0.0);
+        gemm_nt_i8_acc(&a, &bq, &bscale, m, k, n, &mut out);
+    });
+    println!("{}  ({:.2} GFLOP/s)", r_nt_i8.report_line(), gflop / (r_nt_i8.p50_ms() / 1e3));
+    let r_nt_i4 = bench("gemm_nt_i4(scalar)", &opts, || {
         out.fill(0.0);
         gemm_nt_i4_acc(&a, &bq4, &bscale4, m, k, n, &mut out);
     });
     println!("{}  ({:.2} GFLOP/s)", r_nt_i4.report_line(), gflop / (r_nt_i4.p50_ms() / 1e3));
     println!(
-        "# int4-vs-f32 nt GEMM: {:.2}x the f32 time at ⅛ the operand bytes",
+        "# int8-vs-f32 nt GEMM: {:.2}x the f32 time at ¼ the operand bytes; int4 {:.2}x at ⅛",
+        r_nt_i8.p50_ms() / r_nt_f32.p50_ms(),
         r_nt_i4.p50_ms() / r_nt_f32.p50_ms()
+    );
+
+    set_simd_mode(simd_mode);
+    let simd_isa = isa_name();
+    let r_nt_f32_simd = bench(&format!("gemm_nt_f32({simd_isa})"), &opts, || {
+        out.fill(0.0);
+        gemm_nt_acc(&a, &b, m, k, n, &mut out);
+    });
+    println!(
+        "{}  ({:.2} GFLOP/s)",
+        r_nt_f32_simd.report_line(),
+        gflop / (r_nt_f32_simd.p50_ms() / 1e3)
+    );
+    let r_nt_i8_simd = bench(&format!("gemm_nt_i8({simd_isa})"), &opts, || {
+        out.fill(0.0);
+        gemm_nt_i8_acc(&a, &bq, &bscale, m, k, n, &mut out);
+    });
+    println!(
+        "{}  ({:.2} GFLOP/s)",
+        r_nt_i8_simd.report_line(),
+        gflop / (r_nt_i8_simd.p50_ms() / 1e3)
+    );
+    let r_nt_i4_simd = bench(&format!("gemm_nt_i4({simd_isa})"), &opts, || {
+        out.fill(0.0);
+        gemm_nt_i4_acc(&a, &bq4, &bscale4, m, k, n, &mut out);
+    });
+    println!(
+        "{}  ({:.2} GFLOP/s)",
+        r_nt_i4_simd.report_line(),
+        gflop / (r_nt_i4_simd.p50_ms() / 1e3)
+    );
+    println!(
+        "# simd speedup ({simd_isa}, nt): f32 {:.2}x, int8 {:.2}x, int4 {:.2}x (int4 target ≥ 2x)",
+        r_nt_f32.p50_ms() / r_nt_f32_simd.p50_ms().max(1e-9),
+        r_nt_i8.p50_ms() / r_nt_i8_simd.p50_ms().max(1e-9),
+        r_nt_i4.p50_ms() / r_nt_i4_simd.p50_ms().max(1e-9)
+    );
+
+    // -- decode-path dot_i4 micro (GEMV shape) -------------------------
+    // One f32 query row against every packed-int4 context row — the
+    // exact inner loop of quantized decode attention. Repeated so the
+    // timing clears bench_guard's --min-ms noise floor.
+    let dot_reps = args.usize_or("dot-reps", 64);
+    let half = size / 2;
+    let mut sink = 0.0f32;
+    set_simd_mode(SimdMode::Off);
+    let r_dot_i4 = bench(&format!("dot_i4_gemv(scalar, {dot_reps}x)"), &opts, || {
+        for _ in 0..dot_reps {
+            for j in 0..n {
+                sink += dot_i4(&a[..k], &bq4[j * half..(j + 1) * half], &bscale4);
+            }
+        }
+    });
+    println!("{}", r_dot_i4.report_line());
+    set_simd_mode(simd_mode);
+    let r_dot_i4_simd = bench(&format!("dot_i4_gemv({simd_isa}, {dot_reps}x)"), &opts, || {
+        for _ in 0..dot_reps {
+            for j in 0..n {
+                sink += dot_i4(&a[..k], &bq4[j * half..(j + 1) * half], &bscale4);
+            }
+        }
+    });
+    println!("{}", r_dot_i4_simd.report_line());
+    assert!(sink.is_finite(), "dot_i4 sink diverged");
+    println!(
+        "# dot_i4 GEMV: scalar {:.2} ms vs {simd_isa} {:.2} ms ({:.2}x)",
+        r_dot_i4.p50_ms(),
+        r_dot_i4_simd.p50_ms(),
+        r_dot_i4.p50_ms() / r_dot_i4_simd.p50_ms().max(1e-9)
     );
 
     // -- dispatch overhead: per-region scoped spawn vs persistent pool -
@@ -335,6 +423,13 @@ fn main() -> anyhow::Result<()> {
         ("gemm_nt_f32_ms", Json::num(r_nt_f32.p50_ms())),
         ("gemm_nt_i8_ms", Json::num(r_nt_i8.p50_ms())),
         ("gemm_nt_i4_ms", Json::num(r_nt_i4.p50_ms())),
+        ("gemm_nt_f32_simd_ms", Json::num(r_nt_f32_simd.p50_ms())),
+        ("gemm_nt_i8_simd_ms", Json::num(r_nt_i8_simd.p50_ms())),
+        ("gemm_nt_i4_simd_ms", Json::num(r_nt_i4_simd.p50_ms())),
+        ("dot_i4_reps", Json::num(dot_reps as f64)),
+        ("dot_i4_ms", Json::num(r_dot_i4.p50_ms())),
+        ("dot_i4_simd_ms", Json::num(r_dot_i4_simd.p50_ms())),
+        ("simd_isa", Json::str(simd_isa)),
         ("ttft_warm_f32_ms", Json::num(warm_ms[0])),
         ("ttft_warm_int8_ms", Json::num(warm_ms[1])),
         ("ttft_warm_int4_ms", Json::num(warm_ms[2])),

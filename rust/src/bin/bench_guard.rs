@@ -50,6 +50,54 @@ fn load_metrics(path: &str) -> anyhow::Result<Vec<(String, f64)>> {
     Ok(out)
 }
 
+/// Outcome of one baseline-vs-current comparison: the printable table
+/// body, the failure descriptions, and how many metrics were actually
+/// gated (after `min_ms` skips).
+struct GateReport {
+    lines: Vec<String>,
+    regressions: Vec<String>,
+    compared: usize,
+}
+
+/// The pure comparison behind `main` — split out so the gate semantics
+/// (including the missing-key failure) are unit-testable without
+/// touching the filesystem or process exit codes.
+fn gate(
+    baseline: &[(String, f64)],
+    current: &[(String, f64)],
+    threshold: f64,
+    min_ms: f64,
+) -> GateReport {
+    let mut report = GateReport { lines: Vec::new(), regressions: Vec::new(), compared: 0 };
+    for (key, base) in baseline {
+        let Some((_, cur)) = current.iter().find(|(k, _)| k == key) else {
+            // A vanished metric is a gate failure, not a skip: a bench
+            // refactor that drops or renames a timed metric must not
+            // silently disable its regression coverage.
+            report.lines.push(format!("{key:<40} {base:>12.3} {:>12} {:>8}  MISSING", "-", "-"));
+            report
+                .regressions
+                .push(format!("{key}: present in baseline, missing from current run"));
+            continue;
+        };
+        if !base.is_finite() || *base < min_ms {
+            report.lines.push(format!(
+                "{key:<40} {base:>12.3} {cur:>12.3} {:>8}  below --min-ms (skipped)",
+                "-"
+            ));
+            continue;
+        }
+        report.compared += 1;
+        let ratio = cur / base;
+        let status = if ratio > threshold { "REGRESSED" } else { "ok" };
+        report.lines.push(format!("{key:<40} {base:>12.3} {cur:>12.3} {ratio:>7.2}x  {status}"));
+        if ratio > threshold {
+            report.regressions.push(format!("{key}: {base:.3} ms -> {cur:.3} ms ({ratio:.2}x)"));
+        }
+    }
+    report
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
     let baseline_path = args
@@ -66,44 +114,87 @@ fn main() -> anyhow::Result<()> {
     let baseline = load_metrics(&baseline_path)?;
     let current = load_metrics(&current_path)?;
 
-    let mut regressions: Vec<String> = Vec::new();
-    let mut compared = 0usize;
     println!("# bench_guard: {current_path} vs {baseline_path} (fail > {threshold:.2}x)");
     println!("{:<40} {:>12} {:>12} {:>8}  status", "metric", "baseline", "current", "ratio");
-    for (key, base) in &baseline {
-        let Some((_, cur)) = current.iter().find(|(k, _)| k == key) else {
-            // A vanished metric is a gate failure, not a skip: a bench
-            // refactor that drops or renames a timed metric must not
-            // silently disable its regression coverage.
-            println!("{key:<40} {base:>12.3} {:>12} {:>8}  MISSING", "-", "-");
-            regressions.push(format!("{key}: present in baseline, missing from current run"));
-            continue;
-        };
-        if !base.is_finite() || *base < min_ms {
-            println!("{key:<40} {base:>12.3} {cur:>12.3} {:>8}  below --min-ms (skipped)", "-");
-            continue;
-        }
-        compared += 1;
-        let ratio = cur / base;
-        let status = if ratio > threshold { "REGRESSED" } else { "ok" };
-        println!("{key:<40} {base:>12.3} {cur:>12.3} {ratio:>7.2}x  {status}");
-        if ratio > threshold {
-            regressions.push(format!("{key}: {base:.3} ms -> {cur:.3} ms ({ratio:.2}x)"));
-        }
+    let report = gate(&baseline, &current, threshold, min_ms);
+    for line in &report.lines {
+        println!("{line}");
     }
-    if compared == 0 {
+    if report.compared == 0 {
         anyhow::bail!(
             "no comparable *_ms metrics between {baseline_path} and {current_path} — \
              wrong file, or the bench output format drifted from the baseline"
         );
     }
-    if !regressions.is_empty() {
+    if !report.regressions.is_empty() {
         anyhow::bail!(
             "{} perf gate failure(s) (>{threshold:.2}x regression or missing metric):\n  {}",
-            regressions.len(),
-            regressions.join("\n  ")
+            report.regressions.len(),
+            report.regressions.join("\n  ")
         );
     }
-    println!("# {compared} metrics within {threshold:.2}x of baseline");
+    println!("# {} metrics within {threshold:.2}x of baseline", report.compared);
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(pairs: &[(&str, f64)]) -> Vec<(String, f64)> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn missing_baseline_key_fails_loudly() {
+        let base = metrics(&[("a_ms", 2.0), ("b_ms", 3.0)]);
+        let cur = metrics(&[("a_ms", 2.0)]);
+        let r = gate(&base, &cur, 1.5, 0.05);
+        assert_eq!(r.regressions.len(), 1);
+        assert!(r.regressions[0].contains("b_ms"), "{:?}", r.regressions);
+        assert!(r.regressions[0].contains("missing"), "{:?}", r.regressions);
+        // The present metric still gates normally alongside the failure.
+        assert_eq!(r.compared, 1);
+    }
+
+    #[test]
+    fn regression_beyond_threshold_fails() {
+        let base = metrics(&[("a_ms", 2.0)]);
+        let cur = metrics(&[("a_ms", 3.5)]);
+        let r = gate(&base, &cur, 1.5, 0.05);
+        assert_eq!(r.regressions.len(), 1);
+        assert!(r.regressions[0].contains("1.75x"), "{:?}", r.regressions);
+    }
+
+    #[test]
+    fn within_threshold_passes() {
+        let base = metrics(&[("a_ms", 2.0), ("b_ms", 10.0)]);
+        let cur = metrics(&[("a_ms", 2.9), ("b_ms", 4.0)]);
+        let r = gate(&base, &cur, 1.5, 0.05);
+        assert!(r.regressions.is_empty(), "{:?}", r.regressions);
+        assert_eq!(r.compared, 2);
+    }
+
+    #[test]
+    fn sub_min_ms_baselines_are_skipped_not_gated() {
+        // 0.01 ms baseline regressing 100x is runner noise, not signal.
+        let base = metrics(&[("tiny_ms", 0.01)]);
+        let cur = metrics(&[("tiny_ms", 1.0)]);
+        let r = gate(&base, &cur, 1.5, 0.05);
+        assert!(r.regressions.is_empty());
+        assert_eq!(r.compared, 0);
+    }
+
+    #[test]
+    fn flatten_extracts_nested_ms_keys() {
+        let json = Json::parse(r#"{"a_ms": 1.5, "rows": [{"b_ms": 2.0, "n": 7}], "c": "x"}"#)
+            .unwrap();
+        let mut out = Vec::new();
+        flatten("", &json, &mut out);
+        out.retain(|(k, _)| k.ends_with("_ms"));
+        assert_eq!(
+            out,
+            vec![("a_ms".to_string(), 1.5), ("rows[0].b_ms".to_string(), 2.0)]
+        );
+    }
 }

@@ -13,20 +13,29 @@
 //! kernels drop-in replacements for the scalar loops they replace:
 //!
 //! 1. **Reduction order.** Every output element accumulates its
-//!    contributions in ascending reduction index into a single f32
-//!    accumulator seeded from `out`. The micro-kernel, the edge
-//!    fallbacks, and the parallel split all preserve that exact
-//!    floating-point sequence, so results are bitwise identical across
-//!    tile boundaries and thread counts.
+//!    contributions in a fixed floating-point sequence seeded from
+//!    `out`: the `nn`/`tn` families in ascending reduction index into
+//!    a single f32 accumulator, the `nt` families (row-row dot
+//!    products, f32/int8/int4 alike) in the **lane-striped** order of
+//!    [`super::rowops::dot`] (8 fixed partial sums folded ascending —
+//!    see [`super::simd`]). Tiling, edge fallbacks, the parallel split,
+//!    and the `--simd` setting all preserve those exact sequences, so
+//!    results are bitwise identical across tile boundaries, thread
+//!    counts, and ISAs.
 //! 2. **Row independence.** An output row is a function of its input
 //!    row only, so computing rows `0..l` of a longer product yields the
 //!    same prefix — the property the block-serving equivalence tests
 //!    rely on.
 //!
-//! No explicit SIMD: the micro-kernels are written so the compiler's
-//! auto-vectorizer sees independent accumulator lanes (the same recipe
-//! as a packed BLAS kernel, minus the packing — operand panels at the
-//! sizes this stack runs fit in L1/L2).
+//! SIMD: the serial `nn`/`tn` tiles dispatch on
+//! [`super::simd::active_isa`] to AVX2 register-tiled twins (mul+add,
+//! per-element order unchanged — see `simd::x86`), and the `nt`
+//! families inherit vector dispatch through the
+//! [`super::rowops::dot`]/[`dot_i8`](super::rowops::dot_i8)/
+//! [`dot_i4`](super::rowops::dot_i4) primitives they are built from.
+//! The scalar tiles below remain the always-available reference: the
+//! auto-vectorizer still sees independent accumulator lanes, and every
+//! vector twin is gated on bitwise parity with them.
 
 use super::parallel::par_rows;
 
@@ -72,6 +81,16 @@ pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f3
 }
 
 fn nn_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if super::simd::active_isa() == super::simd::Isa::Avx2 {
+        // SAFETY: `Isa::Avx2` is only stored after runtime detection.
+        unsafe { super::simd::x86::nn_serial_avx2(a, b, m, k, n, out) };
+        return;
+    }
+    nn_serial_scalar(a, b, m, k, n, out);
+}
+
+fn nn_serial_scalar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     let mut i = 0;
     while i + MR <= m {
         let mut j = 0;
@@ -146,62 +165,19 @@ pub fn gemm_nt_acc(a: &[f32], b: &[f32], m: usize, n: usize, p: usize, out: &mut
     }
 }
 
-const NT_PR: usize = 4;
-
+/// Every output element is one striped row-row dot product, seeded
+/// from `out` with a single add of the folded result. Built directly
+/// on [`super::rowops::dot`], so the `nt` family dispatches to the
+/// vector ISAs through one primitive, the decode-path `dot` callers
+/// stay bitwise aligned with the batched GEMM, and there is no
+/// tile/edge split to keep in sync — `m=1` GEMVs and wide batches run
+/// the identical per-element sequence.
 fn nt_serial(a: &[f32], b: &[f32], m: usize, n: usize, p: usize, out: &mut [f32]) {
-    let mut i = 0;
-    while i + MR <= m {
-        let mut j = 0;
-        while j + NT_PR <= p {
-            nt_micro(a, b, i, j, n, p, out);
-            j += NT_PR;
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        for (j, o) in out[i * p..(i + 1) * p].iter_mut().enumerate() {
+            *o += super::rowops::dot(arow, &b[j * n..(j + 1) * n]);
         }
-        for r in 0..MR {
-            let arow = &a[(i + r) * n..(i + r + 1) * n];
-            nt_row_edge(arow, b, n, j, p, &mut out[(i + r) * p..(i + r + 1) * p]);
-        }
-        i += MR;
-    }
-    for r in i..m {
-        nt_row_edge(&a[r * n..(r + 1) * n], b, n, 0, p, &mut out[r * p..(r + 1) * p]);
-    }
-}
-
-/// `MR×NT_PR` tile of dot products, each with its own ascending-n chain.
-#[inline]
-fn nt_micro(a: &[f32], b: &[f32], i0: usize, j0: usize, n: usize, p: usize, out: &mut [f32]) {
-    let mut acc = [[0.0f32; NT_PR]; MR];
-    for (r, row) in acc.iter_mut().enumerate() {
-        let o = (i0 + r) * p + j0;
-        row.copy_from_slice(&out[o..o + NT_PR]);
-    }
-    for q in 0..n {
-        let mut bq = [0.0f32; NT_PR];
-        for (c, bv) in bq.iter_mut().enumerate() {
-            *bv = b[(j0 + c) * n + q];
-        }
-        for (r, row) in acc.iter_mut().enumerate() {
-            let av = a[(i0 + r) * n + q];
-            for (c, &bv) in bq.iter().enumerate() {
-                row[c] += av * bv;
-            }
-        }
-    }
-    for (r, row) in acc.iter().enumerate() {
-        let o = (i0 + r) * p + j0;
-        out[o..o + NT_PR].copy_from_slice(row);
-    }
-}
-
-#[inline]
-fn nt_row_edge(arow: &[f32], b: &[f32], n: usize, j0: usize, p: usize, orow: &mut [f32]) {
-    for (j, o) in orow.iter_mut().enumerate().take(p).skip(j0) {
-        let brow = &b[j * n..(j + 1) * n];
-        let mut acc = *o;
-        for (&av, &bv) in arow.iter().zip(brow) {
-            acc += av * bv;
-        }
-        *o = acc;
     }
 }
 
@@ -227,6 +203,26 @@ pub fn gemm_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut
 /// rows.
 #[allow(clippy::too_many_arguments)]
 fn tn_serial(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    p0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if super::simd::active_isa() == super::simd::Isa::Avx2 {
+        // SAFETY: `Isa::Avx2` is only stored after runtime detection.
+        unsafe { super::simd::x86::tn_serial_avx2(a, b, m, k, n, p0, rows, out) };
+        return;
+    }
+    tn_serial_scalar(a, b, m, k, n, p0, rows, out);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn tn_serial_scalar(
     a: &[f32],
     b: &[f32],
     m: usize,
@@ -316,9 +312,10 @@ fn tn_row_edge(
 /// `out[m×p] += a[m×n] @ (b_q[p×n] ⊙ scale[n])ᵀ` — the QKᵀ contraction
 /// with an int8-quantized K operand. `scale` has one entry per shared
 /// (channel) index `n`; dequantization `q·s` is fused into the inner
-/// loop, per-element and order-free, so the reduction order (single
-/// f32 accumulator seeded from `out`, ascending `n`) is identical to
-/// running [`gemm_nt_acc`] over a pre-dequantized operand — bitwise.
+/// loop, per-element and order-free, so the reduction order (the
+/// lane-striped [`super::rowops::dot`] order, seeded from `out`) is
+/// identical to running [`gemm_nt_acc`] over a pre-dequantized
+/// operand — bitwise.
 pub fn gemm_nt_i8_acc(
     a: &[f32],
     b_q: &[i8],
@@ -355,12 +352,7 @@ fn nt_i8_serial(
     for i in 0..m {
         let arow = &a[i * n..(i + 1) * n];
         for (j, o) in out[i * p..(i + 1) * p].iter_mut().enumerate() {
-            let brow = &b_q[j * n..(j + 1) * n];
-            let mut acc = *o;
-            for ((&av, &qv), &sv) in arow.iter().zip(brow).zip(b_scale) {
-                acc += av * (qv as f32 * sv);
-            }
-            *o = acc;
+            *o += super::rowops::dot_i8(arow, &b_q[j * n..(j + 1) * n], b_scale);
         }
     }
 }
@@ -457,17 +449,10 @@ fn nt_i4_serial(
     for i in 0..m {
         let arow = &a[i * n..(i + 1) * n];
         for (j, o) in out[i * p..(i + 1) * p].iter_mut().enumerate() {
-            let brow = &b_q4[j * half..(j + 1) * half];
-            // Single accumulator seeded from `out`, ascending shared
-            // index (each byte contributes its even then odd channel) —
-            // the same sequence as the f32 row-edge kernel.
-            let mut acc = *o;
-            for (q, &byte) in brow.iter().enumerate() {
-                let c = 2 * q;
-                acc += arow[c] * (super::quant::nibble_lo(byte) as f32 * b_scale[c]);
-                acc += arow[c + 1] * (super::quant::nibble_hi(byte) as f32 * b_scale[c + 1]);
-            }
-            *o = acc;
+            // Striped dot seeded from `out` (each byte contributes its
+            // even then odd channel) — the exact sequence of running
+            // `rowops::dot` over the dequantized row.
+            *o += super::rowops::dot_i4(arow, &b_q4[j * half..(j + 1) * half], b_scale);
         }
     }
 }
@@ -545,14 +530,24 @@ mod tests {
         }
     }
 
+    /// Independent formulation of the nt contract: per element, one
+    /// lane-striped dot (`i % 8` lanes folded ascending — the
+    /// `kernels::simd` order) added to the seed from `out`.
     fn ref_nt(a: &[f32], b: &[f32], m: usize, n: usize, p: usize, out: &mut [f32]) {
+        fn striped_dot(a: &[f32], b: &[f32]) -> f32 {
+            let mut lanes = [0.0f32; 8];
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                lanes[i % 8] += x * y;
+            }
+            let mut s = lanes[0];
+            for &l in &lanes[1..] {
+                s += l;
+            }
+            s
+        }
         for i in 0..m {
             for j in 0..p {
-                let mut acc = out[i * p + j];
-                for q in 0..n {
-                    acc += a[i * n + q] * b[j * n + q];
-                }
-                out[i * p + j] = acc;
+                out[i * p + j] += striped_dot(&a[i * n..(i + 1) * n], &b[j * n..(j + 1) * n]);
             }
         }
     }

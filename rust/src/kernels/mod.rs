@@ -41,16 +41,21 @@
 //!
 //! ## Determinism guarantee
 //!
-//! Every kernel accumulates each output element in a fixed ascending
-//! reduction order into a single f32 accumulator, and every parallel
-//! split assigns whole output rows to exactly one worker. Results are
-//! therefore **bitwise identical for any thread count** — `--threads 1`
-//! and `--threads 8` serve byte-for-byte the same responses, which CI
-//! pins by running the suite at `BLOCK_ATTN_THREADS=1`, `=3` (odd, so
-//! row chunks and nested budget splits are non-divisible) and `=4`.
-//! Chunk layout is a function of the budget alone — never of pool
-//! state or which worker runs a chunk — so pool dispatch cannot
-//! perturb the contract.
+//! Every kernel accumulates each output element in a fixed reduction
+//! order, and every parallel split assigns whole output rows to exactly
+//! one worker. Elementwise and `nn`/`tn` GEMM paths use a single f32
+//! accumulator in ascending index order; dot-style reductions (`dot*`
+//! and the `nt` GEMM family) use the **lane-striped order** documented
+//! in [`simd`] — eight fixed partial sums folded ascending — which is
+//! the same sequence whether a scalar loop or a vector unit executes
+//! it. Results are therefore **bitwise identical for any thread count
+//! and any SIMD mode** — `--threads 1` and `--threads 8`, `--simd
+//! auto` and `--simd off`, all serve byte-for-byte the same responses,
+//! which CI pins by running the suite at `BLOCK_ATTN_THREADS=1`, `=3`
+//! (odd, so row chunks and nested budget splits are non-divisible) and
+//! `=4`, plus a `BLOCK_ATTN_SIMD=off` leg. Chunk layout is a function
+//! of the budget alone — never of pool state or which worker runs a
+//! chunk — so pool dispatch cannot perturb the contract.
 //!
 //! The quantized KV tiers ride on the same contract: [`quant`] codes
 //! and dequantizes per element (no cross-element reduction), and the
@@ -61,11 +66,24 @@
 //! unpack — into the inner loop without changing the accumulation
 //! sequence, so quantized serving is exactly as deterministic as f32
 //! serving.
+//!
+//! ## SIMD dispatch
+//!
+//! The [`simd`] module holds runtime-dispatched vector bodies (AVX2 on
+//! x86_64, NEON on aarch64) for the hot inner loops; the scalar
+//! kernels here are the always-available reference, restructured to
+//! the same lane-striped partial sums so every vector variant is
+//! **bitwise equal** to scalar. Mode selection: `--simd auto|off` (via
+//! [`init_threads_from_args`]) > `BLOCK_ATTN_SIMD` > auto-detect; the
+//! active ISA is reported by [`isa_name`] in server stats and bench
+//! footers. See the [`simd`] docs for the striping contract and how to
+//! add a vector kernel.
 
 pub mod gemm;
 pub mod parallel;
 pub mod quant;
 pub mod rowops;
+pub mod simd;
 
 pub use gemm::{
     gemm_nn, gemm_nn_acc, gemm_nn_i4_acc, gemm_nn_i8_acc, gemm_nt_acc, gemm_nt_i4_acc,
@@ -77,6 +95,7 @@ pub use rowops::{
     axpy, axpy_i4, axpy_i8, dot, dot_i4, dot_i8, rms_norm_rows, sigmoid, silu, softmax_inplace,
     swiglu_rows,
 };
+pub use simd::{active_isa, isa_name, set_simd_mode, Isa, SimdMode};
 
 use crate::util::cli::Args;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -115,13 +134,17 @@ pub fn set_threads(n: usize) {
     parallel::grow_pool(n);
 }
 
-/// Apply `--threads N` from parsed CLI options (every bin/bench/example
-/// calls this right after `Args::parse`) and return the effective
-/// budget.
+/// Apply `--threads N` and `--simd auto|off` from parsed CLI options
+/// (every bin/bench/example calls this right after `Args::parse`) and
+/// return the effective thread budget. Panics loudly on an invalid
+/// `--simd` / `BLOCK_ATTN_SIMD` value — a silently ignored mode would
+/// time the wrong kernels.
 pub fn init_threads_from_args(args: &Args) -> usize {
     if let Some(n) = args.threads() {
         set_threads(n);
     }
+    let mode = SimdMode::resolve(args).unwrap_or_else(|e| panic!("{e}"));
+    set_simd_mode(mode);
     num_threads()
 }
 
@@ -130,8 +153,12 @@ pub fn init_threads_from_args(args: &Args) -> usize {
 pub fn pool_stats_line() -> String {
     let ps = pool_stats();
     format!(
-        "# pool: {} workers, {} jobs dispatched, {} panicked, queue peak {}",
-        ps.workers, ps.jobs_executed, ps.jobs_panicked, ps.queue_peak
+        "# pool: {} workers, {} jobs dispatched, {} panicked, queue peak {} | simd {}",
+        ps.workers,
+        ps.jobs_executed,
+        ps.jobs_panicked,
+        ps.queue_peak,
+        isa_name()
     )
 }
 

@@ -77,6 +77,44 @@ pub fn nibble_hi(b: u8) -> i8 {
     (b as i8) >> 4
 }
 
+/// Dequantize one int8 row against a per-channel scale row:
+/// `out[c] = q[c]·scale[c]`. Elementwise and order-free, dispatched on
+/// [`super::simd::active_isa`] — the row primitive behind
+/// [`QuantizedKv::dequantize`] and the fused Eq.-3 re-encode's unpack
+/// step.
+#[inline]
+pub fn dequant_i8_row(q: &[i8], scale: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(q.len(), out.len());
+    debug_assert_eq!(q.len(), scale.len());
+    #[cfg(target_arch = "x86_64")]
+    if super::simd::active_isa() == super::simd::Isa::Avx2 {
+        // SAFETY: `Isa::Avx2` is only stored after runtime detection.
+        return unsafe { super::simd::x86::dequant_i8_row_avx2(q, scale, out) };
+    }
+    for ((o, &qv), &sv) in out.iter_mut().zip(q).zip(scale) {
+        *o = dequant_one(qv, sv);
+    }
+}
+
+/// Dequantize one packed-int4 row against a per-channel scale row:
+/// byte `i` yields channels `2i` (low nibble) and `2i+1` (high nibble).
+/// Elementwise and order-free, dispatched on
+/// [`super::simd::active_isa`].
+#[inline]
+pub fn dequant_i4_row(packed: &[u8], scale: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(packed.len() * 2, out.len());
+    debug_assert_eq!(out.len(), scale.len());
+    #[cfg(target_arch = "x86_64")]
+    if super::simd::active_isa() == super::simd::Isa::Avx2 {
+        // SAFETY: `Isa::Avx2` is only stored after runtime detection.
+        return unsafe { super::simd::x86::dequant_i4_row_avx2(packed, scale, out) };
+    }
+    for (cp, &b) in packed.iter().enumerate() {
+        out[2 * cp] = dequant_one(nibble_lo(b), scale[2 * cp]);
+        out[2 * cp + 1] = dequant_one(nibble_hi(b), scale[2 * cp + 1]);
+    }
+}
+
 /// Per-channel symmetric scales for a row-major `rows × n` operand with
 /// an arbitrary code range: `scales[c] = amax over rows of |b[r][c]| /
 /// qmax`. The single owner of the scale formula for both tiers
@@ -200,9 +238,11 @@ impl QuantizedKv {
                 for h in 0..heads {
                     let off = ((l * len + t) * heads + h) * hd;
                     let s0 = (l * heads + h) * hd;
-                    for c in 0..hd {
-                        od[off + c] = dequant_one(self.q[off + c], self.scales[s0 + c]);
-                    }
+                    dequant_i8_row(
+                        &self.q[off..off + hd],
+                        &self.scales[s0..s0 + hd],
+                        &mut od[off..off + hd],
+                    );
                 }
             }
         }
@@ -333,10 +373,7 @@ impl QuantizedKv4 {
                 let srow = &self.scales[(l * groups + t / I4_GROUP) * row..][..row];
                 let orow = &mut od[(l * len + t) * row..(l * len + t + 1) * row];
                 let brow = &self.packed[(l * len + t) * row / 2..][..row / 2];
-                for (cp, &b) in brow.iter().enumerate() {
-                    orow[2 * cp] = dequant_one(nibble_lo(b), srow[2 * cp]);
-                    orow[2 * cp + 1] = dequant_one(nibble_hi(b), srow[2 * cp + 1]);
-                }
+                dequant_i4_row(brow, srow, orow);
             }
         }
         out

@@ -1,45 +1,105 @@
 //! Fused row-wise kernels: RMSNorm, softmax, SwiGLU, and the dot/axpy
 //! primitives the attention inner loops are built from.
 //!
-//! All reductions run in a fixed ascending order so that identical
-//! inputs produce bitwise-identical outputs at every call site — the
-//! property the block-serving equivalence and the `--threads N` parity
-//! tests are built on.
+//! Every reduction runs in the fixed **lane-striped** order defined by
+//! [`super::simd`] (element `i` accumulates into partial sum `i % 8`,
+//! lanes folded ascending at the end; the RMSNorm f64 sum of squares
+//! stripes over 4 lanes), and every elementwise op keeps plain
+//! ascending order — so identical inputs produce bitwise-identical
+//! outputs at every call site, every thread count, and every `--simd`
+//! setting. Each public function dispatches on [`super::simd::active_isa`]
+//! between the scalar reference body below and a vector body in
+//! `simd::x86` / `simd::neon` that is bitwise identical by
+//! construction (pinned by `tests/simd_parity.rs`).
 
-/// Ascending-index dot product (single f32 accumulator).
+use super::simd::{self, Isa, F64_LANES, LANES};
+
+/// Lane-striped dot product (see module docs for the reduction order).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut s = 0.0f32;
-    for (x, y) in a.iter().zip(b) {
-        s += x * y;
+    #[cfg(target_arch = "x86_64")]
+    if simd::active_isa() == Isa::Avx2 {
+        // SAFETY: `Isa::Avx2` is only stored after runtime detection.
+        return unsafe { simd::x86::dot_avx2(a, b) };
     }
-    s
+    #[cfg(target_arch = "aarch64")]
+    if simd::active_isa() == Isa::Neon {
+        // SAFETY: `Isa::Neon` is only stored after runtime detection.
+        return unsafe { simd::neon::dot_neon(a, b) };
+    }
+    dot_scalar(a, b)
+}
+
+pub(crate) fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let main = n - n % LANES;
+    let mut lanes = [0.0f32; LANES];
+    let mut c = 0;
+    while c < main {
+        for j in 0..LANES {
+            lanes[j] += a[c + j] * b[c + j];
+        }
+        c += LANES;
+    }
+    for i in main..n {
+        lanes[i - main] += a[i] * b[i];
+    }
+    simd::fold_lanes(&lanes)
 }
 
 /// `y += alpha * x`, elementwise.
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd::active_isa() == Isa::Avx2 {
+        // SAFETY: `Isa::Avx2` is only stored after runtime detection.
+        return unsafe { simd::x86::axpy_avx2(alpha, x, y) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd::active_isa() == Isa::Neon {
+        // SAFETY: `Isa::Neon` is only stored after runtime detection.
+        return unsafe { simd::neon::axpy_neon(alpha, x, y) };
+    }
     for (xi, yi) in x.iter().zip(y.iter_mut()) {
         *yi += alpha * xi;
     }
 }
 
-/// Ascending-index dot product against an int8 row with per-channel
+/// Lane-striped dot product against an int8 row with per-channel
 /// scales: `Σ a[c] · (q[c]·scale[c])` — the QKᵀ inner loop of the
 /// fused-dequant attention path. Dequantization is per-element and
-/// order-free, so the reduction order (single f32 accumulator,
-/// ascending index) matches [`dot`] exactly.
+/// order-free, so the striping matches [`dot`] exactly and
+/// dequantize-then-[`dot`] stays bitwise identical.
 #[inline]
 pub fn dot_i8(a: &[f32], q: &[i8], scale: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), q.len());
     debug_assert_eq!(a.len(), scale.len());
-    let mut s = 0.0f32;
-    for ((&av, &qv), &sv) in a.iter().zip(q).zip(scale) {
-        s += av * (qv as f32 * sv);
+    #[cfg(target_arch = "x86_64")]
+    if simd::active_isa() == Isa::Avx2 {
+        // SAFETY: `Isa::Avx2` is only stored after runtime detection.
+        return unsafe { simd::x86::dot_i8_avx2(a, q, scale) };
     }
-    s
+    #[cfg(target_arch = "aarch64")]
+    if simd::active_isa() == Isa::Neon {
+        // SAFETY: `Isa::Neon` is only stored after runtime detection.
+        return unsafe { simd::neon::dot_i8_neon(a, q, scale) };
+    }
+    let n = a.len();
+    let main = n - n % LANES;
+    let mut lanes = [0.0f32; LANES];
+    let mut c = 0;
+    while c < main {
+        for j in 0..LANES {
+            lanes[j] += a[c + j] * (q[c + j] as f32 * scale[c + j]);
+        }
+        c += LANES;
+    }
+    for i in main..n {
+        lanes[i - main] += a[i] * (q[i] as f32 * scale[i]);
+    }
+    simd::fold_lanes(&lanes)
 }
 
 /// `y += alpha · (q·scale)`, elementwise (the AV inner loop of the
@@ -48,28 +108,57 @@ pub fn dot_i8(a: &[f32], q: &[i8], scale: &[f32]) -> f32 {
 pub fn axpy_i8(alpha: f32, q: &[i8], scale: &[f32], y: &mut [f32]) {
     debug_assert_eq!(q.len(), y.len());
     debug_assert_eq!(q.len(), scale.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd::active_isa() == Isa::Avx2 {
+        // SAFETY: `Isa::Avx2` is only stored after runtime detection.
+        return unsafe { simd::x86::axpy_i8_avx2(alpha, q, scale, y) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd::active_isa() == Isa::Neon {
+        // SAFETY: `Isa::Neon` is only stored after runtime detection.
+        return unsafe { simd::neon::axpy_i8_neon(alpha, q, scale, y) };
+    }
     for ((&qv, &sv), yi) in q.iter().zip(scale).zip(y.iter_mut()) {
         *yi += alpha * (qv as f32 * sv);
     }
 }
 
-/// Ascending-index dot product against a packed-int4 row (two codes per
+/// Lane-striped dot product against a packed-int4 row (two codes per
 /// byte, channel-axis packing) with per-channel scales — the QKᵀ inner
-/// loop of the int4 decode-attention path. Each byte contributes its
-/// even channel then its odd channel, so the accumulation order is the
-/// plain ascending channel order of [`dot`]: the fused unpack+dequant
-/// is bitwise invisible.
+/// loop of the int4 decode-attention path. Channel `c` lands in lane
+/// `c % 8` exactly as in [`dot`], so the fused unpack+dequant is
+/// bitwise invisible next to dequantize-then-[`dot`].
 #[inline]
 pub fn dot_i4(a: &[f32], packed: &[u8], scale: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), packed.len() * 2);
     debug_assert_eq!(a.len(), scale.len());
-    let mut s = 0.0f32;
-    for (i, &b) in packed.iter().enumerate() {
-        let c = 2 * i;
-        s += a[c] * (super::quant::nibble_lo(b) as f32 * scale[c]);
-        s += a[c + 1] * (super::quant::nibble_hi(b) as f32 * scale[c + 1]);
+    #[cfg(target_arch = "x86_64")]
+    if simd::active_isa() == Isa::Avx2 {
+        // SAFETY: `Isa::Avx2` is only stored after runtime detection.
+        return unsafe { simd::x86::dot_i4_avx2(a, packed, scale) };
     }
-    s
+    let n = a.len();
+    let main = n - n % LANES;
+    let mut lanes = [0.0f32; LANES];
+    // 4 bytes = 8 channels per step, so the byte tail continues the
+    // channel-lane cycle (`main` is a multiple of 8 channels).
+    let mut i = 0;
+    while i < main / 2 {
+        for jb in 0..LANES / 2 {
+            let b = packed[i + jb];
+            let c = 2 * (i + jb);
+            lanes[2 * jb] += a[c] * (super::quant::nibble_lo(b) as f32 * scale[c]);
+            lanes[2 * jb + 1] += a[c + 1] * (super::quant::nibble_hi(b) as f32 * scale[c + 1]);
+        }
+        i += LANES / 2;
+    }
+    for i in main / 2..packed.len() {
+        let b = packed[i];
+        let c0 = 2 * i;
+        lanes[c0 - main] += a[c0] * (super::quant::nibble_lo(b) as f32 * scale[c0]);
+        lanes[c0 - main + 1] += a[c0 + 1] * (super::quant::nibble_hi(b) as f32 * scale[c0 + 1]);
+    }
+    simd::fold_lanes(&lanes)
 }
 
 /// `y += alpha · (q·scale)` over a packed-int4 row (the AV inner loop
@@ -79,6 +168,11 @@ pub fn dot_i4(a: &[f32], packed: &[u8], scale: &[f32]) -> f32 {
 pub fn axpy_i4(alpha: f32, packed: &[u8], scale: &[f32], y: &mut [f32]) {
     debug_assert_eq!(y.len(), packed.len() * 2);
     debug_assert_eq!(y.len(), scale.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd::active_isa() == Isa::Avx2 {
+        // SAFETY: `Isa::Avx2` is only stored after runtime detection.
+        return unsafe { simd::x86::axpy_i4_avx2(alpha, packed, scale, y) };
+    }
     for (i, &b) in packed.iter().enumerate() {
         let c = 2 * i;
         y[c] += alpha * (super::quant::nibble_lo(b) as f32 * scale[c]);
@@ -87,7 +181,9 @@ pub fn axpy_i4(alpha: f32, packed: &[u8], scale: &[f32], y: &mut [f32]) {
 }
 
 /// Row-wise RMSNorm: `out[t] = x[t] * rstd[t] * w`; returns the
-/// reciprocal RMS per row (needed by the backward pass).
+/// reciprocal RMS per row (needed by the backward pass). The f64 sum
+/// of squares stripes over [`F64_LANES`] partial sums (see module
+/// docs); the normalize apply is elementwise.
 pub fn rms_norm_rows(
     x: &[f32],
     w: &[f32],
@@ -101,19 +197,50 @@ pub fn rms_norm_rows(
     debug_assert_eq!(w.len(), d);
     debug_assert_eq!(out.len(), l * d);
     debug_assert_eq!(rstd.len(), l);
+    let isa = simd::active_isa();
     for t in 0..l {
         let xr = &x[t * d..(t + 1) * d];
-        let mut ms = 0.0f64;
-        for &v in xr {
-            ms += (v as f64) * (v as f64);
-        }
+        let ms = sumsq_f64(xr, isa);
         let r = (1.0 / (ms / d as f64 + eps).sqrt()) as f32;
         rstd[t] = r;
         let orow = &mut out[t * d..(t + 1) * d];
+        #[cfg(target_arch = "x86_64")]
+        if isa == Isa::Avx2 {
+            // SAFETY: `Isa::Avx2` is only stored after runtime detection.
+            unsafe { simd::x86::norm_mul_avx2(xr, r, w, orow) };
+            continue;
+        }
         for ((o, &xv), &wv) in orow.iter_mut().zip(xr).zip(w) {
             *o = xv * r * wv;
         }
     }
+}
+
+#[inline]
+fn sumsq_f64(xr: &[f32], isa: Isa) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if isa == Isa::Avx2 {
+        // SAFETY: `Isa::Avx2` is only stored after runtime detection.
+        return unsafe { simd::x86::sumsq_f64_avx2(xr) };
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = isa;
+    let n = xr.len();
+    let main = n - n % F64_LANES;
+    let mut lanes = [0.0f64; F64_LANES];
+    let mut c = 0;
+    while c < main {
+        for j in 0..F64_LANES {
+            let v = xr[c + j] as f64;
+            lanes[j] += v * v;
+        }
+        c += F64_LANES;
+    }
+    for i in main..n {
+        let v = xr[i] as f64;
+        lanes[i - main] += v * v;
+    }
+    simd::fold_lanes_f64(&lanes)
 }
 
 #[inline]
@@ -136,6 +263,12 @@ pub fn swiglu_rows(g: &mut [f32], u: &[f32]) {
 
 /// In-place softmax over `s` (max-subtracted, ascending accumulation so
 /// identical inputs give bitwise-identical outputs across call sites).
+///
+/// The max scan and the exp/sum chain stay scalar on every ISA: the
+/// sum's addends come out of serial `exp` calls, so lane-striping it
+/// buys nothing without a vector `exp` (whose rounding would break
+/// parity anyway), and `_mm256_max_ps` NaN semantics differ from
+/// `f32::max`. Only the final elementwise `*= inv` scale dispatches.
 pub fn softmax_inplace(s: &mut [f32]) {
     let mut mx = f32::NEG_INFINITY;
     for &v in s.iter() {
@@ -147,6 +280,12 @@ pub fn softmax_inplace(s: &mut [f32]) {
         sum += *v;
     }
     let inv = 1.0 / sum;
+    #[cfg(target_arch = "x86_64")]
+    if simd::active_isa() == Isa::Avx2 {
+        // SAFETY: `Isa::Avx2` is only stored after runtime detection.
+        unsafe { simd::x86::scale_avx2(s, inv) };
+        return;
+    }
     for v in s.iter_mut() {
         *v *= inv;
     }
@@ -190,7 +329,7 @@ mod tests {
     #[test]
     fn int8_dot_and_axpy_match_dequantized_f32() {
         // Dequantize-then-f32 must be bitwise identical to the fused
-        // int8 primitives: same per-element expression, same order.
+        // int8 primitives: same per-element expression, same striping.
         let a = [0.5f32, -1.25, 2.0, 0.0];
         let q = [3i8, -127, 64, 1];
         let scale = [0.1f32, 0.02, 0.5, 0.0];
@@ -233,5 +372,33 @@ mod tests {
         let mut y = [1.0f32, 1.0, 1.0];
         axpy(2.0, &a, &mut y);
         assert_eq!(y, [3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn striped_dot_matches_independent_formulation() {
+        // Independent i%8 formulation of the lane-striping contract
+        // (the chunked scalar body and both vector bodies must all
+        // reduce in exactly this order).
+        fn striped(a: &[f32], b: &[f32]) -> f32 {
+            let mut lanes = [0.0f32; LANES];
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                lanes[i % LANES] += x * y;
+            }
+            let mut s = lanes[0];
+            for &l in &lanes[1..] {
+                s += l;
+            }
+            s
+        }
+        let mut state = 0x1234_5678u64;
+        let mut rnd = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as i32 % 1000) as f32 / 997.0
+        };
+        for n in (0..40).chain([64, 65, 127, 130]) {
+            let a: Vec<f32> = (0..n).map(|_| rnd()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rnd()).collect();
+            assert_eq!(dot_scalar(&a, &b).to_bits(), striped(&a, &b).to_bits(), "n={n}");
+        }
     }
 }

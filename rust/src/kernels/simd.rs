@@ -1,0 +1,889 @@
+//! Runtime-dispatched SIMD inner loops for the GEMM and rowop families.
+//!
+//! ## Dispatch rules
+//!
+//! Every public kernel in [`super::rowops`] / [`super::gemm`] /
+//! [`super::quant`] is a thin wrapper that reads [`active_isa`] (one
+//! relaxed atomic load) and branches to either the scalar reference
+//! body or a vector body in [`x86`] / [`neon`]. The active ISA is
+//! resolved once, from:
+//!
+//! * `--simd auto|off` on any bin/bench/example (via
+//!   `kernels::init_threads_from_args`), else
+//! * `$BLOCK_ATTN_SIMD` in the environment (invalid values **panic** —
+//!   same loud-misconfiguration policy as `KvPrecision::from_env`), else
+//! * `auto`: AVX2 on x86_64, NEON on aarch64, scalar anywhere else —
+//!   all behind runtime feature detection
+//!   (`is_x86_feature_detected!` / `is_aarch64_feature_detected!`),
+//!   so a binary built on a new machine still runs on an old one.
+//!
+//! Vector bodies not implemented for the active ISA (e.g. the i4
+//! family on NEON) silently fall back to the scalar reference — which
+//! is safe precisely because of the parity contract below.
+//!
+//! ## The lane-striped reduction contract
+//!
+//! Vector ISAs cannot cheaply reproduce a single-accumulator ascending
+//! dot product, so this module pins a different — but equally fixed —
+//! reduction order, and the *scalar reference kernels are restructured
+//! to use the same one*:
+//!
+//! * f32 dot-style reductions accumulate into **[`LANES`] = 8 fixed
+//!   partial sums**: element `i` lands in lane `i % 8`, the tail
+//!   included, and the lanes are folded left-to-right at the end
+//!   (`((l0+l1)+l2)+…`). 8 is one AVX2 `ymm` register; NEON uses two
+//!   4-lane accumulators side by side so lane assignment is identical.
+//! * The RMSNorm sum-of-squares stripes its f64 accumulation over
+//!   **[`F64_LANES`] = 4 lanes** (one AVX2 `ymm` of doubles) the same
+//!   way.
+//! * Everything elementwise (axpy, dequantize, normalize/scale, SwiGLU,
+//!   the RoPE rotation) keeps its per-element expression tree and
+//!   ascending order unchanged — vectorizing over independent output
+//!   elements is bitwise invisible.
+//!
+//! Vector kernels use **separate multiply and add instructions, never
+//! FMA**: the scalar reference rounds `a*b` and then the add, and a
+//! fused `mul_add` (one rounding) would break bitwise parity. This
+//! costs a little peak throughput and buys the property everything
+//! rests on: **every SIMD variant is bitwise identical to its scalar
+//! reference at every shape, tier, and thread count** (pinned by
+//! `tests/simd_parity.rs`), so `--simd` joins `--threads` and
+//! `--kv-quant` in the set of knobs that cannot change served bytes.
+//!
+//! ## Adding a new vector kernel
+//!
+//! 1. Write the scalar body first. If it reduces across elements,
+//!    stripe it over [`LANES`] partial sums folded ascending; if it is
+//!    elementwise, keep plain ascending order.
+//! 2. Add the vector body under [`x86`]/[`neon`] as an
+//!    `unsafe fn …` with `#[target_feature(enable = "avx2")]` (or
+//!    `"neon"`), using mul+add (no FMA) and the exact same lane
+//!    assignment; scalar-process the tail into `lanes[i - main]`.
+//! 3. Dispatch on [`active_isa`] in the public wrapper, with the
+//!    scalar body as the `_ =>` arm.
+//! 4. Pin it in `tests/simd_parity.rs` on shapes that exercise the
+//!    vector main loop, the scalar tail (`len % 8 != 0`), and both
+//!    together.
+
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Striping width of every f32 dot-style reduction (one AVX2 register).
+pub const LANES: usize = 8;
+/// Striping width of the f64 RMSNorm sum-of-squares (one AVX2 register).
+pub const F64_LANES: usize = 4;
+
+/// SIMD selection knob. Resolution order: `--simd` > `$BLOCK_ATTN_SIMD`
+/// > `Auto`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdMode {
+    /// Use the widest ISA the CPU supports (runtime-detected).
+    #[default]
+    Auto,
+    /// Force the scalar reference kernels (bitwise identical output).
+    Off,
+}
+
+impl SimdMode {
+    pub fn parse(s: &str) -> Result<SimdMode> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "auto" | "on" => SimdMode::Auto,
+            "off" | "scalar" => SimdMode::Off,
+            other => bail!("unknown SIMD mode '{other}' (expected 'auto' or 'off')"),
+        })
+    }
+
+    /// `$BLOCK_ATTN_SIMD`, defaulting to `Auto` when unset or empty.
+    /// An unparsable value **panics** — silently serving scalar kernels
+    /// when the operator typo'd `off` (or vice versa) would hide either
+    /// a multi-× perf misconfiguration or an unwanted vector path, so
+    /// bins fail loudly at startup instead (the `KvPrecision::from_env`
+    /// policy).
+    pub fn from_env() -> SimdMode {
+        match Self::parse_env_value(std::env::var("BLOCK_ATTN_SIMD").ok().as_deref()) {
+            Ok(m) => m,
+            Err(e) => panic!("invalid $BLOCK_ATTN_SIMD: {e}"),
+        }
+    }
+
+    /// The pure resolution behind [`Self::from_env`]: `None` or an
+    /// empty/whitespace value defaults to `Auto`, anything else must
+    /// parse. Split out so both paths are unit-testable without
+    /// touching the process environment.
+    pub fn parse_env_value(v: Option<&str>) -> Result<SimdMode> {
+        match v {
+            Some(s) if !s.trim().is_empty() => SimdMode::parse(s),
+            _ => Ok(SimdMode::Auto),
+        }
+    }
+
+    /// `--simd` from parsed CLI options, falling back to the
+    /// environment then `Auto`. Errors on an unparsable flag value.
+    pub fn resolve(args: &crate::util::cli::Args) -> Result<SimdMode> {
+        match args.simd() {
+            Some(v) => SimdMode::parse(v),
+            None => Self::parse_env_value(std::env::var("BLOCK_ATTN_SIMD").ok().as_deref()),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Off => "off",
+        }
+    }
+}
+
+/// The instruction set the dispatch wrappers are currently routing to.
+/// Discriminants are the [`ACTIVE`] atomic's encoding (0 is reserved
+/// for "unresolved").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Isa {
+    Scalar = 1,
+    Avx2 = 2,
+    Neon = 3,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+const ISA_UNSET: u8 = 0;
+const ISA_SCALAR: u8 = 1;
+const ISA_AVX2: u8 = 2;
+const ISA_NEON: u8 = 3;
+
+/// 0 = not yet resolved; resolved lazily on first use (same pattern as
+/// the `kernels::THREADS` budget).
+static ACTIVE: AtomicU8 = AtomicU8::new(ISA_UNSET);
+
+fn detect() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            return Isa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Isa::Neon;
+        }
+    }
+    Isa::Scalar
+}
+
+/// Apply a SIMD mode process-wide and return the ISA it resolved to.
+/// `Off` forces the scalar reference kernels; `Auto` runtime-detects.
+/// Output is bitwise identical either way, so flipping this mid-flight
+/// (as the parity tests and benches do) is always safe — it only moves
+/// wall-clock.
+pub fn set_simd_mode(mode: SimdMode) -> Isa {
+    let isa = match mode {
+        SimdMode::Off => Isa::Scalar,
+        SimdMode::Auto => detect(),
+    };
+    ACTIVE.store(isa as u8, Ordering::Relaxed);
+    isa
+}
+
+/// The ISA the kernel wrappers dispatch to right now. First call
+/// resolves `$BLOCK_ATTN_SIMD` (benign race: concurrent first callers
+/// resolve the same value).
+#[inline]
+pub fn active_isa() -> Isa {
+    match ACTIVE.load(Ordering::Relaxed) {
+        ISA_SCALAR => Isa::Scalar,
+        ISA_AVX2 => Isa::Avx2,
+        ISA_NEON => Isa::Neon,
+        _ => set_simd_mode(SimdMode::from_env()),
+    }
+}
+
+/// `active_isa().name()` — the string reported by server `stats`
+/// (`simd_isa`), bench footers, and the bench JSON context field.
+pub fn isa_name() -> &'static str {
+    active_isa().name()
+}
+
+/// Fold the 8 striped partial sums left-to-right. Shared by the scalar
+/// references and every vector body so the final reduction order is a
+/// single definition.
+#[inline]
+pub(crate) fn fold_lanes(lanes: &[f32; LANES]) -> f32 {
+    let mut s = lanes[0];
+    for &l in &lanes[1..] {
+        s += l;
+    }
+    s
+}
+
+/// [`fold_lanes`] for the 4 striped f64 partial sums of the RMSNorm
+/// sum-of-squares.
+#[inline]
+pub(crate) fn fold_lanes_f64(lanes: &[f64; F64_LANES]) -> f64 {
+    let mut s = lanes[0];
+    for &l in &lanes[1..] {
+        s += l;
+    }
+    s
+}
+
+/// In-place RoPE pair rotation (the Eq.-3 inner loop): given the low
+/// and high halves of one head's channels,
+/// `lo[j], hi[j] ← lo[j]·cos[j] − hi[j]·sin[j], lo[j]·sin[j] + hi[j]·cos[j]`.
+/// Elementwise over `j` (each pair reads only its own two channels), so
+/// the vector body is bitwise identical to the scalar one.
+pub fn rotate_pairs(lo: &mut [f32], hi: &mut [f32], cos: &[f32], sin: &[f32]) {
+    debug_assert_eq!(lo.len(), hi.len());
+    debug_assert_eq!(lo.len(), cos.len());
+    debug_assert_eq!(lo.len(), sin.len());
+    #[cfg(target_arch = "x86_64")]
+    if active_isa() == Isa::Avx2 {
+        // SAFETY: `Isa::Avx2` is only ever stored after runtime detection.
+        unsafe { x86::rotate_pairs_avx2(lo, hi, cos, sin) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if active_isa() == Isa::Neon {
+        // SAFETY: `Isa::Neon` is only ever stored after runtime detection.
+        unsafe { neon::rotate_pairs_neon(lo, hi, cos, sin) };
+        return;
+    }
+    rotate_pairs_scalar(lo, hi, cos, sin);
+}
+
+pub(crate) fn rotate_pairs_scalar(lo: &mut [f32], hi: &mut [f32], cos: &[f32], sin: &[f32]) {
+    for j in 0..lo.len() {
+        let a = lo[j];
+        let b = hi[j];
+        lo[j] = a * cos[j] - b * sin[j];
+        hi[j] = a * sin[j] + b * cos[j];
+    }
+}
+
+/// AVX2 bodies. Callable only through the [`active_isa`] dispatch in
+/// the public wrappers, which guarantees the CPU supports AVX2.
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    use super::{fold_lanes, F64_LANES, LANES};
+    use crate::kernels::quant::{nibble_hi, nibble_lo};
+    use core::arch::x86_64::*;
+
+    /// Striped f32 dot product (lane `i % 8`, mul+add, scalar tail).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (guaranteed by the [`super::active_isa`]
+    /// dispatch). Slices must satisfy `a.len() == b.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let main = n - n % LANES;
+        let mut acc = _mm256_setzero_ps();
+        let mut c = 0;
+        while c < main {
+            let va = _mm256_loadu_ps(a.as_ptr().add(c));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(c));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            c += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for i in main..n {
+            lanes[i - main] += a[i] * b[i];
+        }
+        fold_lanes(&lanes)
+    }
+
+    /// Striped int8 dot product: lane `i % 8` accumulates
+    /// `a[i] · (q[i]·scale[i])` with the dequant multiply rounded before
+    /// the outer multiply, exactly like the scalar reference.
+    ///
+    /// # Safety
+    /// AVX2 required; `a.len() == q.len() == scale.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8_avx2(a: &[f32], q: &[i8], scale: &[f32]) -> f32 {
+        let n = a.len();
+        let main = n - n % LANES;
+        let mut acc = _mm256_setzero_ps();
+        let mut c = 0;
+        while c < main {
+            let va = _mm256_loadu_ps(a.as_ptr().add(c));
+            let vs = _mm256_loadu_ps(scale.as_ptr().add(c));
+            let qb = _mm_loadl_epi64(q.as_ptr().add(c) as *const __m128i);
+            let qf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(qb));
+            let deq = _mm256_mul_ps(qf, vs);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, deq));
+            c += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for i in main..n {
+            lanes[i - main] += a[i] * (q[i] as f32 * scale[i]);
+        }
+        fold_lanes(&lanes)
+    }
+
+    /// Unpack 4 packed-int4 bytes (8 channels) into 8 sign-extended i32
+    /// lanes in channel order `lo0,hi0,lo1,hi1,…` — the shift pair
+    /// `(x << 28) >> 28` / `(x << 24) >> 28` on a zero-extended byte is
+    /// exactly `nibble_lo` / `nibble_hi`.
+    ///
+    /// # Safety
+    /// AVX2 required; `p` must be readable for 4 bytes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn unpack8_i4(p: *const u8) -> __m256i {
+        let word = (p as *const u32).read_unaligned();
+        let bi = _mm_cvtepu8_epi32(_mm_cvtsi32_si128(word as i32));
+        let lo = _mm_srai_epi32(_mm_slli_epi32(bi, 28), 28);
+        let hi = _mm_srai_epi32(_mm_slli_epi32(bi, 24), 28);
+        let il = _mm_unpacklo_epi32(lo, hi);
+        let ih = _mm_unpackhi_epi32(lo, hi);
+        _mm256_inserti128_si256(_mm256_castsi128_si256(il), ih, 1)
+    }
+
+    /// Striped packed-int4 dot product: channel `c` lands in lane
+    /// `c % 8` (4 bytes = 8 channels per vector step, so the scalar
+    /// byte tail continues the lane cycle exactly).
+    ///
+    /// # Safety
+    /// AVX2 required; `a.len() == packed.len() * 2 == scale.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i4_avx2(a: &[f32], packed: &[u8], scale: &[f32]) -> f32 {
+        let n = a.len();
+        let main = n - n % LANES;
+        let mut acc = _mm256_setzero_ps();
+        let mut c = 0;
+        while c < main {
+            let va = _mm256_loadu_ps(a.as_ptr().add(c));
+            let vs = _mm256_loadu_ps(scale.as_ptr().add(c));
+            let qf = _mm256_cvtepi32_ps(unpack8_i4(packed.as_ptr().add(c / 2)));
+            let deq = _mm256_mul_ps(qf, vs);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, deq));
+            c += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for i in main / 2..packed.len() {
+            let b = packed[i];
+            let c0 = 2 * i;
+            lanes[c0 - main] += a[c0] * (nibble_lo(b) as f32 * scale[c0]);
+            lanes[c0 - main + 1] += a[c0 + 1] * (nibble_hi(b) as f32 * scale[c0 + 1]);
+        }
+        fold_lanes(&lanes)
+    }
+
+    /// Elementwise `y[i] += alpha · x[i]` (per-element mul+add, same
+    /// rounding sequence as the scalar body).
+    ///
+    /// # Safety
+    /// AVX2 required; `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let main = n - n % LANES;
+        let va = _mm256_set1_ps(alpha);
+        let mut c = 0;
+        while c < main {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(c));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(c));
+            _mm256_storeu_ps(
+                y.as_mut_ptr().add(c),
+                _mm256_add_ps(vy, _mm256_mul_ps(va, vx)),
+            );
+            c += LANES;
+        }
+        for i in main..n {
+            y[i] += alpha * x[i];
+        }
+    }
+
+    /// Elementwise `y[i] += alpha · (q[i]·scale[i])`.
+    ///
+    /// # Safety
+    /// AVX2 required; `q.len() == scale.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_i8_avx2(alpha: f32, q: &[i8], scale: &[f32], y: &mut [f32]) {
+        let n = y.len();
+        let main = n - n % LANES;
+        let va = _mm256_set1_ps(alpha);
+        let mut c = 0;
+        while c < main {
+            let vs = _mm256_loadu_ps(scale.as_ptr().add(c));
+            let qb = _mm_loadl_epi64(q.as_ptr().add(c) as *const __m128i);
+            let deq = _mm256_mul_ps(_mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(qb)), vs);
+            let vy = _mm256_loadu_ps(y.as_ptr().add(c));
+            _mm256_storeu_ps(
+                y.as_mut_ptr().add(c),
+                _mm256_add_ps(vy, _mm256_mul_ps(va, deq)),
+            );
+            c += LANES;
+        }
+        for i in main..n {
+            y[i] += alpha * (q[i] as f32 * scale[i]);
+        }
+    }
+
+    /// Elementwise `y[c] += alpha · (q4[c]·scale[c])` over a packed row.
+    ///
+    /// # Safety
+    /// AVX2 required; `y.len() == packed.len() * 2 == scale.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_i4_avx2(alpha: f32, packed: &[u8], scale: &[f32], y: &mut [f32]) {
+        let n = y.len();
+        let main = n - n % LANES;
+        let va = _mm256_set1_ps(alpha);
+        let mut c = 0;
+        while c < main {
+            let vs = _mm256_loadu_ps(scale.as_ptr().add(c));
+            let deq = _mm256_mul_ps(_mm256_cvtepi32_ps(unpack8_i4(packed.as_ptr().add(c / 2))), vs);
+            let vy = _mm256_loadu_ps(y.as_ptr().add(c));
+            _mm256_storeu_ps(
+                y.as_mut_ptr().add(c),
+                _mm256_add_ps(vy, _mm256_mul_ps(va, deq)),
+            );
+            c += LANES;
+        }
+        for i in main / 2..packed.len() {
+            let b = packed[i];
+            let c0 = 2 * i;
+            y[c0] += alpha * (nibble_lo(b) as f32 * scale[c0]);
+            y[c0 + 1] += alpha * (nibble_hi(b) as f32 * scale[c0 + 1]);
+        }
+    }
+
+    /// Elementwise int8 row dequantize: `out[i] = q[i]·scale[i]`.
+    ///
+    /// # Safety
+    /// AVX2 required; `q.len() == scale.len() == out.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant_i8_row_avx2(q: &[i8], scale: &[f32], out: &mut [f32]) {
+        let n = out.len();
+        let main = n - n % LANES;
+        let mut c = 0;
+        while c < main {
+            let vs = _mm256_loadu_ps(scale.as_ptr().add(c));
+            let qb = _mm_loadl_epi64(q.as_ptr().add(c) as *const __m128i);
+            let deq = _mm256_mul_ps(_mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(qb)), vs);
+            _mm256_storeu_ps(out.as_mut_ptr().add(c), deq);
+            c += LANES;
+        }
+        for i in main..n {
+            out[i] = q[i] as f32 * scale[i];
+        }
+    }
+
+    /// Elementwise packed-int4 row dequantize: `out[c] = q4[c]·scale[c]`.
+    ///
+    /// # Safety
+    /// AVX2 required; `out.len() == packed.len() * 2 == scale.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant_i4_row_avx2(packed: &[u8], scale: &[f32], out: &mut [f32]) {
+        let n = out.len();
+        let main = n - n % LANES;
+        let mut c = 0;
+        while c < main {
+            let vs = _mm256_loadu_ps(scale.as_ptr().add(c));
+            let deq = _mm256_mul_ps(_mm256_cvtepi32_ps(unpack8_i4(packed.as_ptr().add(c / 2))), vs);
+            _mm256_storeu_ps(out.as_mut_ptr().add(c), deq);
+            c += LANES;
+        }
+        for i in main / 2..packed.len() {
+            let b = packed[i];
+            let c0 = 2 * i;
+            out[c0] = nibble_lo(b) as f32 * scale[c0];
+            out[c0 + 1] = nibble_hi(b) as f32 * scale[c0 + 1];
+        }
+    }
+
+    /// Striped f64 sum of squares over an f32 row (lane `i % 4`; the
+    /// f32→f64 widen is exact, so only the striping is contractual).
+    ///
+    /// # Safety
+    /// AVX2 required.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sumsq_f64_avx2(x: &[f32]) -> f64 {
+        let n = x.len();
+        let main = n - n % F64_LANES;
+        let mut acc = _mm256_setzero_pd();
+        let mut c = 0;
+        while c < main {
+            let v = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(c)));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(v, v));
+            c += F64_LANES;
+        }
+        let mut lanes = [0.0f64; F64_LANES];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        for i in main..n {
+            let v = x[i] as f64;
+            lanes[i - main] += v * v;
+        }
+        super::fold_lanes_f64(&lanes)
+    }
+
+    /// Elementwise RMSNorm apply: `out[i] = (x[i]·r)·w[i]` (same
+    /// left-associated rounding as the scalar `xv * r * wv`).
+    ///
+    /// # Safety
+    /// AVX2 required; `x.len() == w.len() == out.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn norm_mul_avx2(x: &[f32], r: f32, w: &[f32], out: &mut [f32]) {
+        let n = x.len();
+        let main = n - n % LANES;
+        let vr = _mm256_set1_ps(r);
+        let mut c = 0;
+        while c < main {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(c));
+            let vw = _mm256_loadu_ps(w.as_ptr().add(c));
+            _mm256_storeu_ps(
+                out.as_mut_ptr().add(c),
+                _mm256_mul_ps(_mm256_mul_ps(vx, vr), vw),
+            );
+            c += LANES;
+        }
+        for i in main..n {
+            out[i] = x[i] * r * w[i];
+        }
+    }
+
+    /// Elementwise in-place scale: `s[i] *= inv` (the softmax
+    /// normalization loop; the exp/sum chain stays scalar).
+    ///
+    /// # Safety
+    /// AVX2 required.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_avx2(s: &mut [f32], inv: f32) {
+        let n = s.len();
+        let main = n - n % LANES;
+        let vi = _mm256_set1_ps(inv);
+        let mut c = 0;
+        while c < main {
+            let v = _mm256_loadu_ps(s.as_ptr().add(c));
+            _mm256_storeu_ps(s.as_mut_ptr().add(c), _mm256_mul_ps(v, vi));
+            c += LANES;
+        }
+        for v in &mut s[main..] {
+            *v *= inv;
+        }
+    }
+
+    /// Elementwise RoPE pair rotation (see [`super::rotate_pairs`]).
+    ///
+    /// # Safety
+    /// AVX2 required; all four slices must have equal length.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn rotate_pairs_avx2(lo: &mut [f32], hi: &mut [f32], cos: &[f32], sin: &[f32]) {
+        let n = lo.len();
+        let main = n - n % LANES;
+        let mut c = 0;
+        while c < main {
+            let a = _mm256_loadu_ps(lo.as_ptr().add(c));
+            let b = _mm256_loadu_ps(hi.as_ptr().add(c));
+            let vc = _mm256_loadu_ps(cos.as_ptr().add(c));
+            let vs = _mm256_loadu_ps(sin.as_ptr().add(c));
+            let nl = _mm256_sub_ps(_mm256_mul_ps(a, vc), _mm256_mul_ps(b, vs));
+            let nh = _mm256_add_ps(_mm256_mul_ps(a, vs), _mm256_mul_ps(b, vc));
+            _mm256_storeu_ps(lo.as_mut_ptr().add(c), nl);
+            _mm256_storeu_ps(hi.as_mut_ptr().add(c), nh);
+            c += LANES;
+        }
+        if main < n {
+            super::rotate_pairs_scalar(&mut lo[main..], &mut hi[main..], &cos[main..], &sin[main..]);
+        }
+    }
+
+    /// Serial n×n GEMM tile: `out[m×n] += a[m×k] · b[k×n]`, the vector
+    /// twin of `gemm::nn_serial_scalar` — 4×16 register tile (two ymm
+    /// columns per row), broadcast `a`, ascending `k`, mul+add. Every
+    /// output element sees the identical per-element rounding sequence
+    /// as the scalar micro tile, so tiling differences are invisible.
+    ///
+    /// # Safety
+    /// AVX2 required; `a.len() == m·k`, `b.len() == k·n`,
+    /// `out.len() == m·n`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn nn_serial_avx2(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        const MR: usize = 4;
+        const NR: usize = 16;
+        let mut i = 0;
+        while i + MR <= m {
+            let mut j = 0;
+            while j + NR <= n {
+                let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let o = (i + r) * n + j;
+                    accr[0] = _mm256_loadu_ps(out.as_ptr().add(o));
+                    accr[1] = _mm256_loadu_ps(out.as_ptr().add(o + LANES));
+                }
+                for p in 0..k {
+                    let vb0 = _mm256_loadu_ps(b.as_ptr().add(p * n + j));
+                    let vb1 = _mm256_loadu_ps(b.as_ptr().add(p * n + j + LANES));
+                    for (r, accr) in acc.iter_mut().enumerate() {
+                        let av = _mm256_set1_ps(*a.get_unchecked((i + r) * k + p));
+                        accr[0] = _mm256_add_ps(accr[0], _mm256_mul_ps(av, vb0));
+                        accr[1] = _mm256_add_ps(accr[1], _mm256_mul_ps(av, vb1));
+                    }
+                }
+                for (r, accr) in acc.iter().enumerate() {
+                    let o = (i + r) * n + j;
+                    _mm256_storeu_ps(out.as_mut_ptr().add(o), accr[0]);
+                    _mm256_storeu_ps(out.as_mut_ptr().add(o + LANES), accr[1]);
+                }
+                j += NR;
+            }
+            if j < n {
+                for r in 0..MR {
+                    let row = i + r;
+                    nn_row_edge_avx2(&a[row * k..(row + 1) * k], b, n, j, &mut out[row * n..(row + 1) * n]);
+                }
+            }
+            i += MR;
+        }
+        for row in i..m {
+            nn_row_edge_avx2(&a[row * k..(row + 1) * k], b, n, 0, &mut out[row * n..(row + 1) * n]);
+        }
+    }
+
+    /// Column/row edge of [`nn_serial_avx2`]: saxpy over `b` rows for
+    /// columns `j0..n`, ascending `p` (the scalar `nn_row_edge` order).
+    ///
+    /// # Safety
+    /// AVX2 required; same layout preconditions as [`nn_serial_avx2`].
+    #[target_feature(enable = "avx2")]
+    unsafe fn nn_row_edge_avx2(arow: &[f32], b: &[f32], n: usize, j0: usize, orow: &mut [f32]) {
+        for (p, &av) in arow.iter().enumerate() {
+            axpy_avx2(av, &b[p * n + j0..(p + 1) * n], &mut orow[j0..]);
+        }
+    }
+
+    /// Serial tᵀ×n GEMM tile: `out[rows×n] += aᵀ[rows×m] · b[m×n]` for
+    /// the row strip `p0..p0+rows` of `aᵀ` — saxpy formulation
+    /// (ascending `i` per output element, the scalar `tn` order).
+    ///
+    /// # Safety
+    /// AVX2 required; `a.len() == m·k`, `b.len() == m·n`,
+    /// `out.len() == rows·n`, `p0 + rows <= k`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn tn_serial_avx2(
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        p0: usize,
+        rows: usize,
+        out: &mut [f32],
+    ) {
+        for i in 0..m {
+            let brow = &b[i * n..(i + 1) * n];
+            for rr in 0..rows {
+                let av = a[i * k + p0 + rr];
+                axpy_avx2(av, brow, &mut out[rr * n..(rr + 1) * n]);
+            }
+        }
+    }
+}
+
+/// NEON bodies (aarch64). Coverage is the f32/int8 decode-path
+/// primitives plus the RoPE rotation; the i4 family and the GEMM tiles
+/// fall back to the (striped) scalar references — same bits, narrower
+/// speedup. Lane assignment uses two 4-lane accumulators side by side
+/// so the 8-wide striping contract is preserved exactly.
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon {
+    use super::{fold_lanes, LANES};
+    use core::arch::aarch64::*;
+
+    /// Striped f32 dot product (lane `i % 8` across two q-registers).
+    ///
+    /// # Safety
+    /// NEON required (guaranteed by the [`super::active_isa`] dispatch);
+    /// `a.len() == b.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let main = n - n % LANES;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut c = 0;
+        while c < main {
+            let a0 = vld1q_f32(a.as_ptr().add(c));
+            let a1 = vld1q_f32(a.as_ptr().add(c + 4));
+            let b0 = vld1q_f32(b.as_ptr().add(c));
+            let b1 = vld1q_f32(b.as_ptr().add(c + 4));
+            acc0 = vaddq_f32(acc0, vmulq_f32(a0, b0));
+            acc1 = vaddq_f32(acc1, vmulq_f32(a1, b1));
+            c += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        for i in main..n {
+            lanes[i - main] += a[i] * b[i];
+        }
+        fold_lanes(&lanes)
+    }
+
+    /// Striped int8 dot product (widen i8→i32→f32, then the same
+    /// mul-rounding sequence as the scalar reference).
+    ///
+    /// # Safety
+    /// NEON required; `a.len() == q.len() == scale.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_i8_neon(a: &[f32], q: &[i8], scale: &[f32]) -> f32 {
+        let n = a.len();
+        let main = n - n % LANES;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut c = 0;
+        while c < main {
+            let q8 = vld1_s8(q.as_ptr().add(c));
+            let q16 = vmovl_s8(q8);
+            let qf0 = vcvtq_f32_s32(vmovl_s16(vget_low_s16(q16)));
+            let qf1 = vcvtq_f32_s32(vmovl_s16(vget_high_s16(q16)));
+            let deq0 = vmulq_f32(qf0, vld1q_f32(scale.as_ptr().add(c)));
+            let deq1 = vmulq_f32(qf1, vld1q_f32(scale.as_ptr().add(c + 4)));
+            acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(a.as_ptr().add(c)), deq0));
+            acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(a.as_ptr().add(c + 4)), deq1));
+            c += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        for i in main..n {
+            lanes[i - main] += a[i] * (q[i] as f32 * scale[i]);
+        }
+        fold_lanes(&lanes)
+    }
+
+    /// Elementwise `y[i] += alpha · x[i]`.
+    ///
+    /// # Safety
+    /// NEON required; `x.len() == y.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_neon(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let main = n - n % 4;
+        let va = vdupq_n_f32(alpha);
+        let mut c = 0;
+        while c < main {
+            let vx = vld1q_f32(x.as_ptr().add(c));
+            let vy = vld1q_f32(y.as_ptr().add(c));
+            vst1q_f32(y.as_mut_ptr().add(c), vaddq_f32(vy, vmulq_f32(va, vx)));
+            c += 4;
+        }
+        for i in main..n {
+            y[i] += alpha * x[i];
+        }
+    }
+
+    /// Elementwise `y[i] += alpha · (q[i]·scale[i])`.
+    ///
+    /// # Safety
+    /// NEON required; `q.len() == scale.len() == y.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_i8_neon(alpha: f32, q: &[i8], scale: &[f32], y: &mut [f32]) {
+        let n = y.len();
+        let main = n - n % LANES;
+        let va = vdupq_n_f32(alpha);
+        let mut c = 0;
+        while c < main {
+            let q8 = vld1_s8(q.as_ptr().add(c));
+            let q16 = vmovl_s8(q8);
+            let qf0 = vcvtq_f32_s32(vmovl_s16(vget_low_s16(q16)));
+            let qf1 = vcvtq_f32_s32(vmovl_s16(vget_high_s16(q16)));
+            let deq0 = vmulq_f32(qf0, vld1q_f32(scale.as_ptr().add(c)));
+            let deq1 = vmulq_f32(qf1, vld1q_f32(scale.as_ptr().add(c + 4)));
+            let y0 = vld1q_f32(y.as_ptr().add(c));
+            let y1 = vld1q_f32(y.as_ptr().add(c + 4));
+            vst1q_f32(y.as_mut_ptr().add(c), vaddq_f32(y0, vmulq_f32(va, deq0)));
+            vst1q_f32(y.as_mut_ptr().add(c + 4), vaddq_f32(y1, vmulq_f32(va, deq1)));
+            c += LANES;
+        }
+        for i in main..n {
+            y[i] += alpha * (q[i] as f32 * scale[i]);
+        }
+    }
+
+    /// Elementwise RoPE pair rotation (see [`super::rotate_pairs`]).
+    ///
+    /// # Safety
+    /// NEON required; all four slices must have equal length.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn rotate_pairs_neon(lo: &mut [f32], hi: &mut [f32], cos: &[f32], sin: &[f32]) {
+        let n = lo.len();
+        let main = n - n % 4;
+        let mut c = 0;
+        while c < main {
+            let a = vld1q_f32(lo.as_ptr().add(c));
+            let b = vld1q_f32(hi.as_ptr().add(c));
+            let vc = vld1q_f32(cos.as_ptr().add(c));
+            let vs = vld1q_f32(sin.as_ptr().add(c));
+            let nl = vsubq_f32(vmulq_f32(a, vc), vmulq_f32(b, vs));
+            let nh = vaddq_f32(vmulq_f32(a, vs), vmulq_f32(b, vc));
+            vst1q_f32(lo.as_mut_ptr().add(c), nl);
+            vst1q_f32(hi.as_mut_ptr().add(c), nh);
+            c += 4;
+        }
+        if main < n {
+            super::rotate_pairs_scalar(&mut lo[main..], &mut hi[main..], &cos[main..], &sin[main..]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_accepts_and_rejects() {
+        assert_eq!(SimdMode::parse("auto").unwrap(), SimdMode::Auto);
+        assert_eq!(SimdMode::parse(" ON ").unwrap(), SimdMode::Auto);
+        assert_eq!(SimdMode::parse("off").unwrap(), SimdMode::Off);
+        assert_eq!(SimdMode::parse("Scalar").unwrap(), SimdMode::Off);
+        assert!(SimdMode::parse("avx512").is_err());
+        assert!(SimdMode::parse("").is_err());
+    }
+
+    #[test]
+    fn mode_env_value_defaults_and_fails_loudly() {
+        assert_eq!(SimdMode::parse_env_value(None).unwrap(), SimdMode::Auto);
+        assert_eq!(SimdMode::parse_env_value(Some("")).unwrap(), SimdMode::Auto);
+        assert_eq!(SimdMode::parse_env_value(Some("  ")).unwrap(), SimdMode::Auto);
+        assert_eq!(SimdMode::parse_env_value(Some("off")).unwrap(), SimdMode::Off);
+        assert!(SimdMode::parse_env_value(Some("fast")).is_err());
+    }
+
+    #[test]
+    fn resolve_prefers_flag_over_default() {
+        let args = crate::util::cli::Args::parse_from(vec!["--simd".to_string(), "off".to_string()]);
+        assert_eq!(SimdMode::resolve(&args).unwrap(), SimdMode::Off);
+        let bad = crate::util::cli::Args::parse_from(vec!["--simd".to_string(), "wat".to_string()]);
+        assert!(SimdMode::resolve(&bad).is_err());
+    }
+
+    #[test]
+    fn off_forces_scalar_and_auto_detects() {
+        let _g = crate::kernels::TEST_THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let before = active_isa();
+        assert_eq!(set_simd_mode(SimdMode::Off), Isa::Scalar);
+        assert_eq!(active_isa(), Isa::Scalar);
+        assert_eq!(isa_name(), "scalar");
+        let auto = set_simd_mode(SimdMode::Auto);
+        #[cfg(target_arch = "x86_64")]
+        if std::is_x86_feature_detected!("avx2") {
+            assert_eq!(auto, Isa::Avx2);
+        }
+        assert_eq!(active_isa(), auto);
+        // Restore whatever the surrounding tests were running under.
+        ACTIVE.store(before as u8, Ordering::Relaxed);
+    }
+}

@@ -64,13 +64,31 @@
 //! threads directly (see the [`kernels`] module docs).
 //!
 //! Determinism: every kernel accumulates each output element in a fixed
-//! ascending reduction order and every parallel split is row-disjoint
+//! reduction order and every parallel split is row-disjoint
 //! and a pure function of the *budget* (never of pool state), so
 //! serving output is **bitwise identical at every thread count** — CI
 //! runs the suite at `BLOCK_ATTN_THREADS=1`, `=3` (odd, non-divisible
 //! splits) and `=4` to pin it. Pool counters (workers, jobs executed,
 //! queue-depth high-water) surface in the server stats endpoint and
 //! the bench reports via [`kernels::pool_stats`].
+//!
+//! **SIMD dispatch** ([`kernels::simd`]): the hot inner loops
+//! (f32/int8/int4 dot + axpy, dequant rows, the GEMM serial tiles, the
+//! RMSNorm reduction, the RoPE rotation) have runtime-dispatched vector
+//! bodies — AVX2 on x86_64, NEON on aarch64, detected at startup with
+//! the scalar reference as the universal fallback. Selection:
+//! `--simd auto|off` > `$BLOCK_ATTN_SIMD` > auto-detect (invalid values
+//! fail loudly). The scalar references are restructured to the same
+//! **lane-striped reduction order** the vector units use (8 fixed f32
+//! partial sums folded ascending; 4 for the f64 RMSNorm sum), and the
+//! vector bodies use separate mul+add (never FMA), so every SIMD
+//! variant is **bitwise identical** to scalar at every shape, tier,
+//! and thread count — `--simd` is a pure wall-clock knob, pinned by
+//! `tests/simd_parity.rs` and a `BLOCK_ATTN_SIMD=off` CI leg. The
+//! active ISA is reported as `simd_isa` in server stats and in bench
+//! footers. To add a vector kernel, see the [`kernels::simd`] module
+//! docs (stripe the scalar body first, mirror the lane assignment,
+//! dispatch on [`kernels::active_isa`], pin parity).
 //!
 //! ## Quantized KV tiers
 //!
@@ -201,6 +219,7 @@ pub fn run_cli(args: &util::cli::Args) -> anyhow::Result<()> {
             eprintln!("          --model tiny|small|bench [--checkpoint FILE]");
             eprintln!("          --threads N            (kernel threads; or $BLOCK_ATTN_THREADS)");
             eprintln!("          --kv-quant f32|int8|int4  (KV cache tier; or $BLOCK_ATTN_KV_QUANT)");
+            eprintln!("          --simd auto|off        (vector kernels; or $BLOCK_ATTN_SIMD)");
             eprintln!("  info   [--artifacts DIR]");
             eprintln!("  train  --preset table1 --out DIR [--scale 1.0]");
             eprintln!("  serve  --addr 127.0.0.1:7841 [--workers 4] [--cache-mb 256]");

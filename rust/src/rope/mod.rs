@@ -12,6 +12,19 @@
 //! pair `j` is `(x[j], x[j + d/2])` and `θ_j = base^(-2j/d)`,
 //! `j ∈ [0, d/2)`. This must match `python/compile/kernels/rope.py`.
 
+/// Rotate one head span's RoPE pairs in place: `x` has length
+/// `head_dim`, pair `j` is `(x[j], x[j + half])`. Splits at `half` and
+/// applies the ISA-dispatched elementwise rotation
+/// ([`crate::kernels::simd::rotate_pairs`]), which is bitwise identical
+/// to the scalar `a·cos − b·sin` / `a·sin + b·cos` sequence on every
+/// backend — the property that keeps Eq.-3 re-encoding inside the
+/// determinism contract.
+#[inline]
+fn rotate_span(x: &mut [f32], half: usize, cos: &[f32], sin: &[f32]) {
+    let (lo, hi) = x.split_at_mut(half);
+    crate::kernels::simd::rotate_pairs(lo, hi, cos, sin);
+}
+
 /// Precomputed per-pair inverse frequencies for one head dim.
 #[derive(Debug, Clone)]
 pub struct RopeTable {
@@ -53,12 +66,7 @@ impl RopeTable {
         debug_assert_eq!(x.len(), self.head_dim);
         let half = self.head_dim / 2;
         let (cos, sin) = self.angles(pos);
-        for j in 0..half {
-            let a = x[j];
-            let b = x[j + half];
-            x[j] = a * cos[j] - b * sin[j];
-            x[j + half] = a * sin[j] + b * cos[j];
-        }
+        rotate_span(x, half, &cos, &sin);
     }
 
     /// Apply RoPE at absolute positions to a `(L, H, head_dim)` tensor
@@ -100,13 +108,7 @@ impl RopeTable {
         let (cos, sin) = self.angles(delta);
         let heads_total = layers * seq_len * kv_heads;
         for h in 0..heads_total {
-            let x = &mut k[h * d..(h + 1) * d];
-            for j in 0..half {
-                let a = x[j];
-                let b = x[j + half];
-                x[j] = a * cos[j] - b * sin[j];
-                x[j + half] = a * sin[j] + b * cos[j];
-            }
+            rotate_span(&mut k[h * d..(h + 1) * d], half, &cos, &sin);
         }
     }
 
@@ -146,16 +148,9 @@ impl RopeTable {
                     let off = ((l * seq_len + t) * kv_heads + h) * d;
                     let srow = &scales[(l * kv_heads + h) * d..(l * kv_heads + h + 1) * d];
                     let x = &mut out[off..off + d];
-                    for (c, xo) in x.iter_mut().enumerate() {
-                        *xo = q[off + c] as f32 * srow[c];
-                    }
+                    crate::kernels::quant::dequant_i8_row(&q[off..off + d], srow, x);
                     if delta != 0 {
-                        for j in 0..half {
-                            let a = x[j];
-                            let b = x[j + half];
-                            x[j] = a * cos[j] - b * sin[j];
-                            x[j + half] = a * sin[j] + b * cos[j];
-                        }
+                        rotate_span(x, half, &cos, &sin);
                     }
                 }
             }
@@ -185,7 +180,7 @@ impl RopeTable {
         delta: i64,
         out: &mut [f32],
     ) {
-        use crate::kernels::quant::{nibble_hi, nibble_lo, I4_GROUP};
+        use crate::kernels::quant::{dequant_i4_row, I4_GROUP};
         let d = self.head_dim;
         let groups = seq_len.div_ceil(I4_GROUP);
         assert!(d % 2 == 0, "int4 packing needs an even head_dim");
@@ -202,17 +197,9 @@ impl RopeTable {
                     let srow = &scales[((l * groups + g) * kv_heads + h) * d..][..d];
                     let brow = &packed[off / 2..off / 2 + half];
                     let x = &mut out[off..off + d];
-                    for (cp, &b) in brow.iter().enumerate() {
-                        x[2 * cp] = nibble_lo(b) as f32 * srow[2 * cp];
-                        x[2 * cp + 1] = nibble_hi(b) as f32 * srow[2 * cp + 1];
-                    }
+                    dequant_i4_row(brow, srow, x);
                     if delta != 0 {
-                        for j in 0..half {
-                            let a = x[j];
-                            let b = x[j + half];
-                            x[j] = a * cos[j] - b * sin[j];
-                            x[j + half] = a * sin[j] + b * cos[j];
-                        }
+                        rotate_span(x, half, &cos, &sin);
                     }
                 }
             }

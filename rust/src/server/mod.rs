@@ -333,6 +333,7 @@ fn stats_line<B: Backend>(
         ("cache_hit_rate", Json::num(s.hit_rate())),
         ("cache_quant_rel_err", Json::num(s.quant_rel_err())),
         ("kv_precision", Json::str(coord.kv_precision().as_str())),
+        ("simd_isa", Json::str(crate::kernels::isa_name())),
         ("threads", Json::num(crate::kernels::num_threads() as f64)),
         ("pool_workers", Json::num(ps.workers as f64)),
         ("pool_jobs_executed", Json::num(ps.jobs_executed as f64)),

@@ -99,6 +99,13 @@ impl Args {
         self.get("kv-quant")
     }
 
+    /// `--simd auto|off` (vector-kernel dispatch mode). Returns the raw
+    /// value; parsing/validation lives in `kernels::simd::SimdMode::resolve`,
+    /// which also applies the `BLOCK_ATTN_SIMD` env fallback.
+    pub fn simd(&self) -> Option<&str> {
+        self.get("simd")
+    }
+
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }
@@ -153,6 +160,13 @@ mod tests {
         assert_eq!(parse("--kv-quant int8").kv_quant(), Some("int8"));
         assert_eq!(parse("--kv-quant=f32").kv_quant(), Some("f32"));
         assert_eq!(parse("run").kv_quant(), None);
+    }
+
+    #[test]
+    fn simd_accessor() {
+        assert_eq!(parse("--simd off").simd(), Some("off"));
+        assert_eq!(parse("--simd=auto").simd(), Some("auto"));
+        assert_eq!(parse("run").simd(), None);
     }
 
     #[test]

@@ -1,0 +1,359 @@
+//! SIMD ↔ scalar bitwise parity: `--simd` must be a pure wall-clock
+//! knob.
+//!
+//! The kernels layer pins a lane-striped reduction order (see
+//! `kernels::simd`) that both the scalar references and the vector
+//! bodies execute, so every dispatched kernel must produce **bitwise
+//! identical** output under `SimdMode::Off` and `SimdMode::Auto` — at
+//! every shape (vector main loop, scalar tail, and both), every KV
+//! tier, and every thread count. This file sweeps the row primitives,
+//! all six GEMM families, RMSNorm/softmax, the fused RoPE re-encode
+//! paths, and the end-to-end coordinator stream.
+//!
+//! On a machine whose detected ISA is scalar, `Auto` and `Off` run the
+//! same code and every assertion here is trivially true — the file
+//! stays green everywhere while pinning real vector-vs-scalar parity
+//! wherever AVX2/NEON is live.
+
+use block_attn::config::KvPrecision;
+use block_attn::coordinator::{AttentionMode, Coordinator, Request};
+use block_attn::kernels::{
+    active_isa, axpy, axpy_i4, axpy_i8, dot, dot_i4, dot_i8, gemm_nn_acc, gemm_nn_i4_acc,
+    gemm_nn_i8_acc, gemm_nt_acc, gemm_nt_i4_acc, gemm_nt_i8_acc, gemm_tn_acc, isa_name, quant,
+    rms_norm_rows, set_simd_mode, set_threads, softmax_inplace, Isa, SimdMode,
+};
+use block_attn::rope::RopeTable;
+use block_attn::runtime::NativeBackend;
+use block_attn::util::rng::Rng;
+use block_attn::ModelConfig;
+use std::sync::Mutex;
+
+/// Every test here flips the process-global SIMD mode (and some flip
+/// the thread budget); serialize so the harness cannot interleave the
+/// two sides of a comparison.
+static SIMD_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` under `Off` then `Auto` and return both results. The caller
+/// asserts equality; leaving the process in `Auto` afterwards matches
+/// the default every other test expects.
+fn under_both_modes<T>(mut f: impl FnMut() -> T) -> (T, T) {
+    set_simd_mode(SimdMode::Off);
+    let scalar = f();
+    set_simd_mode(SimdMode::Auto);
+    let simd = f();
+    (scalar, simd)
+}
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// Lengths that exercise the vector main loop (multiples of 8), the
+/// scalar tail alone (< 8), and both together (odd > 8).
+fn sweep_lens() -> Vec<usize> {
+    let mut v: Vec<usize> = (0..40).collect();
+    v.extend([64, 65, 127, 128, 130, 333]);
+    v
+}
+
+#[test]
+fn isa_dispatch_is_self_consistent() {
+    let _g = SIMD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    assert_eq!(set_simd_mode(SimdMode::Off), Isa::Scalar);
+    assert_eq!(active_isa(), Isa::Scalar);
+    assert_eq!(isa_name(), "scalar");
+    let auto = set_simd_mode(SimdMode::Auto);
+    assert_eq!(active_isa(), auto);
+    assert_eq!(isa_name(), auto.name());
+    #[cfg(target_arch = "x86_64")]
+    assert_eq!(auto == Isa::Avx2, std::is_x86_feature_detected!("avx2"));
+    #[cfg(target_arch = "aarch64")]
+    assert_eq!(auto == Isa::Neon, std::arch::is_aarch64_feature_detected!("neon"));
+}
+
+#[test]
+fn rowops_bitwise_parity_across_lengths() {
+    let _g = SIMD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(0x51D0);
+    for n in sweep_lens() {
+        let a = randv(&mut rng, n);
+        let b = randv(&mut rng, n);
+        let y0 = randv(&mut rng, n);
+        let alpha = rng.normal() as f32;
+        let q: Vec<i8> = (0..n).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+        let scale: Vec<f32> = (0..n).map(|_| (rng.normal() as f32).abs() * 0.02 + 1e-4).collect();
+
+        let (s, v) = under_both_modes(|| dot(&a, &b));
+        assert_eq!(s.to_bits(), v.to_bits(), "dot len={n}");
+        let (s, v) = under_both_modes(|| dot_i8(&a, &q, &scale));
+        assert_eq!(s.to_bits(), v.to_bits(), "dot_i8 len={n}");
+        let (s, v) = under_both_modes(|| {
+            let mut y = y0.clone();
+            axpy(alpha, &a, &mut y);
+            y
+        });
+        assert_eq!(s, v, "axpy len={n}");
+        let (s, v) = under_both_modes(|| {
+            let mut y = y0.clone();
+            axpy_i8(alpha, &q, &scale, &mut y);
+            y
+        });
+        assert_eq!(s, v, "axpy_i8 len={n}");
+
+        if n % 2 == 0 {
+            let packed: Vec<u8> = (0..n / 2).map(|_| rng.below(256) as u8).collect();
+            let (s, v) = under_both_modes(|| dot_i4(&a, &packed, &scale));
+            assert_eq!(s.to_bits(), v.to_bits(), "dot_i4 len={n}");
+            let (s, v) = under_both_modes(|| {
+                let mut y = y0.clone();
+                axpy_i4(alpha, &packed, &scale, &mut y);
+                y
+            });
+            assert_eq!(s, v, "axpy_i4 len={n}");
+        }
+    }
+}
+
+#[test]
+fn norm_and_softmax_bitwise_parity() {
+    let _g = SIMD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(0x50F7);
+    // Odd row widths hit the f64 4-lane tail and the normalize tail.
+    for (l, d) in [(1usize, 1usize), (3, 7), (2, 8), (5, 13), (4, 64), (3, 67)] {
+        let x = randv(&mut rng, l * d);
+        let w = randv(&mut rng, d);
+        let (s, v) = under_both_modes(|| {
+            let mut out = vec![0.0f32; l * d];
+            let mut rstd = vec![0.0f32; l];
+            rms_norm_rows(&x, &w, 1e-5, l, d, &mut out, &mut rstd);
+            (out, rstd)
+        });
+        assert_eq!(s, v, "rms_norm_rows {l}x{d}");
+    }
+    for n in sweep_lens() {
+        if n == 0 {
+            continue;
+        }
+        let x = randv(&mut rng, n);
+        let (s, v) = under_both_modes(|| {
+            let mut row = x.clone();
+            softmax_inplace(&mut row);
+            row
+        });
+        assert_eq!(s, v, "softmax_inplace len={n}");
+    }
+}
+
+/// Per-shared-dim-channel int8 quantization of a `rows×n` operand (the
+/// canonical recipe from `kernels::quant`).
+fn quant_cols(b: &[f32], rows: usize, n: usize) -> (Vec<i8>, Vec<f32>) {
+    let scale = quant::channel_scales(b, rows, n);
+    let q = b.iter().enumerate().map(|(i, &v)| quant::quantize_one(v, scale[i % n])).collect();
+    (q, scale)
+}
+
+#[test]
+fn gemm_families_bitwise_parity_on_odd_shapes() {
+    let _g = SIMD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(0x6E33);
+    // (m, k, n): below/above the micro-tile sizes, odd edges, and a
+    // GEMV-shaped m=1 row (the decode path).
+    for (m, k, n) in
+        [(1usize, 8usize, 16usize), (3, 5, 7), (4, 16, 16), (5, 17, 19), (17, 34, 9), (1, 130, 33)]
+    {
+        let a = randv(&mut rng, m * k);
+        let b_kn = randv(&mut rng, k * n);
+        let b_nk = randv(&mut rng, n * k);
+        let b_mn = randv(&mut rng, m * n);
+        let seed = randv(&mut rng, m * n);
+
+        let (s, v) = under_both_modes(|| {
+            let mut out = seed.clone();
+            gemm_nn_acc(&a, &b_kn, m, k, n, &mut out);
+            out
+        });
+        assert_eq!(s, v, "gemm_nn_acc {m}x{k}x{n}");
+
+        let (s, v) = under_both_modes(|| {
+            let mut out = seed.clone();
+            gemm_nt_acc(&a, &b_nk, m, k, n, &mut out);
+            out
+        });
+        assert_eq!(s, v, "gemm_nt_acc {m}x{k}x{n}");
+
+        let (s, v) = under_both_modes(|| {
+            let mut out = vec![0.25f32; k * n];
+            gemm_tn_acc(&a, &b_mn, m, k, n, &mut out);
+            out
+        });
+        assert_eq!(s, v, "gemm_tn_acc {m}x{k}x{n}");
+
+        // Quantized families: shared dim is k for nt (b is n×k), n for nn.
+        let (bq_nt, bs_nt) = quant_cols(&b_nk, n, k);
+        let (s, v) = under_both_modes(|| {
+            let mut out = seed.clone();
+            gemm_nt_i8_acc(&a, &bq_nt, &bs_nt, m, k, n, &mut out);
+            out
+        });
+        assert_eq!(s, v, "gemm_nt_i8_acc {m}x{k}x{n}");
+
+        let (bq_nn, bs_nn) = quant_cols(&b_kn, k, n);
+        let (s, v) = under_both_modes(|| {
+            let mut out = seed.clone();
+            gemm_nn_i8_acc(&a, &bq_nn, &bs_nn, m, k, n, &mut out);
+            out
+        });
+        assert_eq!(s, v, "gemm_nn_i8_acc {m}x{k}x{n}");
+
+        if k % 2 == 0 {
+            let (bq4, bs4) = quant::quantize_cols_i4(&b_nk, n, k);
+            let (s, v) = under_both_modes(|| {
+                let mut out = seed.clone();
+                gemm_nt_i4_acc(&a, &bq4, &bs4, m, k, n, &mut out);
+                out
+            });
+            assert_eq!(s, v, "gemm_nt_i4_acc {m}x{k}x{n}");
+        }
+        if n % 2 == 0 {
+            let (bq4, bs4) = quant::quantize_cols_i4(&b_kn, k, n);
+            let (s, v) = under_both_modes(|| {
+                let mut out = seed.clone();
+                gemm_nn_i4_acc(&a, &bq4, &bs4, m, k, n, &mut out);
+                out
+            });
+            assert_eq!(s, v, "gemm_nn_i4_acc {m}x{k}x{n}");
+        }
+    }
+}
+
+#[test]
+fn rope_reencode_paths_bitwise_parity() {
+    let _g = SIMD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    use block_attn::kernels::{QuantizedKv, QuantizedKv4};
+    use block_attn::tensor::Tensor;
+    // 37 tokens ⇒ a partial int4 scale group; head_dim 16 has a full
+    // 8-lane rotation plus no tail, head_dim 12 an all-tail half of 6.
+    for (layers, seq, heads, d) in [(2usize, 37usize, 2usize, 16usize), (1, 5, 3, 12)] {
+        let table = RopeTable::new(d, 10000.0);
+        let mut rng = Rng::new(0xA0E5);
+        let raw = randv(&mut rng, layers * seq * heads * d);
+        let x = Tensor::from_vec(&[layers, seq, heads, d], raw.clone());
+        let kq8 = QuantizedKv::quantize(&x);
+        let kq4 = QuantizedKv4::quantize(&x);
+        for &delta in &[0i64, 1, 37, 4096] {
+            let (s, v) = under_both_modes(|| {
+                let mut k = raw.clone();
+                table.reencode_block(&mut k, layers, seq, heads, delta);
+                k
+            });
+            assert_eq!(s, v, "reencode_block d={d} delta={delta}");
+            let (s, v) = under_both_modes(|| {
+                let mut out = vec![0.0f32; raw.len()];
+                table.reencode_block_dequant(
+                    &kq8.q, &kq8.scales, layers, seq, heads, delta, &mut out,
+                );
+                out
+            });
+            assert_eq!(s, v, "reencode_block_dequant d={d} delta={delta}");
+            let (s, v) = under_both_modes(|| {
+                let mut out = vec![0.0f32; raw.len()];
+                table.reencode_block_dequant_i4(
+                    &kq4.packed, &kq4.scales, layers, seq, heads, delta, &mut out,
+                );
+                out
+            });
+            assert_eq!(s, v, "reencode_block_dequant_i4 d={d} delta={delta}");
+            let (s, v) = under_both_modes(|| (kq8.dequantize(), kq4.dequantize()));
+            assert_eq!(s.0.data(), v.0.data(), "QuantizedKv::dequantize");
+            assert_eq!(s.1.data(), v.1.data(), "QuantizedKv4::dequantize");
+        }
+    }
+}
+
+// -- end to end ------------------------------------------------------
+
+fn micro_config() -> ModelConfig {
+    ModelConfig {
+        name: "micro".into(),
+        vocab: 24,
+        d_model: 16,
+        layers: 2,
+        heads: 2,
+        kv_heads: 1,
+        head_dim: 8,
+        d_ff: 32,
+        rope_theta: 10000.0,
+        norm_eps: 1e-5,
+        max_len: 256,
+    }
+}
+
+/// A request stream with shared blocks (cache hits), fresh blocks
+/// (concurrent misses), and mixed attention modes — the same shape the
+/// thread-determinism suite uses.
+fn request_stream(vocab: usize) -> Vec<Request> {
+    let mut rng = Rng::new(99);
+    let mut block = |len: usize| -> Vec<i32> { (0..len).map(|_| rng.below(vocab) as i32).collect() };
+    let shared_a = block(10);
+    let shared_b = block(7);
+    let dup = block(5);
+    let mut reqs = Vec::new();
+    for (i, mode) in [
+        AttentionMode::Block,
+        AttentionMode::Block,
+        AttentionMode::BlockNoReencode,
+        AttentionMode::Full,
+    ]
+    .iter()
+    .enumerate()
+    {
+        let blocks = match i {
+            0 => vec![shared_a.clone(), block(9), dup.clone(), dup.clone()],
+            1 => vec![shared_a.clone(), shared_b.clone(), block(12)],
+            _ => vec![shared_b.clone(), block(6)],
+        };
+        reqs.push(Request { id: i as u64, blocks, query: block(8), max_new_tokens: 6, mode: *mode });
+    }
+    reqs
+}
+
+/// Serve the stream on a fresh coordinator at the given budget, tier,
+/// and SIMD mode; return everything deterministic about the responses.
+fn serve(threads: usize, precision: KvPrecision, mode: SimdMode) -> Vec<(Vec<i32>, usize, usize)> {
+    set_threads(threads);
+    set_simd_mode(mode);
+    let engine = NativeBackend::new(micro_config(), 0xD15C);
+    let mut coord = Coordinator::with_kv_precision(engine, 64 << 20, precision);
+    request_stream(24)
+        .iter()
+        .map(|req| {
+            let resp = coord.process(req).expect("process");
+            (resp.tokens.clone(), resp.cached_blocks, resp.prompt_tokens)
+        })
+        .collect()
+}
+
+/// The headline contract: `--simd auto` vs `--simd off` serve
+/// byte-identical streams at every thread count × KV tier — prefill,
+/// Eq.-3 re-encode, quantized decode attention and all.
+#[test]
+fn coordinator_stream_identical_across_simd_modes() {
+    let _g = SIMD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = block_attn::kernels::num_threads();
+    for precision in [KvPrecision::F32, KvPrecision::Int8, KvPrecision::Int4] {
+        for threads in [1usize, 3, 8] {
+            let off = serve(threads, precision, SimdMode::Off);
+            let auto = serve(threads, precision, SimdMode::Auto);
+            assert_eq!(
+                off,
+                auto,
+                "serving stream differs between --simd off and auto ({} tier, {threads} threads, auto isa {})",
+                precision.as_str(),
+                isa_name()
+            );
+            assert!(off.iter().all(|(tokens, ..)| !tokens.is_empty()));
+        }
+    }
+    set_threads(prev);
+    set_simd_mode(SimdMode::Auto);
+}
