@@ -1,0 +1,158 @@
+//! Disk-tier TTFT bench: cold prefill vs disk-warm (blocks promoted
+//! from the persistent store) vs RAM-warm (blocks resident in the
+//! in-memory cache).
+//!
+//! ```sh
+//! cargo bench --bench store                       # 8 passages x 128 tokens
+//! cargo bench --bench store -- --passages 6 --passage-len 64
+//! cargo bench --bench store -- --kv-quant int4    # packed low-bit tier
+//! ```
+//!
+//! Writes `BENCH_store.json` (`--json-out PATH` overrides) with
+//! `ttft_cold_ms` / `ttft_disk_warm_ms` / `ttft_ram_warm_ms` for the
+//! `bench_guard` gate. The bench itself fails if the disk-warm path is
+//! not faster than cold, or if the disk-warm generation diverges from
+//! the cold one (promotion must be bitwise invisible — see
+//! `docs/kvstore-format.md`).
+
+use block_attn::config::{KvPrecision, KvStoreConfig};
+use block_attn::coordinator::{AttentionMode, Coordinator, Request};
+use block_attn::runtime::backend_from_args;
+use block_attn::tokenizer::{QRY, SEP};
+use block_attn::util::cli::Args;
+use block_attn::util::json::Json;
+use block_attn::util::rng::Rng;
+use block_attn::util::timer::{bench, BenchOpts};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let threads = block_attn::kernels::init_threads_from_args(&args);
+    let n_passages = args.usize_or("passages", 8);
+    let passage_len = args.usize_or("passage-len", 128);
+    let kv_precision = KvPrecision::resolve(&args)?;
+
+    let store_dir =
+        std::env::temp_dir().join(format!("block-attn-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let store_cfg = KvStoreConfig { dir: store_dir.clone(), budget_bytes: 0 };
+
+    // Two coordinators over identically-seeded backends: `cold` never
+    // sees the store; `warm` owns it.
+    let mut cold = Coordinator::with_kv_precision(
+        backend_from_args(&args, "tiny")?,
+        256 << 20,
+        kv_precision,
+    );
+    let mut warm = Coordinator::with_kv_precision(
+        backend_from_args(&args, "tiny")?,
+        256 << 20,
+        kv_precision,
+    );
+    warm.attach_kv_store(&store_cfg)?;
+
+    let cfg = cold.engine().config().clone();
+    let max_block = cold.engine().max_block_tokens()?;
+    anyhow::ensure!(
+        passage_len + 1 <= max_block,
+        "--passage-len {passage_len} exceeds the model's block capacity {max_block}"
+    );
+    let mut rng = Rng::new(11);
+    let mut passage = |len: usize| -> Vec<i32> {
+        let mut ids: Vec<i32> = (0..len).map(|_| rng.below(256) as i32).collect();
+        ids.push(SEP);
+        ids
+    };
+    let blocks: Vec<Vec<i32>> = (0..n_passages).map(|_| passage(passage_len)).collect();
+    let mut query = vec![QRY];
+    query.extend((0..16).map(|_| rng.below(256) as i32));
+    let req = Request {
+        id: 1,
+        blocks,
+        query,
+        max_new_tokens: 1,
+        mode: AttentionMode::Block,
+    };
+
+    // Correctness first, untimed: cold reference generation, then the
+    // disk round trip must reproduce it token for token.
+    let r_cold = cold.process(&req)?;
+    warm.process(&req)?;
+    let spilled = warm.flush_kv_store();
+    anyhow::ensure!(spilled == n_passages, "expected {n_passages} spills, got {spilled}");
+    let dropped = warm.drop_resident_blocks();
+    anyhow::ensure!(dropped == n_passages, "expected {n_passages} drops, got {dropped}");
+    let r_disk = warm.process(&req)?;
+    anyhow::ensure!(
+        r_disk.tokens == r_cold.tokens,
+        "disk-promoted generation diverged from cold ({:?} vs {:?})",
+        r_disk.tokens,
+        r_cold.tokens
+    );
+    anyhow::ensure!(
+        r_disk.cached_blocks == n_passages,
+        "disk-warm request should hit every block (hit {}/{})",
+        r_disk.cached_blocks,
+        n_passages
+    );
+
+    let opts = BenchOpts { warmup_iters: 1, iters: 5, max_seconds: 300.0 };
+    let r_c = bench("cold", &opts, || {
+        cold.clear_cache();
+        cold.process(&req).expect("cold process");
+    });
+    let r_d = bench("disk-warm", &opts, || {
+        warm.drop_resident_blocks();
+        warm.process(&req).expect("disk-warm process");
+    });
+    let r_r = bench("ram-warm", &opts, || {
+        warm.process(&req).expect("ram-warm process");
+    });
+
+    let stats = warm.cache_stats();
+    anyhow::ensure!(stats.disk_hits > 0, "no disk promotions were recorded");
+    anyhow::ensure!(stats.disk_errors == 0, "{} disk errors during bench", stats.disk_errors);
+    anyhow::ensure!(
+        r_d.p50_ms() < r_c.p50_ms(),
+        "disk-warm TTFT ({:.1} ms) did not beat cold ({:.1} ms)",
+        r_d.p50_ms(),
+        r_c.p50_ms()
+    );
+
+    println!(
+        "# store TTFT — config '{}', {} passages x {} tokens, kv {}",
+        cfg.name,
+        n_passages,
+        passage_len,
+        kv_precision.as_str()
+    );
+    println!("{:>12} {:>12} {:>12} {:>10}", "cold", "disk-warm", "ram-warm", "speedup");
+    println!(
+        "{:>10.1}ms {:>10.1}ms {:>10.1}ms {:>9.2}x",
+        r_c.p50_ms(),
+        r_d.p50_ms(),
+        r_r.p50_ms(),
+        r_c.p50_ms() / r_d.p50_ms()
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("store")),
+        ("model", Json::str(cfg.name.clone())),
+        ("backend", Json::str(block_attn::runtime::backend_choice(&args))),
+        ("kv_precision", Json::str(kv_precision.as_str())),
+        ("threads", Json::num(threads as f64)),
+        ("passages", Json::num(n_passages as f64)),
+        ("passage_len", Json::num(passage_len as f64)),
+        ("ttft_cold_ms", Json::num(r_c.p50_ms())),
+        ("ttft_disk_warm_ms", Json::num(r_d.p50_ms())),
+        ("ttft_ram_warm_ms", Json::num(r_r.p50_ms())),
+        ("disk_speedup", Json::num(r_c.p50_ms() / r_d.p50_ms())),
+        ("store_entries", Json::num(stats.disk_entries as f64)),
+        ("store_bytes", Json::num(stats.disk_bytes as f64)),
+    ]);
+    let out_path = args.str_or("json-out", "BENCH_store.json");
+    std::fs::write(&out_path, format!("{report}\n"))?;
+    eprintln!("# wrote {out_path}");
+    eprintln!("{}", block_attn::kernels::pool_stats_line());
+    let _ = std::fs::remove_dir_all(&store_dir);
+    Ok(())
+}

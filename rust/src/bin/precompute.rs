@@ -1,0 +1,95 @@
+//! `precompute` — offline corpus-to-store encoder.
+//!
+//! Reads a passage corpus (one passage per line), encodes each line the
+//! same way the server does (`tokenizer::ByteTokenizer::encode` plus a
+//! trailing `SEP`, see `docs/serving.md`), runs the block prefill once
+//! per passage, and spills the resulting KV blocks into the persistent
+//! disk store (`docs/kvstore-format.md`). A later `block-attn serve`
+//! pointed at the same `--kv-store-dir` (with the same weights) then
+//! answers RAG requests over those passages with disk hits instead of
+//! recomputing the prefill.
+//!
+//! Usage:
+//!   precompute --corpus passages.txt --kv-store-dir DIR \
+//!       [--kv-store-budget MB] [--model tiny] [--checkpoint FILE] \
+//!       [--kv-quant f32|int8|int4] [--threads N]
+//!
+//! The store directory is required (flag or `$BLOCK_ATTN_KV_STORE_DIR`);
+//! without one there is nowhere to persist the blocks.
+
+use anyhow::{bail, Context, Result};
+use block_attn::coordinator::Coordinator;
+use block_attn::tokenizer::{ByteTokenizer, SEP};
+use block_attn::util::cli::Args;
+use block_attn::{config, kernels, runtime};
+
+fn main() {
+    let args = Args::parse();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let corpus_path = match args.get("corpus") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => bail!("--corpus FILE is required (one passage per line)"),
+    };
+    let store_cfg = match config::KvStoreConfig::resolve(args)? {
+        Some(c) => c,
+        None => bail!(
+            "a store directory is required: pass --kv-store-dir DIR or set $BLOCK_ATTN_KV_STORE_DIR"
+        ),
+    };
+    let threads = kernels::init_threads_from_args(args);
+
+    let corpus = std::fs::read_to_string(&corpus_path)
+        .with_context(|| format!("reading corpus {}", corpus_path.display()))?;
+
+    let backend = runtime::backend_from_args(args, "tiny")?;
+    if let Some(ck) = args.get("checkpoint") {
+        backend.load_params_file(std::path::Path::new(ck))?;
+    }
+    let kv_precision = config::KvPrecision::resolve(args)?;
+    let mut coord = Coordinator::with_kv_precision(backend, 256 << 20, kv_precision);
+    coord.attach_kv_store(&store_cfg)?;
+
+    let max_len = coord.engine().max_block_tokens()?;
+    let tok = ByteTokenizer::new();
+    let (mut computed, mut skipped, mut too_long) = (0usize, 0usize, 0usize);
+    for (lineno, line) in corpus.lines().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let mut ids = tok.encode(line);
+        ids.push(SEP);
+        if ids.len() > max_len {
+            eprintln!(
+                "warning: line {} is {} tokens (> max block length {}); skipping",
+                lineno + 1,
+                ids.len(),
+                max_len
+            );
+            too_long += 1;
+            continue;
+        }
+        if coord.precompute_block(&ids)? {
+            computed += 1;
+        } else {
+            skipped += 1;
+        }
+    }
+    let spilled = coord.flush_kv_store();
+    let stats = coord.cache_stats();
+    println!(
+        "precompute: {} blocks encoded, {} already present, {} too long \
+         ({} spilled this run; store now holds {} entries / {} bytes) \
+         [threads={}]",
+        computed, skipped, too_long, spilled, stats.disk_entries, stats.disk_bytes, threads
+    );
+    if stats.disk_errors > 0 {
+        bail!("{} store write errors (see stderr)", stats.disk_errors);
+    }
+    Ok(())
+}

@@ -94,6 +94,77 @@ impl KvPrecision {
     }
 }
 
+/// Where the persistent block KV store lives and how much disk it may
+/// use (the tier under `kvcache::disk::DiskStore`; file format in
+/// `docs/kvstore-format.md`).
+///
+/// Resolution order, matching every other knob in the stack:
+/// `--kv-store-dir` / `--kv-store-budget` > `$BLOCK_ATTN_KV_STORE_DIR`
+/// / `$BLOCK_ATTN_KV_STORE_BUDGET` > disabled. The budget is in **MB**
+/// (like `--cache-mb`), 0 = unbounded. No directory configured means
+/// no store: serving stays purely in-RAM, exactly as before this tier
+/// existed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KvStoreConfig {
+    pub dir: PathBuf,
+    pub budget_bytes: usize,
+}
+
+impl KvStoreConfig {
+    /// `--kv-store-dir`/`--kv-store-budget` from parsed CLI options,
+    /// falling back to the environment. `Ok(None)` = no store
+    /// configured. Errors loudly on an unparsable budget or a budget
+    /// without a directory — a misconfigured persistence layer must
+    /// not silently degrade to RAM-only serving.
+    pub fn resolve(args: &crate::util::cli::Args) -> Result<Option<KvStoreConfig>> {
+        let dir = args
+            .kv_store_dir()
+            .map(str::to_string)
+            .or_else(|| std::env::var("BLOCK_ATTN_KV_STORE_DIR").ok());
+        let budget = args
+            .kv_store_budget()
+            .map(str::to_string)
+            .or_else(|| std::env::var("BLOCK_ATTN_KV_STORE_BUDGET").ok());
+        Self::parse_values(dir.as_deref(), budget.as_deref())
+    }
+
+    /// Environment-only resolution (for paths with no CLI in scope,
+    /// e.g. tests honoring a CI-provided store directory).
+    pub fn from_env() -> Result<Option<KvStoreConfig>> {
+        let dir = std::env::var("BLOCK_ATTN_KV_STORE_DIR").ok();
+        let budget = std::env::var("BLOCK_ATTN_KV_STORE_BUDGET").ok();
+        Self::parse_values(dir.as_deref(), budget.as_deref())
+    }
+
+    /// The pure value-level resolver behind [`Self::resolve`] /
+    /// [`Self::from_env`] (unit-testable without touching the process
+    /// environment). `None` or empty directory disables the store; the
+    /// budget is MB, absent/empty = 0 = unbounded.
+    pub fn parse_values(dir: Option<&str>, budget_mb: Option<&str>) -> Result<Option<KvStoreConfig>> {
+        let dir = match dir.map(str::trim) {
+            Some(d) if !d.is_empty() => d.to_string(),
+            _ => {
+                if let Some(b) = budget_mb.map(str::trim) {
+                    if !b.is_empty() {
+                        bail!(
+                            "kv-store budget '{b}' given without a store directory \
+                             (--kv-store-dir or $BLOCK_ATTN_KV_STORE_DIR)"
+                        );
+                    }
+                }
+                return Ok(None);
+            }
+        };
+        let mb: usize = match budget_mb.map(str::trim) {
+            Some(b) if !b.is_empty() => b.parse().map_err(|_| {
+                anyhow!("invalid kv-store budget '{b}' (expected MB as an integer, 0 = unbounded)")
+            })?,
+            _ => 0,
+        };
+        Ok(Some(KvStoreConfig { dir: PathBuf::from(dir), budget_bytes: mb << 20 }))
+    }
+}
+
 /// Transformer dimensions for one named config (e.g. `tiny`).
 #[derive(Debug, Clone)]
 pub struct ModelConfig {
@@ -472,6 +543,42 @@ mod tests {
         assert_eq!(KvPrecision::parse_env_value(Some("int4")).unwrap(), KvPrecision::Int4);
         let err = KvPrecision::parse_env_value(Some("in8t")).unwrap_err();
         assert!(format!("{err}").contains("in8t"), "error must name the bad value");
+    }
+
+    /// The persistent-store knobs, on the pure value resolver so the
+    /// test never mutates the process environment: no dir = no store,
+    /// budget in MB (0/absent = unbounded), loud failures on a
+    /// non-integer budget or a budget without a dir.
+    #[test]
+    fn kv_store_config_parses_values() {
+        assert_eq!(KvStoreConfig::parse_values(None, None).unwrap(), None);
+        assert_eq!(KvStoreConfig::parse_values(Some(""), None).unwrap(), None);
+        assert_eq!(KvStoreConfig::parse_values(Some("  "), Some("")).unwrap(), None);
+        let c = KvStoreConfig::parse_values(Some("/tmp/kv"), None).unwrap().unwrap();
+        assert_eq!(c.dir, PathBuf::from("/tmp/kv"));
+        assert_eq!(c.budget_bytes, 0, "absent budget = unbounded");
+        let c = KvStoreConfig::parse_values(Some(" /tmp/kv "), Some(" 64 ")).unwrap().unwrap();
+        assert_eq!(c.dir, PathBuf::from("/tmp/kv"));
+        assert_eq!(c.budget_bytes, 64 << 20, "budget is MB");
+        let c = KvStoreConfig::parse_values(Some("/tmp/kv"), Some("0")).unwrap().unwrap();
+        assert_eq!(c.budget_bytes, 0);
+        let err = KvStoreConfig::parse_values(Some("/tmp/kv"), Some("lots")).unwrap_err();
+        assert!(format!("{err}").contains("lots"), "error must name the bad value");
+        let err = KvStoreConfig::parse_values(None, Some("64")).unwrap_err();
+        assert!(
+            format!("{err}").contains("without a store directory"),
+            "budget without dir must fail loudly, got: {err}"
+        );
+        // Flag beats environment; flags alone resolve without env.
+        let args = crate::util::cli::Args::parse_from(vec![
+            "--kv-store-dir".to_string(),
+            "/tmp/kv-flag".to_string(),
+            "--kv-store-budget".to_string(),
+            "2".to_string(),
+        ]);
+        let c = KvStoreConfig::resolve(&args).unwrap().unwrap();
+        assert_eq!(c.dir, PathBuf::from("/tmp/kv-flag"));
+        assert_eq!(c.budget_bytes, 2 << 20);
     }
 
     #[test]

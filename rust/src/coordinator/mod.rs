@@ -173,9 +173,51 @@ impl<B: Backend> Coordinator<B> {
     }
 
     /// Invalidate all cached block KV (mandatory after parameter
-    /// updates — cached states are functions of the weights).
+    /// updates — cached states are functions of the weights). Also
+    /// detaches any attached disk store: its fingerprint binds it to
+    /// the old weights ([`Self::attach_kv_store`] re-derives one).
     pub fn clear_cache(&mut self) {
         self.cache.clear();
+    }
+
+    /// Attach a persistent disk tier under the block cache (spill on
+    /// RAM eviction, promote on RAM miss; format spec in
+    /// `docs/kvstore-format.md`). The directory is keyed by a
+    /// fingerprint of the model config + **current weights**
+    /// ([`crate::kvcache::store::weights_fingerprint`]), so a store
+    /// populated under different weights — another seed, another
+    /// checkpoint — reads as a clean miss instead of serving stale KV.
+    pub fn attach_kv_store(&mut self, store_cfg: &crate::config::KvStoreConfig) -> Result<()> {
+        let fp = crate::kvcache::store::weights_fingerprint(
+            self.engine.config(),
+            &self.engine.params_host()?,
+        );
+        let store =
+            crate::kvcache::disk::DiskStore::open(&store_cfg.dir, fp, store_cfg.budget_bytes as u64)?;
+        self.cache.attach_store(store);
+        Ok(())
+    }
+
+    /// Persist every resident cached block to the attached store
+    /// (no-op without one) — the explicit flush used by the offline
+    /// `precompute` bin and by tests that exercise the restart path.
+    /// Returns the number of blocks newly written.
+    pub fn flush_kv_store(&mut self) -> usize {
+        self.cache.spill_all()
+    }
+
+    /// Directory of the attached disk store, if any (surfaced in the
+    /// server's `stats` line).
+    pub fn kv_store_dir(&self) -> Option<std::path::PathBuf> {
+        self.cache.store().map(|s| s.dir().to_path_buf())
+    }
+
+    /// Drop unpinned resident blocks **without** spilling, keeping the
+    /// disk tier attached — measurement aid for disk-warm paths (the
+    /// store bench and restart tests force the next lookups through
+    /// promotion). Returns the number dropped.
+    pub fn drop_resident_blocks(&mut self) -> usize {
+        self.cache.drop_resident()
     }
 
     /// Serve one request to completion (prefill + full decode loop).
@@ -476,16 +518,20 @@ impl<B: Backend> Coordinator<B> {
     }
 
     /// Precompute + cache the KV of a block (offline warm-up of the
-    /// passage store, cf. paper §1: "passages might have been computed").
-    pub fn precompute_block(&mut self, tokens: &[i32]) -> Result<()> {
+    /// passage store, cf. paper §1: "passages might have been
+    /// computed"). Skips blocks already resident **or already
+    /// published in the attached disk store** — the offline
+    /// `precompute` bin re-runs over a corpus idempotently. Returns
+    /// whether the block was actually computed.
+    pub fn precompute_block(&mut self, tokens: &[i32]) -> Result<bool> {
         let key = block_key(tokens);
-        if self.cache.contains(key) {
-            return Ok(());
+        if self.cache.contains_anywhere(key) {
+            return Ok(false);
         }
         let (k, v) = self.engine.prefill_block(tokens)?;
         self.cache.insert_pinned(key, k, v);
         self.cache.unpin(key);
-        Ok(())
+        Ok(true)
     }
 
     /// Plan without executing (for tests / introspection).

@@ -26,6 +26,7 @@
 //! low-bit×f32 GEMM micro-kernels live in [`super::gemm`].
 
 use crate::tensor::{Tensor, TensorF};
+use anyhow::{ensure, Result};
 
 /// Tokens per int4 scale group (the "group-wise" in group-wise scales).
 pub const I4_GROUP: usize = 32;
@@ -262,6 +263,26 @@ impl QuantizedKv {
         assert_eq!(x.dims(), &self.dims[..], "error reference shape mismatch");
         sq_err_between(x, &self.dequantize())
     }
+
+    /// Reassemble a tensor from stored codes + scales — the
+    /// deserialization half of the persistent KV store's stable layout
+    /// (`docs/kvstore-format.md`). The codes are taken **verbatim**:
+    /// restoring is not a quantization event, so a disk round-trip is
+    /// bitwise invisible to every later dequantizing fetch. The error
+    /// sums are zeroed (they were accounted once, at the original
+    /// [`Self::quantize`]). Fails when the section lengths do not match
+    /// the dims.
+    pub fn from_parts(q: Vec<i8>, scales: Vec<f32>, dims: [usize; 4]) -> Result<QuantizedKv> {
+        let [layers, _, heads, hd] = dims;
+        let n: usize = dims.iter().product();
+        ensure!(q.len() == n, "int8 code section: {} codes for dims {dims:?}", q.len());
+        ensure!(
+            scales.len() == layers * heads * hd,
+            "int8 scale section: {} scales for dims {dims:?}",
+            scales.len()
+        );
+        Ok(QuantizedKv { q, scales, dims, sq_err: 0.0, sq_ref: 0.0 })
+    }
 }
 
 /// `(Σ(x − x̂)², Σx²)` between a source tensor and its reconstruction
@@ -390,6 +411,28 @@ impl QuantizedKv4 {
         assert_eq!(x.dims(), &self.dims[..], "error reference shape mismatch");
         sq_err_between(x, &self.dequantize())
     }
+
+    /// Reassemble from stored packed codes + group-wise scales — the
+    /// int4 half of the persistent store's stable layout (see
+    /// [`QuantizedKv::from_parts`] for the contract: verbatim codes,
+    /// zeroed error sums, loud failure on section/shape mismatch).
+    pub fn from_parts(packed: Vec<u8>, scales: Vec<f32>, dims: [usize; 4]) -> Result<QuantizedKv4> {
+        let [layers, len, heads, hd] = dims;
+        ensure!(hd % 2 == 0, "int4 packing needs an even head_dim, got {hd}");
+        let n: usize = dims.iter().product();
+        let groups = len.div_ceil(I4_GROUP);
+        ensure!(
+            packed.len() == n / 2,
+            "int4 code section: {} bytes for dims {dims:?}",
+            packed.len()
+        );
+        ensure!(
+            scales.len() == layers * groups * heads * hd,
+            "int4 scale section: {} scales for dims {dims:?}",
+            scales.len()
+        );
+        Ok(QuantizedKv4 { packed, scales, dims, sq_err: 0.0, sq_ref: 0.0 })
+    }
 }
 
 #[cfg(test)]
@@ -448,6 +491,37 @@ mod tests {
             "int8 {} vs f32 {f32_bytes}: over 30%",
             a.size_bytes()
         );
+    }
+
+    /// `from_parts` must reproduce the quantizer's output bitwise for
+    /// both tiers (verbatim codes — the disk round-trip contract) and
+    /// reject sections that do not match the dims.
+    #[test]
+    fn from_parts_is_verbatim_and_validates() {
+        let mut rng = Rng::new(0x5E1A);
+        let dims = [2usize, 37, 2, 8]; // partial trailing int4 group
+        let x = random_kv(&mut rng, &dims);
+
+        let q8 = QuantizedKv::quantize(&x);
+        let r8 = QuantizedKv::from_parts(q8.q.clone(), q8.scales.clone(), dims).unwrap();
+        assert_eq!(r8.q, q8.q);
+        assert_eq!(r8.scales, q8.scales);
+        assert_eq!(r8.dequantize(), q8.dequantize(), "reassembled int8 must dequantize bitwise");
+        assert_eq!((r8.sq_err, r8.sq_ref), (0.0, 0.0), "restore is not a quantization event");
+        assert!(QuantizedKv::from_parts(q8.q[1..].to_vec(), q8.scales.clone(), dims).is_err());
+        assert!(QuantizedKv::from_parts(q8.q.clone(), q8.scales[1..].to_vec(), dims).is_err());
+
+        let q4 = QuantizedKv4::quantize(&x);
+        let r4 =
+            QuantizedKv4::from_parts(q4.packed.clone(), q4.scales.clone(), dims).unwrap();
+        assert_eq!(r4.packed, q4.packed);
+        assert_eq!(r4.scales, q4.scales);
+        assert_eq!(r4.dequantize(), q4.dequantize(), "reassembled int4 must dequantize bitwise");
+        assert!(
+            QuantizedKv4::from_parts(q4.packed[1..].to_vec(), q4.scales.clone(), dims).is_err()
+        );
+        assert!(QuantizedKv4::from_parts(q4.packed.clone(), q4.scales.clone(), [2, 37, 2, 7])
+            .is_err());
     }
 
     #[test]

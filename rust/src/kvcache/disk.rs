@@ -1,0 +1,304 @@
+//! Directory-backed persistent tier under [`super::BlockKvCache`].
+//!
+//! A [`DiskStore`] is one flat directory of block files, one file per
+//! cached block, named `<content-key:032x>-<fingerprint:016x>.bakv` —
+//! the same 128-bit content key that addresses the RAM tier
+//! ([`super::block_key`]) plus the weights fingerprint
+//! ([`super::store::weights_fingerprint`]) the blocks were computed
+//! under. Addressing is therefore pure: a lookup is a filename probe,
+//! and two processes (or two runs, days apart) that compute the same
+//! passage under the same weights produce byte-identical files at the
+//! same path.
+//!
+//! Crash-safety and concurrency come from two filesystem guarantees
+//! rather than locks:
+//!
+//! * **Atomic publish** — `put` writes to a unique `.tmp-*` file and
+//!   `rename(2)`s it into place. Readers see either no file or a
+//!   complete one; a crash mid-write leaves only tmp litter that is
+//!   never addressed. Concurrent spills of the same block race benignly
+//!   (both rename byte-identical images).
+//! * **Read stability** — `get` reads the whole file in one `fs::read`;
+//!   on POSIX an unlink (budget eviction in another process) after the
+//!   open does not affect the in-flight read.
+//!
+//! Validation failures in `get` (truncation, checksum, version —
+//! see [`super::store::decode_block`]) delete the damaged file and
+//! surface as an `Err` the cache converts into a loud recompute miss,
+//! so one bad block can never wedge a request or survive to be hit
+//! again.
+//!
+//! The byte budget (0 = unbounded) is enforced after each put by
+//! deleting oldest-modified files first — mtime-LRU across *all*
+//! processes sharing the directory, since promotion-heavy blocks are
+//! re-spilled (touching a fresh file) on their next eviction.
+
+use super::store::{self, StoredBlock};
+use super::KvData;
+use anyhow::{Context, Result};
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::SystemTime;
+
+/// Extension of published block files; anything else in the directory
+/// (tmp litter, user files) is ignored by scans and the budget.
+pub const FILE_EXT: &str = "bakv";
+
+/// Process-wide tmp-name uniquifier: two caches in one process
+/// spilling concurrently into the same directory must never collide
+/// on the staging file.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// One open store directory. Cheap handle: holds counters, no file
+/// descriptors.
+pub struct DiskStore {
+    dir: PathBuf,
+    fingerprint: u64,
+    budget_bytes: u64,
+    entries: usize,
+    bytes: u64,
+}
+
+impl DiskStore {
+    /// Open (creating if needed) a store directory for blocks computed
+    /// under `fingerprint`. `budget_bytes` bounds the summed file sizes
+    /// (0 = unbounded). Fails loudly when the directory cannot be
+    /// created or scanned — a store that cannot enumerate itself must
+    /// not be attached.
+    pub fn open(dir: &Path, fingerprint: u64, budget_bytes: u64) -> Result<DiskStore> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("kv-store: creating {}", dir.display()))?;
+        let mut s = DiskStore {
+            dir: dir.to_path_buf(),
+            fingerprint,
+            budget_bytes,
+            entries: 0,
+            bytes: 0,
+        };
+        for (_, len, _) in s.scan()? {
+            s.entries += 1;
+            s.bytes += len;
+        }
+        Ok(s)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Published block files in the directory (all fingerprints).
+    pub fn entries(&self) -> usize {
+        self.entries
+    }
+
+    /// Summed size of the published block files.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    fn path_for(&self, key: u128) -> PathBuf {
+        self.dir.join(format!("{key:032x}-{:016x}.{FILE_EXT}", self.fingerprint))
+    }
+
+    /// Filename probe: is this block (under this store's fingerprint)
+    /// published? Says nothing about validity — `get` decides that.
+    pub fn contains(&self, key: u128) -> bool {
+        self.path_for(key).exists()
+    }
+
+    /// Every published block file as `(mtime, len, path)`.
+    fn scan(&self) -> Result<Vec<(SystemTime, u64, PathBuf)>> {
+        let mut files = Vec::new();
+        let rd = fs::read_dir(&self.dir)
+            .with_context(|| format!("kv-store: scanning {}", self.dir.display()))?;
+        for ent in rd {
+            let ent = ent.with_context(|| format!("kv-store: scanning {}", self.dir.display()))?;
+            let path = ent.path();
+            if path.extension().and_then(|e| e.to_str()) != Some(FILE_EXT) {
+                continue;
+            }
+            // A file deleted between readdir and stat is not an error.
+            if let Ok(md) = ent.metadata() {
+                let mtime = md.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+                files.push((mtime, md.len(), path));
+            }
+        }
+        Ok(files)
+    }
+
+    /// Publish one block (write-behind spill). Returns `Ok(false)`
+    /// without touching the disk when the file already exists —
+    /// content addressing makes re-spilling the same block a no-op.
+    pub(crate) fn put(&mut self, key: u128, data: &KvData, len: usize) -> Result<bool> {
+        let path = self.path_for(key);
+        if path.exists() {
+            return Ok(false);
+        }
+        let img = store::encode_block(key, self.fingerprint, data, len);
+        let tmp = self.dir.join(format!(
+            ".tmp-{key:032x}-{}-{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::write(&tmp, &img).with_context(|| format!("kv-store: writing {}", tmp.display()))?;
+        if let Err(e) = fs::rename(&tmp, &path) {
+            let _ = fs::remove_file(&tmp);
+            return Err(e)
+                .with_context(|| format!("kv-store: publishing {}", path.display()));
+        }
+        self.entries += 1;
+        self.bytes += img.len() as u64;
+        self.enforce_budget();
+        Ok(true)
+    }
+
+    /// Read-through fetch. `Ok(None)` is a clean miss (no file);
+    /// `Err` means the file existed but failed validation — it has
+    /// been deleted so a healthy copy can be re-spilled, and the
+    /// caller must treat the lookup as a recompute miss.
+    pub(crate) fn get(&mut self, key: u128) -> Result<Option<StoredBlock>> {
+        let path = self.path_for(key);
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(e).with_context(|| format!("kv-store: reading {}", path.display()))
+            }
+        };
+        match store::decode_block(&bytes, key, self.fingerprint) {
+            Ok(block) => Ok(Some(block)),
+            Err(e) => {
+                if fs::remove_file(&path).is_ok() {
+                    self.entries = self.entries.saturating_sub(1);
+                    self.bytes = self.bytes.saturating_sub(bytes.len() as u64);
+                }
+                Err(e.context(format!("kv-store: rejecting {}", path.display())))
+            }
+        }
+    }
+
+    /// Delete oldest-modified files until the summed size fits the
+    /// budget. Refreshes the counters from a scan, so drift from other
+    /// processes sharing the directory self-corrects here.
+    fn enforce_budget(&mut self) {
+        if self.budget_bytes == 0 {
+            return;
+        }
+        let Ok(mut files) = self.scan() else { return };
+        let mut total: u64 = files.iter().map(|(_, len, _)| *len).sum();
+        // Oldest first; path as the tie-break so same-second writes
+        // (coarse mtime granularity) evict deterministically.
+        files.sort_by(|a, b| (a.0, &a.2).cmp(&(b.0, &b.2)));
+        let mut kept = files.len();
+        for (_, len, path) in &files {
+            if total <= self.budget_bytes {
+                break;
+            }
+            if fs::remove_file(path).is_ok() {
+                total -= len;
+                kept -= 1;
+            }
+        }
+        self.entries = kept;
+        self.bytes = total;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Tensor, TensorF};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("block-attn-disk-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn f32_block(len: usize, fill: f32) -> KvData {
+        let mut k: TensorF = Tensor::zeros(&[2, len, 1, 8]);
+        k.data_mut().iter_mut().for_each(|x| *x = fill);
+        KvData::F32 { k_local: k.clone(), v: k }
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_idempotence() {
+        let dir = tmpdir("roundtrip");
+        let mut st = DiskStore::open(&dir, 0xFEED, 0).unwrap();
+        assert_eq!((st.entries(), st.bytes()), (0, 0));
+        assert!(st.get(42).unwrap().is_none(), "empty store must miss cleanly");
+
+        let data = f32_block(4, 1.5);
+        assert!(st.put(42, &data, 4).unwrap());
+        assert!(!st.put(42, &data, 4).unwrap(), "re-spill must be a no-op");
+        assert_eq!(st.entries(), 1);
+        assert!(st.contains(42) && !st.contains(43));
+
+        let got = st.get(42).unwrap().expect("published block must be readable");
+        assert_eq!(got.len, 4);
+        match (&got.data, &data) {
+            (KvData::F32 { k_local: a, v: av }, KvData::F32 { k_local: b, v: bv }) => {
+                assert_eq!(a, b);
+                assert_eq!(av, bv);
+            }
+            _ => panic!("tier changed"),
+        }
+
+        // A second handle on the same directory sees the same state —
+        // the restart path.
+        let mut st2 = DiskStore::open(&dir, 0xFEED, 0).unwrap();
+        assert_eq!(st2.entries(), 1);
+        assert!(st2.get(42).unwrap().is_some());
+        // A handle under different weights misses by filename.
+        let mut st3 = DiskStore::open(&dir, 0xBEEF, 0).unwrap();
+        assert!(st3.get(42).unwrap().is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_file_is_rejected_and_quarantined() {
+        let dir = tmpdir("corrupt");
+        let mut st = DiskStore::open(&dir, 1, 0).unwrap();
+        st.put(7, &f32_block(4, 2.0), 4).unwrap();
+        let path = st.path_for(7);
+        let mut img = fs::read(&path).unwrap();
+        let n = img.len();
+        img[n - 1] ^= 0x10;
+        fs::write(&path, &img).unwrap();
+
+        let err = format!("{:#}", st.get(7).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(!path.exists(), "damaged file must be deleted");
+        assert!(st.get(7).unwrap().is_none(), "second fetch is a clean miss");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn budget_bounds_the_directory() {
+        let dir = tmpdir("budget");
+        let one = {
+            let mut probe = DiskStore::open(&dir, 1, 0).unwrap();
+            probe.put(1, &f32_block(4, 1.0), 4).unwrap();
+            probe.bytes()
+        };
+        let _ = fs::remove_dir_all(&dir);
+
+        // Budget of two files: the third put must evict one.
+        let mut st = DiskStore::open(&dir, 1, 2 * one).unwrap();
+        for key in 1..=3u128 {
+            st.put(key, &f32_block(4, key as u32 as f32), 4).unwrap();
+        }
+        assert_eq!(st.entries(), 2, "budget must hold two of three files");
+        assert!(st.bytes() <= 2 * one);
+        let served: usize =
+            (1..=3u128).filter(|&k| st.get(k).unwrap().is_some()).count();
+        assert_eq!(served, 2, "surviving files must still be readable");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -44,12 +44,32 @@
 //! inserts while resident entries keep serving at the tier they were
 //! stored at, so mixed-tier populations (precision changed between
 //! requests) coexist with exact per-tier byte accounting.
+//!
+//! ## Disk tier
+//!
+//! An attached [`disk::DiskStore`] ([`BlockKvCache::attach_store`])
+//! extends the cache below RAM: LRU eviction **spills** the victim's
+//! codes + scales to a content-addressed block file (write-behind),
+//! and a RAM miss **promotes** the block file back to a resident entry
+//! (read-through), fused into the same [`Self::lookup_pin`] the
+//! scheduler already calls — a promoted block pins and re-encodes
+//! exactly like one that was never evicted. Because quantization
+//! happens once at insert and the file stores the codes verbatim
+//! (format: [`store`], spec: `docs/kvstore-format.md`), a disk
+//! round-trip is **bitwise invisible** to every later fetch, at every
+//! tier and thread count. Corrupt or mismatched files are rejected
+//! loudly (stderr + [`CacheStats::disk_errors`]) and fall back to a
+//! recompute miss; they never wedge a request.
 
 use crate::config::KvPrecision;
 use crate::kernels::quant::{QuantizedKv, QuantizedKv4};
 use crate::rope::RopeTable;
 use crate::tensor::{Tensor, TensorF};
+use disk::DiskStore;
 use std::collections::HashMap;
+
+pub mod disk;
+pub mod store;
 
 /// 128-bit FNV-1a over token ids — content key of a block.
 pub fn block_key(tokens: &[i32]) -> u128 {
@@ -117,6 +137,26 @@ pub struct CacheStats {
     pub misses: u64,
     pub insertions: u64,
     pub evictions: u64,
+    /// RAM misses served by promoting a block file from the attached
+    /// disk store (each also counts as a [`Self::hits`] — the two-tier
+    /// cache did hold the block). 0 without a store.
+    pub disk_hits: u64,
+    /// Lookups that missed RAM *and* the attached store (a subset of
+    /// [`Self::misses`]). 0 without a store.
+    pub disk_misses: u64,
+    /// Blocks newly written to the store (eviction write-behind plus
+    /// explicit [`BlockKvCache::spill_all`] flushes). Idempotent
+    /// re-spills of an already-published block are not counted.
+    pub disk_spills: u64,
+    /// Store failures: spill write errors and rejected (corrupt,
+    /// truncated, version- or fingerprint-mismatched) block files.
+    /// Every one is also reported on stderr; the lookup falls back to
+    /// a recompute miss.
+    pub disk_errors: u64,
+    /// Block files currently published in the attached store.
+    pub disk_entries: usize,
+    /// Summed size of those files in bytes.
+    pub disk_bytes: usize,
     /// Running sums over every quantized (int8 or int4) insertion:
     /// squared reconstruction error and squared reference magnitude
     /// (see [`Self::quant_rel_err`]).
@@ -159,7 +199,8 @@ pub struct ReencodedBlock {
     pub len: usize,
 }
 
-/// Content-addressed block KV cache with LRU eviction and pinning.
+/// Content-addressed block KV cache with LRU eviction, pinning, and an
+/// optional persistent disk tier (spill on evict, promote on miss).
 pub struct BlockKvCache {
     map: HashMap<u128, Entry>,
     rope: RopeTable,
@@ -167,6 +208,7 @@ pub struct BlockKvCache {
     precision: KvPrecision,
     clock: u64,
     stats: CacheStats,
+    store: Option<DiskStore>,
 }
 
 impl BlockKvCache {
@@ -185,7 +227,26 @@ impl BlockKvCache {
             precision,
             clock: 0,
             stats: CacheStats::default(),
+            store: None,
         }
+    }
+
+    /// Attach a persistent disk tier: from now on LRU eviction spills
+    /// the victim's stored codes to the directory (write-behind) and a
+    /// RAM miss reads through to it, promoting the block file back to
+    /// a resident entry. Replaces any previously attached store.
+    pub fn attach_store(&mut self, store: DiskStore) {
+        self.store = Some(store);
+    }
+
+    /// Detach and return the disk tier (resident entries are kept).
+    pub fn detach_store(&mut self) -> Option<DiskStore> {
+        self.store.take()
+    }
+
+    /// The attached disk tier, if any.
+    pub fn store(&self) -> Option<&DiskStore> {
+        self.store.as_ref()
     }
 
     pub fn precision(&self) -> KvPrecision {
@@ -218,6 +279,10 @@ impl BlockKvCache {
             }
         }
         s.bytes_saved = s.bytes_saved_int8 + s.bytes_saved_int4;
+        (s.disk_entries, s.disk_bytes) = match &self.store {
+            Some(st) => (st.entries(), st.bytes() as usize),
+            None => (0, 0),
+        };
         s
     }
 
@@ -226,9 +291,17 @@ impl BlockKvCache {
         self.clock
     }
 
-    /// Does the cache hold this block? (Does not count as a hit/miss.)
+    /// Does the cache hold this block **in RAM**? (Does not count as a
+    /// hit/miss, and does not consult the disk tier.)
     pub fn contains(&self, key: u128) -> bool {
         self.map.contains_key(&key)
+    }
+
+    /// Is the block resident in RAM *or* published in the attached
+    /// store? Counts nothing — the offline precompute path uses this to
+    /// skip blocks that are already durable.
+    pub fn contains_anywhere(&self, key: u128) -> bool {
+        self.map.contains_key(&key) || self.store.as_ref().is_some_and(|s| s.contains(key))
     }
 
     /// Add a pin to an already-present entry **without** touching the
@@ -248,19 +321,63 @@ impl BlockKvCache {
     }
 
     /// Record a lookup; pins the entry if present (must be released with
-    /// [`Self::unpin`]).
+    /// [`Self::unpin`]). A RAM miss reads through to the attached disk
+    /// store first: a valid block file is promoted back to a resident
+    /// entry — already pinned, indistinguishable to the caller from a
+    /// block that was never evicted — before the miss would be counted.
     pub fn lookup_pin(&mut self, key: u128) -> bool {
         let t = self.tick();
-        match self.map.get_mut(&key) {
-            Some(e) => {
-                e.pins += 1;
-                e.last_used = t;
-                e.hits += 1;
-                self.stats.hits += 1;
+        if let Some(e) = self.map.get_mut(&key) {
+            e.pins += 1;
+            e.last_used = t;
+            e.hits += 1;
+            self.stats.hits += 1;
+            return true;
+        }
+        if self.promote_from_store(key) {
+            self.stats.hits += 1;
+            self.stats.disk_hits += 1;
+            return true;
+        }
+        self.stats.misses += 1;
+        false
+    }
+
+    /// Try to promote `key` from the attached store into a resident
+    /// pinned entry. The stored codes/scales are inserted **verbatim**
+    /// (a promotion is not a quantization event), so a disk round-trip
+    /// is bitwise invisible to every later fetch. A rejected file —
+    /// corrupt, truncated, wrong version, foreign fingerprint — is
+    /// reported on stderr, counted in [`CacheStats::disk_errors`],
+    /// deleted by the store, and treated as a recompute miss.
+    fn promote_from_store(&mut self, key: u128) -> bool {
+        let Some(st) = self.store.as_mut() else { return false };
+        match st.get(key) {
+            Ok(Some(block)) => {
+                let (bytes, bytes_f32) = block_sizes(&block.data);
+                let t = self.tick();
+                self.map.insert(
+                    key,
+                    Entry {
+                        data: block.data,
+                        len: block.len,
+                        bytes,
+                        bytes_f32,
+                        pins: 1,
+                        last_used: t,
+                        hits: 0,
+                    },
+                );
+                self.enforce_budget();
                 true
             }
-            None => {
-                self.stats.misses += 1;
+            Ok(None) => {
+                self.stats.disk_misses += 1;
+                false
+            }
+            Err(e) => {
+                eprintln!("kv-store: {e:#}");
+                self.stats.disk_errors += 1;
                 false
             }
         }
@@ -378,12 +495,72 @@ impl BlockKvCache {
     /// Drop every entry (required whenever model parameters change —
     /// cached KV states are functions of the weights). Panics if any
     /// entry is still pinned: clearing mid-request is a logic error.
+    /// The attached disk store (if any) is detached too: its
+    /// fingerprint binds it to the old weights, so keeping the handle
+    /// would be a stale-reuse hazard — re-attach with a fresh
+    /// fingerprint after the update. Nothing is spilled on the way out.
     pub fn clear(&mut self) {
         assert!(
             self.map.values().all(|e| e.pins == 0),
             "clear() with pinned entries"
         );
         self.map.clear();
+        self.store = None;
+    }
+
+    /// Drop every **unpinned** resident entry *without* spilling,
+    /// keeping the attached store untouched — the disk-warm measurement
+    /// aid (benches and restart tests: after a flush, the next lookups
+    /// must come back through promotion). Unlike [`Self::clear`] this
+    /// is not tied to a weights change. Returns the number dropped.
+    pub fn drop_resident(&mut self) -> usize {
+        let before = self.map.len();
+        self.map.retain(|_, e| e.pins > 0);
+        before - self.map.len()
+    }
+
+    /// Write-behind one evicted block to the attached store. A no-op
+    /// without a store or when the file already exists (content
+    /// addressing makes re-spills idempotent); a write failure is loud
+    /// but non-fatal — the block is simply lost to recompute.
+    fn spill(&mut self, key: u128, data: &KvData, len: usize) {
+        let Some(st) = self.store.as_mut() else { return };
+        match st.put(key, data, len) {
+            Ok(true) => self.stats.disk_spills += 1,
+            Ok(false) => {}
+            Err(e) => {
+                eprintln!("kv-store: spill failed: {e:#}");
+                self.stats.disk_errors += 1;
+            }
+        }
+    }
+
+    /// Persist every resident block to the attached store without
+    /// evicting anything — the explicit flush behind
+    /// [`crate::coordinator::Coordinator::flush_kv_store`] (offline
+    /// precompute, graceful shutdown, tests). Returns the number of
+    /// blocks newly written; a no-op without a store.
+    pub fn spill_all(&mut self) -> usize {
+        let Some(mut st) = self.store.take() else { return 0 };
+        let mut keys: Vec<u128> = self.map.keys().copied().collect();
+        keys.sort_unstable(); // deterministic write order
+        let mut written = 0;
+        for k in keys {
+            let e = &self.map[&k];
+            match st.put(k, &e.data, e.len) {
+                Ok(true) => {
+                    written += 1;
+                    self.stats.disk_spills += 1;
+                }
+                Ok(false) => {}
+                Err(err) => {
+                    eprintln!("kv-store: flush failed: {err:#}");
+                    self.stats.disk_errors += 1;
+                }
+            }
+        }
+        self.store = Some(st);
+        written
     }
 
     fn enforce_budget(&mut self) {
@@ -404,9 +581,30 @@ impl BlockKvCache {
                     let e = self.map.remove(&k).unwrap();
                     total -= e.bytes;
                     self.stats.evictions += 1;
+                    self.spill(k, &e.data, e.len);
                 }
                 None => break, // everything pinned; over-budget transiently
             }
+        }
+    }
+}
+
+/// `(stored bytes, f32-equivalent bytes)` of a block payload — the
+/// accounting pair a promoted entry needs (mirrors what
+/// [`BlockKvCache::insert_pinned`] computes on the insert path).
+fn block_sizes(data: &KvData) -> (usize, usize) {
+    match data {
+        KvData::F32 { k_local, v } => {
+            let b = k_local.size_bytes() + v.size_bytes();
+            (b, b)
+        }
+        KvData::Int8 { k, v } => {
+            let n: usize = k.dims.iter().product();
+            (k.size_bytes() + v.size_bytes(), 2 * n * 4)
+        }
+        KvData::Int4 { k, v } => {
+            let n: usize = k.dims.iter().product();
+            (k.size_bytes() + v.size_bytes(), 2 * n * 4)
         }
     }
 }
@@ -805,6 +1003,101 @@ mod tests {
         assert_eq!(s.bytes_saved, 0);
         assert_eq!(s.quant_rel_err(), 0.0);
         c.unpin(key);
+    }
+
+    fn store_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("block-attn-kvcache-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// Spill → drop → promote must be bitwise invisible at every tier:
+    /// the re-encoded fetch after a disk round-trip equals the fetch
+    /// from the never-evicted entry, and a fresh cache on the same dir
+    /// (the restart path) promotes to the same bytes.
+    #[test]
+    fn disk_roundtrip_is_bitwise_per_tier() {
+        use crate::config::KvPrecision;
+        for prec in [KvPrecision::F32, KvPrecision::Int8, KvPrecision::Int4] {
+            let dir = store_dir(&format!("tier-{prec:?}"));
+            let mut rng = Rng::new(0xD00D);
+            let key = block_key(&[7, 8, 9]);
+            let (k, v) = kv_rand(&mut rng, 40);
+
+            let mut c = BlockKvCache::with_precision(rope(), 0, prec);
+            c.attach_store(disk::DiskStore::open(&dir, 0xF1, 0).unwrap());
+            c.insert_pinned(key, k.clone(), v.clone());
+            let want = c.get_reencoded(key, 13).unwrap();
+            c.unpin(key);
+            assert_eq!(c.spill_all(), 1);
+            assert_eq!(c.drop_resident(), 1);
+            assert!(!c.contains(key) && c.contains_anywhere(key));
+
+            // Promotion through the normal lookup path...
+            assert!(c.lookup_pin(key), "promotion must serve the lookup");
+            let got = c.get_reencoded(key, 13).unwrap();
+            assert_eq!(got.k, want.k, "{prec:?}: promoted keys differ");
+            assert_eq!(got.v, want.v, "{prec:?}: promoted values differ");
+            assert_eq!(got.len, want.len);
+            c.unpin(key);
+            let s = c.stats();
+            assert_eq!((s.disk_hits, s.disk_spills, s.disk_errors), (1, 1, 0));
+            assert!(s.disk_entries == 1 && s.disk_bytes > 0);
+
+            // ...and from a fresh cache on the same directory (the
+            // restart path).
+            let mut c2 = BlockKvCache::with_precision(rope(), 0, prec);
+            c2.attach_store(disk::DiskStore::open(&dir, 0xF1, 0).unwrap());
+            assert!(c2.lookup_pin(key));
+            let got2 = c2.get_reencoded(key, 13).unwrap();
+            assert_eq!(got2.k, want.k, "{prec:?}: restart promotion differs");
+            assert_eq!(got2.v, want.v);
+            c2.unpin(key);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    /// Eviction write-behind: the LRU victim lands on disk and comes
+    /// back through promotion instead of recompute.
+    #[test]
+    fn eviction_spills_and_lookup_promotes() {
+        let dir = store_dir("evict");
+        // 512-byte blocks (see the LRU tests); budget holds one.
+        let mut c = BlockKvCache::new(rope(), 512);
+        c.attach_store(disk::DiskStore::open(&dir, 1, 0).unwrap());
+        let k1 = block_key(&[1]);
+        let k2 = block_key(&[2]);
+        let (k, v) = kv(4, 1.0);
+        c.insert_pinned(k1, k.clone(), v.clone());
+        c.unpin(k1);
+        c.insert_pinned(k2, k.clone(), v.clone());
+        c.unpin(k2); // k1 was evicted + spilled during the k2 insert
+        assert!(!c.contains(k1));
+        assert_eq!(c.stats().disk_spills, 1);
+        assert!(c.lookup_pin(k1), "spilled block must promote");
+        assert_eq!(c.stats().disk_hits, 1);
+        c.unpin(k1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `clear()` is the weights-changed hook: it must drop the
+    /// weights-bound store handle along with the entries, and spill
+    /// nothing on the way out.
+    #[test]
+    fn clear_detaches_the_store() {
+        let dir = store_dir("clear");
+        let mut c = BlockKvCache::new(rope(), 0);
+        c.attach_store(disk::DiskStore::open(&dir, 1, 0).unwrap());
+        assert!(c.store().is_some());
+        let key = block_key(&[1]);
+        let (k, v) = kv(2, 1.0);
+        c.insert_pinned(key, k, v);
+        c.unpin(key);
+        c.clear();
+        assert!(c.store().is_none(), "clear() must drop the weights-bound store");
+        assert!(!c.contains_anywhere(key), "nothing may be spilled by clear()");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

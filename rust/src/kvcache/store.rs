@@ -1,0 +1,424 @@
+//! On-disk block file format for the persistent KV store.
+//!
+//! This module is the pure **format layer**: it turns one cached block
+//! (the private [`KvData`] payload of [`super::BlockKvCache`], at any
+//! storage tier) into a self-describing byte image and back, with no
+//! filesystem involvement — [`super::disk::DiskStore`] owns the
+//! directory side. The layout is specified normatively in
+//! `docs/kvstore-format.md`; the constants here ([`MAGIC`],
+//! [`VERSION`], [`HEADER_LEN`], the header offsets) are that spec's
+//! source of truth, and the corrupt-file tests in `tests/kv_store.rs`
+//! flip bytes at the documented offsets.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Bitwise round-trip.** Quantization happens exactly once, at
+//!    cache insert ([`super::BlockKvCache::insert_pinned`]); a block
+//!    file stores the resulting codes + scales (or the raw f32 states
+//!    on the f32 tier) verbatim, so a spill → promote cycle is
+//!    invisible to every later Eq.-3 fetch. No re-quantization, no
+//!    accumulation of quantization error, no float formatting.
+//! 2. **Loud rejection.** Every decode failure — short file, bad
+//!    magic, unknown version, foreign content key or weights
+//!    fingerprint, wrong payload size, checksum mismatch — is a typed
+//!    `Err` naming the first check that failed. The cache treats any
+//!    of them as a miss and recomputes; it never serves bytes it
+//!    cannot fully validate.
+//! 3. **Mmap-friendly.** A fixed 64-byte little-endian header with
+//!    4-byte-aligned f32 sections and sizes derivable from the header
+//!    alone, so a future reader can map the payload in place without a
+//!    parse pass.
+
+use super::KvData;
+use crate::config::ModelConfig;
+use crate::kernels::quant::{QuantizedKv, QuantizedKv4};
+use crate::tensor::{Tensor, TensorF};
+use anyhow::{bail, ensure, Result};
+
+/// File magic, bytes `0..4` of every block file.
+pub const MAGIC: [u8; 4] = *b"BAKV";
+
+/// Format version, bytes `4..6` (little-endian u16). Bump on any
+/// layout change; readers reject every version they were not built
+/// for.
+pub const VERSION: u16 = 1;
+
+/// Fixed header length in bytes; the payload starts here.
+pub const HEADER_LEN: usize = 64;
+
+/// Header offset of the version field (the corrupt-file tests rewrite
+/// this byte; keep in sync with `docs/kvstore-format.md`).
+pub const VERSION_OFFSET: usize = 4;
+
+/// Header offset of the payload checksum (FNV-1a 64 over the payload).
+pub const CHECKSUM_OFFSET: usize = 56;
+
+/// Storage-tier codes in the header (bytes `6..8`).
+const TIER_F32: u16 = 0;
+const TIER_INT8: u16 = 1;
+const TIER_INT4: u16 = 2;
+
+/// 64-bit FNV-1a — the payload checksum. Chosen over a CRC for
+/// symmetry with [`super::block_key`] (the 128-bit variant of the same
+/// hash): one hash family for both the content key and the integrity
+/// check, no new dependency.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Incremental FNV-1a 64 accumulator for the weights fingerprint.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+    fn eat(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+    fn eat_usize(&mut self, v: usize) {
+        self.eat(&(v as u64).to_le_bytes());
+    }
+}
+
+/// Fingerprint of the (config, weights) pair a store directory is
+/// valid for: cached KV states are functions of the model weights, so
+/// block files carry this in both their filename and their header.
+/// A dir populated under different weights (another seed, another
+/// checkpoint, another architecture) reads as a clean miss instead of
+/// silently serving stale KV. Hashes every parameter bit, so it is
+/// computed once at attach time, not per lookup.
+pub fn weights_fingerprint(cfg: &ModelConfig, params: &[TensorF]) -> u64 {
+    let mut h = Fnv::new();
+    for v in [
+        cfg.vocab,
+        cfg.d_model,
+        cfg.layers,
+        cfg.heads,
+        cfg.kv_heads,
+        cfg.head_dim,
+        cfg.d_ff,
+        cfg.max_len,
+    ] {
+        h.eat_usize(v);
+    }
+    h.eat(&cfg.rope_theta.to_bits().to_le_bytes());
+    h.eat(&cfg.norm_eps.to_bits().to_le_bytes());
+    h.eat_usize(params.len());
+    for p in params {
+        h.eat_usize(p.dims().len());
+        for &d in p.dims() {
+            h.eat_usize(d);
+        }
+        for &x in p.data() {
+            h.eat(&x.to_bits().to_le_bytes());
+        }
+    }
+    h.0
+}
+
+/// One block decoded from a validated file image.
+pub(crate) struct StoredBlock {
+    pub data: KvData,
+    pub len: usize,
+}
+
+fn tier_code(data: &KvData) -> u16 {
+    match data {
+        KvData::F32 { .. } => TIER_F32,
+        KvData::Int8 { .. } => TIER_INT8,
+        KvData::Int4 { .. } => TIER_INT4,
+    }
+}
+
+fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn push_i8s(buf: &mut Vec<u8>, xs: &[i8]) {
+    buf.extend(xs.iter().map(|&x| x as u8));
+}
+
+fn read_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Encode one cached block into a complete file image (header +
+/// payload). Infallible: every resident `KvData` is well-formed by
+/// construction.
+pub(crate) fn encode_block(key: u128, fingerprint: u64, data: &KvData, len: usize) -> Vec<u8> {
+    let dims: [usize; 4] = match data {
+        KvData::F32 { k_local, .. } => {
+            let d = k_local.dims();
+            [d[0], d[1], d[2], d[3]]
+        }
+        KvData::Int8 { k, .. } => k.dims,
+        KvData::Int4 { k, .. } => k.dims,
+    };
+    debug_assert_eq!(dims[1], len, "block len must match the token axis");
+
+    let mut payload = Vec::new();
+    match data {
+        KvData::F32 { k_local, v } => {
+            push_f32s(&mut payload, k_local.data());
+            push_f32s(&mut payload, v.data());
+        }
+        KvData::Int8 { k, v } => {
+            push_i8s(&mut payload, &k.q);
+            push_f32s(&mut payload, &k.scales);
+            push_i8s(&mut payload, &v.q);
+            push_f32s(&mut payload, &v.scales);
+        }
+        KvData::Int4 { k, v } => {
+            payload.extend_from_slice(&k.packed);
+            push_f32s(&mut payload, &k.scales);
+            payload.extend_from_slice(&v.packed);
+            push_f32s(&mut payload, &v.scales);
+        }
+    }
+
+    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&tier_code(data).to_le_bytes());
+    buf.extend_from_slice(&key.to_le_bytes());
+    buf.extend_from_slice(&fingerprint.to_le_bytes());
+    for d in dims {
+        buf.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    buf.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    debug_assert_eq!(buf.len(), HEADER_LEN);
+    buf.extend_from_slice(&payload);
+    buf
+}
+
+/// Decode and fully validate one block file image. `want_key` /
+/// `want_fingerprint` come from the caller's addressing (the filename
+/// encodes both) — a file whose header disagrees was renamed or
+/// corrupted and is rejected like any other damage.
+pub(crate) fn decode_block(
+    bytes: &[u8],
+    want_key: u128,
+    want_fingerprint: u64,
+) -> Result<StoredBlock> {
+    ensure!(
+        bytes.len() >= HEADER_LEN,
+        "truncated block file: {} bytes < {HEADER_LEN}-byte header",
+        bytes.len()
+    );
+    ensure!(bytes[0..4] == MAGIC, "bad magic {:02x?} (want {MAGIC:02x?})", &bytes[0..4]);
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    ensure!(version == VERSION, "unsupported format version {version} (reader speaks {VERSION})");
+    let tier = u16::from_le_bytes([bytes[6], bytes[7]]);
+    let key = u128::from_le_bytes(bytes[8..24].try_into().unwrap());
+    ensure!(key == want_key, "content key mismatch: file {key:032x}, want {want_key:032x}");
+    let fingerprint = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
+    ensure!(
+        fingerprint == want_fingerprint,
+        "weights fingerprint mismatch: file {fingerprint:016x}, want {want_fingerprint:016x}"
+    );
+    let mut dims = [0usize; 4];
+    for (i, d) in dims.iter_mut().enumerate() {
+        let off = 32 + 4 * i;
+        *d = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        ensure!(*d > 0, "zero dimension at axis {i}");
+    }
+    let [layers, len, heads, hd] = dims;
+    let n = layers * len * heads * hd;
+    let payload_len = u64::from_le_bytes(bytes[48..56].try_into().unwrap()) as usize;
+    let want_checksum = u64::from_le_bytes(bytes[56..64].try_into().unwrap());
+    ensure!(
+        bytes.len() == HEADER_LEN + payload_len,
+        "payload length mismatch: file holds {} payload bytes, header claims {payload_len}",
+        bytes.len() - HEADER_LEN
+    );
+
+    // The per-tier payload size is fully determined by the dims, so a
+    // size check rejects section-level damage before any parsing.
+    let scales8 = layers * heads * hd;
+    let groups = len.div_ceil(crate::kernels::quant::I4_GROUP);
+    let scales4 = layers * groups * heads * hd;
+    let expect = match tier {
+        TIER_F32 => 2 * n * 4,
+        TIER_INT8 => 2 * (n + scales8 * 4),
+        TIER_INT4 => {
+            ensure!(hd % 2 == 0, "int4 tier with odd head_dim {hd}");
+            2 * (n / 2 + scales4 * 4)
+        }
+        t => bail!("unknown storage tier code {t}"),
+    };
+    ensure!(
+        payload_len == expect,
+        "tier-{tier} payload of dims {dims:?} must be {expect} bytes, header claims {payload_len}"
+    );
+
+    let payload = &bytes[HEADER_LEN..];
+    let got_checksum = fnv1a64(payload);
+    ensure!(
+        got_checksum == want_checksum,
+        "payload checksum mismatch: computed {got_checksum:016x}, header {want_checksum:016x}"
+    );
+
+    let data = match tier {
+        TIER_F32 => {
+            let k = Tensor::from_vec(&dims, read_f32s(&payload[..n * 4]));
+            let v = Tensor::from_vec(&dims, read_f32s(&payload[n * 4..]));
+            KvData::F32 { k_local: k, v }
+        }
+        TIER_INT8 => {
+            let half = n + scales8 * 4;
+            let section = |s: &[u8]| -> Result<QuantizedKv> {
+                let q: Vec<i8> = s[..n].iter().map(|&b| b as i8).collect();
+                let scales = read_f32s(&s[n..]);
+                QuantizedKv::from_parts(q, scales, dims)
+            };
+            KvData::Int8 { k: section(&payload[..half])?, v: section(&payload[half..])? }
+        }
+        _ => {
+            let half = n / 2 + scales4 * 4;
+            let section = |s: &[u8]| -> Result<QuantizedKv4> {
+                let packed = s[..n / 2].to_vec();
+                let scales = read_f32s(&s[n / 2..]);
+                QuantizedKv4::from_parts(packed, scales, dims)
+            };
+            KvData::Int4 { k: section(&payload[..half])?, v: section(&payload[half..])? }
+        }
+    };
+    Ok(StoredBlock { data, len })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_kv(rng: &mut Rng, len: usize) -> (TensorF, TensorF) {
+        let dims = [2usize, len, 1, 8];
+        let n: usize = dims.iter().product();
+        let mk =
+            |rng: &mut Rng| Tensor::from_vec(&dims, (0..n).map(|_| rng.normal() as f32).collect());
+        (mk(rng), mk(rng))
+    }
+
+    fn sample(tier: u16, len: usize) -> KvData {
+        let mut rng = Rng::new(0xD15C + tier as u64);
+        let (k, v) = rand_kv(&mut rng, len);
+        match tier {
+            TIER_F32 => KvData::F32 { k_local: k, v },
+            TIER_INT8 => {
+                KvData::Int8 { k: QuantizedKv::quantize(&k), v: QuantizedKv::quantize(&v) }
+            }
+            _ => KvData::Int4 { k: QuantizedKv4::quantize(&k), v: QuantizedKv4::quantize(&v) },
+        }
+    }
+
+    /// Bitwise equality of two payloads, tier-aware.
+    fn assert_same(a: &KvData, b: &KvData) {
+        match (a, b) {
+            (KvData::F32 { k_local: ka, v: va }, KvData::F32 { k_local: kb, v: vb }) => {
+                assert_eq!(ka, kb);
+                assert_eq!(va, vb);
+            }
+            (KvData::Int8 { k: ka, v: va }, KvData::Int8 { k: kb, v: vb }) => {
+                assert_eq!(ka.q, kb.q);
+                assert_eq!(ka.scales, kb.scales);
+                assert_eq!(ka.dims, kb.dims);
+                assert_eq!(va.q, vb.q);
+                assert_eq!(va.scales, vb.scales);
+            }
+            (KvData::Int4 { k: ka, v: va }, KvData::Int4 { k: kb, v: vb }) => {
+                assert_eq!(ka.packed, kb.packed);
+                assert_eq!(ka.scales, kb.scales);
+                assert_eq!(ka.dims, kb.dims);
+                assert_eq!(va.packed, vb.packed);
+                assert_eq!(va.scales, vb.scales);
+            }
+            _ => panic!("tier changed across the round-trip"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_per_tier() {
+        // A non-multiple of I4_GROUP so the int4 tier exercises a
+        // partial trailing scale group.
+        for tier in [TIER_F32, TIER_INT8, TIER_INT4] {
+            let data = sample(tier, 37);
+            let img = encode_block(7, 9, &data, 37);
+            assert_eq!(&img[..4], &MAGIC);
+            let back = decode_block(&img, 7, 9).unwrap();
+            assert_eq!(back.len, 37);
+            assert_same(&data, &back.data);
+        }
+    }
+
+    #[test]
+    fn every_corruption_is_rejected_with_its_own_message() {
+        let data = sample(TIER_INT8, 16);
+        let img = encode_block(1, 2, &data, 16);
+        let expect_err = |bytes: &[u8], needle: &str| {
+            let err = format!("{:#}", decode_block(bytes, 1, 2).unwrap_err());
+            assert!(err.contains(needle), "error {err:?} does not mention {needle:?}");
+        };
+        expect_err(&img[..HEADER_LEN - 1], "truncated");
+        expect_err(&img[..img.len() - 1], "length mismatch");
+        let mut t = img.clone();
+        t.push(0);
+        expect_err(&t, "length mismatch");
+        let mut t = img.clone();
+        t[0] ^= 0xFF;
+        expect_err(&t, "bad magic");
+        let mut t = img.clone();
+        t[VERSION_OFFSET] = (VERSION + 1) as u8;
+        expect_err(&t, "unsupported format version");
+        let mut t = img.clone();
+        t[6] = 9; // unknown tier code
+        expect_err(&t, "unknown storage tier");
+        let mut t = img.clone();
+        t[HEADER_LEN] ^= 0x01; // one payload bit
+        expect_err(&t, "checksum mismatch");
+        let mut t = img.clone();
+        t[CHECKSUM_OFFSET] ^= 0x01;
+        expect_err(&t, "checksum mismatch");
+        // Addressing mismatches: same bytes, wrong expectations.
+        let err = format!("{:#}", decode_block(&img, 99, 2).unwrap_err());
+        assert!(err.contains("content key mismatch"), "{err}");
+        let err = format!("{:#}", decode_block(&img, 1, 99).unwrap_err());
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+        // The pristine image still decodes after all that.
+        assert!(decode_block(&img, 1, 2).is_ok());
+    }
+
+    #[test]
+    fn fingerprint_tracks_config_and_weights() {
+        let cfg = ModelConfig::builtin("tiny").unwrap();
+        let p1: Vec<TensorF> = vec![Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0])];
+        let f1 = weights_fingerprint(&cfg, &p1);
+        assert_eq!(f1, weights_fingerprint(&cfg, &p1), "must be deterministic");
+        // One weight bit flips the fingerprint.
+        let p2: Vec<TensorF> = vec![Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0000005])];
+        assert_ne!(f1, weights_fingerprint(&cfg, &p2));
+        // So does a config change with identical weights.
+        let mut cfg2 = cfg.clone();
+        cfg2.rope_theta += 1.0;
+        assert_ne!(f1, weights_fingerprint(&cfg2, &p1));
+        // Shape changes are seen even when the flattened data matches.
+        let p3: Vec<TensorF> = vec![Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0])];
+        assert_ne!(f1, weights_fingerprint(&cfg, &p3));
+    }
+}

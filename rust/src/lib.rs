@@ -152,6 +152,26 @@
 //! included), and per-round batch occupancy surfaces in the `stats`
 //! endpoint (`decode_rounds`, `batch_occupancy`).
 //!
+//! ## Persistent KV store
+//!
+//! The block cache has an optional **disk tier**
+//! ([`kvcache::disk::DiskStore`], `--kv-store-dir DIR
+//! [--kv-store-budget MB]` / `$BLOCK_ATTN_KV_STORE_DIR` /
+//! `$BLOCK_ATTN_KV_STORE_BUDGET`): LRU eviction spills a block's codes
+//! + scales to a content-addressed file (write-behind), and a RAM miss
+//! promotes the file back to a resident entry (read-through, fused
+//! into the scheduler's normal `lookup_pin`). Because quantization
+//! happens once at insert and files store the codes verbatim, a disk
+//! round-trip is **bitwise invisible** at every tier and thread count
+//! (`tests/kv_store.rs`), and warm TTFT survives process restarts —
+//! the TurboRAG-style guarantee — instead of resetting with the RAM
+//! cache. Block files are keyed by content hash **and a fingerprint of
+//! the model weights**, so a store populated under other weights reads
+//! as a clean miss, never stale KV. Corrupt/truncated/mismatched files
+//! are rejected loudly and fall back to recompute. The `precompute`
+//! bin encodes a passage corpus into a store ahead of serving; the
+//! on-disk layout is specified in `docs/kvstore-format.md`.
+//!
 //! Determinism contract: a batched decode round is **bitwise
 //! identical** to decoding each session serially, at every thread
 //! count and KV tier — GEMM output rows are functions of their input
@@ -174,11 +194,19 @@
 //! - [`kernels`] — tiled/parallel compute kernels and the thread budget.
 //! - [`runtime::Backend`] — the engine contract; [`runtime::backend_from_args`]
 //!   builds one from CLI options.
-//! - [`kvcache::BlockKvCache`] — content-addressed block KV store.
+//! - [`kvcache::BlockKvCache`] — content-addressed block KV cache;
+//!   [`kvcache::disk::DiskStore`] — its persistent tier.
 //! - [`coordinator::Coordinator`] — the serving stack (segment → plan →
 //!   prefill → decode) with metrics.
+//! - [`server`] — the TCP JSON-line front-end with the
+//!   continuous-batching engine loop (protocol: `docs/serving.md`).
 //! - [`train::train`] — block fine-tuning driver (presets in
 //!   [`train::presets`]).
+//!
+//! Repository-level documentation: `README.md` (quick start),
+//! `docs/ARCHITECTURE.md` (layer map, invariants, every CLI flag and
+//! `BLOCK_ATTN_*` env var), `docs/serving.md` (wire protocol),
+//! `docs/kvstore-format.md` (block file format).
 
 // Dense numeric kernels index heavily; the idiomatic-iterator forms are
 // measurably harder to keep allocation-free and fused.
@@ -220,12 +248,15 @@ pub fn run_cli(args: &util::cli::Args) -> anyhow::Result<()> {
             eprintln!("          --threads N            (kernel threads; or $BLOCK_ATTN_THREADS)");
             eprintln!("          --kv-quant f32|int8|int4  (KV cache tier; or $BLOCK_ATTN_KV_QUANT)");
             eprintln!("          --simd auto|off        (vector kernels; or $BLOCK_ATTN_SIMD)");
+            eprintln!("          --kv-store-dir DIR     (persistent block store; or $BLOCK_ATTN_KV_STORE_DIR)");
+            eprintln!("          --kv-store-budget MB   (disk budget, 0=unbounded; or $BLOCK_ATTN_KV_STORE_BUDGET)");
             eprintln!("  info   [--artifacts DIR]");
             eprintln!("  train  --preset table1 --out DIR [--scale 1.0]");
             eprintln!("  serve  --addr 127.0.0.1:7841 [--workers 4] [--cache-mb 256]");
             eprintln!("         [--max-active 4] [--max-active-tokens 16384] [--queue-depth 64]");
             eprintln!("         (continuous batching; or $BLOCK_ATTN_MAX_ACTIVE etc.)");
             eprintln!("  eval   [--mode full|block] [--samples 10] [--show]");
+            eprintln!("  (offline corpus -> store encoding lives in the `precompute` bin)");
             Ok(())
         }
     }
@@ -245,6 +276,9 @@ fn cli_eval(args: &util::cli::Args) -> anyhow::Result<()> {
     }
     let kv_precision = config::KvPrecision::resolve(args)?;
     let mut coord = Coordinator::with_kv_precision(backend, 128 << 20, kv_precision);
+    if let Some(sc) = config::KvStoreConfig::resolve(args)? {
+        coord.attach_kv_store(&sc)?;
+    }
     let tok = ByteTokenizer::new();
     for (bench_name, samples) in train::presets::rag_eval_by_variant(n) {
         let mut correct = 0;
@@ -278,6 +312,7 @@ fn cli_serve(args: &util::cli::Args) -> anyhow::Result<()> {
     let workers = args.usize_or("workers", 4);
     let cache_mb = args.usize_or("cache-mb", 256);
     let kv_precision = config::KvPrecision::resolve(args)?;
+    let store_cfg = config::KvStoreConfig::resolve(args)?;
     let policy = coordinator::batcher::BatchPolicy::resolve(args);
     let args2 = args.clone();
     let handle = server::EngineHandle::spawn_with_policy(
@@ -287,7 +322,11 @@ fn cli_serve(args: &util::cli::Args) -> anyhow::Result<()> {
                 backend.load_params_file(std::path::Path::new(ck))?;
             }
             backend.warmup()?;
-            Ok(Coordinator::with_kv_precision(backend, cache_mb << 20, kv_precision))
+            let mut coord = Coordinator::with_kv_precision(backend, cache_mb << 20, kv_precision);
+            if let Some(sc) = &store_cfg {
+                coord.attach_kv_store(sc)?;
+            }
+            Ok(coord)
         },
         policy,
     )?;

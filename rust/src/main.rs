@@ -1,10 +1,13 @@
 //! `block-attn` CLI — the leader entrypoint.
 //!
 //! Subcommands:
-//! * `serve`   — run the TCP JSON-line serving loop.
+//! * `serve`   — run the TCP JSON-line serving loop (`docs/serving.md`).
 //! * `train`   — block fine-tuning driver (Tables 1-2, Figure 4 models).
-//! * `bench`   — quick TTFT sanity sweep (full benches live in `cargo bench`).
+//! * `eval`    — synthetic RAG accuracy benchmarks.
 //! * `info`    — print the artifact manifest summary.
+//!
+//! Benches live under `cargo bench`; the offline corpus-to-store
+//! encoder is the separate `precompute` binary.
 
 use block_attn::util::cli::Args;
 

@@ -1,32 +1,10 @@
 //! TCP JSON-line serving front-end.
 //!
-//! Protocol: one JSON object per line. A generation request:
-//!
-//! ```json
-//! {"id": 1, "passages": ["doc a", "doc b"], "query": "what ...?",
-//!  "max_new_tokens": 16, "mode": "block"}
-//! ```
-//!
-//! is answered with zero or more **token frames** as decode progresses,
-//!
-//! ```json
-//! {"id": 1, "token": 104}
-//! ```
-//!
-//! followed by exactly one final line carrying the full response:
-//!
-//! ```json
-//! {"id": 1, "text": "...", "ttft_ms": 12.3, "flops_tft": 1.2e9,
-//!  "cached_blocks": 2, "total_blocks": 2}
-//! ```
-//!
-//! Failures (parse errors, engine errors, an engine thread death) also
-//! terminate the exchange with exactly one line: `{"id": ..,
-//! "error": ".."}` — a client can always read until it sees a line with
-//! a `text` or `error` field. Error lines echo the request's `id`
-//! whenever one can be recovered from the input line. The literal line
-//! `stats` returns a one-line JSON summary of serving metrics, cache
-//! state, batching occupancy and kernel-pool counters.
+//! **Wire protocol: see `docs/serving.md`** — the normative spec of the
+//! request line, per-token streaming frames, the final response line,
+//! error lines, and every field of the `stats` reply. In one sentence:
+//! one JSON object per line in each direction, and a client reads until
+//! it sees a line carrying a `text` or `error` field.
 //!
 //! Architecture: the engine is `!Send`, so a dedicated **engine thread**
 //! owns the [`Coordinator`] and runs the **continuous-batching loop**:
@@ -332,6 +310,21 @@ fn stats_line<B: Backend>(
         ("cache_evictions", Json::num(s.evictions as f64)),
         ("cache_hit_rate", Json::num(s.hit_rate())),
         ("cache_quant_rel_err", Json::num(s.quant_rel_err())),
+        (
+            "kv_store_dir",
+            Json::str(
+                coord
+                    .kv_store_dir()
+                    .map(|d| d.display().to_string())
+                    .unwrap_or_default(),
+            ),
+        ),
+        ("disk_hits", Json::num(s.disk_hits as f64)),
+        ("disk_misses", Json::num(s.disk_misses as f64)),
+        ("disk_spills", Json::num(s.disk_spills as f64)),
+        ("disk_errors", Json::num(s.disk_errors as f64)),
+        ("disk_entries", Json::num(s.disk_entries as f64)),
+        ("disk_bytes", Json::num(s.disk_bytes as f64)),
         ("kv_precision", Json::str(coord.kv_precision().as_str())),
         ("simd_isa", Json::str(crate::kernels::isa_name())),
         ("threads", Json::num(crate::kernels::num_threads() as f64)),

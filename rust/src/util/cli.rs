@@ -106,6 +106,20 @@ impl Args {
         self.get("simd")
     }
 
+    /// `--kv-store-dir PATH` (persistent block KV store directory).
+    /// Raw value; resolution + the `BLOCK_ATTN_KV_STORE_DIR` env
+    /// fallback live in `config::KvStoreConfig`.
+    pub fn kv_store_dir(&self) -> Option<&str> {
+        self.get("kv-store-dir")
+    }
+
+    /// `--kv-store-budget MB` (disk budget of the store, 0 =
+    /// unbounded). Raw value; parsed in `config::KvStoreConfig`, which
+    /// also applies the `BLOCK_ATTN_KV_STORE_BUDGET` env fallback.
+    pub fn kv_store_budget(&self) -> Option<&str> {
+        self.get("kv-store-budget")
+    }
+
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }
@@ -167,6 +181,15 @@ mod tests {
         assert_eq!(parse("--simd off").simd(), Some("off"));
         assert_eq!(parse("--simd=auto").simd(), Some("auto"));
         assert_eq!(parse("run").simd(), None);
+    }
+
+    #[test]
+    fn kv_store_accessors() {
+        assert_eq!(parse("--kv-store-dir /tmp/kv").kv_store_dir(), Some("/tmp/kv"));
+        assert_eq!(parse("--kv-store-dir=/tmp/kv").kv_store_dir(), Some("/tmp/kv"));
+        assert_eq!(parse("run").kv_store_dir(), None);
+        assert_eq!(parse("--kv-store-budget 64").kv_store_budget(), Some("64"));
+        assert_eq!(parse("run").kv_store_budget(), None);
     }
 
     #[test]

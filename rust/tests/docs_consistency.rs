@@ -1,0 +1,161 @@
+//! Docs ↔ code consistency: the configuration table in
+//! `docs/ARCHITECTURE.md` is the canonical list of CLI flags and
+//! `BLOCK_ATTN_*` environment variables. This test parses that table
+//! and asserts (a) every documented name exists in the sources, and
+//! (b) every `BLOCK_ATTN_*` variable referenced by the sources is
+//! documented — so a new knob cannot land without its row, and a
+//! removed knob cannot leave a stale row behind.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("repo root").to_path_buf()
+}
+
+fn read(path: &Path) -> String {
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// Every `.rs` file under the given roots, concatenated.
+fn all_sources() -> String {
+    fn walk(dir: &Path, out: &mut String) {
+        for entry in std::fs::read_dir(dir).expect("read_dir") {
+            let path = entry.expect("dir entry").path();
+            if path.is_dir() {
+                walk(&path, out);
+            } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+                out.push_str(&read(&path));
+                out.push('\n');
+            }
+        }
+    }
+    let root = repo_root();
+    let mut out = String::new();
+    for sub in ["rust/src", "rust/benches", "rust/examples", "rust/tests"] {
+        walk(&root.join(sub), &mut out);
+    }
+    out
+}
+
+/// All `BLOCK_ATTN_<NAME>` identifiers in `text` (full names only; a
+/// bare `BLOCK_ATTN_*` wildcard in prose is ignored).
+fn env_names(text: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut rest = text;
+    while let Some(i) = rest.find("BLOCK_ATTN_") {
+        let tail = &rest[i..];
+        let name: String = tail
+            .chars()
+            .take_while(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || *c == '_')
+            .collect();
+        if name.len() > "BLOCK_ATTN_".len() && !name.ends_with('_') {
+            out.insert(name);
+        }
+        rest = &rest[i + "BLOCK_ATTN_".len()..];
+    }
+    out
+}
+
+/// The configuration-table lines of ARCHITECTURE.md (markdown rows).
+fn table_lines(doc: &str) -> Vec<&str> {
+    doc.lines().filter(|l| l.trim_start().starts_with('|')).collect()
+}
+
+/// Backticked `--flag` names in the table rows.
+fn table_flags(doc: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for line in table_lines(doc) {
+        let mut rest = line;
+        while let Some(i) = rest.find("`--") {
+            let tail = &rest[i + 3..];
+            let name: String = tail
+                .chars()
+                .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '-')
+                .collect();
+            if !name.is_empty() {
+                out.insert(name);
+            }
+            rest = tail;
+        }
+    }
+    out
+}
+
+#[test]
+fn the_four_docs_exist() {
+    let root = repo_root();
+    for doc in [
+        "README.md",
+        "docs/ARCHITECTURE.md",
+        "docs/serving.md",
+        "docs/kvstore-format.md",
+    ] {
+        let path = root.join(doc);
+        assert!(path.is_file(), "{doc} is missing");
+        assert!(read(&path).len() > 500, "{doc} is a stub");
+    }
+}
+
+#[test]
+fn every_documented_flag_and_env_var_exists_in_the_sources() {
+    let doc = read(&repo_root().join("docs/ARCHITECTURE.md"));
+    let sources = all_sources();
+
+    let flags = table_flags(&doc);
+    assert!(
+        flags.len() >= 20,
+        "configuration table parse broke: only {} flags found",
+        flags.len()
+    );
+    for flag in &flags {
+        assert!(
+            sources.contains(&format!("\"{flag}\"")),
+            "documented flag --{flag} is not parsed anywhere in the sources"
+        );
+    }
+
+    let documented = env_names(&doc);
+    assert!(
+        documented.len() >= 10,
+        "configuration table parse broke: only {} env vars found",
+        documented.len()
+    );
+    for var in &documented {
+        assert!(
+            sources.contains(var.as_str()),
+            "documented env var {var} is not read anywhere in the sources"
+        );
+    }
+}
+
+#[test]
+fn every_env_var_in_the_sources_is_documented() {
+    let doc = read(&repo_root().join("docs/ARCHITECTURE.md"));
+    let documented = env_names(&doc);
+    let in_sources = env_names(&all_sources());
+    let undocumented: Vec<&String> =
+        in_sources.iter().filter(|v| !documented.contains(*v)).collect();
+    assert!(
+        undocumented.is_empty(),
+        "env vars read by the sources but missing from the docs/ARCHITECTURE.md table: \
+         {undocumented:?}"
+    );
+}
+
+#[test]
+fn format_constants_match_the_format_doc() {
+    // The normative spec and the code must move together; pin the
+    // values the corrupt-file tests rely on.
+    use block_attn::kvcache::store::{CHECKSUM_OFFSET, HEADER_LEN, MAGIC, VERSION, VERSION_OFFSET};
+    let doc = read(&repo_root().join("docs/kvstore-format.md"));
+    assert_eq!(&MAGIC, b"BAKV");
+    assert!(doc.contains("\"BAKV\""), "format doc lost the magic");
+    assert_eq!(VERSION, 1);
+    assert_eq!(VERSION_OFFSET, 4);
+    assert_eq!(HEADER_LEN, 64);
+    assert_eq!(CHECKSUM_OFFSET, 56);
+    assert!(doc.contains("64 bytes"), "format doc lost the header length");
+    assert!(doc.contains("version 1"), "format doc lost the version");
+}

@@ -1,0 +1,423 @@
+//! Persistent disk tier, end to end: spill → restart → promote must be
+//! bitwise invisible to serving at every KV precision and thread count,
+//! and every corrupt store file must be rejected loudly and recomputed
+//! (never served). The on-disk layout under test is normative in
+//! `docs/kvstore-format.md`; the corruption cases below flip bytes at
+//! the offsets that document defines.
+//!
+//! The restart-reuse test honors `$BLOCK_ATTN_KV_STORE_DIR` so the CI
+//! leg that runs the suite twice against one directory observes
+//! cross-process reuse: the second run's first request must report
+//! disk hits before this process has spilled anything.
+
+use block_attn::config::{KvPrecision, KvStoreConfig, ModelConfig};
+use block_attn::coordinator::{AttentionMode, Coordinator, Request};
+use block_attn::kernels::set_threads;
+use block_attn::kvcache::disk::DiskStore;
+use block_attn::kvcache::store::{CHECKSUM_OFFSET, HEADER_LEN, VERSION_OFFSET};
+use block_attn::kvcache::{block_key, BlockKvCache};
+use block_attn::rope::RopeTable;
+use block_attn::runtime::NativeBackend;
+use block_attn::util::rng::Rng;
+use block_attn::Backend;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Tests here flip the process-global kernel thread budget; serialize
+/// so concurrent tests can't mask thread-count differences.
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn micro_config() -> ModelConfig {
+    ModelConfig {
+        name: "micro".into(),
+        vocab: 24,
+        d_model: 16,
+        layers: 2,
+        heads: 2,
+        kv_heads: 1,
+        head_dim: 8,
+        d_ff: 32,
+        rope_theta: 10000.0,
+        norm_eps: 1e-5,
+        max_len: 256,
+    }
+}
+
+/// Fresh per-test scratch store directory (wiped on entry; tests also
+/// clean up on success, but a panic must not poison the next run).
+fn store_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("block-attn-test-kvstore-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn coordinator(precision: KvPrecision) -> Coordinator<NativeBackend> {
+    let engine = NativeBackend::new(micro_config(), 0xD15C);
+    Coordinator::with_kv_precision(engine, 64 << 20, precision)
+}
+
+/// Deterministic request stream with shared and fresh blocks (same
+/// token content in every process, so store keys reproduce across
+/// restarts).
+fn request_stream() -> Vec<Request> {
+    let mut rng = Rng::new(42);
+    let mut block = |len: usize| -> Vec<i32> {
+        (0..len).map(|_| rng.below(24) as i32).collect()
+    };
+    let shared = block(10);
+    (0..3)
+        .map(|i| Request {
+            id: i as u64,
+            blocks: match i {
+                0 => vec![shared.clone(), block(9)],
+                1 => vec![shared.clone(), block(12), block(5)],
+                _ => vec![block(7)],
+            },
+            query: block(8),
+            max_new_tokens: 5,
+            mode: AttentionMode::Block,
+        })
+        .collect()
+}
+
+fn serve_stream(coord: &mut Coordinator<NativeBackend>) -> Vec<(Vec<i32>, usize, usize)> {
+    request_stream()
+        .iter()
+        .map(|req| {
+            let resp = coord.process(req).expect("process");
+            (resp.tokens.clone(), resp.cached_blocks, resp.total_blocks)
+        })
+        .collect()
+}
+
+/// The tentpole parity sweep: at every KV tier and thread budget, a
+/// warm pass served from **disk-promoted** blocks is byte-identical to
+/// a warm pass served from never-evicted RAM-resident blocks.
+#[test]
+fn disk_promoted_serving_is_bitwise_identical_across_tiers_and_threads() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = block_attn::kernels::num_threads();
+    for precision in [KvPrecision::F32, KvPrecision::Int8, KvPrecision::Int4] {
+        let mut per_thread = Vec::new();
+        for &threads in &[1usize, 3, 8] {
+            set_threads(threads);
+            // Reference: pass 2 over a RAM-resident cache.
+            let mut ram = coordinator(precision);
+            serve_stream(&mut ram);
+            let ram_warm = serve_stream(&mut ram);
+
+            // Store path: populate, spill everything, drop residency,
+            // then pass 2 is served entirely via disk promotion.
+            let dir = store_dir(&format!("sweep-{precision:?}-{threads}"));
+            let mut disk = coordinator(precision);
+            disk.attach_kv_store(&KvStoreConfig { dir: dir.clone(), budget_bytes: 0 })
+                .expect("attach");
+            serve_stream(&mut disk);
+            assert!(disk.flush_kv_store() > 0, "nothing spilled");
+            assert!(disk.drop_resident_blocks() > 0, "nothing resident to drop");
+            let disk_warm = serve_stream(&mut disk);
+
+            assert_eq!(
+                ram_warm, disk_warm,
+                "{precision:?}/{threads}t: disk-promoted pass differs from RAM-warm pass"
+            );
+            let s = disk.cache_stats();
+            assert!(s.disk_hits > 0, "{precision:?}/{threads}t: no disk promotions");
+            assert_eq!(s.disk_errors, 0, "{precision:?}/{threads}t: disk errors");
+            per_thread.push(disk_warm);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        assert!(
+            per_thread.windows(2).all(|w| w[0] == w[1]),
+            "{precision:?}: disk-warm serving depends on the thread count"
+        );
+    }
+    set_threads(prev);
+}
+
+/// Restart reuse: a fresh coordinator (fresh process, in the CI leg
+/// that points `$BLOCK_ATTN_KV_STORE_DIR` at one directory across two
+/// `cargo test` invocations) serving the same stream over a populated
+/// store computes **zero** block prefills — every context block is a
+/// disk hit.
+#[test]
+fn populated_store_serves_a_fresh_process_with_disk_hits() {
+    let env_cfg = KvStoreConfig::from_env().expect("valid $BLOCK_ATTN_KV_STORE_* settings");
+    let (dir, scratch) = match &env_cfg {
+        Some(c) => (c.dir.clone(), false),
+        None => (store_dir("restart"), true),
+    };
+    let precision = KvPrecision::from_env();
+    let cfg = KvStoreConfig { dir: dir.clone(), budget_bytes: 0 };
+
+    // Did a previous process already encode this stream's first block?
+    let mut coord_a = coordinator(precision);
+    let fp = block_attn::kvcache::store::weights_fingerprint(
+        coord_a.engine().config(),
+        &coord_a.engine().params_host().expect("params"),
+    );
+    let first_key = block_key(&request_stream()[0].blocks[0]);
+    let pre_populated =
+        DiskStore::open(&dir, fp, 0).expect("open store").contains(first_key);
+
+    let run_a = serve_stream(&mut coord_a);
+    let stats_a = coord_a.cache_stats();
+    assert_eq!(
+        stats_a.disk_hits > 0,
+        pre_populated,
+        "run A must promote from disk iff the store was pre-populated (restart reuse)"
+    );
+    assert!(coord_a.flush_kv_store() > 0 || pre_populated);
+
+    // "Restart": a brand-new coordinator over the now-populated store.
+    let mut coord_b = coordinator(precision);
+    coord_b.attach_kv_store(&cfg).expect("attach");
+    let mut total_blocks = 0;
+    for req in &request_stream() {
+        let resp = coord_b.process(req).expect("process");
+        assert_eq!(
+            resp.cached_blocks, resp.total_blocks,
+            "request {}: fresh process missed a stored block",
+            req.id
+        );
+        assert_eq!(
+            resp.block_prefill_s, 0.0,
+            "request {}: fresh process recomputed block KV despite the store",
+            req.id
+        );
+        total_blocks += resp.total_blocks;
+    }
+    let stats_b = coord_b.cache_stats();
+    assert!(stats_b.disk_hits > 0, "fresh process reported no disk hits");
+    assert_eq!(stats_b.disk_errors, 0);
+    assert!(total_blocks > 0);
+    // Promotion must also reproduce run A's generations exactly.
+    let mut coord_c = coordinator(precision);
+    coord_c.attach_kv_store(&cfg).expect("attach");
+    assert_eq!(serve_stream(&mut coord_c), run_a);
+    if scratch {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+fn bakv_files(dir: &Path) -> Vec<PathBuf> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .expect("read store dir")
+        .map(|e| e.expect("dir entry").path())
+        .filter(|p| p.extension().map(|e| e == "bakv").unwrap_or(false))
+        .collect();
+    files.sort();
+    files
+}
+
+/// Crash safety: every damaged file class is rejected at promotion
+/// time (loudly, with the file quarantined) and the block recomputed —
+/// the served tokens never change. Offsets per `docs/kvstore-format.md`:
+/// magic at 0, version u16 at 4, weights fingerprint at 24, payload
+/// checksum u64 at 56, payload from 64.
+#[test]
+fn corrupt_store_files_are_rejected_and_recomputed() {
+    let dir = store_dir("corrupt");
+    let cfg = KvStoreConfig { dir: dir.clone(), budget_bytes: 0 };
+    let mut coord = coordinator(KvPrecision::Int8);
+    coord.attach_kv_store(&cfg).expect("attach");
+    let reference = serve_stream(&mut coord);
+    assert!(coord.flush_kv_store() > 0);
+
+    let files = bakv_files(&dir);
+    assert!(!files.is_empty());
+    let victim = files[0].clone();
+    let pristine = std::fs::read(&victim).expect("read pristine file");
+    assert!(pristine.len() > HEADER_LEN);
+
+    // (name, corrupted bytes) — each must trip a distinct decode check.
+    let cases: Vec<(&str, Vec<u8>)> = vec![
+        ("truncated header", pristine[..10].to_vec()),
+        ("truncated payload", pristine[..pristine.len() - 7].to_vec()),
+        ("bad magic", {
+            let mut b = pristine.clone();
+            b[0] ^= 0xFF;
+            b
+        }),
+        ("wrong version", {
+            let mut b = pristine.clone();
+            b[VERSION_OFFSET] = 0xFF;
+            b
+        }),
+        ("fingerprint mismatch", {
+            let mut b = pristine.clone();
+            b[24] ^= 0xFF;
+            b
+        }),
+        ("checksum mismatch", {
+            let mut b = pristine.clone();
+            b[CHECKSUM_OFFSET] ^= 0x01;
+            b
+        }),
+        ("payload bit flip", {
+            let mut b = pristine.clone();
+            let n = b.len();
+            b[n - 1] ^= 0x10;
+            b
+        }),
+    ];
+
+    let mut errors_seen = coord.cache_stats().disk_errors;
+    for (name, bytes) in cases {
+        std::fs::write(&victim, &bytes).expect("plant corrupt file");
+        assert!(coord.drop_resident_blocks() > 0);
+        let served = serve_stream(&mut coord);
+        assert_eq!(served, reference, "case '{name}': corrupt file changed the output");
+        let s = coord.cache_stats();
+        assert!(
+            s.disk_errors > errors_seen,
+            "case '{name}': corruption was not counted as a disk error"
+        );
+        errors_seen = s.disk_errors;
+        assert!(
+            !victim.exists(),
+            "case '{name}': corrupt file was not quarantined (deleted)"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A read-only store directory must degrade loudly (spill errors
+/// counted) without affecting serving output.
+#[cfg(unix)]
+#[test]
+fn read_only_store_dir_degrades_loudly_not_wrongly() {
+    use std::os::unix::fs::PermissionsExt;
+    let dir = store_dir("readonly");
+    std::fs::create_dir_all(&dir).expect("create dir");
+    std::fs::set_permissions(&dir, std::fs::Permissions::from_mode(0o555))
+        .expect("chmod store dir");
+    // Privileged processes (root CI containers) ignore mode bits; the
+    // test is only meaningful when writes actually fail.
+    if std::fs::write(dir.join("probe"), b"x").is_ok() {
+        let _ = std::fs::set_permissions(&dir, std::fs::Permissions::from_mode(0o755));
+        let _ = std::fs::remove_dir_all(&dir);
+        eprintln!("skipping read-only-dir assertions: process can write anyway");
+        return;
+    }
+
+    let mut plain = coordinator(KvPrecision::F32);
+    let want = serve_stream(&mut plain);
+
+    let mut coord = coordinator(KvPrecision::F32);
+    coord
+        .attach_kv_store(&KvStoreConfig { dir: dir.clone(), budget_bytes: 0 })
+        .expect("attach to read-only dir");
+    let got = serve_stream(&mut coord);
+    assert_eq!(got, want, "read-only store dir changed the served output");
+    let spilled = coord.flush_kv_store();
+    assert_eq!(spilled, 0, "spill into a read-only directory reported success");
+    let s = coord.cache_stats();
+    assert!(s.disk_errors > 0, "failed spills were not counted as disk errors");
+    let _ = std::fs::set_permissions(&dir, std::fs::Permissions::from_mode(0o755));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Two caches over one directory, spilling and promoting concurrently:
+/// the atomic publish (tmp + rename) means a reader never observes a
+/// partial file, and every promoted block is bitwise identical to the
+/// single-threaded reference.
+#[test]
+fn concurrent_spill_and_promote_share_one_directory() {
+    const FP: u64 = 0xF1;
+    let cfg = micro_config();
+    let dir = store_dir("concurrent");
+    std::fs::create_dir_all(&dir).expect("create dir");
+    let rope = RopeTable::new(cfg.head_dim, cfg.rope_theta);
+
+    let mut rng = Rng::new(7);
+    let blocks: Vec<Vec<i32>> = (0..6)
+        .map(|i| (0..(4 + i)).map(|_| rng.below(24) as i32).collect())
+        .collect();
+
+    // Single-threaded reference fetch (delta 5) per block.
+    let engine = NativeBackend::new(cfg.clone(), 0xBEE);
+    let mut reference = Vec::new();
+    {
+        let mut cache = BlockKvCache::with_precision(rope.clone(), 0, KvPrecision::Int4);
+        for b in &blocks {
+            let (k, v) = engine.prefill_block(b).expect("prefill");
+            let key = block_key(b);
+            cache.insert_pinned(key, k, v);
+            cache.unpin(key);
+        }
+        for b in &blocks {
+            let r = cache.get_reencoded(block_key(b), 5).expect("reference fetch");
+            reference.push((r.k.clone(), r.v.clone(), r.len));
+        }
+    }
+
+    let barrier = std::sync::Barrier::new(2);
+    let (dir_ref, cfg_ref, rope_ref, blocks_ref, reference_ref) =
+        (&dir, &cfg, &rope, &blocks, &reference);
+    let results: Vec<(u64, u64)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2usize)
+            .map(|who| {
+                let barrier = &barrier;
+                s.spawn(move || {
+                    let engine = NativeBackend::new(cfg_ref.clone(), 0xBEE);
+                    let mut cache =
+                        BlockKvCache::with_precision(rope_ref.clone(), 0, KvPrecision::Int4);
+                    cache.attach_store(
+                        DiskStore::open(dir_ref, FP, 0).expect("open shared store"),
+                    );
+                    // Raceful phase: spill this thread's half, then
+                    // immediately poll the full keyspace while the
+                    // other thread is still spilling its half. The
+                    // tmp+rename publish means a concurrent fetch sees
+                    // either nothing (a clean miss) or a complete file
+                    // — never a partial one.
+                    for b in blocks_ref.iter().skip(who).step_by(2) {
+                        let key = block_key(b);
+                        let (k, v) = engine.prefill_block(b).expect("prefill");
+                        cache.insert_pinned(key, k, v);
+                        cache.unpin(key);
+                    }
+                    cache.spill_all();
+                    cache.drop_resident();
+                    for (b, (want_k, want_v, want_len)) in
+                        blocks_ref.iter().zip(reference_ref)
+                    {
+                        let key = block_key(b);
+                        if cache.lookup_pin(key) {
+                            let got = cache.get_reencoded(key, 5).expect("fetch");
+                            assert_eq!(&got.k, want_k, "thread {who}: K diverged (race)");
+                            assert_eq!(&got.v, want_v, "thread {who}: V diverged (race)");
+                            assert_eq!(got.len, *want_len);
+                            cache.unpin(key);
+                        }
+                    }
+                    barrier.wait();
+                    // Deterministic phase: everything is published now;
+                    // all six blocks must promote and match bitwise.
+                    cache.drop_resident();
+                    for (b, (want_k, want_v, want_len)) in
+                        blocks_ref.iter().zip(reference_ref)
+                    {
+                        let key = block_key(b);
+                        assert!(cache.lookup_pin(key), "thread {who}: lost block");
+                        let got = cache.get_reencoded(key, 5).expect("fetch");
+                        assert_eq!(&got.k, want_k, "thread {who}: K diverged");
+                        assert_eq!(&got.v, want_v, "thread {who}: V diverged");
+                        assert_eq!(got.len, *want_len);
+                        cache.unpin(key);
+                    }
+                    let st = cache.stats();
+                    (st.disk_hits, st.disk_errors)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+    for (who, (hits, errors)) in results.iter().enumerate() {
+        assert!(*hits >= blocks.len() as u64, "thread {who}: too few promotions ({hits})");
+        assert_eq!(*errors, 0, "thread {who}: disk errors under concurrency");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
