@@ -1,0 +1,127 @@
+//! Re-encode fetch bench: memo-cold vs memo-warm `get_reencoded` per
+//! KV tier — the rotation-memo win (a warm same-offset fetch is a
+//! copy, not a dequant + Eq.-3 rotation).
+//!
+//! ```sh
+//! cargo bench --bench reencode                    # 8 blocks x 256 tokens
+//! cargo bench --bench reencode -- --blocks 4 --block-len 128
+//! ```
+//!
+//! Operates on [`BlockKvCache`] directly (fetch cost scales with KV
+//! elements, not the forward pass, so no backend is needed). Writes
+//! `BENCH_reencode.json` (`--json-out PATH` overrides) with
+//! `fetch_cold_*_ms` / `fetch_warm_*_ms` per tier for the `bench_guard`
+//! gate. The bench itself fails if a memo-warm fetch is not bitwise
+//! identical to the cold fetch it replays, or if the int8 warm fetch is
+//! not ≥ 3x faster than cold.
+
+use block_attn::config::KvPrecision;
+use block_attn::kvcache::{block_key, BlockKvCache};
+use block_attn::rope::RopeTable;
+use block_attn::tensor::{Tensor, TensorF};
+use block_attn::util::cli::Args;
+use block_attn::util::json::Json;
+use block_attn::util::rng::Rng;
+use block_attn::util::timer::{bench, BenchOpts};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let threads = block_attn::kernels::init_threads_from_args(&args);
+    let n_blocks = args.usize_or("blocks", 8);
+    let block_len = args.usize_or("block-len", 256);
+    // Tiny-model KV shape.
+    let (layers, kv_heads, head_dim) = (4usize, 2, 32);
+
+    let mut rng = Rng::new(0xE9);
+    let mut mk = || -> TensorF {
+        let dims = [layers, block_len, kv_heads, head_dim];
+        let n: usize = dims.iter().product();
+        Tensor::from_vec(&dims, (0..n).map(|_| rng.normal() as f32).collect())
+    };
+
+    let opts = BenchOpts { warmup_iters: 2, iters: 20, max_seconds: 120.0 };
+    let mut rows: Vec<(&'static str, f64, f64)> = Vec::new();
+    for tier in [KvPrecision::F32, KvPrecision::Int8, KvPrecision::Int4] {
+        let rope = RopeTable::new(head_dim, 10000.0);
+        let mut cache = BlockKvCache::with_precision(rope, 0, tier);
+        let keys: Vec<u128> = (0..n_blocks).map(|i| block_key(&[i as i32])).collect();
+        let deltas: Vec<usize> = (0..n_blocks).map(|i| i * block_len).collect();
+        for &key in &keys {
+            let (k, v) = (mk(), mk());
+            cache.insert_pinned(key, k, v);
+            cache.unpin(key);
+        }
+
+        // Correctness first, untimed: the memo-warm fetch must replay
+        // the cold fetch bitwise and be counted as a memo hit.
+        for i in 0..n_blocks {
+            cache.clear_memo();
+            let cold = cache.get_reencoded(keys[i], deltas[i]).expect("resident block");
+            let hits0 = cache.stats().memo_hits;
+            let warm = cache.get_reencoded(keys[i], deltas[i]).expect("resident block");
+            anyhow::ensure!(
+                warm.k == cold.k && warm.v == cold.v,
+                "{} block {i}: memo-warm fetch diverged from cold",
+                tier.as_str()
+            );
+            anyhow::ensure!(
+                cache.stats().memo_hits == hits0 + 1,
+                "{} block {i}: repeat fetch was not a memo hit",
+                tier.as_str()
+            );
+        }
+
+        let name = tier.as_str();
+        let r_cold = bench(&format!("{name}-cold"), &opts, || {
+            cache.clear_memo();
+            for i in 0..n_blocks {
+                let b = cache.get_reencoded(keys[i], deltas[i]).expect("resident block");
+                assert_eq!(b.len, block_len);
+            }
+        });
+        // Populate the memo once, then time pure memo hits.
+        for i in 0..n_blocks {
+            cache.get_reencoded(keys[i], deltas[i]).expect("resident block");
+        }
+        let r_warm = bench(&format!("{name}-warm"), &opts, || {
+            for i in 0..n_blocks {
+                let b = cache.get_reencoded(keys[i], deltas[i]).expect("resident block");
+                assert_eq!(b.len, block_len);
+            }
+        });
+        let s = cache.stats();
+        anyhow::ensure!(s.memo_bytes > 0 && s.memo_hits > 0, "{name}: memo never engaged");
+        rows.push((name, r_cold.p50_ms(), r_warm.p50_ms()));
+    }
+
+    let (c8, w8) = (rows[1].1, rows[1].2);
+    anyhow::ensure!(
+        c8 >= 3.0 * w8,
+        "int8 memo-warm fetch ({w8:.3} ms) is not >= 3x faster than cold ({c8:.3} ms)"
+    );
+
+    println!("# reencode fetch — {n_blocks} blocks x {block_len} tokens, {threads} threads");
+    println!("{:>6} {:>12} {:>12} {:>9}", "tier", "cold", "memo-warm", "speedup");
+    for (name, c, w) in &rows {
+        println!("{name:>6} {c:>10.3}ms {w:>10.3}ms {:>8.2}x", c / w);
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("reencode")),
+        ("threads", Json::num(threads as f64)),
+        ("blocks", Json::num(n_blocks as f64)),
+        ("block_len", Json::num(block_len as f64)),
+        ("fetch_cold_f32_ms", Json::num(rows[0].1)),
+        ("fetch_warm_f32_ms", Json::num(rows[0].2)),
+        ("fetch_cold_int8_ms", Json::num(rows[1].1)),
+        ("fetch_warm_int8_ms", Json::num(rows[1].2)),
+        ("fetch_cold_int4_ms", Json::num(rows[2].1)),
+        ("fetch_warm_int4_ms", Json::num(rows[2].2)),
+        ("memo_speedup_int8", Json::num(c8 / w8)),
+    ]);
+    let out_path = args.str_or("json-out", "BENCH_reencode.json");
+    std::fs::write(&out_path, format!("{report}\n"))?;
+    eprintln!("# wrote {out_path}");
+    eprintln!("{}", block_attn::kernels::pool_stats_line());
+    Ok(())
+}

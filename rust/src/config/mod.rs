@@ -94,6 +94,79 @@ impl KvPrecision {
     }
 }
 
+/// How a cached block is re-encoded to its serving offset at fetch
+/// time (paper Eq. 3; ROADMAP item 4 — the LazyAttention direction).
+///
+/// * `Eager` (default) — every memo-cold fetch derives the rotated
+///   panel from the block's stored local-position codes; memo-warm
+///   fetches replay a stored panel verbatim. Serving output is
+///   **bitwise identical** to recomputing the rotation each fetch.
+/// * `Delta` — a panel already memoized at `Δ₁` is delta-rotated by
+///   `Δ₂−Δ₁` instead of re-derived from the codes. Rotations compose
+///   additively in exact arithmetic but f32 rounding differs per hop,
+///   so this mode is **cosine-contracted** like the quantized tiers
+///   (decode-logit cosine ≥ 0.999 vs eager on the workload traces,
+///   `tests/reencode_modes.rs`), not bitwise.
+///
+/// Resolution order: `--reencode eager|delta` > `$BLOCK_ATTN_REENCODE`
+/// > `Eager`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReencodeMode {
+    #[default]
+    Eager,
+    Delta,
+}
+
+impl ReencodeMode {
+    pub fn parse(s: &str) -> Result<ReencodeMode> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "eager" => ReencodeMode::Eager,
+            "delta" | "lazy" => ReencodeMode::Delta,
+            other => bail!("unknown re-encode mode '{other}' (expected 'eager' or 'delta')"),
+        })
+    }
+
+    /// `$BLOCK_ATTN_REENCODE`, defaulting to `Eager` when unset or
+    /// empty. An unparsable value **panics**, like
+    /// [`KvPrecision::from_env`]: silently serving the bitwise path
+    /// when the operator asked for (or typo'd) the accelerated one
+    /// would hide the misconfiguration.
+    pub fn from_env() -> ReencodeMode {
+        match Self::parse_env_value(std::env::var("BLOCK_ATTN_REENCODE").ok().as_deref()) {
+            Ok(m) => m,
+            Err(e) => panic!("invalid $BLOCK_ATTN_REENCODE: {e}"),
+        }
+    }
+
+    /// The pure resolution behind [`Self::from_env`]: `None` or an
+    /// empty/whitespace value defaults to `Eager`, anything else must
+    /// parse. Unit-testable without touching the process environment.
+    pub fn parse_env_value(v: Option<&str>) -> Result<ReencodeMode> {
+        match v {
+            Some(s) if !s.trim().is_empty() => ReencodeMode::parse(s),
+            _ => Ok(ReencodeMode::Eager),
+        }
+    }
+
+    /// `--reencode` from parsed CLI options, falling back to the
+    /// environment then `Eager`. Errors on an unparsable flag value.
+    pub fn resolve(args: &crate::util::cli::Args) -> Result<ReencodeMode> {
+        match args.reencode() {
+            Some(v) => ReencodeMode::parse(v),
+            None => ReencodeMode::parse_env_value(
+                std::env::var("BLOCK_ATTN_REENCODE").ok().as_deref(),
+            ),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ReencodeMode::Eager => "eager",
+            ReencodeMode::Delta => "delta",
+        }
+    }
+}
+
 /// Where the persistent block KV store lives and how much disk it may
 /// use (the tier under `kvcache::disk::DiskStore`; file format in
 /// `docs/kvstore-format.md`).
@@ -543,6 +616,43 @@ mod tests {
         assert_eq!(KvPrecision::parse_env_value(Some("int4")).unwrap(), KvPrecision::Int4);
         let err = KvPrecision::parse_env_value(Some("in8t")).unwrap_err();
         assert!(format!("{err}").contains("in8t"), "error must name the bad value");
+    }
+
+    #[test]
+    fn reencode_mode_parses_and_defaults() {
+        assert_eq!(ReencodeMode::parse("eager").unwrap(), ReencodeMode::Eager);
+        assert_eq!(ReencodeMode::parse(" DELTA ").unwrap(), ReencodeMode::Delta);
+        assert_eq!(ReencodeMode::parse("lazy").unwrap(), ReencodeMode::Delta);
+        assert!(ReencodeMode::parse("sloppy").is_err());
+        assert_eq!(ReencodeMode::default(), ReencodeMode::Eager);
+        assert_eq!(ReencodeMode::Eager.as_str(), "eager");
+        assert_eq!(ReencodeMode::Delta.as_str(), "delta");
+        // Flag beats environment; absent flag falls through to env/Eager.
+        let args = crate::util::cli::Args::parse_from(vec![
+            "--reencode".to_string(),
+            "delta".to_string(),
+        ]);
+        assert_eq!(ReencodeMode::resolve(&args).unwrap(), ReencodeMode::Delta);
+        let bad = crate::util::cli::Args::parse_from(vec![
+            "--reencode".to_string(),
+            "sloppy".to_string(),
+        ]);
+        assert!(ReencodeMode::resolve(&bad).is_err());
+    }
+
+    /// The two `$BLOCK_ATTN_REENCODE` paths, on the pure resolver so
+    /// the test never mutates the process environment: unset/empty
+    /// stays the bitwise `Eager` default, anything unparsable is an
+    /// error (which [`ReencodeMode::from_env`] escalates to a startup
+    /// panic).
+    #[test]
+    fn reencode_mode_env_value_defaults_and_fails_loudly() {
+        assert_eq!(ReencodeMode::parse_env_value(None).unwrap(), ReencodeMode::Eager);
+        assert_eq!(ReencodeMode::parse_env_value(Some("")).unwrap(), ReencodeMode::Eager);
+        assert_eq!(ReencodeMode::parse_env_value(Some("  ")).unwrap(), ReencodeMode::Eager);
+        assert_eq!(ReencodeMode::parse_env_value(Some("delta")).unwrap(), ReencodeMode::Delta);
+        let err = ReencodeMode::parse_env_value(Some("detla")).unwrap_err();
+        assert!(format!("{err}").contains("detla"), "error must name the bad value");
     }
 
     /// The persistent-store knobs, on the pure value resolver so the

@@ -30,7 +30,7 @@ pub mod scheduler;
 pub mod segmenter;
 pub mod session;
 
-use crate::config::KvPrecision;
+use crate::config::{KvPrecision, ReencodeMode};
 use crate::kvcache::{block_key, BlockKvCache};
 use crate::rope::RopeTable;
 use crate::runtime::{Backend, DecodeCtx};
@@ -130,7 +130,9 @@ impl<B: Backend> Coordinator<B> {
     }
 
     /// A coordinator whose block-KV cache stores at `precision` (the
-    /// `--kv-quant` plumbing; see [`KvPrecision`]).
+    /// `--kv-quant` plumbing; see [`KvPrecision`]). The fetch-time
+    /// re-encode mode starts from `$BLOCK_ATTN_REENCODE` (eager when
+    /// unset); pin it explicitly with [`Self::set_reencode_mode`].
     pub fn with_kv_precision(
         engine: B,
         cache_budget_bytes: usize,
@@ -139,9 +141,11 @@ impl<B: Backend> Coordinator<B> {
         let cfg = engine.config().clone();
         let rope = RopeTable::new(cfg.head_dim, cfg.rope_theta);
         let flops = crate::flops::FlopsModel::from_config(&cfg);
+        let mut cache = BlockKvCache::with_precision(rope, cache_budget_bytes, precision);
+        cache.set_reencode_mode(ReencodeMode::from_env());
         Coordinator {
             engine,
-            cache: BlockKvCache::with_precision(rope, cache_budget_bytes, precision),
+            cache,
             scheduler: Scheduler::new(),
             metrics: Metrics::new(),
             flops,
@@ -166,6 +170,19 @@ impl<B: Backend> Coordinator<B> {
     /// decode context's tier.
     pub fn set_kv_precision(&mut self, precision: KvPrecision) {
         self.cache.set_precision(precision);
+    }
+
+    /// Fetch-time re-encode mode of the block-KV cache (the
+    /// `--reencode` plumbing; see [`ReencodeMode`]).
+    pub fn reencode_mode(&self) -> ReencodeMode {
+        self.cache.reencode_mode()
+    }
+
+    /// Switch the fetch-time re-encode mode. Eager stays the bitwise
+    /// default; delta composes rotations from the closest memoized
+    /// panel (see [`BlockKvCache::set_reencode_mode`]).
+    pub fn set_reencode_mode(&mut self, mode: ReencodeMode) {
+        self.cache.set_reencode_mode(mode);
     }
 
     pub fn cache_stats(&self) -> crate::kvcache::CacheStats {
@@ -416,7 +433,12 @@ impl<B: Backend> Coordinator<B> {
             write_ctx(&mut past_k, &blk.k, item.offset);
             write_ctx(&mut past_v, &blk.v, item.offset);
             max_block = max_block.max(blk.len);
-            flops += self.flops.reencode(blk.len);
+            // Eq. 3 work only happens for a non-zero shift: offset-0
+            // blocks and the no-reencode/parallel modes fetch at
+            // delta == 0 and must not inflate reported re-encode FLOPs.
+            if delta != 0 {
+                flops += self.flops.reencode(blk.len);
+            }
         }
 
         // 3. Final-block prefill: the query attends to everything. In

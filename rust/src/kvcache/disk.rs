@@ -30,8 +30,12 @@
 //!
 //! The byte budget (0 = unbounded) is enforced after each put by
 //! deleting oldest-modified files first — mtime-LRU across *all*
-//! processes sharing the directory, since promotion-heavy blocks are
-//! re-spilled (touching a fresh file) on their next eviction.
+//! processes sharing the directory. A validated read-through `get`
+//! refreshes the file's mtime, so promotion-heavy blocks count as
+//! recently used instead of aging toward eviction while hot. Equal
+//! mtimes (coarse filesystem granularity) break ties on the content
+//! key, so eviction order is deterministic regardless of directory
+//! iteration order.
 
 use super::store::{self, StoredBlock};
 use super::KvData;
@@ -160,7 +164,9 @@ impl DiskStore {
     /// Read-through fetch. `Ok(None)` is a clean miss (no file);
     /// `Err` means the file existed but failed validation — it has
     /// been deleted so a healthy copy can be re-spilled, and the
-    /// caller must treat the lookup as a recompute miss.
+    /// caller must treat the lookup as a recompute miss. A validated
+    /// hit refreshes the file's mtime so the cross-process mtime-LRU
+    /// sees promotions as recency, not just spills.
     pub(crate) fn get(&mut self, key: u128) -> Result<Option<StoredBlock>> {
         let path = self.path_for(key);
         let bytes = match fs::read(&path) {
@@ -171,7 +177,10 @@ impl DiskStore {
             }
         };
         match store::decode_block(&bytes, key, self.fingerprint) {
-            Ok(block) => Ok(Some(block)),
+            Ok(block) => {
+                Self::touch(&path);
+                Ok(Some(block))
+            }
             Err(e) => {
                 if fs::remove_file(&path).is_ok() {
                     self.entries = self.entries.saturating_sub(1);
@@ -180,6 +189,27 @@ impl DiskStore {
                 Err(e.context(format!("kv-store: rejecting {}", path.display())))
             }
         }
+    }
+
+    /// Best-effort mtime refresh so a read-through hit counts as
+    /// recency for the cross-process mtime-LRU. Failure (read-only
+    /// directory, file raced away by another process's eviction) only
+    /// costs eviction-order accuracy, never correctness, so errors
+    /// are ignored.
+    fn touch(path: &Path) {
+        let now = SystemTime::now();
+        if let Ok(f) = fs::OpenOptions::new().append(true).open(path) {
+            let _ = f.set_times(fs::FileTimes::new().set_accessed(now).set_modified(now));
+        }
+    }
+
+    /// Content key parsed back out of a published filename
+    /// (`<key:032x>-<fingerprint:016x>.bakv`); `None` for anything
+    /// else. Used only to order same-mtime evictions deterministically.
+    fn key_of(path: &Path) -> Option<u128> {
+        let stem = path.file_stem()?.to_str()?;
+        let (key_hex, _) = stem.split_once('-')?;
+        u128::from_str_radix(key_hex, 16).ok()
     }
 
     /// Delete oldest-modified files until the summed size fits the
@@ -191,9 +221,13 @@ impl DiskStore {
         }
         let Ok(mut files) = self.scan() else { return };
         let mut total: u64 = files.iter().map(|(_, len, _)| *len).sum();
-        // Oldest first; path as the tie-break so same-second writes
-        // (coarse mtime granularity) evict deterministically.
-        files.sort_by(|a, b| (a.0, &a.2).cmp(&(b.0, &b.2)));
+        // Oldest first; content key (then path, for non-block litter)
+        // as the tie-break so same-second writes (coarse mtime
+        // granularity) evict deterministically regardless of directory
+        // iteration order.
+        files.sort_by(|a, b| {
+            (a.0, Self::key_of(&a.2), &a.2).cmp(&(b.0, Self::key_of(&b.2), &b.2))
+        });
         let mut kept = files.len();
         for (_, len, path) in &files {
             if total <= self.budget_bytes {
@@ -300,5 +334,69 @@ mod tests {
             (1..=3u128).filter(|&k| st.get(k).unwrap().is_some()).count();
         assert_eq!(served, 2, "surviving files must still be readable");
         let _ = fs::remove_dir_all(&dir);
+    }
+
+    fn set_mtime(path: &Path, t: SystemTime) {
+        let f = fs::OpenOptions::new().append(true).open(path).unwrap();
+        f.set_times(fs::FileTimes::new().set_accessed(t).set_modified(t)).unwrap();
+    }
+
+    #[test]
+    fn get_refreshes_mtime_lru_recency() {
+        use std::time::Duration;
+        let dir = tmpdir("touch");
+        let one = {
+            let mut probe = DiskStore::open(&dir, 1, 0).unwrap();
+            probe.put(1, &f32_block(4, 1.0), 4).unwrap();
+            probe.bytes()
+        };
+        let _ = fs::remove_dir_all(&dir);
+
+        let mut st = DiskStore::open(&dir, 1, 2 * one).unwrap();
+        st.put(1, &f32_block(4, 1.0), 4).unwrap();
+        st.put(2, &f32_block(4, 2.0), 4).unwrap();
+        // Backdate both, key 1 colder than key 2.
+        let old = SystemTime::UNIX_EPOCH + Duration::from_secs(1_000_000);
+        set_mtime(&st.path_for(1), old);
+        set_mtime(&st.path_for(2), old + Duration::from_secs(60));
+        // A read-through hit must promote key 1 to warmest...
+        assert!(st.get(1).unwrap().is_some());
+        // ...so the next over-budget put evicts key 2, not key 1.
+        st.put(3, &f32_block(4, 3.0), 4).unwrap();
+        assert!(st.contains(1), "read-through hit must refresh recency");
+        assert!(!st.contains(2), "coldest untouched file must evict first");
+        assert!(st.contains(3));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn equal_mtime_eviction_breaks_ties_on_content_key() {
+        use std::time::Duration;
+        let dir = tmpdir("ties");
+        let mut st = DiskStore::open(&dir, 1, 0).unwrap();
+        for key in [9u128, 3, 7] {
+            st.put(key, &f32_block(4, key as u32 as f32), 4).unwrap();
+        }
+        let one = st.bytes() / 3;
+        // Identical mtimes: eviction must fall back to the content key
+        // (lowest first), independent of readdir order or put order.
+        let t = SystemTime::UNIX_EPOCH + Duration::from_secs(2_000_000);
+        for key in [9u128, 3, 7] {
+            set_mtime(&st.path_for(key), t);
+        }
+        st.budget_bytes = 2 * one;
+        st.enforce_budget();
+        assert!(!st.contains(3), "lowest content key must evict first on equal mtime");
+        assert!(st.contains(7) && st.contains(9));
+        assert_eq!(st.entries(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn key_of_parses_published_filenames() {
+        let p = Path::new("/x/000000000000000000000000000000ff-0000000000000001.bakv");
+        assert_eq!(DiskStore::key_of(p), Some(0xff));
+        assert_eq!(DiskStore::key_of(Path::new("/x/garbage.bakv")), None);
+        assert_eq!(DiskStore::key_of(Path::new("/x/.tmp-12-3-4")), None);
     }
 }

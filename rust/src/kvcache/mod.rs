@@ -39,6 +39,23 @@
 //! `tests/kv_quant.rs`. [`CacheStats`] reports the bytes saved (total
 //! and per tier) and the running relative quantization error.
 //!
+//! ## Rotation memo
+//!
+//! All tiers fetch through one parameterized path
+//! ([`RopeTable::reencode_into`] over a [`crate::rope::KvView`]), and
+//! every freshly rotated panel is recorded in a byte-budgeted **memo**
+//! keyed by `(key, Δ)`: a repeat fetch at the same offset — the common
+//! case for a shared system block at offset 0 or a popular passage in
+//! a stable plan — replays the stored panel verbatim (a copy, not a
+//! rotation; bitwise identical to recomputing it, pinned by
+//! `tests/reencode_modes.rs`). Under the opt-in
+//! [`ReencodeMode::Delta`] a fetch at a new `Δ₂` delta-rotates the
+//! nearest memoized panel by `Δ₂−Δ₁` instead of re-deriving from the
+//! stored codes — cheaper for f32-sized rotations than a dequant, but
+//! cosine-contracted rather than bitwise (f32 rounding differs per
+//! hop). Memo panels die with their entry (eviction, drop, clear) and
+//! never outlive the stored codes they were derived from.
+//!
 //! The tier is a property of the *entry*, not the cache:
 //! [`BlockKvCache::set_precision`] switches the precision for future
 //! inserts while resident entries keep serving at the tier they were
@@ -61,9 +78,9 @@
 //! loudly (stderr + [`CacheStats::disk_errors`]) and fall back to a
 //! recompute miss; they never wedge a request.
 
-use crate::config::KvPrecision;
+use crate::config::{KvPrecision, ReencodeMode};
 use crate::kernels::quant::{QuantizedKv, QuantizedKv4};
-use crate::rope::RopeTable;
+use crate::rope::{AngleCache, KvView, RopeTable};
 use crate::tensor::{Tensor, TensorF};
 use disk::DiskStore;
 use std::collections::HashMap;
@@ -120,6 +137,24 @@ struct Entry {
     hits: u64,
 }
 
+/// Memoized rotated panels of one resident entry: the dequantized V
+/// (position-independent — V is never rotated, so one copy serves every
+/// offset) plus K panels keyed by the `Δ` they were rotated to.
+/// Derived data only: invalidated whenever the base entry leaves the
+/// RAM map, and always re-derivable from the stored codes.
+struct MemoEntry {
+    v: TensorF,
+    /// `(delta, rotated K panel)` in insertion order.
+    panels: Vec<(usize, TensorF)>,
+    last_used: u64,
+}
+
+impl MemoEntry {
+    fn bytes(&self) -> usize {
+        self.v.size_bytes() + self.panels.iter().map(|(_, k)| k.size_bytes()).sum::<usize>()
+    }
+}
+
 /// Cache statistics (exported via coordinator metrics).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CacheStats {
@@ -157,6 +192,25 @@ pub struct CacheStats {
     pub disk_entries: usize,
     /// Summed size of those files in bytes.
     pub disk_bytes: usize,
+    /// Fetches served by replaying a memoized `(key, Δ)` panel — a
+    /// copy, not a rotation; bitwise identical to re-deriving it.
+    pub memo_hits: u64,
+    /// Fetches that found no memoized panel at their exact `(key, Δ)`
+    /// (the panel was then derived — or, in delta mode, delta-rotated —
+    /// and memoized).
+    pub memo_misses: u64,
+    /// Memo panels dropped: LRU trims to the memo byte budget plus
+    /// invalidations when the base entry left RAM.
+    pub memo_evictions: u64,
+    /// Fetches served by delta-rotating a memoized panel from a nearby
+    /// `Δ` instead of re-deriving from the stored codes. Only the
+    /// opt-in [`ReencodeMode::Delta`] does this; always 0 under the
+    /// bitwise default.
+    pub delta_rotations: u64,
+    /// Entries currently holding memoized panels (derived in `stats()`).
+    pub memo_entries: usize,
+    /// Summed bytes of the memoized panels (derived in `stats()`).
+    pub memo_bytes: usize,
     /// Running sums over every quantized (int8 or int4) insertion:
     /// squared reconstruction error and squared reference magnitude
     /// (see [`Self::quant_rel_err`]).
@@ -209,6 +263,18 @@ pub struct BlockKvCache {
     clock: u64,
     stats: CacheStats,
     store: Option<DiskStore>,
+    /// Rotated-panel memo (see the module docs): derived data keyed by
+    /// entry, LRU-trimmed to `memo_budget`, invalidated with its entry.
+    memo: HashMap<u128, MemoEntry>,
+    /// Byte budget of the memo alone (0 = unbounded). Defaults to the
+    /// cache's own byte budget — the memo holds f32 panels, so it can
+    /// cost more RAM than the (possibly quantized) entries it derives
+    /// from, and deserves its own bound.
+    memo_budget: usize,
+    reencode_mode: ReencodeMode,
+    /// Δ-keyed cos/sin memo shared across fetches (consecutive blocks
+    /// of one plan frequently land at few distinct offsets).
+    angles: AngleCache,
 }
 
 impl BlockKvCache {
@@ -228,7 +294,39 @@ impl BlockKvCache {
             clock: 0,
             stats: CacheStats::default(),
             store: None,
+            memo: HashMap::new(),
+            memo_budget: byte_budget,
+            reencode_mode: ReencodeMode::default(),
+            angles: AngleCache::new(),
         }
+    }
+
+    /// The active re-encode mode (see [`ReencodeMode`]; the bitwise
+    /// `Eager` by default).
+    pub fn reencode_mode(&self) -> ReencodeMode {
+        self.reencode_mode
+    }
+
+    /// Switch between eager re-derivation and delta-rotation of
+    /// memoized panels. Takes effect for future fetches; existing memo
+    /// panels stay valid (both modes produce and consume the same
+    /// memo — only the miss path differs).
+    pub fn set_reencode_mode(&mut self, mode: ReencodeMode) {
+        self.reencode_mode = mode;
+    }
+
+    /// Bound the rotation memo to `bytes` (0 = unbounded), trimming
+    /// immediately. The memo starts at the cache's own byte budget.
+    pub fn set_memo_budget(&mut self, bytes: usize) {
+        self.memo_budget = bytes;
+        self.enforce_memo_budget();
+    }
+
+    /// Drop every memoized rotated panel. A measurement aid (benches
+    /// time the memo-cold fetch path with it) — correctness never needs
+    /// it, since the memo is derived data. Not counted as evictions.
+    pub fn clear_memo(&mut self) {
+        self.memo.clear();
     }
 
     /// Attach a persistent disk tier: from now on LRU eviction spills
@@ -279,6 +377,8 @@ impl BlockKvCache {
             }
         }
         s.bytes_saved = s.bytes_saved_int8 + s.bytes_saved_int4;
+        s.memo_entries = self.memo.len();
+        s.memo_bytes = self.memo.values().map(|m| m.bytes()).sum();
         (s.disk_entries, s.disk_bytes) = match &self.store {
             Some(st) => (st.entries(), st.bytes() as usize),
             None => (0, 0),
@@ -418,6 +518,9 @@ impl BlockKvCache {
             KvData::Int4 { k, v } => k.size_bytes() + v.size_bytes(),
         };
         let t = self.tick();
+        // Defensive: replacing a resident entry invalidates any panels
+        // derived from the old payload.
+        self.invalidate_memo(key);
         self.map.insert(
             key,
             Entry { data, len, bytes, bytes_f32, pins: 1, last_used: t, hits: 0 },
@@ -437,53 +540,151 @@ impl BlockKvCache {
 
     /// Fetch a pinned block with its keys re-encoded to absolute offset
     /// `delta` (paper Eq. 3). `delta = 0` returns the cached keys as-is.
-    /// On the quantized tiers dequantization (and for int4 the nibble
-    /// unpack) is fused into the re-encode: one pass reconstructs and
-    /// rotates the keys ([`RopeTable::reencode_block_dequant`] /
-    /// [`RopeTable::reencode_block_dequant_i4`]).
-    pub fn get_reencoded(&self, key: u128, delta: usize) -> Option<ReencodedBlock> {
-        let e = self.map.get(&key)?;
-        match &e.data {
-            KvData::F32 { k_local, v } => {
-                let mut k = k_local.clone();
+    ///
+    /// Fetch order (per tier, all through the one unified
+    /// [`RopeTable::reencode_into`] path):
+    ///
+    /// 1. **Memo hit** — a panel already rotated to this exact `Δ` is
+    ///    replayed verbatim (a copy; bitwise identical to recomputing).
+    /// 2. **Delta rotation** (opt-in [`ReencodeMode::Delta`] only) —
+    ///    the nearest memoized panel is rotated by the offset
+    ///    difference; cosine-contracted, not bitwise.
+    /// 3. **Memo-cold derivation** — the panel is materialized from the
+    ///    stored codes (verbatim copy / fused dequant) and rotated;
+    ///    bitwise identical to the pre-memo fetch paths.
+    ///
+    /// Whatever path produced the panel, it is memoized for the next
+    /// fetch, then the memo is trimmed to its byte budget.
+    pub fn get_reencoded(&mut self, key: u128, delta: usize) -> Option<ReencodedBlock> {
+        if !self.map.contains_key(&key) {
+            return None;
+        }
+        self.clock += 1;
+        let now = self.clock;
+
+        // 1. Exact (key, Δ) memo hit: replay the stored panel.
+        if let Some(m) = self.memo.get_mut(&key) {
+            if let Some((_, k)) = m.panels.iter().find(|(d, _)| *d == delta) {
+                let blk = ReencodedBlock { k: k.clone(), v: m.v.clone(), len: self.map[&key].len };
+                m.last_used = now;
+                self.stats.memo_hits += 1;
+                return Some(blk);
+            }
+        }
+        self.stats.memo_misses += 1;
+
+        // 2. Delta mode: rotate the nearest memoized panel by Δ₂−Δ₁
+        //    instead of re-deriving from the stored codes. Ties break
+        //    toward the smaller Δ so the hop is deterministic.
+        if self.reencode_mode == ReencodeMode::Delta {
+            let base = self.memo.get(&key).and_then(|m| {
+                m.panels
+                    .iter()
+                    .min_by_key(|(d, _)| ((*d as i64 - delta as i64).abs(), *d))
+                    .map(|(d, k)| (*d, k.clone()))
+            });
+            if let Some((d1, mut k)) = base {
                 let dims = k.dims().to_vec();
-                self.rope.reencode_block(
+                let hop = delta as i64 - d1 as i64;
+                self.rope.rotate_panel(
                     k.data_mut(),
                     dims[0],
                     dims[1],
                     dims[2],
-                    delta as i64,
+                    hop,
+                    &mut self.angles,
                 );
-                Some(ReencodedBlock { k, v: v.clone(), len: e.len })
+                let v = self.memo[&key].v.clone();
+                let len = self.map[&key].len;
+                self.stats.delta_rotations += 1;
+                self.memoize(key, delta, &k, &v, now);
+                return Some(ReencodedBlock { k, v, len });
             }
-            KvData::Int8 { k, v } => {
-                let dims = k.dims;
-                let mut kf: TensorF = Tensor::zeros(&dims);
-                self.rope.reencode_block_dequant(
-                    &k.q,
-                    &k.scales,
-                    dims[0],
-                    dims[1],
-                    dims[2],
-                    delta as i64,
-                    kf.data_mut(),
-                );
-                Some(ReencodedBlock { k: kf, v: v.dequantize(), len: e.len })
+        }
+
+        // 3. Memo-cold: derive from the stored codes through the
+        //    unified path (also delta mode's first fetch of a block).
+        let e = &self.map[&key];
+        let (dims, view) = match &e.data {
+            KvData::F32 { k_local, .. } => {
+                let d = k_local.dims();
+                ([d[0], d[1], d[2], d[3]], KvView::F32(k_local.data()))
             }
-            KvData::Int4 { k, v } => {
-                let dims = k.dims;
-                let mut kf: TensorF = Tensor::zeros(&dims);
-                self.rope.reencode_block_dequant_i4(
-                    &k.packed,
-                    &k.scales,
-                    dims[0],
-                    dims[1],
-                    dims[2],
-                    delta as i64,
-                    kf.data_mut(),
-                );
-                Some(ReencodedBlock { k: kf, v: v.dequantize(), len: e.len })
+            KvData::Int8 { k, .. } => (k.dims, KvView::Int8 { q: &k.q, scales: &k.scales }),
+            KvData::Int4 { k, .. } => {
+                (k.dims, KvView::Int4 { packed: &k.packed, scales: &k.scales })
             }
+        };
+        let mut kf: TensorF = Tensor::zeros(&dims);
+        self.rope.reencode_into(
+            view,
+            dims[0],
+            dims[1],
+            dims[2],
+            delta as i64,
+            &mut self.angles,
+            kf.data_mut(),
+        );
+        let v = match &e.data {
+            KvData::F32 { v, .. } => v.clone(),
+            KvData::Int8 { v, .. } => v.dequantize(),
+            KvData::Int4 { v, .. } => v.dequantize(),
+        };
+        let len = e.len;
+        self.memoize(key, delta, &kf, &v, now);
+        Some(ReencodedBlock { k: kf, v, len })
+    }
+
+    /// Record a freshly rotated K panel (and the shared V) in the
+    /// rotation memo, then trim the memo to its byte budget.
+    fn memoize(&mut self, key: u128, delta: usize, k: &TensorF, v: &TensorF, now: u64) {
+        match self.memo.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut o) => {
+                let m = o.get_mut();
+                m.last_used = now;
+                if !m.panels.iter().any(|(d, _)| *d == delta) {
+                    m.panels.push((delta, k.clone()));
+                }
+            }
+            std::collections::hash_map::Entry::Vacant(slot) => {
+                slot.insert(MemoEntry {
+                    v: v.clone(),
+                    panels: vec![(delta, k.clone())],
+                    last_used: now,
+                });
+            }
+        }
+        self.enforce_memo_budget();
+    }
+
+    /// Trim the memo to its byte budget, dropping least-recently-used
+    /// whole entries first (an entry's panels share its V and die
+    /// together). Unlike cache entries, memo panels are pure
+    /// accelerators — always re-derivable — so even the entry that was
+    /// just memoized may be dropped when it alone exceeds the budget.
+    fn enforce_memo_budget(&mut self) {
+        if self.memo_budget == 0 {
+            return;
+        }
+        let mut total: usize = self.memo.values().map(|m| m.bytes()).sum();
+        while total > self.memo_budget {
+            let victim = self
+                .memo
+                .iter()
+                .min_by_key(|(k, m)| (m.last_used, **k))
+                .map(|(k, _)| *k);
+            let Some(k) = victim else { break };
+            let dropped = self.memo.remove(&k).expect("victim vanished");
+            total -= dropped.bytes();
+            self.stats.memo_evictions += 1;
+        }
+    }
+
+    /// Drop `key`'s memoized panels: the base entry left RAM (or was
+    /// replaced), so derived panels must not outlive it.
+    fn invalidate_memo(&mut self, key: u128) {
+        if self.memo.remove(&key).is_some() {
+            self.stats.memo_evictions += 1;
         }
     }
 
@@ -505,6 +706,7 @@ impl BlockKvCache {
             "clear() with pinned entries"
         );
         self.map.clear();
+        self.memo.clear();
         self.store = None;
     }
 
@@ -515,7 +717,12 @@ impl BlockKvCache {
     /// is not tied to a weights change. Returns the number dropped.
     pub fn drop_resident(&mut self) -> usize {
         let before = self.map.len();
+        let dropped: Vec<u128> =
+            self.map.iter().filter(|(_, e)| e.pins == 0).map(|(k, _)| *k).collect();
         self.map.retain(|_, e| e.pins > 0);
+        for k in dropped {
+            self.invalidate_memo(k);
+        }
         before - self.map.len()
     }
 
@@ -581,6 +788,7 @@ impl BlockKvCache {
                     let e = self.map.remove(&k).unwrap();
                     total -= e.bytes;
                     self.stats.evictions += 1;
+                    self.invalidate_memo(k);
                     self.spill(k, &e.data, e.len);
                 }
                 None => break, // everything pinned; over-budget transiently

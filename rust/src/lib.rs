@@ -112,6 +112,27 @@
 //! Eq.-3 RoPE re-encode ([`rope::RopeTable::reencode_block_dequant`] /
 //! [`rope::RopeTable::reencode_block_dequant_i4`]).
 //!
+//! ## Re-encode acceleration
+//!
+//! All three fetch paths flow through one parameterized rotation
+//! primitive ([`rope::RopeTable::reencode_into`] over a
+//! [`rope::KvView`]), and each cache entry carries a byte-budgeted
+//! **rotation memo**: a fetch at a `(key, Δ)` seen before returns the
+//! memoized rotated panel — a copy, not a rotation — so warm
+//! same-offset fetches are O(1) amortized (LazyAttention-style; memo
+//! hit/miss/byte counters ride [`kvcache::CacheStats`] and the server
+//! `stats` line). Determinism contract: `eager` mode (the default) and
+//! every memo hit are **bitwise identical** to recomputing Eq. 3 from
+//! the stored local codes, at every tier and thread count
+//! (`tests/reencode_modes.rs`). The opt-in approximate path
+//! (`--reencode eager|delta` / `$BLOCK_ATTN_REENCODE`, invalid values
+//! fail loudly) instead rotates the *closest already-rotated* memoized
+//! panel by `Δ₂−Δ₁`: rotations compose additively
+//! (`rope::tests::reencode_composes_additively`), but float rounding
+//! differs from the eager product, so `delta` is **cosine-contracted**
+//! (decode-logit cosine ≥ 0.999 vs eager on the workload traces, like
+//! the quant tiers) rather than bitwise.
+//!
 //! **Decode-path data flow** (the f32-dense assumption is gone): after
 //! the final-block prefill, the assembled context + query KV is stored
 //! once at tier precision as the static prefix of a
@@ -247,6 +268,7 @@ pub fn run_cli(args: &util::cli::Args) -> anyhow::Result<()> {
             eprintln!("          --model tiny|small|bench [--checkpoint FILE]");
             eprintln!("          --threads N            (kernel threads; or $BLOCK_ATTN_THREADS)");
             eprintln!("          --kv-quant f32|int8|int4  (KV cache tier; or $BLOCK_ATTN_KV_QUANT)");
+            eprintln!("          --reencode eager|delta (fetch re-encode mode; or $BLOCK_ATTN_REENCODE)");
             eprintln!("          --simd auto|off        (vector kernels; or $BLOCK_ATTN_SIMD)");
             eprintln!("          --kv-store-dir DIR     (persistent block store; or $BLOCK_ATTN_KV_STORE_DIR)");
             eprintln!("          --kv-store-budget MB   (disk budget, 0=unbounded; or $BLOCK_ATTN_KV_STORE_BUDGET)");
@@ -276,6 +298,7 @@ fn cli_eval(args: &util::cli::Args) -> anyhow::Result<()> {
     }
     let kv_precision = config::KvPrecision::resolve(args)?;
     let mut coord = Coordinator::with_kv_precision(backend, 128 << 20, kv_precision);
+    coord.set_reencode_mode(config::ReencodeMode::resolve(args)?);
     if let Some(sc) = config::KvStoreConfig::resolve(args)? {
         coord.attach_kv_store(&sc)?;
     }
@@ -312,6 +335,7 @@ fn cli_serve(args: &util::cli::Args) -> anyhow::Result<()> {
     let workers = args.usize_or("workers", 4);
     let cache_mb = args.usize_or("cache-mb", 256);
     let kv_precision = config::KvPrecision::resolve(args)?;
+    let reencode = config::ReencodeMode::resolve(args)?;
     let store_cfg = config::KvStoreConfig::resolve(args)?;
     let policy = coordinator::batcher::BatchPolicy::resolve(args);
     let args2 = args.clone();
@@ -323,6 +347,7 @@ fn cli_serve(args: &util::cli::Args) -> anyhow::Result<()> {
             }
             backend.warmup()?;
             let mut coord = Coordinator::with_kv_precision(backend, cache_mb << 20, kv_precision);
+            coord.set_reencode_mode(reencode);
             if let Some(sc) = &store_cfg {
                 coord.attach_kv_store(sc)?;
             }

@@ -25,6 +25,73 @@ fn rotate_span(x: &mut [f32], half: usize, cos: &[f32], sin: &[f32]) {
     crate::kernels::simd::rotate_pairs(lo, hi, cos, sin);
 }
 
+/// A borrowed view of one stored K panel at its storage tier — the
+/// parameterized input of [`RopeTable::reencode_into`], so the f32,
+/// int8, and int4 fetch paths share a single materialize-then-rotate
+/// implementation (one place Eq. 3 happens).
+///
+/// All tiers describe the same `(layers, L, kv_heads, head_dim)`
+/// row-major element order; only the encoding differs.
+pub enum KvView<'a> {
+    /// Dense f32 keys, copied verbatim before rotation.
+    F32(&'a [f32]),
+    /// Int8 codes + one f32 scale per (layer, head, channel)
+    /// ([`crate::kernels::quant::QuantizedKv`] layout).
+    Int8 { q: &'a [i8], scales: &'a [f32] },
+    /// Packed int4 codes (two per byte) + one f32 scale per (layer,
+    /// token-group, head, channel)
+    /// ([`crate::kernels::quant::QuantizedKv4`] layout).
+    Int4 { packed: &'a [u8], scales: &'a [f32] },
+}
+
+/// Small Δ-keyed memo of [`RopeTable::angles`] results, so a fetch
+/// sweep where consecutive blocks share an offset (or revisit a recent
+/// one) does not recompute — and reallocate — the cos/sin vectors per
+/// block. Entries are replayed verbatim, and `angles` itself is a pure
+/// deterministic function of `(table, Δ)`, so caching is bitwise
+/// invisible. Bounded FIFO: at most [`Self::CAPACITY`] deltas live at
+/// once (a serving plan touches only a handful of distinct offsets).
+#[derive(Debug, Default)]
+pub struct AngleCache {
+    entries: Vec<(i64, Vec<f32>, Vec<f32>)>,
+}
+
+impl AngleCache {
+    /// Distinct Δ values kept; the oldest is dropped beyond this.
+    pub const CAPACITY: usize = 16;
+
+    pub fn new() -> AngleCache {
+        AngleCache { entries: Vec::new() }
+    }
+
+    /// Number of memoized Δ entries (introspection for tests).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// cos/sin of `delta·θ_j`, computed through `table` on first
+    /// request and replayed verbatim afterwards.
+    fn get_or_compute(&mut self, table: &RopeTable, delta: i64) -> (&[f32], &[f32]) {
+        let at = match self.entries.iter().position(|(d, _, _)| *d == delta) {
+            Some(i) => i,
+            None => {
+                if self.entries.len() >= Self::CAPACITY {
+                    self.entries.remove(0);
+                }
+                let (cos, sin) = table.angles(delta);
+                self.entries.push((delta, cos, sin));
+                self.entries.len() - 1
+            }
+        };
+        let e = &self.entries[at];
+        (&e.1, &e.2)
+    }
+}
+
 /// Precomputed per-pair inverse frequencies for one head dim.
 #[derive(Debug, Clone)]
 pub struct RopeTable {
@@ -99,17 +166,102 @@ impl RopeTable {
         kv_heads: usize,
         delta: i64,
     ) {
+        self.rotate_panel(k, layers, seq_len, kv_heads, delta, &mut AngleCache::new());
+    }
+
+    /// Rotate a materialized f32 `(layers, L, kv_heads, head_dim)`
+    /// panel in place by `delta` — **the single place Eq. 3 touches
+    /// data**. Every tier's fetch funnels here via
+    /// [`Self::reencode_into`], and it doubles as the delta-mode
+    /// primitive: rotating a panel already at `Δ₁` by `Δ₂−Δ₁` lands it
+    /// at `Δ₂` (rotations compose additively — pinned by
+    /// `reencode_composes_additively`). cos/sin come from the Δ-keyed
+    /// `angles` memo, which is bitwise invisible.
+    pub fn rotate_panel(
+        &self,
+        k: &mut [f32],
+        layers: usize,
+        seq_len: usize,
+        kv_heads: usize,
+        delta: i64,
+        angles: &mut AngleCache,
+    ) {
         let d = self.head_dim;
         assert_eq!(k.len(), layers * seq_len * kv_heads * d);
         if delta == 0 {
             return;
         }
         let half = d / 2;
-        let (cos, sin) = self.angles(delta);
+        let (cos, sin) = angles.get_or_compute(self, delta);
         let heads_total = layers * seq_len * kv_heads;
         for h in 0..heads_total {
-            rotate_span(&mut k[h * d..(h + 1) * d], half, &cos, &sin);
+            rotate_span(&mut k[h * d..(h + 1) * d], half, cos, sin);
         }
+    }
+
+    /// **The unified re-encode path** (paper Eq. 3) over any storage
+    /// tier: materialize the `(layers, L, kv_heads, head_dim)` panel
+    /// described by `view` into `out` (verbatim copy / fused int8
+    /// dequant / fused int4 unpack+dequant), then rotate every head
+    /// span by `delta` through [`Self::rotate_panel`].
+    ///
+    /// Dequantization is per-element and order-free, and the rotation
+    /// applies the exact operation sequence of [`Self::reencode_block`]
+    /// with identical cos/sin values, so this path is **bitwise
+    /// identical** per tier to the three fused variants it replaced
+    /// (`unified_path_matches_legacy_variants_bitwise` pins it, and
+    /// those variants survive as thin wrappers over this one).
+    pub fn reencode_into(
+        &self,
+        view: KvView<'_>,
+        layers: usize,
+        seq_len: usize,
+        kv_heads: usize,
+        delta: i64,
+        angles: &mut AngleCache,
+        out: &mut [f32],
+    ) {
+        use crate::kernels::quant::{dequant_i4_row, dequant_i8_row, I4_GROUP};
+        let d = self.head_dim;
+        assert_eq!(out.len(), layers * seq_len * kv_heads * d);
+        match view {
+            KvView::F32(x) => {
+                assert_eq!(x.len(), out.len());
+                out.copy_from_slice(x);
+            }
+            KvView::Int8 { q, scales } => {
+                assert_eq!(q.len(), out.len());
+                assert_eq!(scales.len(), layers * kv_heads * d);
+                for l in 0..layers {
+                    for t in 0..seq_len {
+                        for h in 0..kv_heads {
+                            let off = ((l * seq_len + t) * kv_heads + h) * d;
+                            let srow = &scales[(l * kv_heads + h) * d..(l * kv_heads + h + 1) * d];
+                            dequant_i8_row(&q[off..off + d], srow, &mut out[off..off + d]);
+                        }
+                    }
+                }
+            }
+            KvView::Int4 { packed, scales } => {
+                let groups = seq_len.div_ceil(I4_GROUP);
+                assert!(d % 2 == 0, "int4 packing needs an even head_dim");
+                assert_eq!(packed.len() * 2, out.len());
+                assert_eq!(scales.len(), layers * groups * kv_heads * d);
+                let half = d / 2;
+                for l in 0..layers {
+                    for t in 0..seq_len {
+                        let g = t / I4_GROUP;
+                        for h in 0..kv_heads {
+                            let off = ((l * seq_len + t) * kv_heads + h) * d;
+                            let srow = &scales[((l * groups + g) * kv_heads + h) * d..][..d];
+                            let brow = &packed[off / 2..off / 2 + half];
+                            dequant_i4_row(brow, srow, &mut out[off..off + d]);
+                        }
+                    }
+                }
+            }
+        }
+        self.rotate_panel(out, layers, seq_len, kv_heads, delta, angles);
     }
 
     /// Fused dequantize + re-encode: the int8-tier variant of
@@ -136,25 +288,15 @@ impl RopeTable {
         delta: i64,
         out: &mut [f32],
     ) {
-        let d = self.head_dim;
-        assert_eq!(q.len(), layers * seq_len * kv_heads * d);
-        assert_eq!(scales.len(), layers * kv_heads * d);
-        assert_eq!(out.len(), q.len());
-        let half = d / 2;
-        let (cos, sin) = self.angles(delta);
-        for l in 0..layers {
-            for t in 0..seq_len {
-                for h in 0..kv_heads {
-                    let off = ((l * seq_len + t) * kv_heads + h) * d;
-                    let srow = &scales[(l * kv_heads + h) * d..(l * kv_heads + h + 1) * d];
-                    let x = &mut out[off..off + d];
-                    crate::kernels::quant::dequant_i8_row(&q[off..off + d], srow, x);
-                    if delta != 0 {
-                        rotate_span(x, half, &cos, &sin);
-                    }
-                }
-            }
-        }
+        self.reencode_into(
+            KvView::Int8 { q, scales },
+            layers,
+            seq_len,
+            kv_heads,
+            delta,
+            &mut AngleCache::new(),
+            out,
+        );
     }
 
     /// Fused unpack + dequantize + re-encode for the **packed int4**
@@ -180,30 +322,15 @@ impl RopeTable {
         delta: i64,
         out: &mut [f32],
     ) {
-        use crate::kernels::quant::{dequant_i4_row, I4_GROUP};
-        let d = self.head_dim;
-        let groups = seq_len.div_ceil(I4_GROUP);
-        assert!(d % 2 == 0, "int4 packing needs an even head_dim");
-        assert_eq!(packed.len() * 2, layers * seq_len * kv_heads * d);
-        assert_eq!(scales.len(), layers * groups * kv_heads * d);
-        assert_eq!(out.len(), packed.len() * 2);
-        let half = d / 2;
-        let (cos, sin) = self.angles(delta);
-        for l in 0..layers {
-            for t in 0..seq_len {
-                let g = t / I4_GROUP;
-                for h in 0..kv_heads {
-                    let off = ((l * seq_len + t) * kv_heads + h) * d;
-                    let srow = &scales[((l * groups + g) * kv_heads + h) * d..][..d];
-                    let brow = &packed[off / 2..off / 2 + half];
-                    let x = &mut out[off..off + d];
-                    dequant_i4_row(brow, srow, x);
-                    if delta != 0 {
-                        rotate_span(x, half, &cos, &sin);
-                    }
-                }
-            }
-        }
+        self.reencode_into(
+            KvView::Int4 { packed, scales },
+            layers,
+            seq_len,
+            kv_heads,
+            delta,
+            &mut AngleCache::new(),
+            out,
+        );
     }
 }
 
@@ -366,6 +493,65 @@ mod tests {
             );
             assert_eq!(got, want.data(), "fused int4 path differs at delta={delta}");
         }
+    }
+
+    /// The unified `KvView` path must be bitwise identical, per tier,
+    /// to the three fused variants it replaced — including when the
+    /// angle cache is warm (second call replays memoized cos/sin).
+    #[test]
+    fn unified_path_matches_legacy_variants_bitwise() {
+        use crate::kernels::quant::{QuantizedKv, QuantizedKv4};
+        use crate::tensor::Tensor;
+        let (layers, seq, heads, d) = (2usize, 37, 2, 16);
+        let table = RopeTable::new(d, 10000.0);
+        let mut rng = Rng::new(0x07F);
+        let raw = random_keys(&mut rng, layers * seq * heads * d);
+        let q8 = QuantizedKv::quantize(&Tensor::from_vec(&[layers, seq, heads, d], raw.clone()));
+        let q4 = QuantizedKv4::quantize(&Tensor::from_vec(&[layers, seq, heads, d], raw.clone()));
+        let mut ac = AngleCache::new();
+        for &delta in &[0i64, 1, 37, 37, 4096, 37] {
+            // f32 tier vs clone + reencode_block.
+            let mut want = raw.clone();
+            table.reencode_block(&mut want, layers, seq, heads, delta);
+            let mut got = vec![0.0f32; raw.len()];
+            let vf = KvView::F32(&raw);
+            table.reencode_into(vf, layers, seq, heads, delta, &mut ac, &mut got);
+            assert_eq!(got, want, "f32 unified path differs at delta={delta}");
+            // int8 tier vs the legacy fused variant.
+            let mut w8 = vec![0.0f32; raw.len()];
+            table.reencode_block_dequant(&q8.q, &q8.scales, layers, seq, heads, delta, &mut w8);
+            let mut g8 = vec![0.0f32; raw.len()];
+            let view8 = KvView::Int8 { q: &q8.q, scales: &q8.scales };
+            table.reencode_into(view8, layers, seq, heads, delta, &mut ac, &mut g8);
+            assert_eq!(g8, w8, "int8 unified path differs at delta={delta}");
+            // int4 tier vs the legacy fused variant.
+            let mut w4 = vec![0.0f32; raw.len()];
+            table.reencode_block_dequant_i4(
+                &q4.packed, &q4.scales, layers, seq, heads, delta, &mut w4,
+            );
+            let mut g4 = vec![0.0f32; raw.len()];
+            let view4 = KvView::Int4 { packed: &q4.packed, scales: &q4.scales };
+            table.reencode_into(view4, layers, seq, heads, delta, &mut ac, &mut g4);
+            assert_eq!(g4, w4, "int4 unified path differs at delta={delta}");
+        }
+    }
+
+    /// The Δ-keyed angle memo replays `angles` verbatim and stays
+    /// bounded at its FIFO capacity.
+    #[test]
+    fn angle_cache_is_bitwise_and_bounded() {
+        let table = RopeTable::new(32, 10000.0);
+        let mut cache = AngleCache::new();
+        assert!(cache.is_empty());
+        for round in 0..2 {
+            for delta in 1..=(AngleCache::CAPACITY as i64 + 9) {
+                let (cos, sin) = cache.get_or_compute(&table, delta);
+                let (wc, ws) = table.angles(delta);
+                assert_eq!(cos, wc.as_slice(), "round {round} delta {delta}");
+                assert_eq!(sin, ws.as_slice(), "round {round} delta {delta}");
+            }
+        }
+        assert_eq!(cache.len(), AngleCache::CAPACITY);
     }
 
     #[test]

@@ -325,7 +325,14 @@ fn stats_line<B: Backend>(
         ("disk_errors", Json::num(s.disk_errors as f64)),
         ("disk_entries", Json::num(s.disk_entries as f64)),
         ("disk_bytes", Json::num(s.disk_bytes as f64)),
+        ("memo_hits", Json::num(s.memo_hits as f64)),
+        ("memo_misses", Json::num(s.memo_misses as f64)),
+        ("memo_evictions", Json::num(s.memo_evictions as f64)),
+        ("memo_entries", Json::num(s.memo_entries as f64)),
+        ("memo_bytes", Json::num(s.memo_bytes as f64)),
+        ("delta_rotations", Json::num(s.delta_rotations as f64)),
         ("kv_precision", Json::str(coord.kv_precision().as_str())),
+        ("reencode_mode", Json::str(coord.reencode_mode().as_str())),
         ("simd_isa", Json::str(crate::kernels::isa_name())),
         ("threads", Json::num(crate::kernels::num_threads() as f64)),
         ("pool_workers", Json::num(ps.workers as f64)),

@@ -99,6 +99,14 @@ impl Args {
         self.get("kv-quant")
     }
 
+    /// `--reencode eager|delta` (block re-encode mode at fetch time).
+    /// Returns the raw value; parsing/validation lives in
+    /// `config::ReencodeMode::resolve`, which also applies the
+    /// `BLOCK_ATTN_REENCODE` env fallback.
+    pub fn reencode(&self) -> Option<&str> {
+        self.get("reencode")
+    }
+
     /// `--simd auto|off` (vector-kernel dispatch mode). Returns the raw
     /// value; parsing/validation lives in `kernels::simd::SimdMode::resolve`,
     /// which also applies the `BLOCK_ATTN_SIMD` env fallback.
@@ -174,6 +182,13 @@ mod tests {
         assert_eq!(parse("--kv-quant int8").kv_quant(), Some("int8"));
         assert_eq!(parse("--kv-quant=f32").kv_quant(), Some("f32"));
         assert_eq!(parse("run").kv_quant(), None);
+    }
+
+    #[test]
+    fn reencode_accessor() {
+        assert_eq!(parse("--reencode delta").reencode(), Some("delta"));
+        assert_eq!(parse("--reencode=eager").reencode(), Some("eager"));
+        assert_eq!(parse("run").reencode(), None);
     }
 
     #[test]

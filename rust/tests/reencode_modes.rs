@@ -1,0 +1,327 @@
+//! The rotation-memo and delta re-encode contracts, end to end:
+//!
+//! 1. **Bitwise memo** — a memo-warm `get_reencoded` replays the cold
+//!    fetch bitwise at every KV tier and thread budget, and survives a
+//!    disk spill → drop → promote round-trip (the memo dies with the
+//!    resident entry; the re-derived fetch must still match).
+//! 2. **Delta accuracy** — `--reencode delta` rotates memoized panels
+//!    by Δ₂−Δ₁ instead of re-deriving from the stored block; decode
+//!    logits on the workload traces stay within cosine 0.999 of eager.
+//! 3. **Memo budget** — `set_memo_budget` bounds `memo_bytes`, evicts
+//!    LRU-whole-entry, and never changes fetch results.
+//! 4. **FLOPs accounting** — Eq.-3 re-encode FLOPs are charged only
+//!    for non-zero shifts: `BlockNoReencode`/`BlockParallel` (and the
+//!    offset-0 block in `Block` mode) report none (the PR-9 bugfix).
+
+use block_attn::config::{KvPrecision, ModelConfig, ReencodeMode};
+use block_attn::coordinator::{AttentionMode, Coordinator, Request};
+use block_attn::flops::FlopsModel;
+use block_attn::kernels::set_threads;
+use block_attn::kvcache::disk::DiskStore;
+use block_attn::kvcache::{block_key, BlockKvCache};
+use block_attn::rope::RopeTable;
+use block_attn::runtime::NativeBackend;
+use block_attn::tokenizer::ByteTokenizer;
+use block_attn::util::rng::Rng;
+use block_attn::workload::traces::RagTrace;
+use block_attn::Backend;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// The thread-sweep test flips the process-global kernel thread
+/// budget; serialize against any sibling doing the same.
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn micro_config() -> ModelConfig {
+    ModelConfig {
+        name: "micro".into(),
+        vocab: 24,
+        d_model: 16,
+        layers: 2,
+        heads: 2,
+        kv_heads: 1,
+        head_dim: 8,
+        d_ff: 32,
+        rope_theta: 10000.0,
+        norm_eps: 1e-5,
+        max_len: 256,
+    }
+}
+
+/// Fresh per-test scratch store directory (wiped on entry).
+fn store_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("block-attn-test-reencode-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut ab, mut aa, mut bb) = (0.0f64, 0.0f64, 0.0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        ab += x as f64 * y as f64;
+        aa += x as f64 * x as f64;
+        bb += y as f64 * y as f64;
+    }
+    if aa == 0.0 || bb == 0.0 {
+        return 1.0;
+    }
+    ab / (aa.sqrt() * bb.sqrt())
+}
+
+/// Contract 1: across every KV tier and thread budget, a memo-warm
+/// fetch is bitwise identical to the cold fetch it replays; spilling to
+/// disk, dropping residency (which kills the memo), and promoting back
+/// re-derives the same bytes.
+#[test]
+fn memo_warm_fetch_is_bitwise_across_tiers_threads_and_disk() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = block_attn::kernels::num_threads();
+    const FP: u64 = 0x9E;
+    let cfg = micro_config();
+    let mut rng = Rng::new(0x5EED);
+    let blocks: Vec<Vec<i32>> = (0..4)
+        .map(|i| (0..(6 + 3 * i)).map(|_| rng.below(24) as i32).collect())
+        .collect();
+    let engine = NativeBackend::new(cfg.clone(), 0xBEE);
+
+    for tier in [KvPrecision::F32, KvPrecision::Int8, KvPrecision::Int4] {
+        let mut per_thread = Vec::new();
+        for &threads in &[1usize, 3, 8] {
+            set_threads(threads);
+            let dir = store_dir(&format!("sweep-{tier:?}-{threads}"));
+            let rope = RopeTable::new(cfg.head_dim, cfg.rope_theta);
+            let mut cache = BlockKvCache::with_precision(rope, 0, tier);
+            assert_eq!(cache.reencode_mode(), ReencodeMode::Eager);
+            cache.attach_store(DiskStore::open(&dir, FP, 0).expect("open store"));
+            for b in &blocks {
+                let (k, v) = engine.prefill_block(b).expect("prefill");
+                let key = block_key(b);
+                cache.insert_pinned(key, k, v);
+                cache.unpin(key);
+            }
+
+            let mut delta = 0usize;
+            let mut fetched = Vec::new();
+            for b in &blocks {
+                let key = block_key(b);
+                let hits0 = cache.stats().memo_hits;
+                let cold = cache.get_reencoded(key, delta).expect("resident block");
+                let warm = cache.get_reencoded(key, delta).expect("resident block");
+                assert_eq!(cache.stats().memo_hits, hits0 + 1, "repeat fetch not a hit");
+                assert_eq!(warm.k, cold.k, "{tier:?}/{threads}t: memo-warm K diverged");
+                assert_eq!(warm.v, cold.v, "{tier:?}/{threads}t: memo-warm V diverged");
+                assert_eq!(warm.len, cold.len);
+                fetched.push((cold.k, cold.v, cold.len));
+                delta += b.len();
+            }
+
+            // Round-trip: the memo dies with residency; the promoted
+            // block must re-derive every panel bitwise.
+            assert!(cache.spill_all() > 0, "nothing spilled");
+            assert!(cache.drop_resident() > 0, "nothing resident to drop");
+            assert_eq!(cache.stats().memo_entries, 0, "memo outlived its entries");
+            let mut delta = 0usize;
+            for (b, (want_k, want_v, want_len)) in blocks.iter().zip(&fetched) {
+                let key = block_key(b);
+                assert!(cache.lookup_pin(key), "{tier:?}/{threads}t: lost block on disk");
+                let got = cache.get_reencoded(key, delta).expect("promoted block");
+                assert_eq!(&got.k, want_k, "{tier:?}/{threads}t: disk K diverged");
+                assert_eq!(&got.v, want_v, "{tier:?}/{threads}t: disk V diverged");
+                assert_eq!(got.len, *want_len);
+                cache.unpin(key);
+                delta += b.len();
+            }
+            let s = cache.stats();
+            assert!(s.memo_hits > 0 && s.memo_misses > 0, "memo never engaged");
+            assert_eq!(s.disk_errors, 0);
+            per_thread.push(fetched);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        assert!(
+            per_thread.windows(2).all(|w| w[0] == w[1]),
+            "{tier:?}: re-encoded fetches depend on the thread count"
+        );
+    }
+    set_threads(prev);
+}
+
+/// Contract 2: `--reencode delta` serves decode logits within cosine
+/// 0.999 of eager on the workload traces, and actually takes the
+/// delta-rotation path (eager must never).
+#[test]
+fn delta_mode_decode_logits_cosine_against_eager() {
+    let tok = ByteTokenizer::new();
+    let mut rng = Rng::new(0xACC);
+    let trace = RagTrace::build(&mut rng, 24);
+    let coordinator = |mode: ReencodeMode| -> Coordinator<NativeBackend> {
+        let engine = NativeBackend::new(ModelConfig::builtin("tiny").unwrap(), 0xB10C);
+        let mut c = Coordinator::with_kv_precision(engine, 64 << 20, KvPrecision::F32);
+        // Explicit, so the test means the same thing under the
+        // `BLOCK_ATTN_REENCODE=delta` CI leg.
+        c.set_reencode_mode(mode);
+        c
+    };
+    let mut eager = coordinator(ReencodeMode::Eager);
+    let mut delta = coordinator(ReencodeMode::Delta);
+    assert_eq!(eager.reencode_mode(), ReencodeMode::Eager);
+    assert_eq!(delta.reencode_mode(), ReencodeMode::Delta);
+
+    let mut worst = 1.0f64;
+    for _ in 0..5 {
+        let sample = trace.request(&mut rng, 4, 1.1);
+        let sp = sample.segment(&tok);
+        let mut forced = tok.encode(&sample.response);
+        forced.truncate(6);
+        let a = eager
+            .logits_trace(&sp.blocks, &sp.query, &forced, AttentionMode::Block)
+            .expect("eager trace");
+        let b = delta
+            .logits_trace(&sp.blocks, &sp.query, &forced, AttentionMode::Block)
+            .expect("delta trace");
+        assert_eq!(a.len(), b.len());
+        for (step, (la, lb)) in a.iter().zip(&b).enumerate() {
+            let c = cosine(la, lb);
+            worst = worst.min(c);
+            assert!(c >= 0.999, "step {step}: cosine {c} < 0.999 (delta drift too large)");
+        }
+    }
+    // Force offset reuse deterministically: serve one more sample,
+    // then the same passages in reverse order — every block refetches
+    // at a new Δ, so delta mode must take the Δ₂−Δ₁ rotation path.
+    let sample = trace.request(&mut rng, 4, 1.1);
+    let sp = sample.segment(&tok);
+    let mut rev = sp.blocks.clone();
+    rev.reverse();
+    let mut forced = tok.encode(&sample.response);
+    forced.truncate(4);
+    for blocks in [&sp.blocks, &rev] {
+        let a = eager
+            .logits_trace(blocks, &sp.query, &forced, AttentionMode::Block)
+            .expect("eager trace");
+        let b = delta
+            .logits_trace(blocks, &sp.query, &forced, AttentionMode::Block)
+            .expect("delta trace");
+        for (la, lb) in a.iter().zip(&b) {
+            worst = worst.min(cosine(la, lb));
+        }
+    }
+    assert!(worst >= 0.999, "worst cosine {worst} < 0.999");
+    // The modes must actually differ in mechanism, not just agree.
+    assert_eq!(eager.cache_stats().delta_rotations, 0, "eager took the delta path");
+    assert!(
+        delta.cache_stats().delta_rotations > 0,
+        "delta mode never delta-rotated despite forced offset reuse"
+    );
+}
+
+/// Contract 3: the memo byte budget is respected (LRU whole-entry
+/// eviction, ties on content key) and budget pressure never changes
+/// what a fetch returns.
+#[test]
+fn memo_budget_is_respected_and_bitwise_invisible() {
+    let cfg = micro_config();
+    let engine = NativeBackend::new(cfg.clone(), 0xBEE);
+    let mut rng = Rng::new(0xB06);
+    let blocks: Vec<Vec<i32>> = (0..6)
+        .map(|_| (0..12).map(|_| rng.below(24) as i32).collect())
+        .collect();
+    let mk_cache = || -> BlockKvCache {
+        let rope = RopeTable::new(cfg.head_dim, cfg.rope_theta);
+        let mut cache = BlockKvCache::with_precision(rope, 0, KvPrecision::Int8);
+        for b in &blocks {
+            let (k, v) = engine.prefill_block(b).expect("prefill");
+            let key = block_key(b);
+            cache.insert_pinned(key, k, v);
+            cache.unpin(key);
+        }
+        cache
+    };
+    let mut unbounded = mk_cache();
+    let mut budgeted = mk_cache();
+    // Room for roughly two memo entries: one dense f32 K panel + V
+    // per block, 2 layers x 12 tokens x 1 head x 8 dims x 4 bytes x 2.
+    let budget = 2 * (2 * 2 * 12 * 8 * 4);
+    budgeted.set_memo_budget(budget);
+
+    for round in 0..3 {
+        let mut delta = 0usize;
+        for b in &blocks {
+            let key = block_key(b);
+            let want = unbounded.get_reencoded(key, delta).expect("unbounded fetch");
+            let got = budgeted.get_reencoded(key, delta).expect("budgeted fetch");
+            assert_eq!(got.k, want.k, "round {round}: budget pressure changed K");
+            assert_eq!(got.v, want.v, "round {round}: budget pressure changed V");
+            let s = budgeted.stats();
+            assert!(
+                s.memo_bytes <= budget,
+                "round {round}: memo_bytes {} over budget {budget}",
+                s.memo_bytes
+            );
+            delta += b.len();
+        }
+    }
+    let s = budgeted.stats();
+    assert!(s.memo_evictions > 0, "budget never forced an eviction");
+    assert!(s.memo_entries > 0 && s.memo_bytes > 0, "memo fully starved");
+    let su = unbounded.stats();
+    assert_eq!(su.memo_evictions, 0, "unbounded cache evicted memo entries");
+    assert!(su.memo_hits > s.memo_hits, "budgeted cache should hit less often");
+}
+
+/// Contract 4 (the FLOPs bugfix): on a fully warm cache, `Block` mode
+/// charges exactly one Eq.-3 re-encode per **non-zero-offset** block on
+/// top of the final prefill, and the no-reencode modes charge none —
+/// they fetch everything at Δ = 0.
+#[test]
+fn reencode_flops_charged_only_for_nonzero_shifts() {
+    let cfg = micro_config();
+    let fm = FlopsModel::from_config(&cfg);
+    let engine = NativeBackend::new(cfg, 0xD15C);
+    let mut coord = Coordinator::with_kv_precision(engine, 64 << 20, KvPrecision::F32);
+    let mut rng = Rng::new(0xF10);
+    let mut block = |len: usize| -> Vec<i32> {
+        (0..len).map(|_| rng.below(24) as i32).collect()
+    };
+    let blocks = vec![block(10), block(7), block(12)];
+    let query = block(6);
+    let req = |mode: AttentionMode| Request {
+        id: 0,
+        blocks: blocks.clone(),
+        query: query.clone(),
+        max_new_tokens: 2,
+        mode,
+    };
+
+    // Cold pass populates the cache; every later pass is fully warm.
+    coord.process(&req(AttentionMode::Block)).expect("cold pass");
+    let warm = |coord: &mut Coordinator<NativeBackend>, mode: AttentionMode| -> f64 {
+        let resp = coord.process(&req(mode)).expect("warm pass");
+        assert_eq!(resp.cached_blocks, resp.total_blocks, "{mode:?}: warm pass missed");
+        assert_eq!(resp.block_prefill_s, 0.0, "{mode:?}: warm pass recomputed KV");
+        resp.flops_tft
+    };
+    let f_block = warm(&mut coord, AttentionMode::Block);
+    let f_nore = warm(&mut coord, AttentionMode::BlockNoReencode);
+    let f_par = warm(&mut coord, AttentionMode::BlockParallel);
+
+    let ctx: usize = blocks.iter().map(|b| b.len()).sum();
+    let f_final = fm.prefill_final(query.len(), ctx);
+    // Block 0 sits at offset 0: fetched at Δ = 0, no Eq.-3 work.
+    let f_shift: f64 = blocks[1..].iter().map(|b| fm.reencode(b.len())).sum();
+    let close = |got: f64, want: f64| (got - want).abs() <= 1e-9 * want.max(1.0);
+    assert!(
+        close(f_nore, f_final),
+        "BlockNoReencode warm FLOPs {f_nore} != final-prefill-only {f_final} \
+         (Δ=0 fetches are being charged for re-encode)"
+    );
+    assert_eq!(f_nore, f_par, "the two Δ=0 modes must report identical FLOPs");
+    assert!(
+        close(f_block, f_final + f_shift),
+        "Block warm FLOPs {f_block} != {} (final {f_final} + shifted-block \
+         re-encode {f_shift})",
+        f_final + f_shift
+    );
+    assert!(f_block > f_nore, "re-encode work vanished from Block mode");
+}
