@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
         let sp = split_oversized_blocks(
             segment_gamecore(&tok, &sim.frame(), "choose the next action ."),
             max_block,
-        );
+        )?;
         let repetition = repetition_ratio(&prev_blocks, &sp.blocks);
         prev_blocks = sp.blocks.clone();
 

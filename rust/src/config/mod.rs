@@ -167,6 +167,100 @@ impl ReencodeMode {
     }
 }
 
+/// How the serving front-end turns a raw request into context blocks
+/// (the `--segment` knob; policy logic in `coordinator::segmenter`).
+///
+/// * `Passages` (default) — requests must arrive pre-segmented as a
+///   `passages` array (the RAG shape every prior PR served); raw
+///   `prompt`/`demos`/`turns`/`state` fields are rejected loudly.
+/// * `Text` — a raw `prompt` string is split on the paper's §3.1
+///   division labels (`segment_text`).
+/// * `Icl` — a `demos` array becomes one cacheable exemplar block per
+///   demonstration (`segment_icl`).
+/// * `Chat` — an optional `system` string plus a `turns` array become
+///   one block per completed exchange, so turn *N+1* re-serves turn
+///   *N*'s blocks from cache.
+/// * `Gamecore` — a `state` JSON object is split per field
+///   (Appendix-A Game-AI shape, `segment_gamecore`).
+/// * `Auto` — dispatch on which raw field the request carries.
+///
+/// Pre-segmented `passages` requests are served identically under
+/// *every* policy; the policy only governs raw-field segmentation.
+///
+/// Resolution order: `--segment` > `$BLOCK_ATTN_SEGMENT` > `Passages`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SegmentPolicy {
+    #[default]
+    Passages,
+    Text,
+    Icl,
+    Chat,
+    Gamecore,
+    Auto,
+}
+
+impl SegmentPolicy {
+    pub fn parse(s: &str) -> Result<SegmentPolicy> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "passages" | "rag" => SegmentPolicy::Passages,
+            "text" => SegmentPolicy::Text,
+            "icl" | "demos" => SegmentPolicy::Icl,
+            "chat" | "turns" => SegmentPolicy::Chat,
+            "gamecore" | "game" => SegmentPolicy::Gamecore,
+            "auto" => SegmentPolicy::Auto,
+            other => bail!(
+                "unknown segment policy '{other}' (expected \
+                 'passages', 'text', 'icl', 'chat', 'gamecore' or 'auto')"
+            ),
+        })
+    }
+
+    /// `$BLOCK_ATTN_SEGMENT`, defaulting to `Passages` when unset or
+    /// empty. An unparsable value **panics**, like
+    /// [`KvPrecision::from_env`]: silently falling back to
+    /// passages-only parsing when the operator asked for (or typo'd)
+    /// automatic segmentation would hide the misconfiguration.
+    pub fn from_env() -> SegmentPolicy {
+        match Self::parse_env_value(std::env::var("BLOCK_ATTN_SEGMENT").ok().as_deref()) {
+            Ok(p) => p,
+            Err(e) => panic!("invalid $BLOCK_ATTN_SEGMENT: {e}"),
+        }
+    }
+
+    /// The pure resolution behind [`Self::from_env`]: `None` or an
+    /// empty/whitespace value defaults to `Passages`, anything else
+    /// must parse. Unit-testable without touching the process
+    /// environment.
+    pub fn parse_env_value(v: Option<&str>) -> Result<SegmentPolicy> {
+        match v {
+            Some(s) if !s.trim().is_empty() => SegmentPolicy::parse(s),
+            _ => Ok(SegmentPolicy::Passages),
+        }
+    }
+
+    /// `--segment` from parsed CLI options, falling back to the
+    /// environment then `Passages`. Errors on an unparsable flag value.
+    pub fn resolve(args: &crate::util::cli::Args) -> Result<SegmentPolicy> {
+        match args.segment() {
+            Some(v) => SegmentPolicy::parse(v),
+            None => {
+                SegmentPolicy::parse_env_value(std::env::var("BLOCK_ATTN_SEGMENT").ok().as_deref())
+            }
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SegmentPolicy::Passages => "passages",
+            SegmentPolicy::Text => "text",
+            SegmentPolicy::Icl => "icl",
+            SegmentPolicy::Chat => "chat",
+            SegmentPolicy::Gamecore => "gamecore",
+            SegmentPolicy::Auto => "auto",
+        }
+    }
+}
+
 /// Where the persistent block KV store lives and how much disk it may
 /// use (the tier under `kvcache::disk::DiskStore`; file format in
 /// `docs/kvstore-format.md`).
@@ -653,6 +747,50 @@ mod tests {
         assert_eq!(ReencodeMode::parse_env_value(Some("delta")).unwrap(), ReencodeMode::Delta);
         let err = ReencodeMode::parse_env_value(Some("detla")).unwrap_err();
         assert!(format!("{err}").contains("detla"), "error must name the bad value");
+    }
+
+    #[test]
+    fn segment_policy_parses_and_defaults() {
+        assert_eq!(SegmentPolicy::parse("passages").unwrap(), SegmentPolicy::Passages);
+        assert_eq!(SegmentPolicy::parse("rag").unwrap(), SegmentPolicy::Passages);
+        assert_eq!(SegmentPolicy::parse(" TEXT ").unwrap(), SegmentPolicy::Text);
+        assert_eq!(SegmentPolicy::parse("icl").unwrap(), SegmentPolicy::Icl);
+        assert_eq!(SegmentPolicy::parse("demos").unwrap(), SegmentPolicy::Icl);
+        assert_eq!(SegmentPolicy::parse("chat").unwrap(), SegmentPolicy::Chat);
+        assert_eq!(SegmentPolicy::parse("turns").unwrap(), SegmentPolicy::Chat);
+        assert_eq!(SegmentPolicy::parse("gamecore").unwrap(), SegmentPolicy::Gamecore);
+        assert_eq!(SegmentPolicy::parse("game").unwrap(), SegmentPolicy::Gamecore);
+        assert_eq!(SegmentPolicy::parse("auto").unwrap(), SegmentPolicy::Auto);
+        assert!(SegmentPolicy::parse("sentences").is_err());
+        assert_eq!(SegmentPolicy::default(), SegmentPolicy::Passages);
+        assert_eq!(SegmentPolicy::Passages.as_str(), "passages");
+        assert_eq!(SegmentPolicy::Auto.as_str(), "auto");
+        // Flag beats environment; absent flag falls through to env/Passages.
+        let args = crate::util::cli::Args::parse_from(vec![
+            "--segment".to_string(),
+            "gamecore".to_string(),
+        ]);
+        assert_eq!(SegmentPolicy::resolve(&args).unwrap(), SegmentPolicy::Gamecore);
+        let bad = crate::util::cli::Args::parse_from(vec![
+            "--segment".to_string(),
+            "sentences".to_string(),
+        ]);
+        assert!(SegmentPolicy::resolve(&bad).is_err());
+    }
+
+    /// The two `$BLOCK_ATTN_SEGMENT` paths, on the pure resolver so the
+    /// test never mutates the process environment: unset/empty stays
+    /// the pre-segmented `Passages` default, anything unparsable is an
+    /// error (which [`SegmentPolicy::from_env`] escalates to a startup
+    /// panic).
+    #[test]
+    fn segment_policy_env_value_defaults_and_fails_loudly() {
+        assert_eq!(SegmentPolicy::parse_env_value(None).unwrap(), SegmentPolicy::Passages);
+        assert_eq!(SegmentPolicy::parse_env_value(Some("")).unwrap(), SegmentPolicy::Passages);
+        assert_eq!(SegmentPolicy::parse_env_value(Some("  ")).unwrap(), SegmentPolicy::Passages);
+        assert_eq!(SegmentPolicy::parse_env_value(Some("auto")).unwrap(), SegmentPolicy::Auto);
+        let err = SegmentPolicy::parse_env_value(Some("setgment")).unwrap_err();
+        assert!(format!("{err}").contains("setgment"), "error must name the bad value");
     }
 
     /// The persistent-store knobs, on the pure value resolver so the

@@ -30,13 +30,14 @@ pub mod scheduler;
 pub mod segmenter;
 pub mod session;
 
-use crate::config::{KvPrecision, ReencodeMode};
+use crate::config::{KvPrecision, ReencodeMode, SegmentPolicy};
 use crate::kvcache::{block_key, BlockKvCache};
 use crate::rope::RopeTable;
 use crate::runtime::{Backend, DecodeCtx};
 use crate::tensor::{argmax, TensorF};
 use crate::tokenizer::EOS;
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
+use segmenter::{coalesce_small_blocks, split_oversized_blocks, SegmentedPrompt};
 use metrics::Metrics;
 use scheduler::{PrefillPlan, Scheduler};
 use std::time::Instant;
@@ -68,6 +69,15 @@ impl AttentionMode {
         })
     }
 }
+
+/// Context blocks shorter than this many tokens are merged into their
+/// predecessor before planning (`segmenter::coalesce_small_blocks`):
+/// tiny blocks waste cache entries and bucket padding. Applied
+/// uniformly to every block-mode request — pre-segmented and
+/// auto-segmented prompts normalize to the same shapes, which is what
+/// makes a raw-`prompt` request bitwise identical to its equivalent
+/// `passages` request even when composition triggers.
+pub const MIN_BLOCK_TOKENS: usize = 4;
 
 /// A generation request: pre-segmented context blocks plus the final
 /// (query) block.
@@ -118,6 +128,10 @@ pub struct Coordinator<B: Backend> {
     flops: crate::flops::FlopsModel,
     /// Raw logits of the most recent prefill (teacher-forced scoring).
     last_prefill_logits: Option<Vec<f32>>,
+    /// How the serving front-end segments raw prompts into blocks
+    /// (surfaced in server `stats`; the segmentation itself runs in
+    /// `server::parse_request` before requests reach this struct).
+    segment_policy: SegmentPolicy,
 }
 
 impl<B: Backend> Coordinator<B> {
@@ -150,7 +164,20 @@ impl<B: Backend> Coordinator<B> {
             metrics: Metrics::new(),
             flops,
             last_prefill_logits: None,
+            segment_policy: SegmentPolicy::from_env(),
         }
+    }
+
+    /// Active request-segmentation policy (the `--segment` plumbing;
+    /// see [`SegmentPolicy`]). Defaults from `$BLOCK_ATTN_SEGMENT`.
+    pub fn segment_policy(&self) -> SegmentPolicy {
+        self.segment_policy
+    }
+
+    /// Pin the request-segmentation policy explicitly (the `serve` CLI
+    /// resolves flag > env > default via [`SegmentPolicy::resolve`]).
+    pub fn set_segment_policy(&mut self, policy: SegmentPolicy) {
+        self.segment_policy = policy;
     }
 
     pub fn engine(&self) -> &B {
@@ -348,15 +375,39 @@ impl<B: Backend> Coordinator<B> {
         })
     }
 
+    /// Normalize a request's block shapes so they always fit the
+    /// engine's prefill buckets: merge sub-[`MIN_BLOCK_TOKENS`] blocks
+    /// into their predecessor, chunk blocks past
+    /// [`Backend::max_block_tokens`], and reject (loudly, not at some
+    /// deeper buffer write) a query block past
+    /// [`Backend::final_q_capacity`] — the query attends across the
+    /// whole context in one final prefill and cannot be split. Pure in
+    /// the token stream: the concatenation of blocks + query is
+    /// unchanged, so `prompt_tokens` stays honest.
+    fn normalized_blocks(&self, req: &Request) -> Result<Vec<Vec<i32>>> {
+        let max_block = self.engine.max_block_tokens()?;
+        let sp = SegmentedPrompt { blocks: req.blocks.clone(), query: req.query.clone() };
+        let sp = coalesce_small_blocks(sp, MIN_BLOCK_TOKENS.min(max_block));
+        let sp = split_oversized_blocks(sp, max_block)?;
+        let q_cap = self.engine.final_q_capacity()?;
+        ensure!(
+            req.query.len() <= q_cap,
+            "query block of {} tokens exceeds the final-prefill capacity ({q_cap})",
+            req.query.len()
+        );
+        Ok(sp.blocks)
+    }
+
     fn prefill_block_mode(&mut self, req: &Request) -> Result<PrefillOutcome> {
-        let plan = self.scheduler.plan(&req.blocks, &mut self.cache);
+        let blocks = self.normalized_blocks(req)?;
+        let plan = self.scheduler.plan(&blocks, &mut self.cache);
         // Planning pinned every cached block; the body below pins each
         // miss as it lands. Tracking the acquired pins here and
         // releasing them on *both* exits keeps error paths (over-length
         // prompts, engine failures) from leaving entries unevictable.
         let mut pins: Vec<u128> =
             plan.items.iter().filter(|it| it.cached).map(|it| it.key).collect();
-        let out = self.prefill_block_mode_pinned(req, &plan, &mut pins);
+        let out = self.prefill_block_mode_pinned(req, &blocks, &plan, &mut pins);
         for key in pins {
             self.cache.unpin(key);
         }
@@ -369,6 +420,7 @@ impl<B: Backend> Coordinator<B> {
     fn prefill_block_mode_pinned(
         &mut self,
         req: &Request,
+        blocks: &[Vec<i32>],
         plan: &PrefillPlan,
         pins: &mut Vec<u128>,
     ) -> Result<PrefillOutcome> {
@@ -388,7 +440,7 @@ impl<B: Backend> Coordinator<B> {
         for (i, item) in plan.items.iter().enumerate() {
             if !item.cached && !miss_idx.iter().any(|&j| plan.items[j].key == item.key) {
                 miss_idx.push(i);
-                miss_toks.push(&req.blocks[i]);
+                miss_toks.push(&blocks[i]);
             }
         }
         let block_prefill_s = if miss_idx.is_empty() {
@@ -398,7 +450,7 @@ impl<B: Backend> Coordinator<B> {
             for (&i, (k, v)) in miss_idx.iter().zip(kvs) {
                 self.cache.insert_pinned(plan.items[i].key, k, v);
                 pins.push(plan.items[i].key);
-                flops += self.flops.prefill_full(req.blocks[i].len());
+                flops += self.flops.prefill_full(blocks[i].len());
             }
             t_blocks.elapsed().as_secs_f64()
         };

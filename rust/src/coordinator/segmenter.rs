@@ -6,8 +6,10 @@
 //! (`\n\n`, `---`, `===`, `\n\t\t`) for free-form text. The final block —
 //! the user query — is the only one allowed to attend across blocks.
 
+use crate::config::SegmentPolicy;
 use crate::tokenizer::ByteTokenizer;
 use crate::util::json::Json;
+use anyhow::{bail, ensure, Result};
 
 /// A segmented prompt: context blocks + the final (query) block.
 #[derive(Debug, Clone, PartialEq)]
@@ -52,9 +54,11 @@ pub fn segment_icl(tok: &ByteTokenizer, demos: &[String], test_input: &str) -> S
     }
 }
 
-/// Segment free-form text on the paper's division labels. The text after
-/// the last division becomes the query block.
-pub fn segment_text(tok: &ByteTokenizer, text: &str) -> SegmentedPrompt {
+/// Split free-form text on the paper's division labels, each label kept
+/// with the part it terminates — so concatenating the parts reproduces
+/// the input byte-for-byte. Empty parts (adjacent labels, label at EOF)
+/// are dropped; an empty input yields no parts.
+pub fn split_text_parts(text: &str) -> Vec<String> {
     let mut parts: Vec<String> = vec![String::new()];
     let bytes = text.as_bytes();
     let mut i = 0;
@@ -79,6 +83,13 @@ pub fn segment_text(tok: &ByteTokenizer, text: &str) -> SegmentedPrompt {
         i += ch_len;
     }
     parts.retain(|p| !p.is_empty());
+    parts
+}
+
+/// Segment free-form text on the paper's division labels. The text after
+/// the last division becomes the query block.
+pub fn segment_text(tok: &ByteTokenizer, text: &str) -> SegmentedPrompt {
+    let mut parts = split_text_parts(text);
     let query = parts.pop().unwrap_or_default();
     SegmentedPrompt {
         blocks: parts.iter().map(|p| tok.encode(p)).collect(),
@@ -95,27 +106,137 @@ fn utf8_len(b: u8) -> usize {
     }
 }
 
-/// Segment a gamecore JSON state (paper Appendix A): each top-level (or
-/// second-level, for objects) field becomes one block, serialized
+/// The per-field block texts of a gamecore JSON state (paper
+/// Appendix A): one text per top-level field, with non-empty object
+/// fields expanded one level (`"chips.p1={…}"`), serialized
 /// deterministically so identical sub-states hash to identical blocks
-/// across frames. `task` is the instruction/query block.
-pub fn segment_gamecore(tok: &ByteTokenizer, state: &Json, task: &str) -> SegmentedPrompt {
-    let mut blocks = Vec::new();
+/// across frames. A non-object state collapses to a single text.
+pub fn gamecore_field_texts(state: &Json) -> Vec<String> {
+    let mut texts = Vec::new();
     if let Some(obj) = state.as_obj() {
         for (key, val) in obj {
             match val {
                 Json::Obj(inner) if !inner.is_empty() => {
                     for (k2, v2) in inner {
-                        blocks.push(tok.encode(&format!("{key}.{k2}={v2}")));
+                        texts.push(format!("{key}.{k2}={v2}"));
                     }
                 }
-                other => blocks.push(tok.encode(&format!("{key}={other}"))),
+                other => texts.push(format!("{key}={other}")),
             }
         }
     } else {
-        blocks.push(tok.encode(&state.to_string()));
+        texts.push(state.to_string());
     }
-    SegmentedPrompt { blocks, query: tok.encode(task) }
+    texts
+}
+
+/// Segment a gamecore JSON state (paper Appendix A): each top-level (or
+/// second-level, for objects) field becomes one block, serialized
+/// deterministically so identical sub-states hash to identical blocks
+/// across frames. `task` is the instruction/query block.
+pub fn segment_gamecore(tok: &ByteTokenizer, state: &Json, task: &str) -> SegmentedPrompt {
+    SegmentedPrompt {
+        blocks: gamecore_field_texts(state).iter().map(|t| tok.encode(t)).collect(),
+        query: tok.encode(task),
+    }
+}
+
+/// Raw (unsegmented) prompt material a wire request may carry instead
+/// of a pre-cut `passages` array: which fields are present decides —
+/// together with the serving [`SegmentPolicy`] — how context blocks are
+/// drawn. Built by `server::parse_request` from the request JSON.
+#[derive(Debug, Default, Clone)]
+pub struct RawPrompt {
+    /// Free-form text, split on [`DIVISION_LABELS`] (`text` policy).
+    pub prompt: Option<String>,
+    /// System prompt, the leading block of a chat prompt (`chat`).
+    pub system: Option<String>,
+    /// Few-shot demonstrations, one exemplar block each (`icl`).
+    pub demos: Option<Vec<String>>,
+    /// Completed dialogue exchanges, one history block each (`chat`).
+    pub turns: Option<Vec<String>>,
+    /// Game state object, segmented per field (`gamecore`).
+    pub state: Option<Json>,
+}
+
+impl RawPrompt {
+    /// True when no raw prompt material is present (the request is
+    /// pre-segmented or query-only).
+    pub fn is_empty(&self) -> bool {
+        self.prompt.is_none()
+            && self.system.is_none()
+            && self.demos.is_none()
+            && self.turns.is_none()
+            && self.state.is_none()
+    }
+}
+
+/// Apply a [`SegmentPolicy`] to raw prompt material, yielding the
+/// context-block **texts** in prompt order — `Ok(None)` when the
+/// request carries no raw fields (it is pre-segmented / query-only and
+/// every policy serves it unchanged). The texts then go through the
+/// same tokenize step as a `passages` array (encode + `SEP` per block),
+/// so a raw request and its equivalent pre-segmented request produce
+/// byte-identical token streams — and therefore bitwise-identical
+/// output.
+///
+/// Failures are loud: raw fields under the `passages` policy, a field
+/// that does not match the policy, or conflicting raw fields all name
+/// the offending field and the policy that rejected it.
+pub fn policy_block_texts(policy: SegmentPolicy, raw: &RawPrompt) -> Result<Option<Vec<String>>> {
+    // Which segmentation the present fields select. `system` and
+    // `turns` are one group: a chat prompt may carry either or both.
+    let mut groups: Vec<(&str, SegmentPolicy)> = Vec::new();
+    if raw.prompt.is_some() {
+        groups.push(("prompt", SegmentPolicy::Text));
+    }
+    if raw.demos.is_some() {
+        groups.push(("demos", SegmentPolicy::Icl));
+    }
+    if raw.turns.is_some() || raw.system.is_some() {
+        let name = if raw.turns.is_some() { "turns" } else { "system" };
+        groups.push((name, SegmentPolicy::Chat));
+    }
+    if raw.state.is_some() {
+        groups.push(("state", SegmentPolicy::Gamecore));
+    }
+    let (field, implied) = match groups.as_slice() {
+        [] => return Ok(None),
+        [one] => *one,
+        many => {
+            let names: Vec<&str> = many.iter().map(|(n, _)| *n).collect();
+            bail!(
+                "conflicting raw prompt fields {:?}: a request may carry \
+                 at most one of 'prompt', 'demos', 'turns'/'system', 'state'",
+                names
+            );
+        }
+    };
+    let effective = if policy == SegmentPolicy::Auto { implied } else { policy };
+    ensure!(
+        effective == implied,
+        "segment policy '{}' cannot serve raw field '{field}' \
+         (use --segment {} or auto)",
+        policy.as_str(),
+        implied.as_str()
+    );
+    Ok(Some(match effective {
+        SegmentPolicy::Text => split_text_parts(raw.prompt.as_deref().unwrap()),
+        SegmentPolicy::Icl => raw.demos.clone().unwrap(),
+        SegmentPolicy::Chat => {
+            let mut texts: Vec<String> = Vec::new();
+            if let Some(s) = &raw.system {
+                texts.push(s.clone());
+            }
+            if let Some(turns) = &raw.turns {
+                texts.extend(turns.iter().cloned());
+            }
+            texts
+        }
+        SegmentPolicy::Gamecore => gamecore_field_texts(raw.state.as_ref().unwrap()),
+        // `implied` is never Passages or Auto; `effective == implied`.
+        SegmentPolicy::Passages | SegmentPolicy::Auto => unreachable!(),
+    }))
 }
 
 /// Merge blocks shorter than `min_len` into their predecessor — tiny
@@ -134,9 +255,21 @@ pub fn coalesce_small_blocks(mut sp: SegmentedPrompt, min_len: usize) -> Segment
     sp
 }
 
-/// Split blocks longer than `max_len` into `max_len`-sized chunks so
-/// every block fits the prefill_block bucket capacity.
-pub fn split_oversized_blocks(mut sp: SegmentedPrompt, max_len: usize) -> SegmentedPrompt {
+/// Split context blocks longer than `max_len` into `max_len`-sized
+/// chunks so every block fits the prefill_block bucket capacity. The
+/// **query** block cannot be split — its tokens must attend to the
+/// whole context in one final prefill, so chunking it would change the
+/// attention semantics — and is instead rejected loudly when it
+/// exceeds `max_len` (it would otherwise overflow the final-prefill
+/// bucket downstream with a much less actionable error).
+pub fn split_oversized_blocks(mut sp: SegmentedPrompt, max_len: usize) -> Result<SegmentedPrompt> {
+    ensure!(max_len > 0, "split_oversized_blocks needs max_len > 0");
+    ensure!(
+        sp.query.len() <= max_len,
+        "query block of {} tokens exceeds the prefill bucket capacity \
+         ({max_len}); the query cannot be split — shorten it",
+        sp.query.len()
+    );
     let mut out = Vec::with_capacity(sp.blocks.len());
     for b in sp.blocks.drain(..) {
         if b.len() <= max_len {
@@ -148,7 +281,7 @@ pub fn split_oversized_blocks(mut sp: SegmentedPrompt, max_len: usize) -> Segmen
         }
     }
     sp.blocks = out;
-    sp
+    Ok(sp)
 }
 
 #[cfg(test)]
@@ -239,9 +372,86 @@ mod tests {
     #[test]
     fn split_caps_block_len() {
         let sp = SegmentedPrompt { blocks: vec![vec![1; 300]], query: vec![] };
-        let out = split_oversized_blocks(sp, 128);
+        let out = split_oversized_blocks(sp, 128).unwrap();
         assert_eq!(out.blocks.len(), 3);
         assert!(out.blocks.iter().all(|b| b.len() <= 128));
         assert_eq!(out.blocks.iter().map(|b| b.len()).sum::<usize>(), 300);
+    }
+
+    /// Regression: the query block used to pass through unchecked, so
+    /// an oversized final block could overflow the prefill bucket
+    /// downstream. It cannot be chunked (its tokens attend across the
+    /// whole context), so it must be rejected loudly here.
+    #[test]
+    fn split_rejects_oversized_query() {
+        let sp = SegmentedPrompt { blocks: vec![vec![1; 10]], query: vec![2; 200] };
+        let err = split_oversized_blocks(sp, 128).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("200") && msg.contains("128"), "unhelpful error: {msg}");
+        // At the cap is fine.
+        let sp = SegmentedPrompt { blocks: vec![], query: vec![2; 128] };
+        assert!(split_oversized_blocks(sp, 128).is_ok());
+    }
+
+    #[test]
+    fn policy_texts_dispatch_and_reject() {
+        let raw_text = RawPrompt { prompt: Some("a---b---c".into()), ..Default::default() };
+        let raw_icl = RawPrompt {
+            demos: Some(vec!["in a out b".into(), "in c out d".into()]),
+            ..Default::default()
+        };
+        let raw_chat = RawPrompt {
+            system: Some("be brief".into()),
+            turns: Some(vec!["t1".into(), "t2".into()]),
+            ..Default::default()
+        };
+        let raw_game = RawPrompt {
+            state: Some(Json::parse(r#"{"pot":10,"round":2}"#).unwrap()),
+            ..Default::default()
+        };
+
+        // Each dedicated policy segments its field…
+        let texts = policy_block_texts(SegmentPolicy::Text, &raw_text).unwrap().unwrap();
+        assert_eq!(texts, vec!["a---", "b---", "c"]);
+        let texts = policy_block_texts(SegmentPolicy::Icl, &raw_icl).unwrap().unwrap();
+        assert_eq!(texts.len(), 2);
+        let texts = policy_block_texts(SegmentPolicy::Chat, &raw_chat).unwrap().unwrap();
+        assert_eq!(texts, vec!["be brief", "t1", "t2"]);
+        let texts = policy_block_texts(SegmentPolicy::Gamecore, &raw_game).unwrap().unwrap();
+        assert_eq!(texts, vec!["pot=10", "round=2"]);
+
+        // …`auto` dispatches on the field…
+        for raw in [&raw_text, &raw_icl, &raw_chat, &raw_game] {
+            assert!(policy_block_texts(SegmentPolicy::Auto, raw).unwrap().is_some());
+        }
+
+        // …no raw fields means pre-segmented under every policy…
+        for p in [
+            SegmentPolicy::Passages,
+            SegmentPolicy::Text,
+            SegmentPolicy::Icl,
+            SegmentPolicy::Chat,
+            SegmentPolicy::Gamecore,
+            SegmentPolicy::Auto,
+        ] {
+            assert!(policy_block_texts(p, &RawPrompt::default()).unwrap().is_none());
+        }
+
+        // …and mismatches fail loudly, naming field and policy.
+        let err = policy_block_texts(SegmentPolicy::Passages, &raw_text).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("passages") && msg.contains("prompt"), "unhelpful: {msg}");
+        let err = policy_block_texts(SegmentPolicy::Icl, &raw_game).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("icl") && msg.contains("state"), "unhelpful: {msg}");
+
+        // Conflicting raw fields are ambiguous even under `auto`.
+        let both = RawPrompt {
+            prompt: Some("x".into()),
+            demos: Some(vec!["d".into()]),
+            ..Default::default()
+        };
+        let err = policy_block_texts(SegmentPolicy::Auto, &both).unwrap_err();
+        assert!(format!("{err}").contains("conflicting"));
     }
 }

@@ -269,6 +269,8 @@ pub fn run_cli(args: &util::cli::Args) -> anyhow::Result<()> {
             eprintln!("          --threads N            (kernel threads; or $BLOCK_ATTN_THREADS)");
             eprintln!("          --kv-quant f32|int8|int4  (KV cache tier; or $BLOCK_ATTN_KV_QUANT)");
             eprintln!("          --reencode eager|delta (fetch re-encode mode; or $BLOCK_ATTN_REENCODE)");
+            eprintln!("          --segment passages|text|icl|chat|gamecore|auto");
+            eprintln!("                                 (request segmentation; or $BLOCK_ATTN_SEGMENT)");
             eprintln!("          --simd auto|off        (vector kernels; or $BLOCK_ATTN_SIMD)");
             eprintln!("          --kv-store-dir DIR     (persistent block store; or $BLOCK_ATTN_KV_STORE_DIR)");
             eprintln!("          --kv-store-budget MB   (disk budget, 0=unbounded; or $BLOCK_ATTN_KV_STORE_BUDGET)");
@@ -299,6 +301,7 @@ fn cli_eval(args: &util::cli::Args) -> anyhow::Result<()> {
     let kv_precision = config::KvPrecision::resolve(args)?;
     let mut coord = Coordinator::with_kv_precision(backend, 128 << 20, kv_precision);
     coord.set_reencode_mode(config::ReencodeMode::resolve(args)?);
+    coord.set_segment_policy(config::SegmentPolicy::resolve(args)?);
     if let Some(sc) = config::KvStoreConfig::resolve(args)? {
         coord.attach_kv_store(&sc)?;
     }
@@ -336,6 +339,7 @@ fn cli_serve(args: &util::cli::Args) -> anyhow::Result<()> {
     let cache_mb = args.usize_or("cache-mb", 256);
     let kv_precision = config::KvPrecision::resolve(args)?;
     let reencode = config::ReencodeMode::resolve(args)?;
+    let segment = config::SegmentPolicy::resolve(args)?;
     let store_cfg = config::KvStoreConfig::resolve(args)?;
     let policy = coordinator::batcher::BatchPolicy::resolve(args);
     let args2 = args.clone();
@@ -348,6 +352,10 @@ fn cli_serve(args: &util::cli::Args) -> anyhow::Result<()> {
             backend.warmup()?;
             let mut coord = Coordinator::with_kv_precision(backend, cache_mb << 20, kv_precision);
             coord.set_reencode_mode(reencode);
+            // Connection handlers segment with the same resolved policy
+            // (passed to `serve` below); the coordinator carries it so
+            // the `stats` line reports what is in force.
+            coord.set_segment_policy(segment);
             if let Some(sc) = &store_cfg {
                 coord.attach_kv_store(sc)?;
             }
@@ -355,7 +363,7 @@ fn cli_serve(args: &util::cli::Args) -> anyhow::Result<()> {
         },
         policy,
     )?;
-    server::serve(&addr, handle, workers)
+    server::serve(&addr, handle, workers, segment)
 }
 
 fn cli_train(args: &util::cli::Args) -> anyhow::Result<()> {

@@ -23,48 +23,127 @@
 //! every thread count and KV tier — so continuous batching changes
 //! throughput and latency, never output text.
 
+use crate::config::SegmentPolicy;
 use crate::coordinator::batcher::{BatchEvent, BatchPolicy, BatchRunner, Pending};
+use crate::coordinator::segmenter::{policy_block_texts, RawPrompt};
 use crate::coordinator::{AttentionMode, Coordinator, DecodeState, Request, Response};
 use crate::runtime::Backend;
 use crate::tokenizer::ByteTokenizer;
 use crate::util::json::Json;
 use crate::util::pool::ThreadPool;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::time::Instant;
 
-/// A parsed wire request.
+/// A parsed wire request under the default pre-segmented policy
+/// ([`SegmentPolicy::Passages`]): the historical protocol surface,
+/// kept for callers that never carry raw prompt fields.
 pub fn parse_request(line: &str, tok: &ByteTokenizer) -> Result<Request> {
+    parse_request_with_policy(line, tok, SegmentPolicy::Passages)
+}
+
+/// An optional string field, loud on a non-string value.
+fn opt_str(j: &Json, key: &str) -> Result<Option<String>> {
+    match j.get(key) {
+        Json::Null => Ok(None),
+        v => Ok(Some(
+            v.as_str()
+                .ok_or_else(|| anyhow!("'{key}' must be a string (got {v})"))?
+                .to_string(),
+        )),
+    }
+}
+
+/// An optional array-of-strings field, loud on anything else.
+fn opt_str_arr(j: &Json, key: &str) -> Result<Option<Vec<String>>> {
+    match j.get(key) {
+        Json::Null => Ok(None),
+        v => {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("'{key}' must be an array of strings"))?;
+            let mut out = Vec::with_capacity(arr.len());
+            for (i, p) in arr.iter().enumerate() {
+                out.push(
+                    p.as_str()
+                        .ok_or_else(|| anyhow!("{key}[{i}] is not a string (got {p})"))?
+                        .to_string(),
+                );
+            }
+            Ok(Some(out))
+        }
+    }
+}
+
+/// A parsed wire request under an explicit segmentation policy.
+///
+/// Context blocks come from either a pre-segmented `passages` array
+/// (served identically under every policy) or — per `policy` — raw
+/// `prompt`/`demos`/`system`+`turns`/`state` fields that
+/// [`policy_block_texts`] cuts into block texts. Both shapes then take
+/// the same tokenize step (byte-encode + `SEP` per block; `QRY` +
+/// byte-encode for the query), so a raw request is bitwise
+/// interchangeable with its pre-segmented equivalent.
+pub fn parse_request_with_policy(
+    line: &str,
+    tok: &ByteTokenizer,
+    policy: SegmentPolicy,
+) -> Result<Request> {
     let j = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
     let id = j.get("id").as_usize().unwrap_or(0) as u64;
     let mode = AttentionMode::parse(j.get("mode").as_str().unwrap_or("block"))?;
-    let passages_j = j.get("passages");
-    let passages: Vec<Vec<i32>> = match passages_j {
-        Json::Null => Vec::new(),
-        _ => passages_j
-            .as_arr()
-            .ok_or_else(|| anyhow!("'passages' must be an array of strings"))?
-            .iter()
-            .enumerate()
-            .map(|(i, p)| {
-                let text = p
-                    .as_str()
-                    .ok_or_else(|| anyhow!("passages[{i}] is not a string (got {p})"))?;
-                let mut ids = tok.encode(text);
-                ids.push(crate::tokenizer::SEP);
-                Ok(ids)
-            })
-            .collect::<Result<_>>()?,
+    let raw = RawPrompt {
+        prompt: opt_str(&j, "prompt")?,
+        system: opt_str(&j, "system")?,
+        demos: opt_str_arr(&j, "demos")?,
+        turns: opt_str_arr(&j, "turns")?,
+        state: match j.get("state") {
+            Json::Null => None,
+            v => Some(v.clone()),
+        },
     };
+    let segmented = policy_block_texts(policy, &raw)?;
+    let passages_j = j.get("passages");
+    if segmented.is_some() && !matches!(passages_j, Json::Null) {
+        bail!(
+            "a request may carry either raw prompt fields or a \
+             pre-segmented 'passages' array, not both"
+        );
+    }
+    let block_texts: Vec<String> = match segmented {
+        Some(texts) => texts,
+        None => match passages_j {
+            Json::Null => Vec::new(),
+            _ => passages_j
+                .as_arr()
+                .ok_or_else(|| anyhow!("'passages' must be an array of strings"))?
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    Ok(p.as_str()
+                        .ok_or_else(|| anyhow!("passages[{i}] is not a string (got {p})"))?
+                        .to_string())
+                })
+                .collect::<Result<_>>()?,
+        },
+    };
+    let blocks = block_texts
+        .iter()
+        .map(|text| {
+            let mut ids = tok.encode(text);
+            ids.push(crate::tokenizer::SEP);
+            ids
+        })
+        .collect();
     let query_text = j.req_str("query")?;
     let mut query = vec![crate::tokenizer::QRY];
     query.extend(tok.encode(query_text));
     Ok(Request {
         id,
-        blocks: passages,
+        blocks,
         query,
         max_new_tokens: j.get("max_new_tokens").as_usize().unwrap_or(16),
         mode,
@@ -333,6 +412,10 @@ fn stats_line<B: Backend>(
         ("delta_rotations", Json::num(s.delta_rotations as f64)),
         ("kv_precision", Json::str(coord.kv_precision().as_str())),
         ("reencode_mode", Json::str(coord.reencode_mode().as_str())),
+        ("segment_policy", Json::str(coord.segment_policy().as_str())),
+        ("blocks_seen", Json::num(m.blocks_seen as f64)),
+        ("blocks_cached", Json::num(m.blocks_cached as f64)),
+        ("block_hit_rate", Json::num(m.block_hit_rate())),
         ("simd_isa", Json::str(crate::kernels::isa_name())),
         ("threads", Json::num(crate::kernels::num_threads() as f64)),
         ("pool_workers", Json::num(ps.workers as f64)),
@@ -350,16 +433,23 @@ fn stats_line<B: Backend>(
     .to_string()
 }
 
-/// Serve forever on `addr` (e.g. "127.0.0.1:7841").
-pub fn serve(addr: &str, handle: EngineHandle, workers: usize) -> Result<()> {
+/// Serve forever on `addr` (e.g. "127.0.0.1:7841"), segmenting raw
+/// requests under `policy` (the `serve` CLI resolves `--segment` >
+/// `$BLOCK_ATTN_SEGMENT` > passages-only).
+pub fn serve(
+    addr: &str,
+    handle: EngineHandle,
+    workers: usize,
+    policy: SegmentPolicy,
+) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
-    eprintln!("[server] listening on {addr}");
+    eprintln!("[server] listening on {addr} (segment policy: {})", policy.as_str());
     let pool = ThreadPool::new(workers);
     for stream in listener.incoming() {
         let stream = stream?;
         let handle = handle.clone();
         pool.spawn(move || {
-            if let Err(e) = handle_conn(stream, handle) {
+            if let Err(e) = handle_conn(stream, handle, policy) {
                 eprintln!("[server] connection error: {e:#}");
             }
         });
@@ -374,7 +464,7 @@ fn write_line(w: &mut impl Write, line: &str) -> Result<()> {
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, handle: EngineHandle) -> Result<()> {
+fn handle_conn(stream: TcpStream, handle: EngineHandle, policy: SegmentPolicy) -> Result<()> {
     let tok = ByteTokenizer::new();
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -390,7 +480,7 @@ fn handle_conn(stream: TcpStream, handle: EngineHandle) -> Result<()> {
             write_line(&mut writer, &out)?;
             continue;
         }
-        let req = match parse_request(&line, &tok) {
+        let req = match parse_request_with_policy(&line, &tok, policy) {
             Ok(req) => req,
             Err(e) => {
                 // Echo the client's id when the line is recoverable
@@ -478,6 +568,78 @@ mod tests {
         assert!(format!("{err}").contains("passages"));
         // Absent passages stay legal (query-only request).
         assert!(parse_request(r#"{"id": 7, "query": "q"}"#, &tok).is_ok());
+    }
+
+    /// Raw-field parsing under each policy: the segmented request must
+    /// be token-for-token identical to its hand-pre-segmented twin
+    /// (the bitwise-equivalence contract starts here), and the loud
+    /// failure modes must name what went wrong.
+    #[test]
+    fn parse_raw_fields_under_policies() {
+        let tok = ByteTokenizer::new();
+        let raw = parse_request_with_policy(
+            r#"{"id": 1, "prompt": "part a---part b---tail", "query": "q?"}"#,
+            &tok,
+            SegmentPolicy::Text,
+        )
+        .unwrap();
+        let pre = parse_request(
+            r#"{"id": 1, "passages": ["part a---", "part b---", "tail"], "query": "q?"}"#,
+            &tok,
+        )
+        .unwrap();
+        assert_eq!(raw.blocks, pre.blocks, "text segmentation diverged from passages");
+        assert_eq!(raw.query, pre.query);
+
+        // `auto` dispatches on the field the request carries.
+        let icl = parse_request_with_policy(
+            r#"{"demos": ["in a out b", "in c out d"], "query": "in e out"}"#,
+            &tok,
+            SegmentPolicy::Auto,
+        )
+        .unwrap();
+        assert_eq!(icl.blocks.len(), 2);
+        let chat = parse_request_with_policy(
+            r#"{"system": "be brief", "turns": ["t1", "t2"], "query": "next"}"#,
+            &tok,
+            SegmentPolicy::Auto,
+        )
+        .unwrap();
+        assert_eq!(chat.blocks.len(), 3);
+        let game = parse_request_with_policy(
+            r#"{"state": {"pot": 10, "round": 2}, "query": "act"}"#,
+            &tok,
+            SegmentPolicy::Auto,
+        )
+        .unwrap();
+        assert_eq!(game.blocks.len(), 2);
+
+        // The default passages policy rejects raw fields loudly…
+        let err = parse_request(r#"{"prompt": "x", "query": "q"}"#, &tok).unwrap_err();
+        assert!(format!("{err}").contains("passages"), "unhelpful: {err}");
+        // …field types are validated with the entry named…
+        let err = parse_request_with_policy(
+            r#"{"demos": ["ok", 3], "query": "q"}"#,
+            &tok,
+            SegmentPolicy::Icl,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("demos[1]"), "unhelpful: {err}");
+        // …and mixing raw fields with pre-cut passages is rejected.
+        let err = parse_request_with_policy(
+            r#"{"prompt": "x", "passages": ["y"], "query": "q"}"#,
+            &tok,
+            SegmentPolicy::Text,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("not both"), "unhelpful: {err}");
+        // Pre-segmented requests are served under *every* policy.
+        assert!(parse_request_with_policy(
+            r#"{"passages": ["doc"], "query": "q"}"#,
+            &tok,
+            SegmentPolicy::Gamecore
+        )
+        .is_ok());
     }
 
     #[test]
@@ -680,7 +842,7 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let server = std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
-            let _ = handle_conn(stream, handle);
+            let _ = handle_conn(stream, handle, SegmentPolicy::Passages);
         });
 
         let conn = TcpStream::connect(addr).unwrap();

@@ -107,6 +107,15 @@ impl Args {
         self.get("reencode")
     }
 
+    /// `--segment passages|text|icl|chat|gamecore|auto` (request
+    /// segmentation policy of the serving front-end). Returns the raw
+    /// value; parsing/validation lives in
+    /// `config::SegmentPolicy::resolve`, which also applies the
+    /// `BLOCK_ATTN_SEGMENT` env fallback.
+    pub fn segment(&self) -> Option<&str> {
+        self.get("segment")
+    }
+
     /// `--simd auto|off` (vector-kernel dispatch mode). Returns the raw
     /// value; parsing/validation lives in `kernels::simd::SimdMode::resolve`,
     /// which also applies the `BLOCK_ATTN_SIMD` env fallback.
@@ -189,6 +198,13 @@ mod tests {
         assert_eq!(parse("--reencode delta").reencode(), Some("delta"));
         assert_eq!(parse("--reencode=eager").reencode(), Some("eager"));
         assert_eq!(parse("run").reencode(), None);
+    }
+
+    #[test]
+    fn segment_accessor() {
+        assert_eq!(parse("--segment text").segment(), Some("text"));
+        assert_eq!(parse("--segment=auto").segment(), Some("auto"));
+        assert_eq!(parse("run").segment(), None);
     }
 
     #[test]

@@ -1,10 +1,22 @@
 //! Game-AI workload (paper Appendix A): a Texas-hold'em-like gamecore
 //! JSON stream where consecutive frames are >99% identical, so per-field
 //! block caching eliminates nearly all prefill work.
+//!
+//! The serving scenario (`benches/scenarios.rs`) runs hundreds of these
+//! tables concurrently: every session's frame carries the same static
+//! `rules` field (one shared cached block across the whole fleet), and
+//! between consecutive frames of one table only the acting player's
+//! chips, the pot and one new history entry change — every other field
+//! (seats, board, blinds, rules, the older history entries) re-serves
+//! from cache.
 
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
+
+/// The static rule block every table shares (the paper's "rule block"
+/// — identical across sessions, so the whole fleet caches it once).
+pub const RULES_TEXT: &str = "holdem: bet or check in turn; raise <= 50; showdown after river";
 
 /// A simulated poker table whose state serializes to gamecore JSON.
 pub struct GamecoreSim {
@@ -13,6 +25,10 @@ pub struct GamecoreSim {
     round: u64,
     chips: Vec<(u64, u64)>, // (bet, remain) per player
     board: Vec<String>,
+    /// Rolling action log, newest last, capped — paired with the
+    /// absolute id of the oldest retained action so every entry keeps a
+    /// stable key across frames (`history.a0013=…`): a step adds one
+    /// new block instead of rewriting the whole log block.
     history: Vec<String>,
     rng: Rng,
 }
@@ -32,35 +48,42 @@ impl GamecoreSim {
         }
     }
 
-    /// Current frame as gamecore JSON.
+    /// Current frame as gamecore JSON. Field shapes are chosen so
+    /// `segmenter::gamecore_field_texts` cuts cache-friendly blocks:
+    /// `chips`/`seats`/`history` are one-level objects (one block per
+    /// player / per retained action, keyed stably), scalars stay single
+    /// blocks, and the static `rules` text rides in every frame.
     pub fn frame(&self) -> Json {
         let mut chips = BTreeMap::new();
-        for (i, (bet, remain)) in self.chips.iter().enumerate() {
-            chips.insert(
-                format!("p{}", i + 1),
-                Json::obj(vec![
-                    ("bet", Json::num(*bet as f64)),
-                    ("remain", Json::num(*remain as f64)),
-                ]),
-            );
+        let mut seats = BTreeMap::new();
+        for (i, (_bet, remain)) in self.chips.iter().enumerate() {
+            chips.insert(format!("p{}", i + 1), Json::num(*remain as f64));
+            seats.insert(format!("p{}", i + 1), Json::str(format!("s{}", i + 1)));
+        }
+        let mut history = BTreeMap::new();
+        // Entry j's absolute action id: `round` actions happened, the
+        // newest is a<round>, the oldest retained is a<round-len+1>.
+        let base = self.round - self.history.len() as u64;
+        for (j, h) in self.history.iter().enumerate() {
+            history.insert(format!("a{:04}", base + 1 + j as u64), Json::str(h.clone()));
         }
         let mut o = BTreeMap::new();
+        o.insert("rules".into(), Json::str(RULES_TEXT));
         o.insert("chips".into(), Json::Obj(chips));
+        o.insert("seats".into(), Json::Obj(seats));
         o.insert("pot".into(), Json::num(self.pot as f64));
-        o.insert("round".into(), Json::num(self.round as f64));
+        o.insert("blinds".into(), Json::str("5/10"));
         o.insert(
             "board".into(),
             Json::Arr(self.board.iter().map(|c| Json::str(c.clone())).collect()),
         );
-        o.insert(
-            "history".into(),
-            Json::Arr(self.history.iter().map(|h| Json::str(h.clone())).collect()),
-        );
+        o.insert("history".into(), Json::Obj(history));
         Json::Obj(o)
     }
 
     /// Advance one action: exactly one player's chips change (the paper's
-    /// example: `state['chips']['p2']` is the only delta between frames).
+    /// example: `state['chips']['p2']` is the only delta between frames),
+    /// plus the pot and one appended history entry.
     pub fn step(&mut self) {
         let p = self.rng.below(self.players);
         let bet = 10 * (1 + self.rng.below(5) as u64);
@@ -73,6 +96,24 @@ impl GamecoreSim {
             self.history.remove(0);
         }
         self.history.push(format!("p{} bets {bet}", p + 1));
+    }
+
+    /// Number of steps taken so far.
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// The frame as a serving wire-request line (`--segment gamecore`
+    /// or `auto`): the state rides raw and the server cuts it into
+    /// per-field blocks — used by the scenarios bench and tests.
+    pub fn request_line(&self, id: u64, max_new_tokens: usize) -> String {
+        Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("state", self.frame()),
+            ("query", Json::str("act")),
+            ("max_new_tokens", Json::num(max_new_tokens as f64)),
+        ])
+        .to_string()
     }
 }
 
@@ -108,10 +149,36 @@ mod tests {
         sim.step();
         let f1 = segment_gamecore(&tok, &sim.frame(), "act");
         let ratio = repetition_ratio(&f0.blocks, &f1.blocks);
-        // chips of one player + pot + round + history change; the other
-        // 5 players' chips and the board repeat.
+        // One player's chips + pot + one history block change; rules,
+        // seats, blinds, the board and the other players' chips repeat.
         assert!(ratio > 0.5, "repetition {ratio}");
         assert_eq!(f0.blocks.len(), f1.blocks.len());
+    }
+
+    #[test]
+    fn steady_state_frames_share_all_but_three_blocks() {
+        let tok = ByteTokenizer::new();
+        let mut sim = GamecoreSim::new(10, 3);
+        for _ in 0..13 {
+            sim.step(); // fill the rolling history to its cap
+        }
+        let f0 = segment_gamecore(&tok, &sim.frame(), "act");
+        sim.step();
+        let f1 = segment_gamecore(&tok, &sim.frame(), "act");
+        // rules + 10 chips + 10 seats + pot + blinds + board + 9 history.
+        assert_eq!(f0.blocks.len(), 33);
+        assert_eq!(f1.blocks.len(), 33);
+        // A step touches exactly the actor's chips, the pot and one new
+        // history entry; the other 30 blocks must be byte-identical so
+        // a warm cache re-serves >= 90% of each steady-state frame.
+        let set: std::collections::HashSet<&Vec<i32>> = f0.blocks.iter().collect();
+        let missed = f1.blocks.iter().filter(|b| !set.contains(*b)).count();
+        assert!(missed <= 3, "steady-state frame re-cut {missed}/33 blocks");
+        assert!(repetition_ratio(&f0.blocks, &f1.blocks) >= 0.90);
+        // The whole prompt must fit the tiny model's 704-token context.
+        let total: usize =
+            f1.blocks.iter().map(|b| b.len()).sum::<usize>() + f1.query.len();
+        assert!(total <= 700, "frame uses {total} tokens");
     }
 
     #[test]

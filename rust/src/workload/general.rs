@@ -97,20 +97,106 @@ impl GeneralGen {
                 Sample::bare(demos, format!("{a} + {b} ="), format!("{}", (a + b) % 10))
             }
             GeneralTask::IclSort { shots } => {
-                let mk = |rng: &mut Rng| {
-                    let mut cs: Vec<char> =
-                        (0..3).map(|_| (b'a' + rng.below(8) as u8) as char).collect();
-                    let orig: String = cs.iter().collect();
-                    cs.sort_unstable();
-                    (orig, cs.into_iter().collect::<String>())
-                };
                 let mut demos = Vec::new();
                 for _ in 0..shots {
-                    let (o, s) = mk(rng);
+                    let (o, s) = sort_pair(rng);
                     demos.push(format!("{o} => {s}"));
                 }
-                let (o, s) = mk(rng);
+                let (o, s) = sort_pair(rng);
                 Sample::bare(demos, format!("{o} =>"), s)
+            }
+        }
+    }
+}
+
+fn sort_pair(rng: &mut Rng) -> (String, String) {
+    let mut cs: Vec<char> = (0..3).map(|_| (b'a' + rng.below(8) as u8) as char).collect();
+    let orig: String = cs.iter().collect();
+    cs.sort_unstable();
+    (orig, cs.into_iter().collect())
+}
+
+/// A frozen few-shot exemplar set shared across many samples — the ICL
+/// serving scenario: the demonstration blocks are generated once, every
+/// request re-serves them from the block cache and only the query (and
+/// its answer) is fresh. `GeneralGen::sample` by contrast draws new
+/// demos per sample, so nothing would ever hit.
+pub struct SharedIcl {
+    task: GeneralTask,
+    /// The frozen demonstration blocks, identical for every sample.
+    pub demos: Vec<String>,
+    /// For mapping tasks: the (x, y) pairs the demos define.
+    pairs: Vec<(String, String)>,
+}
+
+impl SharedIcl {
+    pub fn new(task: GeneralTask, rng: &mut Rng, world: usize) -> SharedIcl {
+        let mut demos = Vec::new();
+        let mut pairs = Vec::new();
+        match task {
+            GeneralTask::IclMap { shots } => {
+                assert!(world >= shots, "need >= {shots} distinct words");
+                let vocab = vocabulary(rng, world, 2);
+                // Distinct x's so every query has a unique answer.
+                let mut xs: Vec<String> = Vec::new();
+                while xs.len() < shots {
+                    let x = rng.pick(&vocab).clone();
+                    if !xs.contains(&x) {
+                        xs.push(x);
+                    }
+                }
+                for x in xs {
+                    let y = rand_word(rng, 4);
+                    demos.push(format!("{x} -> {y}"));
+                    pairs.push((x, y));
+                }
+            }
+            GeneralTask::IclArith { shots } => {
+                for _ in 0..shots {
+                    let a = rng.below(10);
+                    let b = rng.below(10);
+                    demos.push(format!("{a} + {b} = {}", (a + b) % 10));
+                }
+            }
+            GeneralTask::IclSort { shots } => {
+                for _ in 0..shots {
+                    let (o, s) = sort_pair(rng);
+                    demos.push(format!("{o} => {s}"));
+                }
+            }
+            GeneralTask::Copy | GeneralTask::Reverse => {}
+        }
+        SharedIcl { task, demos, pairs }
+    }
+
+    /// A fresh query over the frozen demo blocks.
+    pub fn sample(&self, rng: &mut Rng) -> Sample {
+        match self.task {
+            GeneralTask::IclMap { .. } => {
+                let (qx, qy) = self.pairs[rng.below(self.pairs.len())].clone();
+                Sample::bare(self.demos.clone(), format!("{qx} ->"), qy)
+            }
+            GeneralTask::IclArith { .. } => {
+                let a = rng.below(10);
+                let b = rng.below(10);
+                Sample::bare(
+                    self.demos.clone(),
+                    format!("{a} + {b} ="),
+                    format!("{}", (a + b) % 10),
+                )
+            }
+            GeneralTask::IclSort { .. } => {
+                let (o, s) = sort_pair(rng);
+                Sample::bare(self.demos.clone(), format!("{o} =>"), s)
+            }
+            GeneralTask::Copy => {
+                let w = rand_word(rng, 6);
+                Sample::bare(vec![], format!("copy : {w}"), w)
+            }
+            GeneralTask::Reverse => {
+                let w = word(rng, 2);
+                let rev: String = w.chars().rev().collect();
+                Sample::bare(vec![], format!("reverse : {w}"), rev)
             }
         }
     }
@@ -143,6 +229,26 @@ mod tests {
                 "query not answerable from demos: {s:?}"
             );
         }
+    }
+
+    #[test]
+    fn shared_icl_freezes_demos_across_samples() {
+        let mut rng = Rng::new(5);
+        let shared = SharedIcl::new(GeneralTask::IclMap { shots: 4 }, &mut rng, 30);
+        assert_eq!(shared.demos.len(), 4);
+        for _ in 0..20 {
+            let s = shared.sample(&mut rng);
+            // Demo blocks never change, so a warm cache re-serves them.
+            assert_eq!(s.blocks, shared.demos);
+            // Every query is answerable from the frozen demos.
+            let qx = s.query.trim_end_matches(" ->");
+            assert!(
+                s.blocks.iter().any(|d| *d == format!("{qx} -> {}", s.answer)),
+                "query not answerable from frozen demos: {s:?}"
+            );
+        }
+        let sh = SharedIcl::new(GeneralTask::IclArith { shots: 4 }, &mut rng, 10);
+        assert_eq!(sh.sample(&mut rng).blocks, sh.sample(&mut rng).blocks);
     }
 
     #[test]

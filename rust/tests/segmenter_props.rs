@@ -1,0 +1,170 @@
+//! Property battery for the text segmenter and the block-shape
+//! normalizers the serving path composes around it:
+//!
+//! * **Byte-lossless split** — `split_text_parts` keeps each division
+//!   label with the part it terminates, so concatenating the parts
+//!   reproduces the input byte-for-byte, on adversarial UTF-8:
+//!   overlapping/adjacent labels, a label at EOF, multi-byte characters
+//!   hugging label boundaries, and empty input.
+//! * **Tokenized round-trip** — `segment_text` ∘ `ByteTokenizer::decode`
+//!   recovers the original text (blocks ++ query).
+//! * **Shape normalization** — `coalesce_small_blocks` ∘
+//!   `split_oversized_blocks` preserves the flattened context-token
+//!   sequence (hence the total count), caps every block at `max_len`,
+//!   never touches the query, and rejects an unsplittable oversized
+//!   query loudly.
+//! * **Seeded fuzz** — random interleavings of labels, near-labels and
+//!   multi-byte characters uphold all of the above.
+
+use block_attn::coordinator::segmenter::{
+    coalesce_small_blocks, segment_text, split_oversized_blocks, split_text_parts,
+    SegmentedPrompt, DIVISION_LABELS,
+};
+use block_attn::tokenizer::ByteTokenizer;
+use block_attn::util::prop;
+use block_attn::util::rng::Rng;
+use block_attn::{prop_assert, prop_assert_eq};
+
+#[test]
+fn split_round_trips_adversarial_texts() {
+    let cases = [
+        "",                        // empty input: no parts at all
+        "plain text, no labels",   // nothing to split on
+        "a---b",                   // single label mid-text
+        "a---",                    // label at EOF: empty tail dropped
+        "---",                     // the whole input is one label
+        "------",                  // adjacent labels, empty part between
+        "---===---",               // alternating adjacent labels
+        "=====",                   // overlap: one label plus a leftover "=="
+        "----",                    // overlap: label plus a stray "-"
+        "a-- -b==+c",              // near-labels must not split
+        "\n\n\t\t",                // "\n\n" wins over "\n\t\t" at offset 0
+        "x\n\t\ty\n\nz",           // both newline labels in one text
+        "日本---語",               // multi-byte chars hugging a label
+        "…---…===…",               // 3-byte ellipsis between labels
+        "🎲---🎯",                 // 4-byte chars around a label
+        "é=====é",                 // 2-byte char against an overlapping label
+        "tail---",                 // trailing label, tail becomes empty
+        "---lead",                 // leading label, empty head dropped
+    ];
+    let tok = ByteTokenizer::new();
+    for text in cases {
+        let parts = split_text_parts(text);
+        assert_eq!(parts.concat(), text, "lossy split of {text:?}");
+        assert!(parts.iter().all(|p| !p.is_empty()), "empty part in {text:?}");
+        // Tokenized round-trip: blocks ++ query decode to the input.
+        let sp = segment_text(&tok, text);
+        let mut decoded = String::new();
+        for b in &sp.blocks {
+            decoded.push_str(&tok.decode(b));
+        }
+        decoded.push_str(&tok.decode(&sp.query));
+        assert_eq!(decoded, text, "segment_text lost bytes of {text:?}");
+        // Every context block ends with the label that terminated it.
+        for b in &sp.blocks {
+            let t = tok.decode(b);
+            assert!(
+                DIVISION_LABELS.iter().any(|l| t.ends_with(l)),
+                "context block {t:?} of {text:?} lacks a terminating label"
+            );
+        }
+    }
+}
+
+#[test]
+fn fuzz_split_round_trips_random_label_placements() {
+    // Pieces chosen to collide: full labels, their prefixes/overlaps,
+    // and multi-byte characters whose bytes sit next to label bytes.
+    let pieces = [
+        "---", "===", "\n\n", "\n\t\t", "--", "==", "-", "=", "\n", "\t\t",
+        "a", "bc", " ", "é", "漢", "…", "🎲",
+    ];
+    prop::check("text-split-round-trip", 0x5E61, 300, |rng: &mut Rng| {
+        let n = rng.below(24);
+        let mut text = String::new();
+        for _ in 0..n {
+            text.push_str(rng.pick(&pieces));
+        }
+        let parts = split_text_parts(&text);
+        prop_assert_eq!(parts.concat(), text);
+        prop_assert!(
+            parts.iter().all(|p| !p.is_empty()),
+            "empty part from {text:?}"
+        );
+        // Labels only ever terminate a part: every label occurrence
+        // inside a part ends exactly at the part's end (the scanner
+        // checks each character position, so an earlier occurrence
+        // would have cut the part there).
+        for p in &parts {
+            let pb = p.as_bytes();
+            for l in DIVISION_LABELS {
+                let lb = l.as_bytes();
+                for i in 0..pb.len() {
+                    if pb[i..].starts_with(lb) {
+                        prop_assert!(
+                            i + lb.len() == pb.len(),
+                            "part {p:?} of {text:?} continues past label {l:?} at byte {i}"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fuzz_coalesce_then_split_preserves_tokens() {
+    prop::check("coalesce-split-composition", 0xC0A1, 300, |rng: &mut Rng| {
+        let nblocks = rng.below(12);
+        let blocks: Vec<Vec<i32>> = (0..nblocks)
+            .map(|_| {
+                let len = rng.below(40);
+                (0..len).map(|_| rng.below(256) as i32).collect()
+            })
+            .collect();
+        let min_len = 1 + rng.below(6);
+        let max_len = min_len + 1 + rng.below(32);
+        // The query must fit the bucket — an oversized query is a loud
+        // error by design (covered below), not part of this property.
+        let query: Vec<i32> =
+            (0..rng.below(max_len + 1)).map(|_| rng.below(256) as i32).collect();
+
+        let sp = SegmentedPrompt { blocks: blocks.clone(), query: query.clone() };
+        let sp = coalesce_small_blocks(sp, min_len);
+        let sp = match split_oversized_blocks(sp, max_len) {
+            Ok(sp) => sp,
+            Err(e) => return Err(format!("normalization failed: {e}")),
+        };
+
+        // The flattened context-token sequence is invariant (coalesce
+        // concatenates neighbors, split re-chunks) — so the total token
+        // count is too, and no block exceeds the bucket capacity.
+        let flat: Vec<i32> = blocks.iter().flatten().copied().collect();
+        let norm: Vec<i32> = sp.blocks.iter().flatten().copied().collect();
+        prop_assert_eq!(norm, flat);
+        prop_assert!(
+            sp.blocks.iter().all(|b| b.len() <= max_len),
+            "block over the {max_len}-token bucket"
+        );
+        // Coalescing folds empty blocks into a neighbor, so empties can
+        // only survive when there were no context tokens at all.
+        prop_assert!(
+            flat.is_empty() || sp.blocks.iter().all(|b| !b.is_empty()),
+            "empty block survived normalization"
+        );
+        prop_assert_eq!(sp.query, query);
+        Ok(())
+    });
+}
+
+#[test]
+fn split_rejects_query_it_cannot_cap() {
+    let sp = SegmentedPrompt { blocks: vec![vec![1; 8]], query: vec![2; 40] };
+    let err = split_oversized_blocks(sp, 16).unwrap_err().to_string();
+    assert!(err.contains("40") && err.contains("16"), "unhelpful error: {err}");
+    // At exactly the cap the query passes untouched.
+    let sp = SegmentedPrompt { blocks: vec![vec![1; 8]], query: vec![2; 16] };
+    let sp = split_oversized_blocks(sp, 16).unwrap();
+    assert_eq!(sp.query.len(), 16);
+}

@@ -1,0 +1,207 @@
+//! Serving-path equivalence for auto-segmented requests (the tentpole
+//! acceptance bar): a raw request — `prompt` under the text policy,
+//! `demos` under icl, `system`+`turns` under chat, `state` under
+//! gamecore, and each of them under `auto` — must produce output
+//! **bitwise identical** to the equivalent pre-segmented `passages`
+//! request, at every thread count and KV tier. Both request shapes
+//! take the same tokenize + normalize + pin → cache → re-encode →
+//! decode path; these tests prove the wire-level split is invisible.
+
+use block_attn::config::{KvPrecision, ModelConfig, SegmentPolicy};
+use block_attn::coordinator::segmenter::gamecore_field_texts;
+use block_attn::coordinator::{Coordinator, Request};
+use block_attn::kernels::set_threads;
+use block_attn::runtime::NativeBackend;
+use block_attn::server::parse_request_with_policy;
+use block_attn::tokenizer::ByteTokenizer;
+use block_attn::util::json::Json;
+use block_attn::workload::gamecore::GamecoreSim;
+use std::sync::Mutex;
+
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn serve_config() -> ModelConfig {
+    ModelConfig {
+        name: "serve-micro".into(),
+        vocab: 261,
+        d_model: 32,
+        layers: 2,
+        heads: 2,
+        kv_heads: 1,
+        head_dim: 16,
+        d_ff: 64,
+        rope_theta: 10000.0,
+        norm_eps: 1e-5,
+        max_len: 512,
+    }
+}
+
+fn coordinator(precision: KvPrecision) -> Coordinator<NativeBackend> {
+    let engine = NativeBackend::new(serve_config(), 0x5E57);
+    Coordinator::with_kv_precision(engine, 64 << 20, precision)
+}
+
+fn line(fields: Vec<(&str, Json)>) -> String {
+    Json::obj(fields).to_string()
+}
+
+fn str_arr(items: &[&str]) -> Json {
+    Json::Arr(items.iter().map(|s| Json::str(s.to_string())).collect())
+}
+
+/// (scenario name, policy, raw request line, equivalent passages line).
+fn scenarios() -> Vec<(&'static str, SegmentPolicy, String, String)> {
+    let demos = ["big -> small", "hot -> cold", "up -> down"];
+    // gamecore: the simulator's own wire line; the passages twin uses
+    // the same per-field cut the server applies.
+    let mut sim = GamecoreSim::new(4, 9);
+    for _ in 0..3 {
+        sim.step();
+    }
+    let fields = gamecore_field_texts(&sim.frame());
+    vec![
+        // text: division labels cut the prompt; every part is a block
+        // and the wire `query` field stays the final block.
+        (
+            "text",
+            SegmentPolicy::Text,
+            line(vec![
+                ("id", Json::num(1.0)),
+                ("prompt", Json::str("alpha passage---beta passage===gamma tail")),
+                ("query", Json::str("what follows?")),
+                ("max_new_tokens", Json::num(8.0)),
+            ]),
+            line(vec![
+                ("id", Json::num(1.0)),
+                ("passages", str_arr(&["alpha passage---", "beta passage===", "gamma tail"])),
+                ("query", Json::str("what follows?")),
+                ("max_new_tokens", Json::num(8.0)),
+            ]),
+        ),
+        // icl: one block per frozen demonstration.
+        (
+            "icl",
+            SegmentPolicy::Icl,
+            line(vec![
+                ("id", Json::num(2.0)),
+                ("demos", str_arr(&demos)),
+                ("query", Json::str("wet ->")),
+                ("max_new_tokens", Json::num(8.0)),
+            ]),
+            line(vec![
+                ("id", Json::num(2.0)),
+                ("passages", str_arr(&demos)),
+                ("query", Json::str("wet ->")),
+                ("max_new_tokens", Json::num(8.0)),
+            ]),
+        ),
+        // chat: system block + one block per completed turn.
+        (
+            "chat",
+            SegmentPolicy::Chat,
+            line(vec![
+                ("id", Json::num(3.0)),
+                ("system", Json::str("you are terse")),
+                ("turns", str_arr(&["user: hi / you: hello", "user: go on / you: ok"])),
+                ("query", Json::str("and then?")),
+                ("max_new_tokens", Json::num(8.0)),
+            ]),
+            line(vec![
+                ("id", Json::num(3.0)),
+                (
+                    "passages",
+                    str_arr(&["you are terse", "user: hi / you: hello", "user: go on / you: ok"]),
+                ),
+                ("query", Json::str("and then?")),
+                ("max_new_tokens", Json::num(8.0)),
+            ]),
+        ),
+        (
+            "gamecore",
+            SegmentPolicy::Gamecore,
+            sim.request_line(4, 8),
+            line(vec![
+                ("id", Json::num(4.0)),
+                (
+                    "passages",
+                    Json::Arr(fields.iter().map(|t| Json::str(t.clone())).collect()),
+                ),
+                ("query", Json::str("act")),
+                ("max_new_tokens", Json::num(8.0)),
+            ]),
+        ),
+    ]
+}
+
+fn parse(linetext: &str, policy: SegmentPolicy) -> Request {
+    let tok = ByteTokenizer::new();
+    parse_request_with_policy(linetext, &tok, policy).expect("parse")
+}
+
+/// The wire-level guarantee behind the bitwise bar: a raw request
+/// parses to the exact token blocks of its pre-segmented twin — under
+/// its own policy and under `auto`.
+#[test]
+fn raw_requests_parse_to_their_presegmented_twins() {
+    for (name, policy, raw, passages) in scenarios() {
+        let twin = parse(&passages, SegmentPolicy::Passages);
+        for p in [policy, SegmentPolicy::Auto] {
+            let req = parse(&raw, p);
+            assert_eq!(req.blocks, twin.blocks, "{name}/{p:?}: blocks differ");
+            assert_eq!(req.query, twin.query, "{name}/{p:?}: query differs");
+            assert_eq!(req.max_new_tokens, twin.max_new_tokens);
+        }
+        // A pre-segmented request is served identically under every
+        // policy — `passages` never re-segments.
+        for p in [
+            SegmentPolicy::Passages,
+            SegmentPolicy::Text,
+            SegmentPolicy::Icl,
+            SegmentPolicy::Chat,
+            SegmentPolicy::Gamecore,
+            SegmentPolicy::Auto,
+        ] {
+            let req = parse(&passages, p);
+            assert_eq!(req.blocks, twin.blocks, "{name}: passages re-cut under {p:?}");
+        }
+    }
+}
+
+/// End-to-end: serve every scenario's raw and pre-segmented form on
+/// fresh coordinators at each thread count and KV tier; generated
+/// tokens must match bitwise, and the warm raw pass must re-serve its
+/// blocks from cache.
+#[test]
+fn raw_and_presegmented_serving_is_bitwise_identical() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = block_attn::kernels::num_threads();
+    for (name, policy, raw, passages) in scenarios() {
+        let raw_req = parse(&raw, policy);
+        let pre_req = parse(&passages, SegmentPolicy::Passages);
+        for precision in [KvPrecision::F32, KvPrecision::Int8, KvPrecision::Int4] {
+            let mut per_thread = Vec::new();
+            for &threads in &[1usize, 3, 8] {
+                set_threads(threads);
+                let mut a = coordinator(precision);
+                let ra = a.process(&raw_req).expect("raw serve");
+                let mut b = coordinator(precision);
+                let rb = b.process(&pre_req).expect("passages serve");
+                assert_eq!(
+                    ra.tokens, rb.tokens,
+                    "{name}/{precision:?}/{threads}t: raw serving diverged from passages"
+                );
+                // Warm re-serve of the same raw request: every block
+                // (and no more) comes from cache, output unchanged.
+                let rw = a.process(&raw_req).expect("warm raw serve");
+                assert_eq!(rw.cached_blocks, rw.total_blocks, "{name}: warm pass missed");
+                assert_eq!(rw.tokens, ra.tokens, "{name}: warm pass diverged");
+                per_thread.push(ra.tokens.clone());
+            }
+            assert!(
+                per_thread.windows(2).all(|w| w[0] == w[1]),
+                "{name}/{precision:?}: serving depends on the thread count"
+            );
+        }
+    }
+    set_threads(prev);
+}
